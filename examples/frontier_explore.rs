@@ -1,0 +1,49 @@
+//! Frontier exploration: reproduce the §5.1 analysis interactively for one
+//! model — print the frontier, locate the turning point, and show what the
+//! strategies at the two extremes actually look like (which operators go
+//! data-parallel vs model-parallel vs replicated).
+//!
+//! Run: `cargo run --release --example frontier_explore [-- --model rnn --gpus 16]`
+
+use tensoropt::cluster::Cluster;
+use tensoropt::cost::comm::CommModel;
+use tensoropt::exp::{turning_point, GB};
+use tensoropt::ft::{frontier_search, FtOptions};
+use tensoropt::graph::models;
+use tensoropt::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "rnn");
+    let gpus = args.get_parse_or("gpus", 16u32);
+    let g = models::by_name(model, 256)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let cluster = Cluster::with_gpus(gpus as usize);
+    let comm = CommModel::profile(&cluster);
+    let r = frontier_search(&g, &cluster, &comm, FtOptions::new(gpus));
+
+    println!(
+        "{model} @ {gpus} GPUs: frontier of {} strategies over a 2^{:.0} space ({} heuristic eliminations)",
+        r.frontier.len(),
+        r.log2_space,
+        r.n_heuristic
+    );
+    for t in &r.frontier.tuples {
+        println!("  {:>8.2} GB/dev   {:>8.4} s/iter", t.mem / GB, t.time);
+    }
+    if let Some((m, t)) = turning_point(&r.frontier, 0.05) {
+        println!("turning point: {:.2} GB, {:.4} s — provision memory here (§5.1)", m / GB, t);
+    }
+
+    for (label, tuple) in [
+        ("min-memory", r.frontier.min_mem().unwrap().clone()),
+        ("min-time", r.frontier.min_time().unwrap().clone()),
+    ] {
+        let (s, _) = r.strategy_of(&tuple);
+        println!("\n{label} strategy ({:.2} GB, {:.4} s):", tuple.mem / GB, tuple.time);
+        for (op, cfg) in g.ops.iter().zip(&s.configs) {
+            println!("  {:24} {}", op.name, cfg.label(op));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: the TensorOpt user experience of Listing 1 in three calls —
+//! build a model graph, ask the session for a strategy under each of the
+//! paper's search options, inspect the chosen plan.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tensoropt::cluster::Cluster;
+use tensoropt::coordinator::{FindResult, SearchOption, Session};
+use tensoropt::graph::models::{transformer_lm, TransformerCfg};
+
+const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+fn main() -> anyhow::Result<()> {
+    // 1. define the computation graph (the tensoropt.create_model step).
+    let graph = transformer_lm(TransformerCfg { hidden: 2048, layers: 12, ..Default::default() });
+    println!(
+        "model: {} ops, {:.1} GB parameters",
+        graph.n_ops(),
+        graph.total_param_bytes() / GB
+    );
+
+    // 2. open a session on the cluster (tensoropt.init).
+    let session = Session::new(graph, Cluster::paper_testbed());
+
+    // 3a. mini_time: fastest strategy that fits on 16 GPUs.
+    if let FindResult::Plan(p) =
+        session.find_strategy(&SearchOption::MiniTime { parallelism: 16 })?
+    {
+        println!(
+            "mini_time @16 GPUs: {:.3} s/iter using {:.1} GB/device",
+            p.est_time,
+            p.est_memory / GB
+        );
+    }
+
+    // 3b. mini_parallelism: fewest GPUs that can run the job at all.
+    if let FindResult::Plan(p) =
+        session.find_strategy(&SearchOption::MiniParallelism { max_parallelism: 32 })?
+    {
+        println!(
+            "mini_parallelism: fits on {} GPUs ({:.3} s/iter, {:.1} GB/device)",
+            p.parallelism,
+            p.est_time,
+            p.est_memory / GB
+        );
+    }
+
+    // 3c. profiling: throughput vs parallelism for a scheduler.
+    if let FindResult::Profile(rows) =
+        session.find_strategy(&SearchOption::Profiling { parallelisms: vec![4, 8, 16] })?
+    {
+        println!("profiling (for a cluster scheduler):");
+        for r in rows {
+            match r.best_time {
+                Some(t) => println!("  {:>2} GPUs -> {:.3} s/iter", r.parallelism, t),
+                None => println!(
+                    "  {:>2} GPUs -> OOM (min {:.1} GB/device)",
+                    r.parallelism,
+                    r.min_memory / GB
+                ),
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,148 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for the Rust
+coordinator.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the ``xla`` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE via ``make artifacts``; the Rust binary is self-contained
+afterwards. Emitted artifacts (plus ``manifest.txt`` describing model
+hyper-parameters and the parameter-buffer contract):
+
+  train_step_small[.hlo.txt]   DP per-device step, test-scale transformer
+  train_step_small_pallas      same step with the L1 Pallas MLP kernels
+  train_step_e2e               DP step at the e2e scale (examples/train_e2e)
+  tp_a_small / tp_b_small / tp_c{K}of{N}_small / tp_d_small
+                               tensor-parallel segments (sharded LM head)
+  matmul_<M>x<K>x<N>           standalone Pallas matmul kernels
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from . import kernels
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(out_dir: str, name: str, lowered) -> None:
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name}.hlo.txt ({len(text) / 1024:.0f} KiB)")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+# The two model scales shipped as artifacts.
+CONFIGS = {
+    "small": model.Config(),
+    # e2e scale (DESIGN.md documents the substitution from the mandate's
+    # ~100M: CPU-PJRT step time makes ~10M params x hundreds of steps the
+    # practical budget; the execution graph is scale-independent).
+    "e2e": model.Config(vocab=4096, seq=32, d_model=256, n_layers=8, d_ff=1280, batch=16),
+}
+
+TP_SHARDS = 2  # tensor-parallel degree of the shipped TP segments
+
+
+def lower_train_step(cfg: model.Config):
+    specs = [f32(*s) for _, s in model.param_specs(cfg)]
+    fn = lambda params, ids, labels: model.train_step(cfg, params, ids, labels)
+    return jax.jit(fn).lower(specs, i32(cfg.batch, cfg.seq), i32(cfg.batch, cfg.seq))
+
+
+def lower_tp_segments(cfg: model.Config, n: int):
+    """Lower the four TP segments for every shard-specific variant."""
+    all_specs = model.param_specs(cfg)
+    bb_specs = [f32(*s) for _, s in all_specs[:-1]]
+    d, v = cfg.d_model, cfg.vocab
+    vs = v // n
+    b, s = cfg.batch, cfg.seq
+    seg = {}
+    seg["tp_a"] = jax.jit(
+        lambda bp, hs, ids: model.tp_stage_a(cfg, bp, hs, ids)
+    ).lower(bb_specs, f32(d, vs), i32(b, s))
+    seg["tp_b"] = jax.jit(model.tp_stage_b).lower(f32(b, s, vs), f32(b, s))
+    for k in range(n):
+        seg[f"tp_c{k}of{n}"] = jax.jit(
+            lambda hs, h, lg, m, z, labels, k=k: model.tp_stage_c(
+                cfg, n, k, hs, h, lg, m, z, labels
+            )
+        ).lower(f32(d, vs), f32(b, s, d), f32(b, s, vs), f32(b, s), f32(b, s), i32(b, s))
+    seg["tp_d"] = jax.jit(
+        lambda bp, ids, dh: model.tp_stage_d(cfg, bp, ids, dh)
+    ).lower(bb_specs, i32(b, s), f32(b, s, d))
+    return seg
+
+
+def lower_matmul(m, k, n):
+    return jax.jit(lambda a, b: (kernels.matmul(a, b),)).lower(f32(m, k), f32(k, n))
+
+
+def write_manifest(out_dir: str) -> None:
+    lines = []
+    for tag, cfg in CONFIGS.items():
+        lines.append(
+            f"model {tag} vocab={cfg.vocab} seq={cfg.seq} d_model={cfg.d_model} "
+            f"n_layers={cfg.n_layers} d_ff={cfg.d_ff} batch={cfg.batch} "
+            f"n_params={model.n_params(cfg)}"
+        )
+        for name, shape in model.param_specs(cfg):
+            dims = ",".join(str(x) for x in shape)
+            lines.append(f"param {tag} {name} f32 {dims}")
+    lines.append(f"tp_shards {TP_SHARDS}")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"  wrote manifest.txt ({len(lines)} lines)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-e2e", action="store_true", help="test-scale artifacts only")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    print("lowering L2 train steps...")
+    write(args.out, "train_step_small", lower_train_step(CONFIGS["small"]))
+    pallas_cfg = model.Config(use_pallas=True)
+    write(args.out, "train_step_small_pallas", lower_train_step(pallas_cfg))
+    if not args.skip_e2e:
+        write(args.out, "train_step_e2e", lower_train_step(CONFIGS["e2e"]))
+
+    print("lowering TP segments...")
+    for name, lowered in lower_tp_segments(CONFIGS["small"], TP_SHARDS).items():
+        write(args.out, f"{name}_small", lowered)
+
+    print("lowering L1 Pallas matmul kernels...")
+    write(args.out, "matmul_16x16x16", lower_matmul(16, 16, 16))
+    write(args.out, "matmul_kernel_16x16", lower_matmul(16, 16, 16))
+    write(args.out, "matmul_256x256x256", lower_matmul(256, 256, 256))
+
+    write_manifest(args.out)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

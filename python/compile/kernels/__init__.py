@@ -1,0 +1,4 @@
+"""L1 Pallas kernels + pure-jnp reference oracles."""
+
+from . import ref  # noqa: F401
+from .matmul import matmul, matmul_bias_act, matmul_blocked, vmem_footprint_bytes  # noqa: F401

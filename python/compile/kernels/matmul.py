@@ -1,0 +1,171 @@
+"""L1 — Pallas tiled matmul kernels (the training hot-spot).
+
+TPU-oriented design, validated on CPU via ``interpret=True`` (real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute):
+
+- the grid tiles the output into ``(block_m, block_n)`` blocks — each grid
+  step owns one output tile, the MXU-shaped unit of work;
+- ``BlockSpec`` expresses the HBM->VMEM schedule: an ``(block_m, K)`` slice
+  of A and a ``(K, block_n)`` slice of B are staged into VMEM per step
+  (the paper's GPU analogue would be shared-memory tiling per threadblock);
+- accumulation happens in f32 regardless of input dtype (MXU-style
+  bf16-in/f32-acc).
+
+The public entry points carry ``jax.custom_vjp`` rules whose backward
+matmuls route through the same Pallas kernel, so both the forward and
+backward hot paths lower to L1 kernels inside the train-step HLO.
+
+VMEM footprint per grid step (f32):
+``block_m*K + K*block_n + block_m*block_n`` words; with the default 32x32
+blocks and K <= 4096 this stays well under the ~16 MB VMEM of a TPU core.
+See DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf for the
+MXU-utilization estimate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(extent: int, preferred: int = 32) -> int:
+    """Largest power-of-two block <= preferred that divides `extent`."""
+    b = preferred
+    while b > 1 and extent % b != 0:
+        b //= 2
+    return b
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (block_m, block_n) output tile: full-K contraction in VMEM."""
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.dot(a, b, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def matmul_blocked(a, b, block_m: int = 32, block_n: int = 32):
+    """Tiled ``a @ b`` with explicit block sizes (bench/ablation entry;
+    no autodiff rule). Shapes must tile evenly."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % block_m == 0, f"M={m} not a multiple of block_m={block_m}"
+    assert n % block_n == 0, f"N={n} not a multiple of block_n={block_n}"
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def _matmul_auto(a, b):
+    """Pallas matmul with automatically chosen (divisible) block sizes."""
+    m, _ = a.shape
+    _, n = b.shape
+    return matmul_blocked(a, b, block_m=_pick_block(m), block_n=_pick_block(n))
+
+
+# ---- differentiable public matmul -----------------------------------------
+
+@jax.custom_vjp
+def matmul(a, b):
+    """Tiled ``a @ b``; differentiable (backward also uses Pallas)."""
+    return _matmul_auto(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _matmul_auto(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    return _matmul_auto(g, b.T), _matmul_auto(a.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+# ---- fused matmul + bias + activation --------------------------------------
+
+def _matmul_bias_act_kernel(a_ref, b_ref, bias_ref, o_ref, *, act):
+    """Fused tile: matmul + bias + activation (no extra HBM round-trip)."""
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32) + bias_ref[...]
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif act == "gelu":
+        acc = jax.nn.gelu(acc)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _mba_call(a, b, bias, act):
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn = _pick_block(m), _pick_block(n)
+    grid = (m // bm, n // bn)
+    kernel = functools.partial(_matmul_bias_act_kernel, act=act)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b, bias)
+
+
+def _act_grad(act, acc, g):
+    """d(act)/d(acc) * g, elementwise via jnp (cheap; not the hot matmul)."""
+    if act == "relu":
+        return g * (acc > 0).astype(g.dtype)
+    if act == "gelu":
+        _, vjp = jax.vjp(jax.nn.gelu, acc)
+        return vjp(g)[0]
+    return g
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def matmul_bias_act(a, b, bias, act: str = "gelu"):
+    """Fused ``act(a @ b + bias)`` — the transformer-FFN hot path.
+    Differentiable; the backward matmuls route through the Pallas kernel."""
+    return _mba_call(a, b, bias, act)
+
+
+def _mba_fwd(a, b, bias, act):
+    return _mba_call(a, b, bias, act), (a, b, bias)
+
+
+def _mba_bwd(act, res, g):
+    a, b, bias = res
+    # recompute the pre-activation with the Pallas matmul (rematerialize —
+    # cheaper than stashing the full activation, same trade the paper's
+    # memory-optimization discussion makes).
+    acc = _matmul_auto(a, b) + bias
+    dacc = _act_grad(act, acc, g)
+    da = _matmul_auto(dacc, b.T)
+    db = _matmul_auto(a.T, dacc)
+    dbias = dacc.sum(0)
+    return da, db, dbias
+
+
+matmul_bias_act.defvjp(_mba_fwd, _mba_bwd)
+
+
+def vmem_footprint_bytes(m, k, n, block_m=32, block_n=32, elem=4):
+    """Static VMEM estimate per grid step (see module docstring)."""
+    del m, n
+    return elem * (block_m * k + k * block_n + block_m * block_n)

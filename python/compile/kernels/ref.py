@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must agree with its oracle to float32
+tolerance across the shape/dtype sweep in ``python/tests/test_kernel.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """Reference for kernels.matmul."""
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32), preferred_element_type=jnp.float32
+    ).astype(a.dtype)
+
+
+def matmul_bias_act(a, b, bias, act: str = "gelu"):
+    """Reference for kernels.matmul_bias_act."""
+    acc = (
+        jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32), preferred_element_type=jnp.float32)
+        + bias
+    )
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif act == "gelu":
+        acc = jax.nn.gelu(acc)
+    return acc.astype(a.dtype)

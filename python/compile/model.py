@@ -1,0 +1,242 @@
+"""L2 — transformer language model in JAX (build-time only).
+
+Defines the forward/backward compute graphs that `aot.py` lowers to HLO
+text for the Rust coordinator. Two execution strategies are authored here,
+mirroring the two ends of TensorOpt's cost frontier for this model:
+
+- **Data parallel**: one `train_step` artifact per device (identical
+  shapes); the Rust executor all-reduces gradients and applies SGD.
+- **Tensor parallel (sharded vocabulary)**: the LM head's vocabulary is
+  split across devices — the lowest-memory strategy for an LM whose
+  parameters are dominated by embedding/head, exactly the regime the
+  paper's RNN analysis highlights. The step is cut into four segments at
+  the communication points (max / sum-exp / d_hidden all-reduces), which
+  the Rust executor stitches together with its collectives.
+
+Parameters travel as a *flat list* ordered by `param_specs` so the Rust
+side can address buffers by stable names. The MLP can route through the
+L1 Pallas matmul so the kernel lowers into the same HLO (`use_pallas`).
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    vocab: int = 512
+    seq: int = 32
+    d_model: int = 64
+    n_layers: int = 2
+    d_ff: int = 256
+    batch: int = 8  # per-device
+    use_pallas: bool = False
+
+    @property
+    def n_heads(self) -> int:
+        return max(1, self.d_model // 32)
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: Config) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Stable (name, shape) list — the contract with the Rust trainer."""
+    specs = [("embed", (cfg.vocab, cfg.d_model))]
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"l{l}_wq", (cfg.d_model, cfg.d_model)),
+            (f"l{l}_wk", (cfg.d_model, cfg.d_model)),
+            (f"l{l}_wv", (cfg.d_model, cfg.d_model)),
+            (f"l{l}_wo", (cfg.d_model, cfg.d_model)),
+            (f"l{l}_ln1", (2, cfg.d_model)),
+            (f"l{l}_w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{l}_b1", (cfg.d_ff,)),
+            (f"l{l}_w2", (cfg.d_ff, cfg.d_model)),
+            (f"l{l}_ln2", (2, cfg.d_model)),
+        ]
+    specs.append(("head", (cfg.d_model, cfg.vocab)))
+    return specs
+
+
+def init_params(cfg: Config, seed: int = 0) -> List[jax.Array]:
+    """He-scaled init; layer-norm scale=1 shift=0."""
+    rng = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        rng, sub = jax.random.split(rng)
+        if name.endswith(("ln1", "ln2")):
+            p = jnp.stack([jnp.ones(shape[1]), jnp.zeros(shape[1])])
+        elif name.endswith("b1"):
+            p = jnp.zeros(shape)
+        elif name == "head":
+            # gentle head init keeps the initial loss near log(vocab).
+            p = jax.random.normal(sub, shape, jnp.float32) * (1.0 / shape[0]) ** 0.5 * 0.5
+        else:
+            fan_in = shape[0]
+            p = jax.random.normal(sub, shape, jnp.float32) * (2.0 / fan_in) ** 0.5
+        params.append(p.astype(jnp.float32))
+    return params
+
+
+def n_params(cfg: Config) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(cfg))
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _layer_norm(x, ln):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * ln[0] + ln[1]
+
+
+def _attention(cfg: Config, x, wq, wk, wv, wo):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    q = (x @ wq).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    scores = q @ k.transpose(0, 1, 3, 2) / (hd**0.5)
+    causal = jnp.tril(jnp.ones((s, s), jnp.float32))
+    scores = jnp.where(causal[None, None].astype(bool), scores, -1e9)
+    ctx = jax.nn.softmax(scores, axis=-1) @ v
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return ctx @ wo
+
+
+def _mlp(cfg: Config, x, w1, b1, w2):
+    b, s, d = x.shape
+    if cfg.use_pallas:
+        # L1 Pallas kernels lower into the same HLO as the rest of the step.
+        flat = x.reshape(b * s, d)
+        h = kernels.matmul_bias_act(flat, w1, b1, act="gelu")
+        out = kernels.matmul(h, w2)
+        return out.reshape(b, s, d)
+    h = jax.nn.gelu(x @ w1 + b1)
+    return h @ w2
+
+
+def backbone(cfg: Config, params: List[jax.Array], ids) -> jax.Array:
+    """Embedding + transformer blocks -> hidden states [B, S, D].
+
+    `params` here is the *backbone* parameter list (all but the head)."""
+    names = [n for n, _ in param_specs(cfg)][:-1]
+    p = dict(zip(names, params))
+    x = p["embed"][ids]
+    for l in range(cfg.n_layers):
+        a = _attention(cfg, _layer_norm(x, p[f"l{l}_ln1"]), p[f"l{l}_wq"],
+                       p[f"l{l}_wk"], p[f"l{l}_wv"], p[f"l{l}_wo"])
+        x = x + a
+        m = _mlp(cfg, _layer_norm(x, p[f"l{l}_ln2"]), p[f"l{l}_w1"],
+                 p[f"l{l}_b1"], p[f"l{l}_w2"])
+        x = x + m
+    # parameter-free final normalization: residual accumulation otherwise
+    # inflates logit scale (and the initial loss) with depth.
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5)
+
+
+def loss_fn(cfg: Config, params: List[jax.Array], ids, labels) -> jax.Array:
+    """Mean next-token cross-entropy (full parameter list)."""
+    h = backbone(cfg, params[:-1], ids)
+    logits = h @ params[-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)
+    return nll.mean()
+
+
+def train_step(cfg: Config, params: List[jax.Array], ids, labels):
+    """(loss, *grads): the data-parallel per-device step. SGD is applied by
+    the Rust coordinator after the gradient all-reduce."""
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, ids, labels))(params)
+    return (loss.reshape(1), *grads)
+
+
+# --------------------------------------------------------------------------
+# tensor-parallel segments (sharded-vocabulary LM head)
+# --------------------------------------------------------------------------
+
+def tp_stage_a(cfg: Config, backbone_params, head_shard, ids):
+    """h = backbone(x); partial logits + local max over the vocab shard.
+
+    head_shard: [D, vocab/n]. Returns (h, logits_i, m_i)."""
+    h = backbone(cfg, backbone_params, ids)
+    logits = h @ head_shard
+    m = logits.max(-1)
+    return h, logits, m
+
+
+def tp_stage_b(logits_i, m):
+    """After the max all-reduce: local sum-exp. Returns (z_i [B, S],)."""
+    return (jnp.exp(logits_i - m[..., None]).sum(-1),)
+
+
+def tp_stage_c(cfg: Config, n_shards: int, shard: int, head_shard, h, logits_i, m, z, labels):
+    """After the z sum all-reduce: local loss term, head-shard gradient and
+    the partial hidden-state cotangent dh_i.
+
+    Global softmax: p = exp(l - m) / z. The label's logit lives on exactly
+    one shard; the shard-independent `log z + m` normalizer is contributed
+    once, by shard 0.
+    """
+    vshard = cfg.vocab // n_shards
+    lo = shard * vshard
+    b, s, _ = logits_i.shape
+    ntok = b * s
+    local = (labels >= lo) & (labels < lo + vshard)
+    local_idx = jnp.clip(labels - lo, 0, vshard - 1)
+    picked = jnp.take_along_axis(logits_i, local_idx[..., None], axis=-1)[..., 0]
+    nll_local = -jnp.where(local, picked, 0.0)
+    norm = (jnp.log(z) + m) if shard == 0 else jnp.zeros_like(z)
+    loss_i = (nll_local + norm).sum() / ntok
+    p = jnp.exp(logits_i - m[..., None]) / z[..., None]
+    onehot = jax.nn.one_hot(local_idx, vshard) * local[..., None]
+    dlogits = (p - onehot) / ntok
+    g_head = jnp.einsum("bsd,bsv->dv", h, dlogits)
+    dh = jnp.einsum("bsv,dv->bsd", dlogits, head_shard)
+    return loss_i.reshape(1), g_head, dh
+
+
+def tp_stage_d(cfg: Config, backbone_params, ids, dh):
+    """After the dh all-reduce: backbone VJP with cotangent dh."""
+    _, vjp = jax.vjp(lambda ps: backbone(cfg, ps, ids), backbone_params)
+    (grads,) = vjp(dh)
+    return tuple(grads)
+
+
+# --------------------------------------------------------------------------
+# reference for tests: run the TP pipeline with in-python collectives
+# --------------------------------------------------------------------------
+
+def tp_reference(cfg: Config, n_shards: int, params, ids, labels):
+    """Execute the 4-segment TP pipeline with manual collectives; must
+    reproduce `train_step`'s loss and gradients (same batch on every
+    shard). Returns (loss, grads in param_specs order)."""
+    backbone_params = params[:-1]
+    head = params[-1]
+    vshard = cfg.vocab // n_shards
+    shards = [head[:, i * vshard:(i + 1) * vshard] for i in range(n_shards)]
+    outs_a = [tp_stage_a(cfg, backbone_params, s, ids) for s in shards]
+    m = jnp.stack([o[2] for o in outs_a]).max(0)  # all-reduce max
+    zs = [tp_stage_b(o[1], m)[0] for o in outs_a]
+    z = jnp.stack(zs).sum(0)  # all-reduce sum
+    outs_c = [
+        tp_stage_c(cfg, n_shards, i, shards[i], outs_a[i][0], outs_a[i][1], m, z, labels)
+        for i in range(n_shards)
+    ]
+    loss = sum(o[0] for o in outs_c)[0]  # all-reduce sum
+    dh = sum(o[2] for o in outs_c)  # all-reduce sum
+    g_backbone = tp_stage_d(cfg, backbone_params, ids, dh)
+    g_head = jnp.concatenate([o[1] for o in outs_c], axis=1)
+    return loss, list(g_backbone) + [g_head]

@@ -1,0 +1,84 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles — the CORE
+correctness signal. Hypothesis sweeps shapes and dtypes; fixed cases pin
+the block-edge conditions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, matmul_blocked, matmul_bias_act, ref
+
+DIMS = st.sampled_from([8, 16, 24, 32, 48, 64, 96, 128])
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, dtype=DTYPES)
+def test_matmul_matches_ref(m, k, n, dtype):
+    rng = np.random.default_rng(m * 10007 + k * 101 + n)
+    a, b = rand(rng, (m, k), dtype), rand(rng, (k, n), dtype)
+    got = matmul(a, b)
+    want = ref.matmul(a, b)
+    assert got.dtype == want.dtype
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, act=st.sampled_from(["gelu", "relu", "none"]))
+def test_matmul_bias_act_matches_ref(m, k, n, act):
+    rng = np.random.default_rng(m + 17 * k + 31 * n)
+    a = rand(rng, (m, k), jnp.float32)
+    b = rand(rng, (k, n), jnp.float32)
+    bias = rand(rng, (n,), jnp.float32)
+    got = matmul_bias_act(a, b, bias, act)
+    want = ref.matmul_bias_act(a, b, bias, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (16, 32), (32, 16), (32, 32)])
+def test_blocked_variants_agree(bm, bn):
+    rng = np.random.default_rng(0)
+    a = rand(rng, (64, 32), jnp.float32)
+    b = rand(rng, (32, 64), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(matmul_blocked(a, b, block_m=bm, block_n=bn)),
+        np.asarray(ref.matmul(a, b)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_matmul_gradient_matches_autodiff():
+    rng = np.random.default_rng(3)
+    a = rand(rng, (32, 16), jnp.float32)
+    b = rand(rng, (16, 32), jnp.float32)
+    g1 = jax.grad(lambda a, b: matmul(a, b).sum(), argnums=(0, 1))(a, b)
+    g2 = jax.grad(lambda a, b: ref.matmul(a, b).sum(), argnums=(0, 1))(a, b)
+    for x, y in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-4, atol=1e-5)
+
+
+def test_fused_gradient_matches_autodiff():
+    rng = np.random.default_rng(4)
+    a = rand(rng, (16, 16), jnp.float32)
+    b = rand(rng, (16, 16), jnp.float32)
+    bias = rand(rng, (16,), jnp.float32)
+    g1 = jax.grad(lambda a: matmul_bias_act(a, b, bias, "gelu").sum())(a)
+    g2 = jax.grad(lambda a: ref.matmul_bias_act(a, b, bias, "gelu").sum())(a)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-3, atol=1e-4)
+
+
+def test_non_divisible_block_asserts():
+    a = jnp.ones((10, 16), jnp.float32)  # 10 not divisible by 8
+    b = jnp.ones((16, 16), jnp.float32)
+    with pytest.raises(AssertionError):
+        matmul_blocked(a, b, block_m=8, block_n=8)

@@ -1,0 +1,18 @@
+//! Bench + regeneration of Figure 6 (cost frontiers + baselines) for the
+//! three large models.
+use tensoropt::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig6").slow();
+    b.min_iters = 1;
+    b.max_iters = 1;
+    for model in ["rnn", "transformer", "wideresnet"] {
+        b.run(&format!("fig6_{model}"), || tensoropt::exp::fig6::run(model, 16));
+        let (curve, summary) = tensoropt::exp::fig6::run(model, 16);
+        println!("\n{}", summary.render());
+        let dir = tensoropt::exp::results_dir();
+        let _ = curve.save_csv(dir.join(format!("fig6_{model}_curve.csv")).to_str().unwrap());
+        let _ = summary.save_csv(dir.join(format!("fig6_{model}_summary.csv")).to_str().unwrap());
+    }
+    b.finish();
+}

@@ -1,0 +1,20 @@
+//! Bench + regeneration of Figure 7 (model size / inter-bw / intra-bw sweeps).
+use tensoropt::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig7").slow();
+    b.min_iters = 1;
+    b.max_iters = 1;
+    b.run("fig7a_model_size", || tensoropt::exp::fig7::run_a());
+    b.run("fig7b_cross_machine_bw", || tensoropt::exp::fig7::run_b());
+    b.run("fig7c_intra_machine", || tensoropt::exp::fig7::run_c());
+    for (t, name) in [
+        (tensoropt::exp::fig7::run_a(), "fig7a"),
+        (tensoropt::exp::fig7::run_b(), "fig7b"),
+        (tensoropt::exp::fig7::run_c(), "fig7c"),
+    ] {
+        println!("\n{}", t.render());
+        let _ = t.save_csv(tensoropt::exp::results_dir().join(format!("{name}.csv")).to_str().unwrap());
+    }
+    b.finish();
+}

@@ -1,0 +1,22 @@
+//! Bench + regeneration of Figure 8 (parallelism sweep).
+use tensoropt::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig8").slow();
+    b.min_iters = 1;
+    b.max_iters = 1;
+    // (transformer gets the full sweep; WideResNet a reduced one — its
+    // 32-GPU search is the most expensive single FT run in the suite.)
+    for (model, para) in [
+        ("transformer", &[4u32, 8, 16, 24, 32][..]),
+        ("wideresnet", &[8u32, 16][..]),
+    ] {
+        b.run(&format!("fig8_{model}"), || tensoropt::exp::fig8::run(model, para));
+        let t = tensoropt::exp::fig8::run(model, para);
+        println!("\n{}", t.render());
+        let _ = t.save_csv(
+            tensoropt::exp::results_dir().join(format!("fig8_{model}.csv")).to_str().unwrap(),
+        );
+    }
+    b.finish();
+}

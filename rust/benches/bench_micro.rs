@@ -1,0 +1,44 @@
+//! Microbenchmarks of the hot paths: frontier reduce/product, re-schedule
+//! Dijkstra, ring vs naive all-reduce, PJRT kernel dispatch.
+use tensoropt::frontier::{reduce, Mode, Trace, Tuple};
+use tensoropt::runtime::collective::{all_reduce_naive, all_reduce_ring};
+use tensoropt::runtime::HostTensor;
+use tensoropt::util::benchkit::Bench;
+use tensoropt::util::rng::XorShift;
+
+fn main() {
+    let mut b = Bench::new("micro");
+
+    // frontier reduce on 10k random tuples
+    let mut rng = XorShift::new(1);
+    let tuples: Vec<Tuple> =
+        (0..10_000).map(|_| Tuple::new(rng.f64(), rng.f64(), Trace::empty())).collect();
+    b.run("reduce_10k", || reduce(tuples.clone(), Mode::Pareto));
+
+    // frontier product 256 x 64
+    let a = reduce((0..2048).map(|_| Tuple::new(rng.f64(), rng.f64(), Trace::empty())).collect(), Mode::Pareto);
+    let c = reduce((0..512).map(|_| Tuple::new(rng.f64(), rng.f64(), Trace::empty())).collect(), Mode::Pareto);
+    b.run("product", || a.product(&c, Mode::Pareto));
+
+    // collectives: 8 devices x 4 MB
+    for (name, ring) in [("allreduce_naive_8x1M", false), ("allreduce_ring_8x1M", true)] {
+        b.run(name, || {
+            let mut bufs: Vec<HostTensor> = (0..8)
+                .map(|d| HostTensor::f32(vec![1 << 20], vec![d as f32; 1 << 20]))
+                .collect();
+            if ring { all_reduce_ring(&mut bufs) } else { all_reduce_naive(&mut bufs) };
+            bufs
+        });
+    }
+
+    // PJRT kernel dispatch (Pallas matmul artifact), if built.
+    let dir = tensoropt::runtime::default_artifacts_dir();
+    if dir.join("matmul_256x256x256.hlo.txt").exists() {
+        let mut rt = tensoropt::runtime::Runtime::cpu(&dir).unwrap();
+        let exe = rt.load("matmul_256x256x256").unwrap();
+        let x = HostTensor::f32(vec![256, 256], vec![1.0; 256 * 256]);
+        let y = HostTensor::f32(vec![256, 256], vec![2.0; 256 * 256]);
+        b.run("pjrt_pallas_matmul_256", || exe.run(&[x.clone(), y.clone()]).unwrap());
+    }
+    b.finish();
+}

@@ -1,0 +1,11 @@
+//! Bench + regeneration of Table 1 (model statistics).
+use tensoropt::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::new("table1");
+    b.run("table1_build_and_stats", || tensoropt::exp::table1::run());
+    let t = tensoropt::exp::table1::run();
+    println!("\n{}", t.render());
+    let _ = t.save_csv(tensoropt::exp::results_dir().join("table1.csv").to_str().unwrap());
+    b.finish();
+}

@@ -1,0 +1,13 @@
+//! Bench + regeneration of Table 2 (estimation error, 20 random strategies).
+use tensoropt::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::new("table2").slow();
+    b.min_iters = 1;
+    b.max_iters = 1;
+    b.run("table2_20_samples", || tensoropt::exp::table2::run(20));
+    let t = tensoropt::exp::table2::run(20);
+    println!("\n{}", t.render());
+    let _ = t.save_csv(tensoropt::exp::results_dir().join("table2.csv").to_str().unwrap());
+    b.finish();
+}

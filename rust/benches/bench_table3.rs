@@ -1,0 +1,8 @@
+//! Table 3 IS a timing table: FT-LDP vs FT-Elimination vs single-thread.
+//! Pass --full (via BENCH_TABLE3_FULL=1) to include WideResNet elimination.
+fn main() {
+    let full = std::env::var("BENCH_TABLE3_FULL").is_ok();
+    let t = tensoropt::exp::table3::run(full);
+    println!("{}", t.render());
+    let _ = t.save_csv(tensoropt::exp::results_dir().join("table3.csv").to_str().unwrap());
+}

@@ -1,0 +1,11 @@
+//! Bench + regeneration of Table 4 (real-executor per-iteration times).
+//! Requires `make artifacts`.
+fn main() {
+    if !tensoropt::runtime::default_artifacts_dir().join("manifest.txt").exists() {
+        eprintln!("skipping table4 bench: run `make artifacts` first");
+        return;
+    }
+    let t = tensoropt::exp::table4::run(2, 30).expect("table4");
+    println!("{}", t.render());
+    let _ = t.save_csv(tensoropt::exp::results_dir().join("table4.csv").to_str().unwrap());
+}

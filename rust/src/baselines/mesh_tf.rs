@@ -1,0 +1,177 @@
+//! MeshTensorFlow baseline (§4.2): one global device mesh and a consistent
+//! logical-dimension assignment across the entire graph.
+//!
+//! MeshTensorFlow names tensor dimensions and requires (1) a single mesh
+//! for all operators, and (2) that a logical dimension split on a mesh dim
+//! is split the same way wherever it appears. We model logical dimensions
+//! by *axis class* — batch / feature(out) / reduce(in) — which is how
+//! MeshTF model code reuses dim names (`"batch"`, `"hidden"`, `"d_ff"`...)
+//! across layers. A global choice assigns each mesh dim to one class; the
+//! induced per-operator configuration splits that class's axis everywhere
+//! it exists. The baseline's frontier is the Pareto reduce over all global
+//! choices — exactly how the paper evaluates MeshTF ("we solved its cost
+//! frontier by adding the tensor split restrictions").
+
+use crate::cluster::Cluster;
+use crate::cost::estimator::{eval_strategy, ReuseChoice, StrategyCost};
+use crate::frontier::{reduce, Frontier, Mode, Trace, Tuple};
+use crate::graph::{AxisKind, Graph, Op};
+use crate::parallel::mesh::enumerate_meshes;
+use crate::parallel::resched::CollectiveCost;
+use crate::parallel::{ParallelConfig, Strategy};
+
+/// Axis classes standing in for MeshTF's shared logical dim names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AxisClass {
+    Batch,
+    Feature,
+    Reduce,
+}
+
+const CLASSES: [AxisClass; 3] = [AxisClass::Batch, AxisClass::Feature, AxisClass::Reduce];
+
+/// The axis of `op` belonging to a class, if any.
+fn class_axis(op: &Op, class: AxisClass) -> Option<usize> {
+    match class {
+        AxisClass::Batch => op.axes.iter().position(|a| a.kind == AxisKind::Batch),
+        AxisClass::Feature => op
+            .axes
+            .iter()
+            .position(|a| a.kind == AxisKind::Output)
+            .or_else(|| op.axes.iter().position(|a| a.kind == AxisKind::Spatial)),
+        AxisClass::Reduce => op.axes.iter().position(|a| a.kind == AxisKind::Reduce),
+    }
+}
+
+/// Build the per-op configuration induced by a global (mesh, class
+/// assignment). Mesh dims whose class is absent (or indivisible) on an op
+/// replicate there — MeshTF would reject such a model; replication is the
+/// closest executable behaviour and only penalizes the baseline's memory,
+/// never its time.
+fn induced_config(op: &Op, mesh: &crate::parallel::Mesh, classes: &[Option<AxisClass>]) -> ParallelConfig {
+    let assign: Vec<Option<usize>> = classes
+        .iter()
+        .enumerate()
+        .map(|(m, cl)| {
+            cl.and_then(|c| class_axis(op, c)).filter(|&a| {
+                op.axes[a].size % mesh.dims[m] as i64 == 0
+            })
+        })
+        .collect();
+    ParallelConfig { mesh: mesh.clone(), assign }
+}
+
+/// One evaluated global option.
+#[derive(Debug, Clone)]
+pub struct MeshTfOption {
+    pub mesh_label: String,
+    pub classes: Vec<Option<AxisClass>>,
+    pub strategy: Strategy,
+    pub cost: StrategyCost,
+}
+
+/// Enumerate all global (mesh, class-assignment) options, evaluate each,
+/// and return the Pareto frontier over them plus all evaluated options.
+pub fn mesh_tensorflow_frontier(
+    g: &Graph,
+    cluster: &Cluster,
+    comm: &dyn CollectiveCost,
+    d: u32,
+) -> (Frontier, Vec<MeshTfOption>) {
+    let mut options = Vec::new();
+    for mesh in enumerate_meshes(d, 2) {
+        let nd = mesh.n_dims();
+        // assignments: each mesh dim -> Some(class) or None, classes
+        // distinct (a logical dim maps to at most one mesh dim).
+        let mut choices: Vec<Vec<Option<AxisClass>>> = vec![vec![]];
+        for _m in 0..nd {
+            let mut next = Vec::new();
+            for partial in &choices {
+                for c in std::iter::once(None).chain(CLASSES.iter().copied().map(Some)) {
+                    if c.is_some() && partial.contains(&c) {
+                        continue;
+                    }
+                    let mut p = partial.clone();
+                    p.push(c);
+                    next.push(p);
+                }
+            }
+            choices = next;
+        }
+        for classes in choices {
+            let strategy = Strategy {
+                configs: g.ops.iter().map(|op| induced_config(op, &mesh, &classes)).collect(),
+            };
+            let cost = eval_strategy(g, &strategy, cluster, comm, ReuseChoice::KeepBoth);
+            options.push(MeshTfOption {
+                mesh_label: mesh.label(),
+                classes,
+                strategy,
+                cost,
+            });
+        }
+    }
+    let tuples: Vec<Tuple> = options
+        .iter()
+        .enumerate()
+        .map(|(i, o)| Tuple::new(o.cost.memory, o.cost.time, Trace::op_choice(i as u32, 0)))
+        .collect();
+    (reduce(tuples, Mode::Pareto), options)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::comm::GroundTruthComm;
+    use crate::ft::{frontier_search, FtOptions};
+    use crate::graph::models::tiny_mlp;
+
+    #[test]
+    fn options_cover_pure_dp() {
+        let g = tiny_mlp(256);
+        let c = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(c.clone());
+        let (f, options) = mesh_tensorflow_frontier(&g, &c, &comm, 4);
+        assert!(!f.is_empty());
+        // [4] -> Batch must appear and equal pure data parallelism.
+        let dp = options.iter().find(|o| {
+            o.mesh_label == "[4]" && o.classes == vec![Some(AxisClass::Batch)]
+        });
+        assert!(dp.is_some());
+    }
+
+    #[test]
+    fn restrictions_never_beat_ft() {
+        // paper (Fig 6): "the cost frontier of TensorOpt is always below
+        // that of MeshTensorFlow".
+        let g = tiny_mlp(256);
+        let c = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(c.clone());
+        let (mtf, _) = mesh_tensorflow_frontier(&g, &c, &comm, 4);
+        let ft = frontier_search(&g, &c, &comm, FtOptions::new(4).sequential());
+        // FT's min-time is at least as good as MeshTF's min-time.
+        assert!(
+            ft.frontier.min_time().unwrap().time
+                <= mtf.min_time().unwrap().time * 1.0001
+        );
+        // FT reaches at-most the memory of MeshTF's min-memory point.
+        assert!(
+            ft.frontier.min_mem().unwrap().mem <= mtf.min_mem().unwrap().mem * 1.0001
+        );
+    }
+
+    #[test]
+    fn induced_config_respects_divisibility() {
+        let g = tiny_mlp(250); // batch 250: not divisible by 4
+        let c = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(c.clone());
+        let (_, options) = mesh_tensorflow_frontier(&g, &c, &comm, 4);
+        for o in &options {
+            for (op, cfg) in g.ops.iter().zip(&o.strategy.configs) {
+                for (a, ax) in op.axes.iter().enumerate() {
+                    assert_eq!(ax.size % cfg.axis_shards(a) as i64, 0);
+                }
+            }
+        }
+    }
+}

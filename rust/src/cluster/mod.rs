@@ -1,0 +1,183 @@
+//! Device graph `D` (§2.1): machines, accelerators, and the links between
+//! them, with presets matching the paper's testbed (2 machines x 8 V100
+//! 16 GB; NVLink intra-machine, 100 Gbps EDR InfiniBand RDMA inter-machine)
+//! and the Figure-7 variants (no-RDMA, 4x RDMA / DGX, PCIe-only).
+
+/// A link class with (profile-anchor) bandwidth and latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    /// Achievable point-to-point bandwidth in bytes/second.
+    pub bandwidth: f64,
+    /// Per-operation latency in seconds (the term that dominates small
+    /// transfers — one of the paper's two reasons naive estimation fails).
+    pub latency: f64,
+}
+
+/// Interconnect technology presets. Bandwidths are effective (achievable)
+/// figures, not marketing peaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// NVLink 2.0 on V100: ~130 GB/s effective aggregate per GPU pair group.
+    NvLink,
+    /// PCIe 3.0 x16: ~12 GB/s effective (paper: ≈ 1/20 of NVLink).
+    Pcie,
+    /// 100 Gbps EDR InfiniBand with RDMA: ~10 GB/s effective.
+    IbRdma,
+    /// Same NIC with RDMA disabled (paper: ≈ 0.5x RDMA).
+    IbNoRdma,
+    /// DGX-like: 4 IB NICs (paper's "4x RDMA").
+    IbRdma4x,
+}
+
+impl LinkKind {
+    pub fn link(self) -> Link {
+        match self {
+            LinkKind::NvLink => Link { bandwidth: 130e9, latency: 5e-6 },
+            LinkKind::Pcie => Link { bandwidth: 6.5e9, latency: 8e-6 },
+            LinkKind::IbRdma => Link { bandwidth: 10e9, latency: 15e-6 },
+            LinkKind::IbNoRdma => Link { bandwidth: 5e9, latency: 25e-6 },
+            LinkKind::IbRdma4x => Link { bandwidth: 40e9, latency: 15e-6 },
+        }
+    }
+}
+
+/// One accelerator model.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceSpec {
+    /// Achievable dense-math throughput, FLOP/s (V100 fp32 peak is
+    /// 15.7 TFLOP/s; ~55% is what large fused training steps achieve).
+    pub flops: f64,
+    /// On-chip memory in bytes.
+    pub memory: f64,
+    /// Achievable HBM bandwidth, bytes/s (for bandwidth-bound ops).
+    pub mem_bw: f64,
+}
+
+impl DeviceSpec {
+    pub fn v100() -> Self {
+        Self { flops: 8.6e12, memory: 16.0 * 1024f64.powi(3), mem_bw: 750e9 }
+    }
+}
+
+/// The device graph: `n_machines` x `gpus_per_machine` homogeneous
+/// accelerators; one intra-machine link class and one inter-machine class.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub name: String,
+    pub n_machines: usize,
+    pub gpus_per_machine: usize,
+    pub device: DeviceSpec,
+    pub intra: LinkKind,
+    pub inter: LinkKind,
+}
+
+impl Cluster {
+    /// The paper's testbed: 2 machines x 8 V100, NVLink + EDR IB RDMA.
+    pub fn paper_testbed() -> Self {
+        Self {
+            name: "2x8xV100 NVLink+IB-RDMA".into(),
+            n_machines: 2,
+            gpus_per_machine: 8,
+            device: DeviceSpec::v100(),
+            intra: LinkKind::NvLink,
+            inter: LinkKind::IbRdma,
+        }
+    }
+
+    /// Same machines, different device count (for the Figure-8 parallelism
+    /// sweep): devices fill machines 8-at-a-time.
+    pub fn with_gpus(total: usize) -> Self {
+        let per = total.min(8);
+        let machines = total.div_ceil(per.max(1)).max(1);
+        Self {
+            name: format!("{machines}x{per}xV100"),
+            n_machines: machines,
+            gpus_per_machine: per,
+            ..Self::paper_testbed()
+        }
+    }
+
+    /// Figure-7b variants over cross-machine bandwidth.
+    pub fn with_inter(kind: LinkKind) -> Self {
+        Self { inter: kind, name: format!("2x8xV100 inter={kind:?}"), ..Self::paper_testbed() }
+    }
+
+    /// Figure-7c variant: single machine, 8 GPUs, chosen intra link.
+    pub fn single_machine(intra: LinkKind) -> Self {
+        Self {
+            name: format!("1x8xV100 intra={intra:?}"),
+            n_machines: 1,
+            gpus_per_machine: 8,
+            device: DeviceSpec::v100(),
+            intra,
+            inter: LinkKind::IbRdma,
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.n_machines * self.gpus_per_machine
+    }
+
+    /// Machine index of a device (devices are numbered machine-major).
+    pub fn machine_of(&self, device: usize) -> usize {
+        device / self.gpus_per_machine
+    }
+
+    /// Does a contiguous group of `group` devices starting at `start` span
+    /// machines?
+    pub fn group_crosses_machines(&self, start: usize, group: usize) -> bool {
+        group > 0 && self.machine_of(start) != self.machine_of(start + group - 1)
+    }
+
+    pub fn intra_link(&self) -> Link {
+        self.intra.link()
+    }
+
+    pub fn inter_link(&self) -> Link {
+        self.inter.link()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_shape() {
+        let c = Cluster::paper_testbed();
+        assert_eq!(c.n_devices(), 16);
+        assert_eq!(c.machine_of(7), 0);
+        assert_eq!(c.machine_of(8), 1);
+    }
+
+    #[test]
+    fn group_span() {
+        let c = Cluster::paper_testbed();
+        assert!(!c.group_crosses_machines(0, 8));
+        assert!(c.group_crosses_machines(4, 8));
+        assert!(c.group_crosses_machines(0, 16));
+    }
+
+    #[test]
+    fn with_gpus_partial() {
+        let c = Cluster::with_gpus(4);
+        assert_eq!(c.n_devices(), 4);
+        assert_eq!(c.n_machines, 1);
+        let c = Cluster::with_gpus(24);
+        assert_eq!(c.n_devices(), 24);
+        assert_eq!(c.n_machines, 3);
+    }
+
+    #[test]
+    fn link_ordering_matches_paper() {
+        // NVLink >> 4xRDMA > RDMA > noRDMA; PCIe ~ NVLink/20.
+        let nv = LinkKind::NvLink.link().bandwidth;
+        let r4 = LinkKind::IbRdma4x.link().bandwidth;
+        let r = LinkKind::IbRdma.link().bandwidth;
+        let nr = LinkKind::IbNoRdma.link().bandwidth;
+        let pcie = LinkKind::Pcie.link().bandwidth;
+        assert!(nv > r4 && r4 > r && r > nr);
+        assert!(nv / r4 >= 3.0, "paper: even 4x RDMA ~10x slower than NVLink");
+        assert!((nv / pcie - 20.0).abs() < 2.0);
+    }
+}

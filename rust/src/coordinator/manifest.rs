@@ -1,0 +1,159 @@
+//! Parser for `artifacts/manifest.txt` — the contract `python/compile/
+//! aot.py` writes describing each shipped model scale and the ordered
+//! parameter-buffer list (names, dtypes, shapes) of its train-step
+//! artifacts.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One parameter buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One model scale shipped as artifacts.
+#[derive(Debug, Clone, Default)]
+pub struct ModelMeta {
+    pub tag: String,
+    pub hyper: HashMap<String, i64>,
+    /// Parameters in train-step argument order.
+    pub params: Vec<ParamSpec>,
+}
+
+impl ModelMeta {
+    pub fn hyper_get(&self, key: &str) -> Result<i64> {
+        self.hyper
+            .get(key)
+            .copied()
+            .with_context(|| format!("model `{}` missing hyper `{key}`", self.tag))
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(|p| p.elems()).sum()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub models: HashMap<String, ModelMeta>,
+    pub tp_shards: usize,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        for (lno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("model") => {
+                    let tag = it.next().context("model tag")?.to_string();
+                    let mut meta = ModelMeta { tag: tag.clone(), ..Default::default() };
+                    for kv in it {
+                        let (k, v) = kv
+                            .split_once('=')
+                            .with_context(|| format!("line {}: bad kv `{kv}`", lno + 1))?;
+                        meta.hyper.insert(k.to_string(), v.parse()?);
+                    }
+                    m.models.insert(tag, meta);
+                }
+                Some("param") => {
+                    let tag = it.next().context("param tag")?;
+                    let name = it.next().context("param name")?.to_string();
+                    let dtype = it.next().context("param dtype")?;
+                    if dtype != "f32" {
+                        bail!("line {}: unsupported dtype {dtype}", lno + 1);
+                    }
+                    let dims = it.next().context("param dims")?;
+                    let shape: Vec<usize> =
+                        dims.split(',').map(|d| d.parse()).collect::<Result<_, _>>()?;
+                    m.models
+                        .get_mut(tag)
+                        .with_context(|| format!("param for unknown model `{tag}`"))?
+                        .params
+                        .push(ParamSpec { name, shape });
+                }
+                Some("tp_shards") => {
+                    m.tp_shards = it.next().context("tp_shards value")?.parse()?;
+                }
+                Some(other) => bail!("line {}: unknown directive `{other}`", lno + 1),
+                None => {}
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn model(&self, tag: &str) -> Result<&ModelMeta> {
+        self.models.get(tag).with_context(|| format!("unknown model `{tag}`"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+model small vocab=512 seq=32 d_model=64 n_layers=2 d_ff=256 batch=8 n_params=200
+param small embed f32 512,64
+param small head f32 64,512
+tp_shards 2
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.tp_shards, 2);
+        let small = m.model("small").unwrap();
+        assert_eq!(small.hyper_get("vocab").unwrap(), 512);
+        assert_eq!(small.params.len(), 2);
+        assert_eq!(small.params[0].name, "embed");
+        assert_eq!(small.params[0].elems(), 512 * 64);
+        assert_eq!(small.n_params(), 2 * 512 * 64);
+    }
+
+    #[test]
+    fn rejects_unknown_directive() {
+        assert!(Manifest::parse("bogus line\n").is_err());
+    }
+
+    #[test]
+    fn rejects_orphan_param() {
+        assert!(Manifest::parse("param nope x f32 2,2\n").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_when_built() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.models.contains_key("small"));
+            assert!(m.models.contains_key("e2e"));
+            assert_eq!(m.tp_shards, 2);
+            // param order contract: embed first, head last.
+            let small = m.model("small").unwrap();
+            assert_eq!(small.params.first().unwrap().name, "embed");
+            assert_eq!(small.params.last().unwrap().name, "head");
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 coordinator: the TensorOpt session (strategy search options of
+//! §4.1), the training coordinator over the PJRT execution engine, and the
+//! artifacts manifest contract with `python/compile/aot.py`.
+
+pub mod manifest;
+pub mod session;
+pub mod trainer;
+
+pub use manifest::{Manifest, ModelMeta, ParamSpec};
+pub use session::{FindResult, Plan, ProfilePoint, SearchOption, Session};
+pub use trainer::{train_dp, train_tp, TrainReport, TrainerCfg};

@@ -1,0 +1,176 @@
+//! The TensorOpt session API (§4.1): `find_strategy` with the paper's
+//! three user-facing options — **mini-time**, **mini-parallelism** and
+//! **profiling** — on top of the FT algorithm.
+
+use crate::cluster::Cluster;
+use crate::cost::comm::CommModel;
+use crate::ft::{frontier_search, FtOptions, FtResult};
+use crate::graph::Graph;
+use crate::parallel::Strategy;
+
+/// The paper's strategy-search options (§4.1).
+#[derive(Debug, Clone)]
+pub enum SearchOption {
+    /// Minimize per-iteration time under the device-memory constraint at a
+    /// user-specified parallelism.
+    MiniTime { parallelism: u32 },
+    /// Find the minimum number of devices whose frontier fits in memory
+    /// (cost-effectiveness / correctness checking).
+    MiniParallelism { max_parallelism: u32 },
+    /// Minimum per-iteration time across a range of parallelisms without
+    /// running the job (for cluster schedulers / cloud users).
+    Profiling { parallelisms: Vec<u32> },
+}
+
+/// A chosen plan.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub parallelism: u32,
+    pub strategy: Strategy,
+    pub est_time: f64,
+    pub est_memory: f64,
+}
+
+/// One profiling row: parallelism -> best feasible time (None = cannot
+/// run: even the min-memory strategy overflows).
+#[derive(Debug, Clone)]
+pub struct ProfilePoint {
+    pub parallelism: u32,
+    pub best_time: Option<f64>,
+    pub min_memory: f64,
+}
+
+/// A TensorOpt session: model graph + cluster, with cached FT results per
+/// parallelism.
+pub struct Session {
+    pub graph: Graph,
+    pub cluster: Cluster,
+    pub opts_proto: FtOptions,
+}
+
+impl Session {
+    pub fn new(graph: Graph, cluster: Cluster) -> Self {
+        let opts_proto = FtOptions::new(cluster.n_devices() as u32);
+        Self { graph, cluster, opts_proto }
+    }
+
+    fn ft_at(&self, d: u32) -> FtResult {
+        let cluster = Cluster::with_gpus(d as usize);
+        let comm = CommModel::profile(&cluster);
+        let mut opts = self.opts_proto.clone();
+        opts.devices = d;
+        frontier_search(&self.graph, &cluster, &comm, opts)
+    }
+
+    /// Device memory budget with the paper's safety margin (§5.2: pick
+    /// ~`capacity / 1.1` so consistent underestimation cannot OOM).
+    pub fn mem_budget(&self) -> f64 {
+        self.cluster.device.memory / 1.1
+    }
+
+    /// Run a search option.
+    pub fn find_strategy(&self, opt: &SearchOption) -> anyhow::Result<FindResult> {
+        match opt {
+            SearchOption::MiniTime { parallelism } => {
+                let r = self.ft_at(*parallelism);
+                let budget = self.mem_budget();
+                let t = r
+                    .frontier
+                    .min_time_within(budget)
+                    .or_else(|| r.frontier.min_mem())
+                    .ok_or_else(|| anyhow::anyhow!("empty frontier"))?;
+                let (strategy, _) = r.strategy_of(t);
+                Ok(FindResult::Plan(Plan {
+                    parallelism: *parallelism,
+                    strategy,
+                    est_time: t.time,
+                    est_memory: t.mem,
+                }))
+            }
+            SearchOption::MiniParallelism { max_parallelism } => {
+                let budget = self.mem_budget();
+                let mut d = 1u32;
+                while d <= *max_parallelism {
+                    let r = self.ft_at(d);
+                    if let Some(t) = r.frontier.min_mem() {
+                        if t.mem <= budget {
+                            let (strategy, _) = r.strategy_of(t);
+                            return Ok(FindResult::Plan(Plan {
+                                parallelism: d,
+                                strategy,
+                                est_time: t.time,
+                                est_memory: t.mem,
+                            }));
+                        }
+                    }
+                    d *= 2;
+                }
+                anyhow::bail!("model does not fit within {max_parallelism} devices")
+            }
+            SearchOption::Profiling { parallelisms } => {
+                let budget = self.mem_budget();
+                let rows = parallelisms
+                    .iter()
+                    .map(|&d| {
+                        let r = self.ft_at(d);
+                        let best = r.frontier.min_time_within(budget).map(|t| t.time);
+                        let min_mem =
+                            r.frontier.min_mem().map(|t| t.mem).unwrap_or(f64::INFINITY);
+                        ProfilePoint { parallelism: d, best_time: best, min_memory: min_mem }
+                    })
+                    .collect();
+                Ok(FindResult::Profile(rows))
+            }
+        }
+    }
+}
+
+/// Result of `find_strategy`.
+pub enum FindResult {
+    Plan(Plan),
+    Profile(Vec<ProfilePoint>),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models::tiny_mlp;
+
+    fn session() -> Session {
+        Session::new(tiny_mlp(256), Cluster::paper_testbed())
+    }
+
+    #[test]
+    fn mini_time_returns_plan() {
+        let s = session();
+        let r = s.find_strategy(&SearchOption::MiniTime { parallelism: 4 }).unwrap();
+        let FindResult::Plan(p) = r else { panic!("expected plan") };
+        assert_eq!(p.parallelism, 4);
+        assert!(p.est_time > 0.0);
+        assert!(p.est_memory <= s.mem_budget());
+        assert_eq!(p.strategy.configs.len(), s.graph.n_ops());
+    }
+
+    #[test]
+    fn mini_parallelism_small_model_fits_one_device() {
+        let s = session();
+        let r = s
+            .find_strategy(&SearchOption::MiniParallelism { max_parallelism: 16 })
+            .unwrap();
+        let FindResult::Plan(p) = r else { panic!() };
+        assert_eq!(p.parallelism, 1, "tiny model fits a single device");
+    }
+
+    #[test]
+    fn profiling_covers_range() {
+        let s = session();
+        let r = s
+            .find_strategy(&SearchOption::Profiling { parallelisms: vec![1, 2, 4] })
+            .unwrap();
+        let FindResult::Profile(rows) = r else { panic!() };
+        assert_eq!(rows.len(), 3);
+        for row in &rows {
+            assert!(row.best_time.is_some(), "tiny model runs at any parallelism");
+        }
+    }
+}

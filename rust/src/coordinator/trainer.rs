@@ -1,0 +1,348 @@
+//! The training coordinator: builds execution graphs for a chosen
+//! parallelization strategy, owns the training loop, parameters, data
+//! generation and loss logging. This is TensorOpt's "automatic execution"
+//! half (§4.2) on the real PJRT runtime — Python is never on this path.
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::{default_artifacts_dir, ExecStep, Executor, HostTensor, Runtime};
+use crate::util::rng::XorShift;
+
+use super::manifest::{Manifest, ModelMeta};
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainerCfg {
+    /// Manifest model tag: "small" or "e2e".
+    pub model: String,
+    /// Virtual devices (data-parallel width; TP width comes from the
+    /// manifest's `tp_shards`).
+    pub devices: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Horovod-style fused gradient all-reduce (vs per-tensor).
+    pub fused: bool,
+    pub fusion_bucket_bytes: usize,
+    /// Use the Pallas-kernel variant of the small train step.
+    pub pallas: bool,
+    pub log_every: usize,
+}
+
+impl Default for TrainerCfg {
+    fn default() -> Self {
+        Self {
+            model: "small".into(),
+            devices: 2,
+            steps: 20,
+            lr: 0.5,
+            seed: 7,
+            fused: false,
+            fusion_bucket_bytes: 4 * 1024 * 1024,
+            pallas: false,
+            log_every: 10,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Mean loss per step.
+    pub losses: Vec<f32>,
+    pub wall_s: f64,
+    pub metrics: crate::runtime::ExecMetrics,
+    pub n_params: usize,
+    pub per_iter_s: f64,
+}
+
+fn init_param(rng: &mut XorShift, name: &str, shape: &[usize]) -> HostTensor {
+    let n: usize = shape.iter().product();
+    let fan_in = shape[0].max(1) as f64;
+    let data: Vec<f32> = if name.ends_with("ln1") || name.ends_with("ln2") {
+        // [scale; shift] rows
+        let half = n / 2;
+        (0..n).map(|i| if i < half { 1.0 } else { 0.0 }).collect()
+    } else if name.ends_with("b1") {
+        vec![0.0; n]
+    } else if name == "head" {
+        let s = (1.0 / fan_in).sqrt() * 0.5;
+        (0..n).map(|_| (rng.normal() * s) as f32).collect()
+    } else {
+        let s = (2.0 / fan_in).sqrt();
+        (0..n).map(|_| (rng.normal() * s) as f32).collect()
+    };
+    HostTensor::f32(shape.to_vec(), data)
+}
+
+/// Synthetic next-token batch: ids uniform, labels = (ids + 1) mod vocab —
+/// a learnable deterministic structure so the loss curve is meaningful.
+fn make_batch(rng: &mut XorShift, batch: usize, seq: usize, vocab: usize) -> (HostTensor, HostTensor) {
+    let ids: Vec<i32> = (0..batch * seq).map(|_| rng.below(vocab) as i32).collect();
+    let labels: Vec<i32> = ids.iter().map(|&t| (t + 1) % vocab as i32).collect();
+    (
+        HostTensor::i32(vec![batch, seq], ids),
+        HostTensor::i32(vec![batch, seq], labels),
+    )
+}
+
+fn grad_name(p: &str) -> String {
+    format!("g_{p}")
+}
+
+/// Data-parallel training: one `train_step_<model>` execution per device,
+/// gradient all-reduce (fused or per-tensor), SGD.
+pub fn train_dp(cfg: &TrainerCfg) -> Result<TrainReport> {
+    let dir = default_artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let meta = manifest.model(&cfg.model)?.clone();
+    let mut rt = Runtime::cpu(&dir)?;
+    let artifact = if cfg.pallas {
+        ensure!(cfg.model == "small", "pallas variant is shipped at small scale");
+        "train_step_small_pallas".to_string()
+    } else {
+        format!("train_step_{}", cfg.model)
+    };
+    let exe = rt.load(&artifact)?;
+
+    let batch = meta.hyper_get("batch")? as usize;
+    let seq = meta.hyper_get("seq")? as usize;
+    let vocab = meta.hyper_get("vocab")? as usize;
+
+    let mut ex = Executor::new(cfg.devices);
+    let mut rng = XorShift::new(cfg.seed);
+    for p in &meta.params {
+        let t = init_param(&mut rng, &p.name, &p.shape);
+        ex.set_replicated(&p.name, &t);
+    }
+
+    let param_names: Vec<String> = meta.params.iter().map(|p| p.name.clone()).collect();
+    let grad_names: Vec<String> = param_names.iter().map(|p| grad_name(p)).collect();
+    let mut inputs = param_names.clone();
+    inputs.push("ids".into());
+    inputs.push("labels".into());
+    let mut outputs = vec!["loss".to_string()];
+    outputs.extend(grad_names.iter().cloned());
+
+    // the per-iteration execution graph (paper: compute op + inserted
+    // collectives + optimizer).
+    let mut steps: Vec<ExecStep> =
+        vec![ExecStep::Compute { exe, inputs, outputs }];
+    if cfg.fused {
+        steps.push(ExecStep::AllReduceFused {
+            bufs: grad_names.clone(),
+            average: true,
+            bucket_bytes: cfg.fusion_bucket_bytes,
+        });
+    } else {
+        for gname in &grad_names {
+            steps.push(ExecStep::AllReduceSum { buf: gname.clone(), average: true, ring: true });
+        }
+    }
+    steps.push(ExecStep::Sgd { params: param_names.clone(), grads: grad_names, lr: cfg.lr });
+
+    let t0 = std::time::Instant::now();
+    let mut losses = Vec::with_capacity(cfg.steps);
+    for step in 0..cfg.steps {
+        // fresh batch per device (true data parallelism).
+        for d in 0..cfg.devices {
+            let (ids, labels) = make_batch(&mut rng, batch, seq, vocab);
+            ex.set(d, "ids", ids);
+            ex.set(d, "labels", labels);
+        }
+        ex.run(&steps)?;
+        let mean_loss: f32 = (0..cfg.devices)
+            .map(|d| ex.get(d, "loss").unwrap().as_f32()[0])
+            .sum::<f32>()
+            / cfg.devices as f32;
+        losses.push(mean_loss);
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            eprintln!("[train_dp {}] step {step:4} loss {mean_loss:.4}", cfg.model);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(TrainReport {
+        losses,
+        wall_s: wall,
+        metrics: ex.metrics,
+        n_params: meta.n_params(),
+        per_iter_s: wall / cfg.steps.max(1) as f64,
+    })
+}
+
+/// Tensor-parallel training (sharded-vocabulary LM head, `tp_shards`
+/// devices): the 4-segment execution graph with max/sum collectives at the
+/// paper's communication points. Backbone parameters are replicated
+/// (identical dh => identical gradients, no backbone all-reduce needed);
+/// each device owns one head shard.
+pub fn train_tp(cfg: &TrainerCfg) -> Result<TrainReport> {
+    let dir = default_artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    ensure!(cfg.model == "small", "TP segments are shipped for the small model");
+    let meta: ModelMeta = manifest.model("small")?.clone();
+    let n = manifest.tp_shards;
+    let mut rt = Runtime::cpu(&dir)?;
+    let a = rt.load("tp_a_small")?;
+    let b = rt.load("tp_b_small")?;
+    let c: Vec<_> = (0..n)
+        .map(|k| rt.load(&format!("tp_c{k}of{n}_small")))
+        .collect::<Result<_>>()?;
+    let d_exe = rt.load("tp_d_small")?;
+
+    let batch = meta.hyper_get("batch")? as usize;
+    let seq = meta.hyper_get("seq")? as usize;
+    let vocab = meta.hyper_get("vocab")? as usize;
+    let dmodel = meta.hyper_get("d_model")? as usize;
+
+    let mut ex = Executor::new(n);
+    let mut rng = XorShift::new(cfg.seed);
+    // backbone params replicated; head sharded along vocab.
+    let backbone: Vec<_> = meta.params[..meta.params.len() - 1].to_vec();
+    for p in &backbone {
+        let t = init_param(&mut rng, &p.name, &p.shape);
+        ex.set_replicated(&p.name, &t);
+    }
+    let head_full = init_param(&mut rng, "head", &[dmodel, vocab]);
+    let vshard = vocab / n;
+    for dev in 0..n {
+        // column slice [dmodel, vshard] starting at dev*vshard.
+        let src = head_full.as_f32();
+        let mut data = Vec::with_capacity(dmodel * vshard);
+        for r in 0..dmodel {
+            let off = r * vocab + dev * vshard;
+            data.extend_from_slice(&src[off..off + vshard]);
+        }
+        ex.set(dev, "head_shard", HostTensor::f32(vec![dmodel, vshard], data));
+    }
+
+    let bb_names: Vec<String> = backbone.iter().map(|p| p.name.clone()).collect();
+    let bb_grads: Vec<String> = bb_names.iter().map(|p| grad_name(p)).collect();
+    let mut a_inputs = bb_names.clone();
+    a_inputs.push("head_shard".into());
+    a_inputs.push("ids".into());
+    let mut d_inputs = bb_names.clone();
+    d_inputs.push("ids".into());
+    d_inputs.push("dh".into());
+
+    let steps: Vec<ExecStep> = vec![
+        ExecStep::Compute {
+            exe: a,
+            inputs: a_inputs,
+            outputs: vec!["h".into(), "logits".into(), "m".into()],
+        },
+        ExecStep::AllReduceMax { buf: "m".into() },
+        ExecStep::Compute {
+            exe: b,
+            inputs: vec!["logits".into(), "m".into()],
+            outputs: vec!["z".into()],
+        },
+        ExecStep::AllReduceSum { buf: "z".into(), average: false, ring: false },
+        ExecStep::ComputePerDevice {
+            exes: c,
+            inputs: vec![
+                "head_shard".into(),
+                "h".into(),
+                "logits".into(),
+                "m".into(),
+                "z".into(),
+                "labels".into(),
+            ],
+            outputs: vec!["loss".into(), "g_head_shard".into(), "dh".into()],
+        },
+        ExecStep::AllReduceSum { buf: "loss".into(), average: false, ring: false },
+        ExecStep::AllReduceSum { buf: "dh".into(), average: false, ring: true },
+        ExecStep::Compute { exe: d_exe, inputs: d_inputs, outputs: bb_grads.clone() },
+        ExecStep::Sgd { params: bb_names, grads: bb_grads, lr: cfg.lr },
+        ExecStep::Sgd {
+            params: vec!["head_shard".into()],
+            grads: vec!["g_head_shard".into()],
+            lr: cfg.lr,
+        },
+    ];
+
+    let t0 = std::time::Instant::now();
+    let mut losses = Vec::with_capacity(cfg.steps);
+    for step in 0..cfg.steps {
+        // TP: the same batch on every shard.
+        let (ids, labels) = make_batch(&mut rng, batch, seq, vocab);
+        ex.set_replicated("ids", &ids);
+        ex.set_replicated("labels", &labels);
+        ex.run(&steps)?;
+        let loss = ex.get(0, "loss").unwrap().as_f32()[0];
+        losses.push(loss);
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            eprintln!("[train_tp small] step {step:4} loss {loss:.4}");
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(TrainReport {
+        losses,
+        wall_s: wall,
+        metrics: ex.metrics,
+        n_params: meta.n_params(),
+        per_iter_s: wall / cfg.steps.max(1) as f64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        default_artifacts_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn dp_training_reduces_loss() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let cfg = TrainerCfg { steps: 40, log_every: 0, ..Default::default() };
+        let r = train_dp(&cfg).unwrap();
+        assert_eq!(r.losses.len(), 40);
+        let first = r.losses[0];
+        let last = *r.losses.last().unwrap();
+        // fresh synthetic batch every step (no memorization): expect a
+        // clear but not dramatic drop at this step count.
+        assert!(last < first * 0.88, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn tp_training_reduces_loss_and_matches_dp_scale() {
+        if !artifacts_ready() {
+            return;
+        }
+        let cfg = TrainerCfg { steps: 40, log_every: 0, ..Default::default() };
+        let r = train_tp(&cfg).unwrap();
+        let first = r.losses[0];
+        let last = *r.losses.last().unwrap();
+        // initial loss near log(512) ≈ 6.24 proves the sharded softmax is
+        // assembled correctly; decreasing proves the TP gradients work.
+        assert!((first - 6.24).abs() < 1.5, "initial TP loss {first}");
+        assert!(last < first * 0.88, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn fused_and_unfused_dp_agree() {
+        if !artifacts_ready() {
+            return;
+        }
+        let base = TrainerCfg { steps: 6, log_every: 0, ..Default::default() };
+        let a = train_dp(&base).unwrap();
+        let b = train_dp(&TrainerCfg { fused: true, ..base }).unwrap();
+        for (x, y) in a.losses.iter().zip(&b.losses) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn pallas_step_trains() {
+        if !artifacts_ready() {
+            return;
+        }
+        let cfg = TrainerCfg { pallas: true, steps: 4, log_every: 0, ..Default::default() };
+        let r = train_dp(&cfg).unwrap();
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+    }
+}

@@ -1,0 +1,291 @@
+//! Communication-time models (§3.2 "Improving cost estimation accuracy").
+//!
+//! Three oracles implement [`CollectiveCost`]:
+//!
+//! - [`GroundTruthComm`] — the α–β ring-collective model over the cluster
+//!   topology with NIC contention between concurrent groups. This is what
+//!   the discrete-event simulator charges (plus scheduling overheads), i.e.
+//!   our stand-in for "actually running it on the testbed".
+//! - [`CommModel`] — the paper's estimator: offline "profiles" the actual
+//!   bandwidth at payload sizes `2^i` per device-partitioning scheme
+//!   (group size x machine-crossing), then predicts by interpolating the
+//!   bandwidths of the surrounding powers of two. Matches the paper's
+//!   6–7 % estimation-error regime.
+//! - [`NaiveComm`] — the OptCNN/FlexFlow baseline the paper criticizes:
+//!   `bytes / nominal-bandwidth`, no latency, no contention (Table 2's
+//!   70 %+ error comparison).
+
+use crate::cluster::Cluster;
+use crate::parallel::resched::{Coll, CollectiveCost};
+
+/// Payload-volume factor of a ring collective: how many times the payload
+/// crosses a link, per participant.
+fn volume_factor(coll: Coll, g: u32) -> f64 {
+    let g = g as f64;
+    match coll {
+        Coll::AllReduce => 2.0 * (g - 1.0) / g,
+        Coll::AllGather => g - 1.0, // payload = per-device input shard
+        Coll::ReduceScatter => (g - 1.0) / g,
+        Coll::AllToAll => (g - 1.0) / g,
+        Coll::Broadcast => 1.0,
+    }
+}
+
+/// Latency steps of a ring collective.
+fn latency_steps(coll: Coll, g: u32) -> f64 {
+    match coll {
+        Coll::AllReduce => 2.0 * (g as f64 - 1.0),
+        _ => g as f64 - 1.0,
+    }
+}
+
+/// α–β ground truth with NIC contention.
+#[derive(Debug, Clone)]
+pub struct GroundTruthComm {
+    pub cluster: Cluster,
+}
+
+impl GroundTruthComm {
+    pub fn new(cluster: Cluster) -> Self {
+        Self { cluster }
+    }
+
+    /// Effective per-flow bandwidth for a group of size `g`.
+    ///
+    /// Intra-machine (NVLink/PCIe switch): full link bandwidth per group.
+    /// Crossing machines: the per-machine NIC is shared by all concurrent
+    /// groups whose ring crosses it — with `D/g` groups running the same
+    /// collective layer-wide, each machine's NIC multiplexes
+    /// `max(1, groups/machines)` flows (the paper's "different groups may
+    /// still contend for bandwidth").
+    pub fn effective_bw(&self, g: u32, crossing: bool) -> f64 {
+        if !crossing {
+            self.cluster.intra_link().bandwidth
+        } else {
+            let d = self.cluster.n_devices() as u32;
+            let groups = (d / g.max(1)).max(1);
+            let contention = (groups as f64 / self.cluster.n_machines as f64).max(1.0);
+            self.cluster.inter_link().bandwidth / contention
+        }
+    }
+
+    fn latency(&self, crossing: bool) -> f64 {
+        if crossing {
+            self.cluster.inter_link().latency
+        } else {
+            self.cluster.intra_link().latency
+        }
+    }
+}
+
+impl CollectiveCost for GroundTruthComm {
+    fn coll_time(&self, coll: Coll, bytes: f64, group: u32, crossing: bool) -> f64 {
+        if group <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let bw = self.effective_bw(group, crossing);
+        volume_factor(coll, group) * bytes / bw + latency_steps(coll, group) * self.latency(crossing)
+    }
+
+    fn group_crosses(&self, group: u32) -> bool {
+        group as usize > self.cluster.gpus_per_machine
+    }
+}
+
+/// Profile-based estimator: measured bandwidth at payload sizes `2^i`
+/// per (group size, crossing) partitioning scheme, interpolated between
+/// the surrounding powers of two (§3.2).
+#[derive(Debug, Clone)]
+pub struct CommModel {
+    cluster: Cluster,
+    /// profiles[(g, crossing)] -> measured bandwidth at bytes = 2^i,
+    /// i in 0..P.
+    profiles: std::collections::HashMap<(u32, bool), Vec<f64>>,
+    max_exp: usize,
+}
+
+impl CommModel {
+    /// "Profile" the cluster by measuring the ground-truth all-reduce
+    /// bandwidth at every power-of-two payload for every divisor group
+    /// size. In a real deployment these are microbenchmarks; here the
+    /// ground truth *is* the α–β model (the simulator additionally charges
+    /// scheduling overheads the profile cannot see — the source of the
+    /// paper's consistent underestimation).
+    pub fn profile(cluster: &Cluster) -> Self {
+        let gt = GroundTruthComm::new(cluster.clone());
+        let d = cluster.n_devices() as u32;
+        let max_exp = 36; // up to 64 GB payloads
+        let mut profiles = std::collections::HashMap::new();
+        for g in 2..=d {
+            if d % g != 0 {
+                continue;
+            }
+            for crossing in [false, true] {
+                let mut bws = Vec::with_capacity(max_exp + 1);
+                for i in 0..=max_exp {
+                    let bytes = (1u64 << i) as f64;
+                    // measured bandwidth = payload volume / time, using
+                    // all-reduce as the probe collective (the paper
+                    // profiles each collective pattern; ring collectives
+                    // share the same effective link bandwidth).
+                    let t = gt.coll_time(Coll::AllReduce, bytes, g, crossing);
+                    let vol = volume_factor(Coll::AllReduce, g) * bytes;
+                    bws.push(vol / t);
+                }
+                profiles.insert((g, crossing), bws);
+            }
+        }
+        Self { cluster: cluster.clone(), profiles, max_exp }
+    }
+
+    /// Interpolated effective bandwidth for a payload of `bytes`.
+    fn interp_bw(&self, g: u32, crossing: bool, bytes: f64) -> f64 {
+        let key = (g, crossing);
+        let Some(bws) = self.profiles.get(&key) else {
+            // non-divisor group (can appear transiently in re-scheduling
+            // search): fall back to the nearest profiled divisor.
+            let mut best: Option<(u32, &Vec<f64>)> = None;
+            for ((pg, pc), v) in &self.profiles {
+                if *pc == crossing {
+                    let better = match best {
+                        None => true,
+                        Some((bg, _)) => {
+                            (*pg as i64 - g as i64).abs() < (bg as i64 - g as i64).abs()
+                        }
+                    };
+                    if better {
+                        best = Some((*pg, v));
+                    }
+                }
+            }
+            return best.map(|(_, v)| interp_in(v, bytes, self.max_exp)).unwrap_or(1e9);
+        };
+        interp_in(bws, bytes, self.max_exp)
+    }
+}
+
+/// Interpolate bandwidth between the two surrounding powers of two.
+fn interp_in(bws: &[f64], bytes: f64, max_exp: usize) -> f64 {
+    if bytes <= 1.0 {
+        return bws[0];
+    }
+    let l2 = bytes.log2();
+    let i = (l2.floor() as usize).min(max_exp);
+    let j = (i + 1).min(max_exp);
+    let frac = (l2 - i as f64).clamp(0.0, 1.0);
+    bws[i] * (1.0 - frac) + bws[j] * frac
+}
+
+impl CollectiveCost for CommModel {
+    fn coll_time(&self, coll: Coll, bytes: f64, group: u32, crossing: bool) -> f64 {
+        if group <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let vol = volume_factor(coll, group) * bytes;
+        // latency is visible in the profiled bandwidth curve (small sizes
+        // have low measured bandwidth), so prediction is volume / bw only.
+        vol / self.interp_bw(group, crossing, bytes)
+    }
+
+    fn group_crosses(&self, group: u32) -> bool {
+        group as usize > self.cluster.gpus_per_machine
+    }
+}
+
+/// The naive estimator the paper measures 70 %+ error for: payload over
+/// nominal link bandwidth, ignoring latency and contention.
+#[derive(Debug, Clone)]
+pub struct NaiveComm {
+    pub cluster: Cluster,
+}
+
+impl CollectiveCost for NaiveComm {
+    fn coll_time(&self, coll: Coll, bytes: f64, group: u32, crossing: bool) -> f64 {
+        if group <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let bw = if crossing {
+            self.cluster.inter_link().bandwidth
+        } else {
+            self.cluster.intra_link().bandwidth
+        };
+        volume_factor(coll, group) * bytes / bw
+    }
+
+    fn group_crosses(&self, group: u32) -> bool {
+        group as usize > self.cluster.gpus_per_machine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+
+    fn gt() -> GroundTruthComm {
+        GroundTruthComm::new(Cluster::paper_testbed())
+    }
+
+    #[test]
+    fn crossing_slower_than_intra() {
+        let g = gt();
+        let a = g.coll_time(Coll::AllReduce, 1e8, 8, false);
+        let b = g.coll_time(Coll::AllReduce, 1e8, 8, true);
+        assert!(b > 5.0 * a, "inter {b} vs intra {a}");
+    }
+
+    #[test]
+    fn latency_dominates_small_transfers() {
+        let g = gt();
+        let t_small = g.coll_time(Coll::AllReduce, 1024.0, 16, true);
+        let pure_bw = 2.0 * 15.0 / 16.0 * 1024.0 / g.effective_bw(16, true);
+        assert!(t_small > 10.0 * pure_bw, "latency term must dominate");
+    }
+
+    #[test]
+    fn profile_interpolation_accurate() {
+        // The estimator should be within a few % of ground truth at
+        // arbitrary (non-power-of-two) sizes.
+        let cluster = Cluster::paper_testbed();
+        let model = CommModel::profile(&cluster);
+        let truth = gt();
+        for &bytes in &[3000.0, 1.5e6, 7.7e7, 9.9e8] {
+            for &g in &[2u32, 4, 8, 16] {
+                for crossing in [false, true] {
+                    let est = model.coll_time(Coll::AllReduce, bytes, g, crossing);
+                    let act = truth.coll_time(Coll::AllReduce, bytes, g, crossing);
+                    let err = (est - act).abs() / act;
+                    // small payloads sit on the steep (latency-dominated)
+                    // part of the bandwidth curve where log2-interpolation
+                    // is least accurate — the paper reports 6-7% overall.
+                    assert!(err < 0.08, "err {err} at bytes={bytes} g={g} crossing={crossing}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn naive_underestimates_badly_on_small_payloads() {
+        let cluster = Cluster::paper_testbed();
+        let naive = NaiveComm { cluster };
+        let truth = gt();
+        let est = naive.coll_time(Coll::AllReduce, 64.0 * 1024.0, 16, true);
+        let act = truth.coll_time(Coll::AllReduce, 64.0 * 1024.0, 16, true);
+        let err = (act - est) / act;
+        assert!(err > 0.5, "naive err {err} should be large (paper: ~70%)");
+    }
+
+    #[test]
+    fn contention_reduces_bandwidth() {
+        let g = gt();
+        // 8 groups of 2 crossing machines contend harder than 1 group of 16.
+        assert!(g.effective_bw(2, true) < g.effective_bw(16, true));
+    }
+
+    #[test]
+    fn zero_cases() {
+        let g = gt();
+        assert_eq!(g.coll_time(Coll::AllReduce, 1e6, 1, false), 0.0);
+        assert_eq!(g.coll_time(Coll::AllGather, 0.0, 8, false), 0.0);
+    }
+}

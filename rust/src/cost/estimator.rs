@@ -1,0 +1,112 @@
+//! Whole-strategy cost evaluation (Eq. 3): per-iteration time, peak
+//! memory, and the communication/computation decomposition plotted as the
+//! dotted lines of Figure 6.
+
+use crate::cluster::Cluster;
+use crate::graph::Graph;
+use crate::parallel::resched::CollectiveCost;
+use crate::parallel::Strategy;
+
+use super::op_cost::{edge_costs, op_cost};
+
+/// Aggregate costs of a complete strategy.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StrategyCost {
+    /// Per-iteration time `t(S, G, D)`.
+    pub time: f64,
+    /// Peak per-device memory `m(S, G, D)`.
+    pub memory: f64,
+    /// Communication component `c(S, G, D)` (sync + re-scheduling).
+    pub comm_time: f64,
+    /// Compute component.
+    pub compute_time: f64,
+}
+
+/// Edge-reuse choice when evaluating a fixed strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReuseChoice {
+    /// Always keep both copies (min time, max memory).
+    KeepBoth,
+    /// Always keep one copy (min memory, extra backward comm).
+    KeepOne,
+}
+
+/// Evaluate a complete strategy with the given communication oracle.
+pub fn eval_strategy(
+    g: &Graph,
+    s: &Strategy,
+    cluster: &Cluster,
+    comm: &dyn CollectiveCost,
+    reuse: ReuseChoice,
+) -> StrategyCost {
+    let mut out = StrategyCost::default();
+    for op in &g.ops {
+        let c = op_cost(op, s.config(op.id), cluster, comm);
+        out.memory += c.mem;
+        out.compute_time += c.t_compute;
+        out.comm_time += c.t_sync;
+    }
+    for e in &g.edges {
+        let opts = edge_costs(g, e, s.config(e.src), s.config(e.dst), comm);
+        let (m, t) = match reuse {
+            // options are sorted by memory ascending; last = max mem/min time.
+            ReuseChoice::KeepBoth => *opts.last().unwrap(),
+            ReuseChoice::KeepOne => opts[0],
+        };
+        out.memory += m;
+        out.comm_time += t;
+    }
+    out.time = out.compute_time + out.comm_time;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::comm::GroundTruthComm;
+    use crate::graph::models::{tiny_mlp, vgg16};
+
+    #[test]
+    fn dp_strategy_has_positive_costs() {
+        let g = tiny_mlp(256);
+        let cluster = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(cluster.clone());
+        let s = Strategy::all_data_parallel(&g, 16);
+        let c = eval_strategy(&g, &s, &cluster, &comm, ReuseChoice::KeepBoth);
+        assert!(c.time > 0.0 && c.memory > 0.0);
+        assert!(c.comm_time > 0.0, "DP must pay gradient all-reduce");
+        assert!((c.time - (c.comm_time + c.compute_time)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vgg_dp_memory_scale_sane() {
+        // VGG16 @ batch 256 DP on 16 GPUs: activations split 16x, params
+        // replicated -> a few GB per device.
+        let g = vgg16(256);
+        let cluster = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(cluster.clone());
+        let s = Strategy::all_data_parallel(&g, 16);
+        let c = eval_strategy(&g, &s, &cluster, &comm, ReuseChoice::KeepBoth);
+        let gb = c.memory / 1024f64.powi(3);
+        assert!(gb > 1.0 && gb < 16.0, "VGG DP mem {gb} GB");
+    }
+
+    #[test]
+    fn keep_one_saves_memory_costs_time() {
+        let g = tiny_mlp(256);
+        let cluster = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(cluster.clone());
+        // mixed strategy with at least one re-scheduling edge: make fc2
+        // model-parallel while the rest is data-parallel.
+        let mut s = Strategy::all_data_parallel(&g, 4);
+        let fc2 = g.ops.iter().find(|o| o.name == "fc2").unwrap();
+        let cfgs = crate::parallel::enumerate_configs(fc2, 4, 2);
+        let out_axis = fc2.axes.iter().position(|a| a.name == "fc2_out").unwrap();
+        let mp = cfgs.iter().find(|c| c.axis_shards(out_axis) == 4).unwrap().clone();
+        s.configs[fc2.id.0] = mp;
+        let both = eval_strategy(&g, &s, &cluster, &comm, ReuseChoice::KeepBoth);
+        let one = eval_strategy(&g, &s, &cluster, &comm, ReuseChoice::KeepOne);
+        assert!(one.memory <= both.memory);
+        assert!(one.comm_time >= both.comm_time);
+    }
+}

@@ -1,0 +1,196 @@
+//! Operator and edge execution costs (Eq. 1 and Eq. 2).
+//!
+//! - `m(o, s) = m_p + m_t`: per-device parameter memory (param + gradient;
+//!   plain SGD, matching the executor) plus stashed-activation memory.
+//! - `t(o, s) = t_c + t_s`: compute time (FLOP-rate bound with a
+//!   memory-bandwidth floor and a launch overhead) plus synchronization
+//!   time (gradient all-reduce over every mesh dim the parameter is
+//!   replicated across).
+//! - `t(e, s_i, s_j)`: tensor re-scheduling cost between the producer's
+//!   output split and the consumer's required split (shortest collective
+//!   path, Figure 5), with the three tensor-reuse options of §4.2 turning
+//!   each edge into a small (memory, time) frontier.
+
+use crate::cluster::Cluster;
+use crate::graph::{Edge, Graph, Op};
+use crate::parallel::resched::{reschedule_cost, Coll, CollectiveCost};
+use crate::parallel::{edge_cost_options, ParallelConfig};
+
+/// Per-operator kernel-launch overhead (seconds). Part of why many small
+/// ops cost more than one fused op; also keeps t_c strictly positive.
+pub const LAUNCH_OVERHEAD: f64 = 10e-6;
+
+/// Decomposed operator cost.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpCost {
+    pub mem: f64,
+    /// t_c: forward+backward compute.
+    pub t_compute: f64,
+    /// t_s: parameter-gradient synchronization.
+    pub t_sync: f64,
+}
+
+impl OpCost {
+    pub fn time(&self) -> f64 {
+        self.t_compute + self.t_sync
+    }
+}
+
+/// Does the group along mesh dim `m` of `cfg` cross machines? Uses the
+/// machine-major row-major placement rule (see `parallel::mesh`).
+pub fn mesh_dim_crosses(cfg: &ParallelConfig, m: usize, cluster: &Cluster) -> bool {
+    cluster.n_machines > 1 && cfg.mesh.group_span(m) as usize > cluster.gpus_per_machine
+}
+
+/// Eq. 1: cost of operator `op` under configuration `cfg`.
+pub fn op_cost(
+    op: &Op,
+    cfg: &ParallelConfig,
+    cluster: &Cluster,
+    comm: &dyn CollectiveCost,
+) -> OpCost {
+    let dev = cluster.device;
+    let par = cfg.compute_parallelism() as f64;
+
+    // ---- t_c: fwd + bwd ≈ 3x fwd FLOPs, divided over the compute shards,
+    // with a memory-bandwidth floor for bandwidth-bound ops.
+    let flops = 3.0 * op.flops_fwd / par;
+    let param_shard = op.param_bytes() / cfg.param_shards(op) as f64;
+    let out_shard = op.out.bytes() / cfg.out_split(op).n_shards() as f64;
+    let bytes_touched = 3.0 * (param_shard + out_shard);
+    let t_compute =
+        (flops / dev.flops).max(bytes_touched / dev.mem_bw) + LAUNCH_OVERHEAD;
+
+    // ---- t_s: gradient all-reduce over every mesh dim that replicates
+    // the parameter (Batch/Spatial-assigned dims).
+    let mut t_sync = 0.0;
+    for (m, g) in cfg.grad_sync_mesh_dims(op) {
+        let crossing = mesh_dim_crosses(cfg, m, cluster);
+        t_sync += comm.coll_time(Coll::AllReduce, param_shard, g, crossing);
+    }
+
+    // ---- m: parameter (+ gradient; plain SGD) + stashed activations.
+    let mem = 2.0 * param_shard + op.out.bytes() / cfg.out_split(op).n_shards() as f64
+        * op.act_keep_factor;
+
+    OpCost { mem, t_compute, t_sync }
+}
+
+/// Edge cost options (Eq. 2 + §4.2 tensor reuse): each entry is
+/// (extra_memory, time) for one reuse policy; entry 0 is always the
+/// cheapest-memory option. The forward re-schedule appears in all options;
+/// `KeepBoth` pays memory to avoid the backward re-materialization.
+pub fn edge_costs(
+    g: &Graph,
+    e: &Edge,
+    src_cfg: &ParallelConfig,
+    dst_cfg: &ParallelConfig,
+    comm: &dyn CollectiveCost,
+) -> Vec<(f64, f64)> {
+    let src_op = g.op(e.src);
+    let dst_op = g.op(e.dst);
+    let tensor = &src_op.out;
+    let from = src_cfg.out_split(src_op);
+    let to = dst_cfg.required_input_split(dst_op, tensor);
+    if from == to {
+        return vec![(0.0, 0.0)];
+    }
+    let dims: Vec<i64> = tensor.dims.iter().map(|d| d.size).collect();
+    let t = reschedule_cost(tensor.bytes(), &dims, &from, &to, comm);
+    if !t.is_finite() {
+        // unreachable layout (should not happen): prohibitively expensive.
+        return vec![(f64::INFINITY, f64::INFINITY)];
+    }
+    if t == 0.0 {
+        // free transformation (e.g. slicing a replicated tensor).
+        return vec![(0.0, 0.0)];
+    }
+    let copy_bytes = to.bytes_per_device(tensor.bytes());
+    edge_cost_options(true, copy_bytes, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::comm::GroundTruthComm;
+    use crate::graph::models::tiny_mlp;
+    use crate::parallel::enumerate_configs;
+
+    fn setup() -> (crate::graph::Graph, Cluster, GroundTruthComm) {
+        let cluster = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(cluster.clone());
+        (tiny_mlp(256), cluster, comm)
+    }
+
+    #[test]
+    fn dp_pays_grad_sync_mp_does_not() {
+        let (g, cluster, comm) = setup();
+        let fc1 = g.ops.iter().find(|o| o.name == "fc1").unwrap();
+        let cfgs = enumerate_configs(fc1, 4, 2);
+        let b = fc1.batch_axis().unwrap();
+        let dp = cfgs.iter().find(|c| c.axis_shards(b) == 4).unwrap();
+        let mp = cfgs.iter().find(|c| c.axis_shards(1) == 4).unwrap();
+        let dp_cost = op_cost(fc1, dp, &cluster, &comm);
+        let mp_cost = op_cost(fc1, mp, &cluster, &comm);
+        assert!(dp_cost.t_sync > 0.0);
+        assert_eq!(mp_cost.t_sync, 0.0);
+        // model parallelism shards the parameter memory 4x.
+        assert!(mp_cost.mem < dp_cost.mem);
+    }
+
+    #[test]
+    fn replication_increases_memory_and_compute() {
+        let (g, cluster, comm) = setup();
+        let fc1 = g.ops.iter().find(|o| o.name == "fc1").unwrap();
+        let cfgs = enumerate_configs(fc1, 4, 2);
+        let b = fc1.batch_axis().unwrap();
+        let dp = cfgs.iter().find(|c| c.axis_shards(b) == 4).unwrap();
+        let rep = cfgs.iter().find(|c| c.replication() == 4).unwrap();
+        let dp_cost = op_cost(fc1, dp, &cluster, &comm);
+        let rep_cost = op_cost(fc1, rep, &cluster, &comm);
+        assert!(rep_cost.t_compute > dp_cost.t_compute);
+        assert!(rep_cost.mem > dp_cost.mem);
+        // ...but replication needs no sync at all.
+        assert_eq!(rep_cost.t_sync, 0.0);
+    }
+
+    #[test]
+    fn matching_splits_zero_edge_cost() {
+        let (g, cluster, comm) = setup();
+        let _ = cluster;
+        let fc1 = g.ops.iter().find(|o| o.name == "fc1").unwrap();
+        let relu1 = g.ops.iter().find(|o| o.name == "relu1").unwrap();
+        let e = g.edges.iter().find(|e| e.src == fc1.id && e.dst == relu1.id).unwrap();
+        let c_src = ParallelConfig::data_parallel(fc1, 4).unwrap();
+        let c_dst = ParallelConfig::data_parallel(relu1, 4).unwrap();
+        assert_eq!(edge_costs(&g, e, &c_src, &c_dst, &comm), vec![(0.0, 0.0)]);
+    }
+
+    #[test]
+    fn mismatched_splits_offer_reuse_tradeoff() {
+        let (g, cluster, comm) = setup();
+        let _ = cluster;
+        let fc1 = g.ops.iter().find(|o| o.name == "fc1").unwrap();
+        let relu1 = g.ops.iter().find(|o| o.name == "relu1").unwrap();
+        let e = g.edges.iter().find(|e| e.src == fc1.id && e.dst == relu1.id).unwrap();
+        // producer splits batch; consumer needs feature split.
+        let c_src = ParallelConfig::data_parallel(fc1, 4).unwrap();
+        let cfgs = enumerate_configs(relu1, 4, 2);
+        let feat = relu1.axes.iter().position(|a| a.name == "fc1_out").unwrap();
+        let c_dst = cfgs.iter().find(|c| c.axis_shards(feat) == 4).unwrap();
+        let opts = edge_costs(&g, e, &c_src, c_dst, &comm);
+        assert!(opts.len() >= 2, "expect reuse trade-off, got {opts:?}");
+        // one option trades memory for time:
+        assert!(opts.iter().any(|&(m, _)| m > 0.0));
+        assert!(opts.iter().any(|&(m, _)| m == 0.0));
+    }
+
+    #[test]
+    fn launch_overhead_floor() {
+        let (g, cluster, comm) = setup();
+        let relu = g.ops.iter().find(|o| o.name == "relu1").unwrap();
+        let c = ParallelConfig::data_parallel(relu, 16).unwrap();
+        let cost = op_cost(relu, &c, &cluster, &comm);
+        assert!(cost.t_compute >= LAUNCH_OVERHEAD);
+    }
+}

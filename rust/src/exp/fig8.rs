@@ -1,0 +1,82 @@
+//! **Figure 8** — minimum per-iteration time vs parallelism: TensorOpt
+//! adapts to any device count (choosing low-memory strategies when GPUs
+//! are scarce); Data Parallel and OptCNN need enough devices for their
+//! only/ time-optimal strategy to fit; ToFu runs small but can get *worse*
+//! with more GPUs (excessive memory minimization => costly cross-machine
+//! traffic).
+
+use crate::baselines::{data_parallel, optcnn, tofu};
+use crate::cluster::Cluster;
+use crate::cost::comm::CommModel;
+use crate::frontier::Mode;
+use crate::ft::{frontier_search, FtOptions};
+use crate::graph::models;
+use crate::util::table::Table;
+
+use super::GB;
+
+/// Feasibility = strategy's per-device memory within capacity/1.1 (§5.2
+/// safety margin).
+fn feasible(mem: f64, cluster: &Cluster) -> bool {
+    mem <= cluster.device.memory / 1.1
+}
+
+pub fn run(model: &str, parallelisms: &[u32]) -> Table {
+    let g = models::by_name(model, 256).unwrap_or_else(|| panic!("unknown model {model}"));
+    let mut t = Table::new(
+        &format!("Figure 8 [{model}]: min per-iteration time vs parallelism (OOM = infeasible)"),
+        &["gpus", "TensorOpt", "DataParallel", "OptCNN", "ToFu"],
+    );
+    for &d in parallelisms {
+        let cluster = Cluster::with_gpus(d as usize);
+        let comm = CommModel::profile(&cluster);
+        let budget = cluster.device.memory / 1.1;
+        let fmt = |time: f64, mem: f64| -> String {
+            if feasible(mem, &cluster) {
+                format!("{time:.3}")
+            } else {
+                format!("OOM({:.0}GB)", mem / GB)
+            }
+        };
+        let ft = frontier_search(&g, &cluster, &comm, FtOptions::new(d));
+        let ours = match ft.frontier.min_time_within(budget) {
+            Some(tu) => format!("{:.3}", tu.time),
+            None => {
+                let mm = ft.frontier.min_mem().unwrap();
+                format!("OOM({:.0}GB)", mm.mem / GB)
+            }
+        };
+        let dp = data_parallel(&g, &cluster, &comm, d);
+        let oc = optcnn(&g, &cluster, &comm, FtOptions::new(d).with_mode(Mode::TimeOnly));
+        let tf = tofu(&g, &cluster, &comm, FtOptions::new(d));
+        t.row(&[
+            d.to_string(),
+            ours,
+            fmt(dp.cost.time, dp.cost.memory),
+            fmt(oc.cost.time, oc.cost.memory),
+            fmt(tf.cost.time, tf.cost.memory),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    /// Transformer @ {8, 16}: TensorOpt runs at 8 GPUs; DataParallel
+    /// cannot (9.7 GB params replicated => ~20+ GB/device).
+    #[test]
+    fn fig8_transformer_shape() {
+        let t = super::run("transformer", &[8, 16]);
+        let row8 = &t.rows[0];
+        assert!(!row8[1].contains("OOM"), "TensorOpt must run at 8 GPUs: {row8:?}");
+        assert!(row8[2].contains("OOM"), "DataParallel OOMs at 8 GPUs: {row8:?}");
+        let row16 = &t.rows[1];
+        assert!(!row16[1].contains("OOM"));
+        // at 16 GPUs TensorOpt's time <= DataParallel's time when DP runs.
+        if !row16[2].contains("OOM") {
+            let ours: f64 = row16[1].parse().unwrap();
+            let dp: f64 = row16[2].parse().unwrap();
+            assert!(ours <= dp * 1.001);
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Experiment harness: one module per table/figure of the paper's
+//! evaluation (§5). Every entry point prints the paper-style table and
+//! writes machine-readable CSV under `results/`.
+
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+
+use crate::frontier::Frontier;
+
+/// Where CSV outputs go.
+pub fn results_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results")
+}
+
+pub const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Locate the *turning point* of a frontier (§5.1): walking from low to
+/// high memory, the first point after which the marginal time improvement
+/// per GB drops below `frac` of the initial slope — the knee where
+/// "execution time increases rapidly below, drops slowly above".
+pub fn turning_point(frontier: &Frontier, frac: f64) -> Option<(f64, f64)> {
+    let pts = &frontier.tuples;
+    if pts.len() < 3 {
+        return pts.first().map(|t| (t.mem, t.time));
+    }
+    let slope = |i: usize, j: usize| -> f64 {
+        let dm = pts[j].mem - pts[i].mem;
+        if dm <= 0.0 {
+            return 0.0;
+        }
+        (pts[i].time - pts[j].time) / dm
+    };
+    let s0 = slope(0, 1).max(1e-30);
+    for i in 1..pts.len() - 1 {
+        if slope(i, i + 1) < frac * s0 {
+            return Some((pts[i].mem, pts[i].time));
+        }
+    }
+    pts.last().map(|t| (t.mem, t.time))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontier::{reduce, Mode, Trace, Tuple};
+
+    #[test]
+    fn turning_point_finds_knee() {
+        // steep drop then flat: knee at mem=4.
+        let pts = vec![
+            (1.0, 100.0),
+            (2.0, 50.0),
+            (3.0, 20.0),
+            (4.0, 10.0),
+            (10.0, 9.5),
+            (20.0, 9.3),
+        ];
+        let f = reduce(
+            pts.iter().map(|&(m, t)| Tuple::new(m, t, Trace::empty())).collect(),
+            Mode::Pareto,
+        );
+        let (m, _) = turning_point(&f, 0.05).unwrap();
+        assert!((3.0..=5.0).contains(&m), "knee at mem {m}");
+    }
+
+    #[test]
+    fn turning_point_degenerate() {
+        let f = reduce(vec![Tuple::new(1.0, 2.0, Trace::empty())], Mode::Pareto);
+        assert_eq!(turning_point(&f, 0.05), Some((1.0, 2.0)));
+    }
+}

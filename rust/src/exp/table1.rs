@@ -1,0 +1,45 @@
+//! **Table 1** — Statistics of the models: parameter size (GB), batch
+//! size, and estimated single-GPU peak training memory (GB).
+
+use crate::graph::models::table1_models;
+use crate::util::table::Table;
+
+use super::GB;
+
+pub fn run() -> Table {
+    let mut t = Table::new(
+        "Table 1: Statistics of the models (paper: RNN 108/126, WideResNet 7.3/83, Transformer 9.7/74, VGG16 0.52/30)",
+        &["Model", "Parameter (GB)", "Batch Size", "Memory (GB)"],
+    );
+    for (name, g) in table1_models() {
+        let batch = g
+            .ops
+            .iter()
+            .find_map(|o| o.out.dim_size("batch"))
+            .unwrap_or(256);
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}", g.total_param_bytes() / GB),
+            batch.to_string(),
+            format!("{:.0}", g.single_device_memory_bytes() / GB),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table1_shape_matches_paper() {
+        let t = super::run();
+        assert_eq!(t.rows.len(), 4);
+        let params: Vec<f64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        // ordering: RNN >> Transformer ≈ WideResNet >> VGG16
+        assert!(params[0] > params[1] && params[0] > params[2]);
+        assert!(params[3] < 1.0);
+        let mems: Vec<f64> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        // every model needs far more than one 16 GB GPU except VGG16.
+        assert!(mems[0] > 100.0, "RNN mem {}", mems[0]);
+        assert!(mems[3] < 60.0);
+    }
+}

@@ -1,0 +1,69 @@
+//! **Table 4** — per-iteration time of TensorOpt (mini-time strategy),
+//! TensorOpt running plain data parallelism, and a Horovod-like engine
+//! (data parallelism with fused gradient all-reduce), on the **real**
+//! PJRT execution engine with virtual devices.
+//!
+//! Paper shape: mini-time <= data-parallel; Horovod slightly faster than
+//! TensorOpt-data-parallel (fusion); on models where DP is already
+//! optimal all three are close.
+
+use crate::coordinator::{train_dp, train_tp, TrainerCfg};
+use crate::util::table::Table;
+
+pub struct Row {
+    pub mini_time: f64,
+    pub dp: f64,
+    pub horovod: f64,
+    pub tp: f64,
+}
+
+pub fn measure(devices: usize, steps: usize) -> anyhow::Result<Row> {
+    let base = TrainerCfg {
+        model: "small".into(),
+        devices,
+        steps,
+        log_every: 0,
+        ..Default::default()
+    };
+    // TensorOpt data-parallel: per-tensor ring all-reduce.
+    let dp = train_dp(&base)?;
+    // Horovod: same strategy + tensor-fusion buckets.
+    let hv = train_dp(&TrainerCfg { fused: true, ..base.clone() })?;
+    // Tensor-parallel (sharded LM head) — the alternative strategy.
+    let tp = train_tp(&base)?;
+    // TensorOpt mini-time: the faster of the available execution
+    // strategies for this model/parallelism (what the FT frontier's
+    // min-time point selects between).
+    let mini = dp.per_iter_s.min(tp.per_iter_s);
+    Ok(Row { mini_time: mini, dp: dp.per_iter_s, horovod: hv.per_iter_s, tp: tp.per_iter_s })
+}
+
+pub fn run(devices: usize, steps: usize) -> anyhow::Result<Table> {
+    let r = measure(devices, steps)?;
+    let mut t = Table::new(
+        &format!(
+            "Table 4: per-iteration time (s), real PJRT executor, {devices} virtual devices x {steps} steps (paper: mini-time <= data-parallel ~ Horovod)"
+        ),
+        &["Engine / strategy", "per-iteration (s)"],
+    );
+    t.row(&["TensorOpt (mini-time)".into(), format!("{:.4}", r.mini_time)]);
+    t.row(&["TensorOpt (data parallel)".into(), format!("{:.4}", r.dp)]);
+    t.row(&["Horovod (fused DP)".into(), format!("{:.4}", r.horovod)]);
+    t.row(&["TensorOpt (tensor parallel)".into(), format!("{:.4}", r.tp)]);
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::runtime::default_artifacts_dir;
+
+    #[test]
+    fn table4_ordering() {
+        if !default_artifacts_dir().join("manifest.txt").exists() {
+            return; // requires `make artifacts`
+        }
+        let r = super::measure(2, 8).unwrap();
+        assert!(r.mini_time <= r.dp * 1.0001);
+        assert!(r.mini_time > 0.0 && r.horovod > 0.0 && r.tp > 0.0);
+    }
+}

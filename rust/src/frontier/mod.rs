@@ -1,0 +1,366 @@
+//! Cost frontiers (§3.1) and the three operations FT manipulates them
+//! with: **product**, **union** and **reduce** (Algorithm 1).
+//!
+//! A tuple is (memory, time, trace); the trace is a persistent,
+//! structurally-shared provenance tree ([`Trace`]) recording which
+//! parallelization configuration / edge-reuse option produced the tuple.
+//! Unrolling a strategy (§3.2 "Unroll LDP and elimination") is a walk of
+//! this tree — no separate per-elimination bookkeeping is needed, and
+//! `Arc` sharing keeps memory linear in the number of algebra operations
+//! rather than in strategies x operators.
+
+use std::sync::Arc;
+
+pub mod trace;
+pub use trace::Trace;
+
+/// Reduction mode: the full Pareto frontier (FT), or single-objective
+/// truncations that turn the same machinery into the OptCNN (time-only)
+/// and ToFu (memory-only) baselines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Pareto,
+    TimeOnly,
+    MemOnly,
+}
+
+/// One (partial-)strategy tuple `(S, m, t)`.
+#[derive(Debug, Clone)]
+pub struct Tuple {
+    pub mem: f64,
+    pub time: f64,
+    pub trace: Arc<Trace>,
+}
+
+impl Tuple {
+    pub fn new(mem: f64, time: f64, trace: Arc<Trace>) -> Self {
+        Self { mem, time, trace }
+    }
+
+    /// Combine two tuples (costs add; traces pair up) — the elementwise
+    /// step of the *product* operation.
+    pub fn combine(&self, other: &Tuple) -> Tuple {
+        Tuple {
+            mem: self.mem + other.mem,
+            time: self.time + other.time,
+            trace: Trace::pair(&self.trace, &other.trace),
+        }
+    }
+}
+
+/// A cost frontier: tuples sorted by ascending memory, strictly descending
+/// time (the invariant established by [`reduce`]).
+#[derive(Debug, Clone, Default)]
+pub struct Frontier {
+    pub tuples: Vec<Tuple>,
+}
+
+impl Frontier {
+    /// Frontier containing a single tuple.
+    pub fn singleton(mem: f64, time: f64, trace: Arc<Trace>) -> Self {
+        Self { tuples: vec![Tuple::new(mem, time, trace)] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tuples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tuples.is_empty()
+    }
+
+    /// Minimum-time tuple (right end of the frontier).
+    pub fn min_time(&self) -> Option<&Tuple> {
+        self.tuples.last()
+    }
+
+    /// Minimum-memory tuple (left end of the frontier).
+    pub fn min_mem(&self) -> Option<&Tuple> {
+        self.tuples.first()
+    }
+
+    /// Minimum-time tuple subject to a memory budget.
+    pub fn min_time_within(&self, mem_budget: f64) -> Option<&Tuple> {
+        self.tuples.iter().rev().find(|t| t.mem <= mem_budget)
+    }
+
+    /// Check the frontier invariant (ascending mem, descending time).
+    pub fn is_valid(&self) -> bool {
+        self.tuples.windows(2).all(|w| w[0].mem < w[1].mem && w[0].time > w[1].time)
+    }
+
+    /// **Product** ⊗ (Cartesian; costs add, traces pair), reduced.
+    ///
+    /// Perf (§Perf opt-1): costs are combined and reduced *first*; trace
+    /// nodes are allocated only for the surviving tuples. The naive
+    /// combine-then-reduce allocates two `Arc`s per discarded combo, which
+    /// dominated the LDP profile.
+    pub fn product(&self, other: &Frontier, mode: Mode) -> Frontier {
+        // Perf (§Perf opt-2): a product with a singleton frontier is a
+        // uniform cost shift — it preserves the staircase invariant, so
+        // the sort+scan can be skipped entirely. LDP multiplies by the
+        // singleton operator frontier `F(o_i, s_i^p)` at every step, and
+        // the eliminations by `F(o_i, s_i^k)`, so this path is hot.
+        if mode == Mode::Pareto && other.len() == 1 {
+            let b = &other.tuples[0];
+            return Frontier {
+                tuples: self
+                    .tuples
+                    .iter()
+                    .map(|a| {
+                        Tuple::new(a.mem + b.mem, a.time + b.time, Trace::pair(&a.trace, &b.trace))
+                    })
+                    .collect(),
+            };
+        }
+        if mode == Mode::Pareto && self.len() == 1 {
+            return other.product(self, mode);
+        }
+        let mut combos: Vec<(f64, f64, (u32, u32))> =
+            Vec::with_capacity(self.len() * other.len());
+        for (i, a) in self.tuples.iter().enumerate() {
+            for (j, b) in other.tuples.iter().enumerate() {
+                combos.push((a.mem + b.mem, a.time + b.time, (i as u32, j as u32)));
+            }
+        }
+        let kept = reduce_by(combos, mode);
+        Frontier {
+            tuples: kept
+                .into_iter()
+                .map(|(mem, time, (i, j))| {
+                    Tuple::new(
+                        mem,
+                        time,
+                        Trace::pair(
+                            &self.tuples[i as usize].trace,
+                            &other.tuples[j as usize].trace,
+                        ),
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    /// **Union** ∪ (concatenate), reduced.
+    pub fn union(&self, other: &Frontier, mode: Mode) -> Frontier {
+        let mut out = Vec::with_capacity(self.len() + other.len());
+        out.extend(self.tuples.iter().cloned());
+        out.extend(other.tuples.iter().cloned());
+        reduce(out, mode)
+    }
+}
+
+/// Relative ε for frontier thinning: a tuple must improve time by at
+/// least this factor over the previously kept tuple to stay on the
+/// frontier.
+///
+/// The paper's complexity analysis rests on the *random order* assumption
+/// (Assumption 1) under which frontiers stay `O(log K)`; real cost
+/// surfaces are smooth and strongly structured, so exact Pareto sets can
+/// grow into the millions and stall the DP. ε-dominance keeps the
+/// staircase within a 0.5 % band of the exact frontier (each kept point is
+/// a real strategy; only near-duplicate alternatives are dropped) and
+/// bounds every frontier to `O(log(t_max/t_min)/ε)` points. The global
+/// min-time and min-memory points are always preserved exactly.
+pub const THIN_EPS: f64 = 5e-3;
+
+/// **Reduce** (Algorithm 1 + ε-thinning): sort by ascending memory and
+/// keep each tuple that improves the best time seen so far by at least
+/// `THIN_EPS` (relative). Ties on memory keep the faster tuple.
+/// `Mode::TimeOnly` / `Mode::MemOnly` truncate the result to the single
+/// optimal tuple for that objective (OptCNN / ToFu).
+pub fn reduce(tuples: Vec<Tuple>, mode: Mode) -> Frontier {
+    let combos: Vec<(f64, f64, Tuple)> =
+        tuples.into_iter().map(|t| (t.mem, t.time, t)).collect();
+    Frontier { tuples: reduce_by(combos, mode).into_iter().map(|(_, _, t)| t).collect() }
+}
+
+/// Algorithm 1 over (mem, time, payload) triples — shared by [`reduce`]
+/// (payload = full tuple) and [`Frontier::product`] (payload = index pair,
+/// so traces are only allocated for survivors).
+fn reduce_by<T: Clone>(mut items: Vec<(f64, f64, T)>, mode: Mode) -> Vec<(f64, f64, T)> {
+    if items.is_empty() {
+        return items;
+    }
+    match mode {
+        Mode::TimeOnly => {
+            let best = items
+                .into_iter()
+                .min_by(|a, b| (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap())
+                .unwrap();
+            return vec![best];
+        }
+        Mode::MemOnly => {
+            let best = items
+                .into_iter()
+                .min_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap())
+                .unwrap();
+            return vec![best];
+        }
+        Mode::Pareto => {}
+    }
+    // Algorithm 1: ascending memory (time as tiebreak).
+    items.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+    // remember the global min-time item so thinning can never lose it.
+    let best_time = items
+        .iter()
+        .min_by(|a, b| (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap())
+        .cloned()
+        .unwrap();
+    let mut out: Vec<(f64, f64, T)> = Vec::new();
+    let mut v = f64::INFINITY;
+    for t in items {
+        if t.1 < v * (1.0 - THIN_EPS) {
+            v = t.1;
+            // equal-memory entries: the sort guarantees the first (fastest)
+            // wins; later equal-mem tuples have larger time and are skipped
+            // by the time test unless mem strictly increased.
+            if let Some(last) = out.last() {
+                if last.0 == t.0 {
+                    continue;
+                }
+            }
+            out.push(t);
+        }
+    }
+    // re-attach the exact min-time point if thinning dropped it.
+    if let Some(last) = out.last() {
+        if last.1 > best_time.1 {
+            if last.0 == best_time.0 {
+                *out.last_mut().unwrap() = best_time;
+            } else {
+                out.push(best_time);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ptest;
+    use crate::util::rng::XorShift;
+
+    fn tup(mem: f64, time: f64) -> Tuple {
+        Tuple::new(mem, time, Trace::empty())
+    }
+
+    #[test]
+    fn reduce_algorithm1() {
+        // Figure-2 style: random points; frontier = lower-left staircase.
+        let ts = vec![tup(1.0, 10.0), tup(2.0, 5.0), tup(3.0, 7.0), tup(4.0, 4.0), tup(5.0, 4.5)];
+        let f = reduce(ts, Mode::Pareto);
+        let pts: Vec<(f64, f64)> = f.tuples.iter().map(|t| (t.mem, t.time)).collect();
+        assert_eq!(pts, vec![(1.0, 10.0), (2.0, 5.0), (4.0, 4.0)]);
+        assert!(f.is_valid());
+    }
+
+    #[test]
+    fn reduce_equal_memory_keeps_fastest() {
+        let f = reduce(vec![tup(1.0, 5.0), tup(1.0, 3.0), tup(1.0, 9.0)], Mode::Pareto);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.tuples[0].time, 3.0);
+    }
+
+    #[test]
+    fn modes_truncate() {
+        let ts = vec![tup(1.0, 10.0), tup(2.0, 5.0), tup(4.0, 4.0)];
+        let t = reduce(ts.clone(), Mode::TimeOnly);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.tuples[0].time, 4.0);
+        let m = reduce(ts, Mode::MemOnly);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.tuples[0].mem, 1.0);
+    }
+
+    #[test]
+    fn product_adds_costs() {
+        let a = reduce(vec![tup(1.0, 4.0), tup(2.0, 2.0)], Mode::Pareto);
+        let b = reduce(vec![tup(10.0, 40.0), tup(20.0, 20.0)], Mode::Pareto);
+        let p = a.product(&b, Mode::Pareto);
+        assert!(p.is_valid());
+        // best-time combo present:
+        assert_eq!(p.min_time().unwrap().time, 22.0);
+        assert_eq!(p.min_mem().unwrap().mem, 11.0);
+    }
+
+    #[test]
+    fn min_time_within_budget() {
+        let f = reduce(vec![tup(1.0, 10.0), tup(2.0, 5.0), tup(4.0, 4.0)], Mode::Pareto);
+        assert_eq!(f.min_time_within(3.0).unwrap().time, 5.0);
+        assert_eq!(f.min_time_within(100.0).unwrap().time, 4.0);
+        assert!(f.min_time_within(0.5).is_none());
+    }
+
+    /// Property (Definition 1): every input tuple is dominated by some
+    /// frontier tuple, and no frontier tuple dominates another.
+    #[test]
+    fn prop_reduce_is_minimal_dominating_set() {
+        ptest::quick("reduce-dominates", |rng: &mut XorShift| {
+            let n = rng.range(1, 60);
+            let tuples: Vec<Tuple> =
+                (0..n).map(|_| tup((rng.below(30) + 1) as f64, (rng.below(30) + 1) as f64)).collect();
+            let f = reduce(tuples.clone(), Mode::Pareto);
+            crate::prop_assert!(f.is_valid(), "invariant violated");
+            for t in &tuples {
+                let dominated = f
+                    .tuples
+                    .iter()
+                    .any(|ft| ft.mem <= t.mem && ft.time <= t.time);
+                crate::prop_assert!(dominated, "tuple ({},{}) not dominated", t.mem, t.time);
+            }
+            for (i, a) in f.tuples.iter().enumerate() {
+                for (j, b) in f.tuples.iter().enumerate() {
+                    if i != j {
+                        let dom = a.mem <= b.mem && a.time <= b.time;
+                        crate::prop_assert!(!dom, "frontier not minimal");
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: product ⊗ is commutative in costs and reduce(product) of
+    /// frontiers equals reduce over the raw cross-join.
+    #[test]
+    fn prop_product_equals_crossjoin() {
+        ptest::quick("product-crossjoin", |rng: &mut XorShift| {
+            let mk = |rng: &mut XorShift| -> Vec<Tuple> {
+                (0..rng.range(1, 12))
+                    .map(|_| tup((rng.below(20) + 1) as f64, (rng.below(20) + 1) as f64))
+                    .collect()
+            };
+            let a = reduce(mk(rng), Mode::Pareto);
+            let b = reduce(mk(rng), Mode::Pareto);
+            let p1 = a.product(&b, Mode::Pareto);
+            let p2 = b.product(&a, Mode::Pareto);
+            crate::prop_assert!(p1.len() == p2.len(), "commutativity size");
+            for (x, y) in p1.tuples.iter().zip(&p2.tuples) {
+                crate::prop_assert!(
+                    x.mem == y.mem && x.time == y.time,
+                    "commutativity content"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Lemma 2 sanity: frontier of K random tuples has ~O(log K) size.
+    #[test]
+    fn expected_frontier_size_logarithmic() {
+        let mut rng = XorShift::new(99);
+        let k = 4096;
+        let mut total = 0usize;
+        let reps = 20;
+        for _ in 0..reps {
+            let tuples: Vec<Tuple> =
+                (0..k).map(|_| tup(rng.f64(), rng.f64())).collect();
+            total += reduce(tuples, Mode::Pareto).len();
+        }
+        let avg = total as f64 / reps as f64;
+        let expect = (1..=k).map(|i| 1.0 / i as f64).sum::<f64>(); // H_K ≈ ln K
+        assert!((avg - expect).abs() < 4.0, "avg {avg} vs H_K {expect}");
+    }
+}

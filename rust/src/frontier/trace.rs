@@ -1,0 +1,161 @@
+//! Strategy provenance traces.
+//!
+//! Every frontier tuple carries an `Arc<Trace>` recording the choices that
+//! produced its costs: which configuration each operator picked and which
+//! reuse option each edge picked. The FT paper unrolls LDP and the
+//! eliminations by back-pointers (§3.2); a persistent trace tree is the
+//! same information in a form that survives arbitrary interleavings of
+//! product/union/reduce and is safe to share across threads.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A provenance node.
+#[derive(Debug)]
+pub enum Trace {
+    /// No choices (identity element of `pair`).
+    Empty,
+    /// Operator `op` chose configuration index `cfg` (into its `S_i`).
+    OpChoice { op: u32, cfg: u32 },
+    /// Edge `edge` chose reuse/re-schedule option `opt`.
+    EdgeChoice { edge: u32, opt: u8 },
+    /// Combination of two sub-traces (from a frontier product).
+    Pair(Arc<Trace>, Arc<Trace>),
+}
+
+/// Shared `Empty` node: `pair` short-circuits on it, and `Drop` uses it as
+/// the replacement value when tearing down deep chains.
+fn empty_arc() -> Arc<Trace> {
+    static EMPTY: std::sync::OnceLock<Arc<Trace>> = std::sync::OnceLock::new();
+    EMPTY.get_or_init(|| Arc::new(Trace::Empty)).clone()
+}
+
+impl Trace {
+    pub fn empty() -> Arc<Trace> {
+        empty_arc()
+    }
+
+    pub fn op_choice(op: u32, cfg: u32) -> Arc<Trace> {
+        Arc::new(Trace::OpChoice { op, cfg })
+    }
+
+    pub fn edge_choice(edge: u32, opt: u8) -> Arc<Trace> {
+        Arc::new(Trace::EdgeChoice { edge, opt })
+    }
+
+    /// Pair two traces, short-circuiting `Empty` so chains of products
+    /// don't accumulate no-op nodes.
+    pub fn pair(a: &Arc<Trace>, b: &Arc<Trace>) -> Arc<Trace> {
+        match (&**a, &**b) {
+            (Trace::Empty, _) => b.clone(),
+            (_, Trace::Empty) => a.clone(),
+            _ => Arc::new(Trace::Pair(a.clone(), b.clone())),
+        }
+    }
+}
+
+impl Drop for Trace {
+    /// Iterative teardown: LDP composes one `Pair` per step, so traces can
+    /// be thousands of nodes deep — naive recursive drop would overflow
+    /// the stack.
+    fn drop(&mut self) {
+        // `Trace` implements Drop, so fields cannot be moved out of an
+        // owned value; instead swap children with the shared Empty node.
+        let mut stack: Vec<Arc<Trace>> = Vec::new();
+        if let Trace::Pair(a, b) = self {
+            let e = empty_arc();
+            stack.push(std::mem::replace(a, e.clone()));
+            stack.push(std::mem::replace(b, e));
+        }
+        while let Some(arc) = stack.pop() {
+            if let Some(mut t) = Arc::into_inner(arc) {
+                if let Trace::Pair(a, b) = &mut t {
+                    let e = empty_arc();
+                    stack.push(std::mem::replace(a, e.clone()));
+                    stack.push(std::mem::replace(b, e));
+                }
+                // `t` now drops as Pair(Empty, Empty) without recursion.
+            }
+        }
+    }
+}
+
+/// Fully-resolved choices extracted from a trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Choices {
+    /// op id -> configuration index.
+    pub op_cfg: HashMap<u32, u32>,
+    /// edge id -> reuse option index.
+    pub edge_opt: HashMap<u32, u8>,
+}
+
+/// Walk a trace and collect all choices (iterative: traces can be deep —
+/// one Pair per LDP step per op).
+pub fn unroll(trace: &Arc<Trace>) -> Choices {
+    let mut out = Choices::default();
+    let mut stack: Vec<&Trace> = vec![trace];
+    while let Some(t) = stack.pop() {
+        match t {
+            Trace::Empty => {}
+            Trace::OpChoice { op, cfg } => {
+                // Later choices along a path never conflict: each op picks
+                // exactly once per composed strategy. Keep the first seen.
+                out.op_cfg.entry(*op).or_insert(*cfg);
+            }
+            Trace::EdgeChoice { edge, opt } => {
+                out.edge_opt.entry(*edge).or_insert(*opt);
+            }
+            Trace::Pair(a, b) => {
+                stack.push(a);
+                stack.push(b);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_short_circuits_empty() {
+        let e = Trace::empty();
+        let c = Trace::op_choice(3, 7);
+        let p = Trace::pair(&e, &c);
+        assert!(matches!(&*p, Trace::OpChoice { op: 3, cfg: 7 }));
+        let p2 = Trace::pair(&c, &e);
+        assert!(matches!(&*p2, Trace::OpChoice { op: 3, cfg: 7 }));
+    }
+
+    #[test]
+    fn unroll_collects_all() {
+        let a = Trace::op_choice(0, 1);
+        let b = Trace::op_choice(1, 2);
+        let c = Trace::edge_choice(5, 1);
+        let t = Trace::pair(&Trace::pair(&a, &b), &c);
+        let ch = unroll(&t);
+        assert_eq!(ch.op_cfg[&0], 1);
+        assert_eq!(ch.op_cfg[&1], 2);
+        assert_eq!(ch.edge_opt[&5], 1);
+    }
+
+    #[test]
+    fn unroll_deep_chain_no_overflow() {
+        let mut t = Trace::empty();
+        for i in 0..100_000u32 {
+            t = Trace::pair(&t, &Trace::op_choice(i, 0));
+        }
+        let ch = unroll(&t);
+        assert_eq!(ch.op_cfg.len(), 100_000);
+    }
+
+    #[test]
+    fn shared_subtrees_visited() {
+        let shared = Trace::op_choice(9, 9);
+        let t = Trace::pair(&shared, &Trace::pair(&shared, &Trace::op_choice(1, 1)));
+        let ch = unroll(&t);
+        assert_eq!(ch.op_cfg[&9], 9);
+        assert_eq!(ch.op_cfg[&1], 1);
+    }
+}

@@ -1,0 +1,433 @@
+//! The four graph eliminations of §3.2 (Figure 3) over a working graph of
+//! per-configuration cost frontiers.
+//!
+//! - **Node elimination** (Eq. 4): a chain node folds onto a new edge
+//!   bridging its neighbours.
+//! - **Edge elimination** (Eq. 5): parallel edges merge by frontier
+//!   product.
+//! - **Branch elimination** (Eq. 6): a source node feeding exactly one
+//!   consumer folds into that consumer's per-config frontiers. (The paper
+//!   additionally concatenates config spaces for inner branch nodes; we
+//!   use the exact restricted form and let heuristic elimination catch the
+//!   rest — same guarantees for the graphs evaluated, without the
+//!   config-space blow-up.)
+//! - **Heuristic elimination** (Eq. 7): an otherwise-ineliminable node
+//!   (e.g. BERT's shared attention mask) is pinned to one configuration
+//!   chosen by a weighted memory/time heuristic and folded into its
+//!   neighbours. Not frontier-exact; used sparingly (the paper: "only
+//!   twice for BERT").
+//!
+//! Marked (linear-spine) nodes are never eliminated, so the loop leaves a
+//! linear graph for LDP.
+
+use std::collections::HashMap;
+
+use crate::frontier::{reduce, Frontier, Tuple};
+use crate::util::par::par_map_indexed;
+
+use super::space::SearchSpace;
+
+/// A live edge of the working graph with its (K_src x K_dst) frontier
+/// table.
+pub struct WorkEdge {
+    pub src: usize,
+    pub dst: usize,
+    pub table: Vec<Vec<Frontier>>,
+}
+
+/// The mutable elimination state.
+pub struct WorkGraph<'s, 'a> {
+    pub space: &'s SearchSpace<'a>,
+    /// Per-op per-config frontiers (branch/heuristic elimination folds
+    /// neighbour costs into these).
+    pub node_frontiers: Vec<Vec<Frontier>>,
+    pub alive: Vec<bool>,
+    pub marked: Vec<bool>,
+    pub edges: Vec<WorkEdge>,
+    /// Heuristically-pinned configurations (op -> cfg index).
+    pub forced: HashMap<u32, u32>,
+    /// Number of heuristic eliminations performed (reported; the paper
+    /// argues accuracy loss is small because this stays tiny).
+    pub n_heuristic: usize,
+}
+
+impl<'s, 'a> WorkGraph<'s, 'a> {
+    /// Initialize from the search space, marking `spine` ops as
+    /// non-eliminable.
+    pub fn init(space: &'s SearchSpace<'a>, spine: &[crate::graph::OpId]) -> Self {
+        let n = space.graph.n_ops();
+        let node_frontiers: Vec<Vec<Frontier>> = (0..n)
+            .map(|i| (0..space.k(i)).map(|k| space.node_frontier(i, k)).collect())
+            .collect();
+        let mut marked = vec![false; n];
+        for id in spine {
+            marked[id.0] = true;
+        }
+        let edges = space
+            .graph
+            .edges
+            .iter()
+            .enumerate()
+            .map(|(ei, e)| WorkEdge {
+                src: e.src.0,
+                dst: e.dst.0,
+                table: (0..space.k(e.src.0))
+                    .map(|k| {
+                        (0..space.k(e.dst.0))
+                            .map(|p| space.edge_frontier(ei, k, p))
+                            .collect()
+                    })
+                    .collect(),
+            })
+            .collect();
+        Self {
+            space,
+            node_frontiers,
+            alive: vec![true; n],
+            marked,
+            edges,
+            forced: HashMap::new(),
+            n_heuristic: 0,
+        }
+    }
+
+    fn out_edge_ids(&self, i: usize) -> Vec<usize> {
+        (0..self.edges.len()).filter(|&e| self.edges[e].src == i).collect()
+    }
+
+    fn in_edge_ids(&self, i: usize) -> Vec<usize> {
+        (0..self.edges.len()).filter(|&e| self.edges[e].dst == i).collect()
+    }
+
+    /// Eq. 5: merge all parallel edge pairs. Returns how many merges ran.
+    pub fn edge_eliminate_all(&mut self) -> usize {
+        let mode = self.space.opts.mode;
+        let mut merges = 0;
+        loop {
+            // find a pair (a, b) with identical endpoints
+            let mut found: Option<(usize, usize)> = None;
+            'outer: for a in 0..self.edges.len() {
+                for b in a + 1..self.edges.len() {
+                    if self.edges[a].src == self.edges[b].src
+                        && self.edges[a].dst == self.edges[b].dst
+                    {
+                        found = Some((a, b));
+                        break 'outer;
+                    }
+                }
+            }
+            let Some((a, b)) = found else { break };
+            let eb = self.edges.swap_remove(b);
+            let ea = &mut self.edges[a];
+            let threads = self.space.opts.threads;
+            let merged: Vec<Vec<Frontier>> = {
+                let ea_table = &ea.table;
+                par_map_indexed(ea_table.len(), threads, |k| {
+                    ea_table[k]
+                        .iter()
+                        .zip(&eb.table[k])
+                        .map(|(fa, fb)| fa.product(fb, mode))
+                        .collect()
+                })
+            };
+            ea.table = merged;
+            merges += 1;
+        }
+        merges
+    }
+
+    /// Eq. 4: eliminate one chain node (single pred, single succ,
+    /// unmarked). Returns true if a node was eliminated.
+    pub fn node_eliminate_one(&mut self) -> bool {
+        let mode = self.space.opts.mode;
+        let cand = (0..self.alive.len()).find(|&i| {
+            self.alive[i]
+                && !self.marked[i]
+                && self.in_edge_ids(i).len() == 1
+                && self.out_edge_ids(i).len() == 1
+        });
+        let Some(i) = cand else { return false };
+        let e_in = self.in_edge_ids(i)[0];
+        let e_out = self.out_edge_ids(i)[0];
+        let h = self.edges[e_in].src;
+        let j = self.edges[e_out].dst;
+        debug_assert_ne!(h, j, "DAG cannot have h==j around a chain node");
+        let kw = self.space.k(h);
+        let kp = self.space.k(j);
+        let ki = self.space.k(i);
+        let threads = self.space.opts.threads;
+        let (hi, ij) = (&self.edges[e_in].table, &self.edges[e_out].table);
+        let fi = &self.node_frontiers[i];
+        // F(e_hj, w, p) = reduce( U_k  F(e_hi,w,k) ⊗ F(o_i,k) ⊗ F(e_ij,k,p) )
+        let table: Vec<Vec<Frontier>> = par_map_indexed(kw, threads, |w| {
+            (0..kp)
+                .map(|p| {
+                    let mut acc: Vec<Tuple> = Vec::new();
+                    for k in 0..ki {
+                        let part = hi[w][k].product(&fi[k], mode).product(&ij[k][p], mode);
+                        acc.extend(part.tuples);
+                    }
+                    reduce(acc, mode)
+                })
+                .collect()
+        });
+        // remove both edges (careful with swap_remove ordering)
+        let (a, b) = if e_in > e_out { (e_in, e_out) } else { (e_out, e_in) };
+        self.edges.swap_remove(a);
+        self.edges.swap_remove(b);
+        self.edges.push(WorkEdge { src: h, dst: j, table });
+        self.alive[i] = false;
+        self.edge_eliminate_all();
+        true
+    }
+
+    /// Eq. 6 (restricted exact form): eliminate one source node with no
+    /// in-edges whose out-edges all go to a single consumer.
+    pub fn branch_eliminate_one(&mut self) -> bool {
+        let mode = self.space.opts.mode;
+        let cand = (0..self.alive.len()).find(|&i| {
+            if !self.alive[i] || self.marked[i] || !self.in_edge_ids(i).is_empty() {
+                return false;
+            }
+            let outs = self.out_edge_ids(i);
+            outs.len() == 1
+        });
+        let Some(i) = cand else { return false };
+        let e = self.out_edge_ids(i)[0];
+        let j = self.edges[e].dst;
+        let ki = self.space.k(i);
+        let kp = self.space.k(j);
+        let threads = self.space.opts.threads;
+        let table = &self.edges[e].table;
+        let fi = &self.node_frontiers[i];
+        let fj = &self.node_frontiers[j];
+        // F'(o_j, p) = reduce( U_k  F(o_i,k) ⊗ F(e_ij,k,p) ⊗ F(o_j,p) )
+        let new_fj: Vec<Frontier> = par_map_indexed(kp, threads, |p| {
+            let mut acc: Vec<Tuple> = Vec::new();
+            for k in 0..ki {
+                let part = fi[k].product(&table[k][p], mode).product(&fj[p], mode);
+                acc.extend(part.tuples);
+            }
+            reduce(acc, mode)
+        });
+        self.node_frontiers[j] = new_fj;
+        self.edges.swap_remove(e);
+        self.alive[i] = false;
+        true
+    }
+
+    /// Eq. 7: heuristically pin one remaining unmarked node to its best
+    /// single configuration and fold its edges into the neighbours.
+    /// Returns true if a node was eliminated.
+    pub fn heuristic_eliminate_one(&mut self) -> bool {
+        let mode = self.space.opts.mode;
+        // prefer the highest-degree offender (e.g. BERT's mask input).
+        let cand = (0..self.alive.len())
+            .filter(|&i| self.alive[i] && !self.marked[i])
+            .max_by_key(|&i| self.in_edge_ids(i).len() + self.out_edge_ids(i).len());
+        let Some(i) = cand else { return false };
+        let ki = self.space.k(i);
+        let outs = self.out_edge_ids(i);
+        let ins = self.in_edge_ids(i);
+
+        // ---- choose k*: weighted combination of own cost and the average
+        // best-case cost of the incident edges (normalized per term).
+        let dev_mem = self.space.cluster.device.memory;
+        let mut best = (f64::INFINITY, 0usize);
+        for k in 0..ki {
+            let own = &self.space.op_costs[i][k];
+            let mut edge_time = 0.0;
+            for &e in &outs {
+                let row = &self.edges[e].table[k];
+                let avg: f64 = row
+                    .iter()
+                    .map(|f| f.min_time().map_or(0.0, |t| t.time))
+                    .sum::<f64>()
+                    / row.len().max(1) as f64;
+                edge_time += avg;
+            }
+            for &e in &ins {
+                let col_avg: f64 = self.edges[e]
+                    .table
+                    .iter()
+                    .map(|row| row[k].min_time().map_or(0.0, |t| t.time))
+                    .sum::<f64>()
+                    / self.edges[e].table.len().max(1) as f64;
+                edge_time += col_avg;
+            }
+            let score = own.time() + edge_time + own.mem / dev_mem * 1e-2;
+            if score < best.0 {
+                best = (score, k);
+            }
+        }
+        let kstar = best.1;
+
+        // ---- fold: own cost + out-edge costs into consumers, in-edge
+        // costs into producers.
+        let mut first_out = true;
+        for &e in &outs {
+            let j = self.edges[e].dst;
+            let ki_row: Vec<Frontier> = self.edges[e].table[kstar].clone();
+            let fi_k = self.node_frontiers[i][kstar].clone();
+            for (p, fj) in self.node_frontiers[j].iter_mut().enumerate() {
+                let mut combined = fj.product(&ki_row[p], mode);
+                if first_out {
+                    combined = combined.product(&fi_k, mode);
+                }
+                *fj = combined;
+            }
+            first_out = false;
+        }
+        if outs.is_empty() && !ins.is_empty() {
+            // sink node: fold own cost into its first producer.
+            let e = ins[0];
+            let h = self.edges[e].src;
+            let fi_k = self.node_frontiers[i][kstar].clone();
+            for fh in self.node_frontiers[h].iter_mut() {
+                *fh = fh.product(&fi_k, mode);
+            }
+        }
+        for &e in &ins {
+            let h = self.edges[e].src;
+            let col: Vec<Frontier> =
+                self.edges[e].table.iter().map(|row| row[kstar].clone()).collect();
+            for (w, fh) in self.node_frontiers[h].iter_mut().enumerate() {
+                *fh = fh.product(&col[w], mode);
+            }
+        }
+        // drop all incident edges (descending index for swap_remove).
+        let mut dead: Vec<usize> = outs.into_iter().chain(ins).collect();
+        dead.sort_unstable_by(|a, b| b.cmp(a));
+        for e in dead {
+            self.edges.swap_remove(e);
+        }
+        self.forced.insert(i as u32, kstar as u32);
+        self.alive[i] = false;
+        self.n_heuristic += 1;
+        true
+    }
+
+    /// Algorithm 2 lines 4-11: run exact eliminations to fixpoint, then a
+    /// heuristic elimination, until only marked (spine) nodes survive.
+    pub fn run(&mut self) {
+        loop {
+            let mut progress = true;
+            while progress {
+                progress = false;
+                if self.edge_eliminate_all() > 0 {
+                    progress = true;
+                }
+                while self.node_eliminate_one() {
+                    progress = true;
+                }
+                while self.branch_eliminate_one() {
+                    progress = true;
+                }
+            }
+            let remaining =
+                (0..self.alive.len()).any(|i| self.alive[i] && !self.marked[i]);
+            if !remaining {
+                break;
+            }
+            if !self.heuristic_eliminate_one() {
+                break;
+            }
+        }
+    }
+
+    /// The surviving chain in topological order, with the edge table
+    /// between each consecutive pair. Panics if the residual graph is not
+    /// linear (elimination incomplete — a bug).
+    pub fn into_chain(self) -> (Vec<usize>, Vec<Vec<Frontier>>, Vec<Vec<Vec<Frontier>>>, HashMap<u32, u32>, usize) {
+        let order = self.space.graph.topo_order();
+        let chain: Vec<usize> =
+            order.iter().map(|o| o.0).filter(|&i| self.alive[i]).collect();
+        let mut chain_edges: Vec<Vec<Vec<Frontier>>> = Vec::new();
+        for w in chain.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let es: Vec<&WorkEdge> =
+                self.edges.iter().filter(|e| e.src == a && e.dst == b).collect();
+            assert_eq!(
+                es.len(),
+                1,
+                "residual graph not linear between op {a} and {b}: {} edges",
+                es.len()
+            );
+            chain_edges.push(es[0].table.clone());
+        }
+        assert_eq!(
+            self.edges.len(),
+            chain.len().saturating_sub(1),
+            "stray edges remain after elimination"
+        );
+        let node_frontiers: Vec<Vec<Frontier>> = chain
+            .iter()
+            .map(|&i| self.node_frontiers[i].clone())
+            .collect();
+        (chain, node_frontiers, chain_edges, self.forced, self.n_heuristic)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::cost::comm::GroundTruthComm;
+    use crate::ft::space::FtOptions;
+    use crate::graph::models::{bert_like_test, tiny_mlp, tiny_resnet};
+
+    fn space_for<'a>(
+        g: &'a crate::graph::Graph,
+        cluster: &'a Cluster,
+        comm: &'a GroundTruthComm,
+        d: u32,
+    ) -> SearchSpace<'a> {
+        SearchSpace::build(g, cluster, comm, FtOptions::new(d).sequential(), None)
+    }
+
+    #[test]
+    fn chain_graph_nothing_to_eliminate_when_all_marked() {
+        let g = tiny_mlp(64);
+        let cluster = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(cluster.clone());
+        let space = space_for(&g, &cluster, &comm, 4);
+        let spine = g.mark_linear_spine();
+        let mut wg = WorkGraph::init(&space, &spine);
+        wg.run();
+        let (chain, _, edges, forced, nh) = wg.into_chain();
+        assert_eq!(chain.len(), g.n_ops());
+        assert_eq!(edges.len(), g.n_ops() - 1);
+        assert!(forced.is_empty());
+        assert_eq!(nh, 0);
+    }
+
+    #[test]
+    fn resnet_branch_folds_to_spine() {
+        let g = tiny_resnet(16);
+        let cluster = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(cluster.clone());
+        let space = space_for(&g, &cluster, &comm, 4);
+        let spine = g.mark_linear_spine();
+        let mut wg = WorkGraph::init(&space, &spine);
+        wg.run();
+        let (chain, _, edges, _, nh) = wg.into_chain();
+        assert_eq!(chain.len(), spine.len());
+        assert_eq!(edges.len(), chain.len() - 1);
+        assert_eq!(nh, 0, "residual branch should be exactly eliminable");
+    }
+
+    #[test]
+    fn bert_mask_needs_heuristic() {
+        let g = bert_like_test(8);
+        let cluster = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(cluster.clone());
+        let space = space_for(&g, &cluster, &comm, 4);
+        let spine = g.mark_linear_spine();
+        let mut wg = WorkGraph::init(&space, &spine);
+        wg.run();
+        let (_, _, _, forced, nh) = wg.into_chain();
+        assert!(nh >= 1, "shared mask requires heuristic elimination");
+        assert!(nh <= 2, "paper: heuristic used only ~twice for BERT, got {nh}");
+        assert!(!forced.is_empty());
+    }
+}

@@ -1,0 +1,167 @@
+//! Linear Dynamic Programming (Algorithm 3): frontier tracking over the
+//! linearized graph.
+//!
+//! `CF(o_i, s_i^p)` is the cumulative frontier from `o_1` to `o_i` given
+//! `o_i` picks configuration `p`. Each step unions, over the predecessor's
+//! configurations `k`, the product of the edge frontier, the predecessor's
+//! cumulative frontier, and the operator frontier — then reduces. The
+//! final result is the reduce of the union over the last operator's
+//! cumulative frontiers. Computing `CF(o_i, ·)` for different `p` is
+//! embarrassingly parallel (§3.2 "Multi-threading").
+
+use crate::frontier::{reduce, Frontier, Mode, Tuple};
+use crate::util::par::par_map_indexed;
+
+/// Run LDP over a chain.
+///
+/// * `node_frontiers[i][k]` — `F(o_i, s_i^k)` (already carrying anything
+///   the eliminations folded in).
+/// * `edge_tables[i][k][p]` — `F(e_{i,i+1}, s_i^k, s_{i+1}^p)`.
+pub fn ldp(
+    node_frontiers: &[Vec<Frontier>],
+    edge_tables: &[Vec<Vec<Frontier>>],
+    mode: Mode,
+    threads: usize,
+) -> Frontier {
+    assert!(!node_frontiers.is_empty());
+    assert_eq!(edge_tables.len(), node_frontiers.len() - 1);
+
+    // CF(o_1, k) = F(o_1, k)
+    let mut cf: Vec<Frontier> = node_frontiers[0].clone();
+
+    for i in 1..node_frontiers.len() {
+        let edges = &edge_tables[i - 1];
+        let fi = &node_frontiers[i];
+        let kp = fi.len();
+        let cf_prev = &cf;
+        // Perf (§Perf opt-3): with ε-thinned frontiers many steps are too
+        // small for threading to amortize; go parallel only when the step
+        // has real work (cumulative tuples x configs).
+        let total_cf: usize = cf_prev.iter().map(|f| f.len()).sum();
+        let eff_threads = if total_cf * kp < 8192 { 1 } else { threads };
+        cf = par_map_indexed(kp, eff_threads, |p| {
+            let mut acc: Vec<Tuple> = Vec::new();
+            for (k, cfk) in cf_prev.iter().enumerate() {
+                if cfk.is_empty() {
+                    continue;
+                }
+                let part = edges[k][p].product(cfk, mode).product(&fi[p], mode);
+                acc.extend(part.tuples);
+            }
+            reduce(acc, mode)
+        });
+    }
+
+    // F_o = reduce( U_k CF(o_n, k) )
+    let mut acc: Vec<Tuple> = Vec::new();
+    for f in cf {
+        acc.extend(f.tuples);
+    }
+    reduce(acc, mode)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontier::Trace;
+
+    /// Hand-built 3-op chain with 2 configs each; verify LDP against
+    /// brute-force enumeration of all 8 strategies.
+    fn toy() -> (Vec<Vec<Frontier>>, Vec<Vec<Vec<Frontier>>>) {
+        let f = |m: f64, t: f64, op: u32, k: u32| {
+            Frontier::singleton(m, t, Trace::op_choice(op, k))
+        };
+        let e = |m: f64, t: f64| Frontier::singleton(m, t, Trace::empty());
+        let nodes = vec![
+            vec![f(4.0, 1.0, 0, 0), f(1.0, 4.0, 0, 1)],
+            vec![f(3.0, 2.0, 1, 0), f(2.0, 3.0, 1, 1)],
+            vec![f(5.0, 1.0, 2, 0), f(1.0, 5.0, 2, 1)],
+        ];
+        let edges = vec![
+            vec![
+                vec![e(0.0, 0.0), e(0.0, 2.0)],
+                vec![e(0.0, 1.0), e(0.0, 0.0)],
+            ],
+            vec![
+                vec![e(0.0, 0.5), e(0.0, 0.0)],
+                vec![e(0.0, 0.0), e(0.0, 0.5)],
+            ],
+        ];
+        (nodes, edges)
+    }
+
+    fn brute_force(
+        nodes: &[Vec<Frontier>],
+        edges: &[Vec<Vec<Frontier>>],
+    ) -> Vec<(f64, f64)> {
+        let mut tuples: Vec<Tuple> = Vec::new();
+        for k0 in 0..2 {
+            for k1 in 0..2 {
+                for k2 in 0..2 {
+                    let mem = nodes[0][k0].tuples[0].mem
+                        + nodes[1][k1].tuples[0].mem
+                        + nodes[2][k2].tuples[0].mem;
+                    let time = nodes[0][k0].tuples[0].time
+                        + nodes[1][k1].tuples[0].time
+                        + nodes[2][k2].tuples[0].time
+                        + edges[0][k0][k1].tuples[0].time
+                        + edges[1][k1][k2].tuples[0].time;
+                    tuples.push(Tuple::new(mem, time, Trace::empty()));
+                }
+            }
+        }
+        reduce(tuples, Mode::Pareto)
+            .tuples
+            .iter()
+            .map(|t| (t.mem, t.time))
+            .collect()
+    }
+
+    #[test]
+    fn ldp_matches_brute_force() {
+        let (nodes, edges) = toy();
+        let f = ldp(&nodes, &edges, Mode::Pareto, 1);
+        let got: Vec<(f64, f64)> = f.tuples.iter().map(|t| (t.mem, t.time)).collect();
+        assert_eq!(got, brute_force(&nodes, &edges));
+    }
+
+    #[test]
+    fn ldp_parallel_equals_sequential() {
+        let (nodes, edges) = toy();
+        let a = ldp(&nodes, &edges, Mode::Pareto, 1);
+        let b = ldp(&nodes, &edges, Mode::Pareto, 4);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.tuples.iter().zip(&b.tuples) {
+            assert_eq!((x.mem, x.time), (y.mem, y.time));
+        }
+    }
+
+    #[test]
+    fn ldp_traces_resolve_to_strategies() {
+        let (nodes, edges) = toy();
+        let f = ldp(&nodes, &edges, Mode::Pareto, 1);
+        for t in &f.tuples {
+            let ch = crate::frontier::trace::unroll(&t.trace);
+            assert_eq!(ch.op_cfg.len(), 3, "all 3 ops chosen: {ch:?}");
+        }
+    }
+
+    #[test]
+    fn time_only_mode_returns_min_time_strategy() {
+        let (nodes, edges) = toy();
+        let pareto = ldp(&nodes, &edges, Mode::Pareto, 1);
+        let t = ldp(&nodes, &edges, Mode::TimeOnly, 1);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.tuples[0].time, pareto.min_time().unwrap().time);
+    }
+
+    #[test]
+    fn single_op_chain() {
+        let nodes = vec![vec![
+            Frontier::singleton(1.0, 2.0, Trace::op_choice(0, 0)),
+            Frontier::singleton(2.0, 1.0, Trace::op_choice(0, 1)),
+        ]];
+        let f = ldp(&nodes, &[], Mode::Pareto, 1);
+        assert_eq!(f.len(), 2);
+    }
+}

@@ -1,0 +1,255 @@
+//! The Frontier-Tracking algorithm (Algorithm 2) and its FT-Elimination
+//! variant, plus strategy reconstruction ("unroll").
+
+pub mod eliminate;
+pub mod ldp;
+pub mod space;
+
+use std::collections::HashMap;
+
+use crate::cluster::Cluster;
+use crate::frontier::{reduce, trace, Frontier, Tuple};
+use crate::graph::Graph;
+use crate::parallel::resched::CollectiveCost;
+use crate::parallel::{ParallelConfig, Strategy};
+
+pub use space::{FtOptions, SearchSpace};
+
+/// Output of a frontier search: the cost frontier plus everything needed
+/// to reconstruct any strategy on it.
+pub struct FtResult {
+    pub frontier: Frontier,
+    /// Per-op configuration lists (index space of the traces).
+    pub configs: Vec<Vec<ParallelConfig>>,
+    /// Configurations pinned by heuristic elimination.
+    pub forced: HashMap<u32, u32>,
+    /// Heuristic eliminations performed.
+    pub n_heuristic: usize,
+    /// log2 of the brute-force strategy-space size (for reporting).
+    pub log2_space: f64,
+}
+
+impl FtResult {
+    /// Unroll one frontier tuple into a complete [`Strategy`] plus the
+    /// per-edge reuse-option choices.
+    pub fn strategy_of(&self, t: &Tuple) -> (Strategy, HashMap<usize, u8>) {
+        let ch = trace::unroll(&t.trace);
+        let mut configs = Vec::with_capacity(self.configs.len());
+        for (op, cfgs) in self.configs.iter().enumerate() {
+            let k = ch
+                .op_cfg
+                .get(&(op as u32))
+                .or_else(|| self.forced.get(&(op as u32)))
+                .copied()
+                .unwrap_or_else(|| panic!("op {op} has no configuration in trace"));
+            configs.push(cfgs[k as usize].clone());
+        }
+        let edge_opts =
+            ch.edge_opt.iter().map(|(&e, &o)| (e as usize, o)).collect();
+        (Strategy { configs }, edge_opts)
+    }
+
+    /// Strategies for every point of the frontier.
+    pub fn all_strategies(&self) -> Vec<(Strategy, f64, f64)> {
+        self.frontier
+            .tuples
+            .iter()
+            .map(|t| {
+                let (s, _) = self.strategy_of(t);
+                (s, t.mem, t.time)
+            })
+            .collect()
+    }
+}
+
+/// **FT-LDP** (Algorithm 2): mark the linear spine, eliminate everything
+/// else, run LDP (Algorithm 3) on the residual chain.
+pub fn frontier_search(
+    graph: &Graph,
+    cluster: &Cluster,
+    comm: &dyn CollectiveCost,
+    opts: FtOptions,
+) -> FtResult {
+    frontier_search_filtered(graph, cluster, comm, opts, None)
+}
+
+/// FT-LDP with a configuration filter (used by the ToFu baseline).
+pub fn frontier_search_filtered(
+    graph: &Graph,
+    cluster: &Cluster,
+    comm: &dyn CollectiveCost,
+    opts: FtOptions,
+    config_filter: Option<&dyn Fn(&crate::graph::Op, &ParallelConfig) -> bool>,
+) -> FtResult {
+    let space = SearchSpace::build(graph, cluster, comm, opts, config_filter);
+    let spine = graph.mark_linear_spine();
+    let mut wg = eliminate::WorkGraph::init(&space, &spine);
+    wg.run();
+    let (_, node_frontiers, edge_tables, forced, n_heuristic) = wg.into_chain();
+    let frontier =
+        ldp::ldp(&node_frontiers, &edge_tables, space.opts.mode, space.opts.threads);
+    FtResult {
+        frontier,
+        configs: space.configs.clone(),
+        forced,
+        n_heuristic,
+        log2_space: space.log2_space_size(),
+    }
+}
+
+/// **FT-Elimination** (§3.2 / Theorem 2): eliminate the graph all the way
+/// down to two nodes (only source and sink marked), then brute-force the
+/// final pair. Asymptotically K x slower than FT-LDP — Table 3's
+/// comparison point.
+pub fn frontier_search_elimination(
+    graph: &Graph,
+    cluster: &Cluster,
+    comm: &dyn CollectiveCost,
+    opts: FtOptions,
+) -> FtResult {
+    let space = SearchSpace::build(graph, cluster, comm, opts, None);
+    let order = graph.topo_order();
+    let ends = [order[0], *order.last().unwrap()];
+    let mut wg = eliminate::WorkGraph::init(&space, &ends);
+    wg.run();
+    let (chain, node_frontiers, edge_tables, forced, n_heuristic) = wg.into_chain();
+    assert_eq!(chain.len(), 2, "FT-Elimination must reduce to two nodes");
+    // brute-force over the (k, p) pairs of the final two nodes.
+    let mode = space.opts.mode;
+    let mut acc: Vec<Tuple> = Vec::new();
+    for (k, fk) in node_frontiers[0].iter().enumerate() {
+        for (p, fp) in node_frontiers[1].iter().enumerate() {
+            let part = fk.product(&edge_tables[0][k][p], mode).product(fp, mode);
+            acc.extend(part.tuples);
+        }
+    }
+    let frontier = reduce(acc, mode);
+    FtResult {
+        frontier,
+        configs: space.configs.clone(),
+        forced,
+        n_heuristic,
+        log2_space: space.log2_space_size(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::comm::GroundTruthComm;
+    use crate::cost::estimator::{eval_strategy, ReuseChoice};
+    use crate::frontier::Mode;
+    use crate::graph::models::{tiny_mlp, tiny_resnet};
+
+    fn setup() -> (Cluster, GroundTruthComm) {
+        let c = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(c.clone());
+        (c, comm)
+    }
+
+    #[test]
+    fn frontier_nonempty_and_valid() {
+        let g = tiny_mlp(256);
+        let (c, comm) = setup();
+        let r = frontier_search(&g, &c, &comm, FtOptions::new(4).sequential());
+        assert!(!r.frontier.is_empty());
+        assert!(r.frontier.is_valid());
+    }
+
+    #[test]
+    fn strategies_unroll_completely() {
+        let g = tiny_mlp(256);
+        let (c, comm) = setup();
+        let r = frontier_search(&g, &c, &comm, FtOptions::new(4).sequential());
+        for (s, _, _) in r.all_strategies() {
+            assert_eq!(s.configs.len(), g.n_ops());
+            for (op, cfg) in g.ops.iter().zip(&s.configs) {
+                assert!(cfg.n_devices() == 4 || cfg.n_devices() == 1, "op {}", op.name);
+            }
+        }
+    }
+
+    /// The frontier's estimated costs must be *consistent*: re-evaluating
+    /// each unrolled strategy with the same cost model (best reuse per
+    /// edge) cannot beat the frontier itself, and the frontier's min-time
+    /// point must not be worse than plain data parallelism.
+    #[test]
+    fn frontier_dominates_data_parallel() {
+        let g = tiny_mlp(256);
+        let (c, comm) = setup();
+        let r = frontier_search(&g, &c, &comm, FtOptions::new(4).sequential());
+        let dp = crate::parallel::Strategy::all_data_parallel(&g, 4);
+        let dp_cost = eval_strategy(&g, &dp, &c, &comm, ReuseChoice::KeepBoth);
+        let best = r.frontier.min_time().unwrap();
+        assert!(
+            best.time <= dp_cost.time * 1.0001,
+            "FT min-time {} vs DP {}",
+            best.time,
+            dp_cost.time
+        );
+        let smallest = r.frontier.min_mem().unwrap();
+        assert!(smallest.mem <= dp_cost.memory * 1.0001);
+    }
+
+    #[test]
+    fn ldp_equals_elimination_on_chain() {
+        // For a pure chain both algorithms are exact -> identical frontiers.
+        let g = tiny_mlp(128);
+        let (c, comm) = setup();
+        let a = frontier_search(&g, &c, &comm, FtOptions::new(4).sequential());
+        let b = frontier_search_elimination(&g, &c, &comm, FtOptions::new(4).sequential());
+        // The two algorithms sum costs in different orders, so points that
+        // tie to within f64 rounding can split differently; require mutual
+        // epsilon-domination instead of exact equality.
+        let dominated = |x: &crate::frontier::Tuple, f: &Frontier| {
+            f.tuples
+                .iter()
+                .any(|y| y.mem <= x.mem * (1.0 + 1e-9) && y.time <= x.time * (1.0 + 1e-9))
+        };
+        for x in &a.frontier.tuples {
+            assert!(dominated(x, &b.frontier), "elim misses ({}, {})", x.mem, x.time);
+        }
+        for y in &b.frontier.tuples {
+            assert!(dominated(y, &a.frontier), "ldp misses ({}, {})", y.mem, y.time);
+        }
+    }
+
+    #[test]
+    fn resnet_frontier_with_branches() {
+        let g = tiny_resnet(16);
+        let (c, comm) = setup();
+        let r = frontier_search(&g, &c, &comm, FtOptions::new(4).sequential());
+        assert!(!r.frontier.is_empty());
+        assert_eq!(r.n_heuristic, 0);
+        for (s, _, _) in r.all_strategies() {
+            assert_eq!(s.configs.len(), g.n_ops());
+        }
+    }
+
+    #[test]
+    fn time_only_mode_single_point() {
+        let g = tiny_mlp(256);
+        let (c, comm) = setup();
+        let r = frontier_search(
+            &g,
+            &c,
+            &comm,
+            FtOptions::new(4).sequential().with_mode(Mode::TimeOnly),
+        );
+        assert_eq!(r.frontier.len(), 1);
+    }
+
+    #[test]
+    fn multithreaded_matches_sequential() {
+        let g = tiny_resnet(16);
+        let (c, comm) = setup();
+        let a = frontier_search(&g, &c, &comm, FtOptions::new(4).sequential());
+        let mut opts = FtOptions::new(4);
+        opts.threads = 4;
+        let b = frontier_search(&g, &c, &comm, opts);
+        assert_eq!(a.frontier.len(), b.frontier.len());
+        for (x, y) in a.frontier.tuples.iter().zip(&b.frontier.tuples) {
+            assert_eq!((x.mem, x.time), (y.mem, y.time));
+        }
+    }
+}

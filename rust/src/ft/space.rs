@@ -1,0 +1,217 @@
+//! Search-space initialization (§3.2 "Initialization"): enumerate every
+//! operator's valid parallelization configurations, pre-compute operator
+//! costs (Eq. 1), and build the per-edge (K_i x K_j) cost-frontier tables
+//! (Eq. 2 + the §4.2 reuse options) that the eliminations and LDP consume.
+
+use std::collections::HashMap;
+
+use crate::cluster::Cluster;
+use crate::cost::op_cost::{edge_costs, op_cost, OpCost};
+use crate::frontier::{reduce, Frontier, Mode, Trace, Tuple};
+use crate::graph::Graph;
+use crate::parallel::resched::CollectiveCost;
+use crate::parallel::{enumerate_configs, ParallelConfig, Split};
+
+/// Options controlling the search.
+#[derive(Debug, Clone)]
+pub struct FtOptions {
+    /// Number of devices to parallelize over.
+    pub devices: u32,
+    /// Maximum device-mesh rank (2 covers the paper's configurations;
+    /// 3 is the ablation setting).
+    pub max_mesh_dims: usize,
+    /// Frontier mode: Pareto (FT) or single-objective (baselines).
+    pub mode: Mode,
+    /// Worker threads for LDP / eliminations (1 = sequential; the paper's
+    /// "no multi-thread" ablation).
+    pub threads: usize,
+}
+
+impl FtOptions {
+    pub fn new(devices: u32) -> Self {
+        let threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+        Self { devices, max_mesh_dims: 2, mode: Mode::Pareto, threads }
+    }
+
+    pub fn sequential(mut self) -> Self {
+        self.threads = 1;
+        self
+    }
+
+    pub fn with_mode(mut self, mode: Mode) -> Self {
+        self.mode = mode;
+        self
+    }
+}
+
+/// Immutable, pre-computed search space.
+pub struct SearchSpace<'a> {
+    pub graph: &'a Graph,
+    pub cluster: &'a Cluster,
+    pub opts: FtOptions,
+    /// `configs[op][k]` — the valid configurations S_i.
+    pub configs: Vec<Vec<ParallelConfig>>,
+    /// `op_costs[op][k]` — Eq. 1 costs.
+    pub op_costs: Vec<Vec<OpCost>>,
+    /// `edge_tables[edge][k][p]` — Eq. 2 cost options (mem, time) per
+    /// reuse policy; index order follows `graph.edges`.
+    pub edge_tables: Vec<Vec<Vec<Vec<(f64, f64)>>>>,
+}
+
+impl<'a> SearchSpace<'a> {
+    /// Build the space. `config_filter` lets baselines restrict S_i (e.g.
+    /// ToFu forbids replication); pass `None` for the full space.
+    pub fn build(
+        graph: &'a Graph,
+        cluster: &'a Cluster,
+        comm: &dyn CollectiveCost,
+        opts: FtOptions,
+        config_filter: Option<&dyn Fn(&crate::graph::Op, &ParallelConfig) -> bool>,
+    ) -> Self {
+        let d = opts.devices;
+        let mut configs: Vec<Vec<ParallelConfig>> = Vec::with_capacity(graph.n_ops());
+        for op in &graph.ops {
+            let mut cs = enumerate_configs(op, d, opts.max_mesh_dims);
+            if let Some(f) = config_filter {
+                let kept: Vec<ParallelConfig> =
+                    cs.iter().filter(|c| f(op, c)).cloned().collect();
+                if !kept.is_empty() {
+                    cs = kept;
+                }
+            }
+            configs.push(cs);
+        }
+        let op_costs: Vec<Vec<OpCost>> = graph
+            .ops
+            .iter()
+            .zip(&configs)
+            .map(|(op, cs)| cs.iter().map(|c| op_cost(op, c, cluster, comm)).collect())
+            .collect();
+
+        // Edge tables with a re-schedule memo: different (k, p) pairs and
+        // different edges frequently induce identical split transitions.
+        let mut memo: HashMap<(u64, Vec<i64>, Split, Split), Vec<(f64, f64)>> = HashMap::new();
+        let mut edge_tables = Vec::with_capacity(graph.edges.len());
+        for e in &graph.edges {
+            let src_op = graph.op(e.src);
+            let dst_op = graph.op(e.dst);
+            let tensor = &src_op.out;
+            let dims: Vec<i64> = tensor.dims.iter().map(|dm| dm.size).collect();
+            let ks = &configs[e.src.0];
+            let ps = &configs[e.dst.0];
+            let mut table = Vec::with_capacity(ks.len());
+            for ck in ks {
+                let from = ck.out_split(src_op);
+                let mut row = Vec::with_capacity(ps.len());
+                for cp in ps {
+                    let to = cp.required_input_split(dst_op, tensor);
+                    let key =
+                        (tensor.bytes() as u64, dims.clone(), from.clone(), to.clone());
+                    let opts_vec = memo
+                        .entry(key)
+                        .or_insert_with(|| edge_costs(graph, e, ck, cp, comm))
+                        .clone();
+                    row.push(opts_vec);
+                }
+                table.push(row);
+            }
+            edge_tables.push(table);
+        }
+        Self { graph, cluster, opts, configs, op_costs, edge_tables }
+    }
+
+    pub fn k(&self, op: usize) -> usize {
+        self.configs[op].len()
+    }
+
+    /// Initial node frontier for op `i`, config `k`: the singleton
+    /// `F(o_i, s_i^k)` with an `OpChoice` trace.
+    pub fn node_frontier(&self, i: usize, k: usize) -> Frontier {
+        let c = &self.op_costs[i][k];
+        Frontier::singleton(c.mem, c.time(), Trace::op_choice(i as u32, k as u32))
+    }
+
+    /// Initial edge frontier `F(e, s_i^k, s_j^p)`: the reuse options as a
+    /// small frontier with `EdgeChoice` traces.
+    pub fn edge_frontier(&self, edge: usize, k: usize, p: usize) -> Frontier {
+        let opts = &self.edge_tables[edge][k][p];
+        let tuples: Vec<Tuple> = opts
+            .iter()
+            .enumerate()
+            .map(|(o, &(m, t))| Tuple::new(m, t, Trace::edge_choice(edge as u32, o as u8)))
+            .collect();
+        reduce(tuples, self.opts.mode)
+    }
+
+    /// Total number of strategies in the raw space (log-scale), for
+    /// reporting: sum over ops of log2(K_i).
+    pub fn log2_space_size(&self) -> f64 {
+        self.configs.iter().map(|c| (c.len() as f64).log2()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::comm::GroundTruthComm;
+    use crate::graph::models::tiny_mlp;
+
+    #[test]
+    fn build_space_tiny() {
+        let g = tiny_mlp(256);
+        let cluster = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(cluster.clone());
+        let space =
+            SearchSpace::build(&g, &cluster, &comm, FtOptions::new(4), None);
+        assert_eq!(space.configs.len(), g.n_ops());
+        assert_eq!(space.edge_tables.len(), g.edges.len());
+        for (i, _) in g.ops.iter().enumerate() {
+            assert!(space.k(i) >= 1, "op {i} has no configs");
+            let f = space.node_frontier(i, 0);
+            assert_eq!(f.len(), 1);
+        }
+        // brute-force space is exponential; log2 size reflects that.
+        assert!(space.log2_space_size() > 10.0);
+    }
+
+    #[test]
+    fn edge_frontier_is_valid_frontier() {
+        let g = tiny_mlp(256);
+        let cluster = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(cluster.clone());
+        let space =
+            SearchSpace::build(&g, &cluster, &comm, FtOptions::new(4), None);
+        for (ei, e) in g.edges.iter().enumerate() {
+            for k in 0..space.k(e.src.0) {
+                for p in 0..space.k(e.dst.0) {
+                    let f = space.edge_frontier(ei, k, p);
+                    assert!(f.is_valid(), "edge {ei} ({k},{p})");
+                    assert!(!f.is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn config_filter_restricts() {
+        let g = tiny_mlp(256);
+        let cluster = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(cluster.clone());
+        let no_rep = |_op: &crate::graph::Op, c: &ParallelConfig| c.replication() == 1;
+        let space = SearchSpace::build(
+            &g,
+            &cluster,
+            &comm,
+            FtOptions::new(4),
+            Some(&no_rep),
+        );
+        for (i, cs) in space.configs.iter().enumerate() {
+            // ops with a full-coverage option must have dropped replication
+            for c in cs {
+                if space.configs[i].len() > 1 {
+                    assert_eq!(c.replication(), 1, "op {i} cfg {}", c.label(&g.ops[i]));
+                }
+            }
+        }
+    }
+}

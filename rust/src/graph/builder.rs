@@ -1,0 +1,405 @@
+//! Fluent construction of computation graphs.
+//!
+//! The builder mirrors the TensorOpt user API of Listing 1: users define
+//! layers; the framework derives operators, dataflow edges, parameter
+//! shapes, FLOP counts and parallelizable axes. Returned [`TensorRef`]s
+//! carry the producer id + output spec so dimension *names* flow from
+//! producers to consumers (the name-matching that drives required-input
+//! splits, see `graph::tensor`).
+
+use super::op::{Axis, AxisKind, Edge, EdgeId, Op, OpId, OpKind};
+use super::tensor::{Dim, TensorSpec};
+use super::Graph;
+
+/// Handle to an operator's output tensor.
+#[derive(Debug, Clone)]
+pub struct TensorRef {
+    pub op: OpId,
+    pub spec: TensorSpec,
+}
+
+impl TensorRef {
+    /// Name of the trailing (feature/channel) dimension.
+    pub fn last_dim(&self) -> &Dim {
+        self.spec.dims.last().expect("tensor with no dims")
+    }
+}
+
+/// Builder for [`Graph`].
+pub struct GraphBuilder {
+    graph: Graph,
+    /// Global batch size; every op's batch dim shares the name `batch`.
+    pub batch: i64,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, batch: i64) -> Self {
+        Self { graph: Graph::new(name), batch }
+    }
+
+    fn push_op(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        out: TensorSpec,
+        param: Option<TensorSpec>,
+        flops_fwd: f64,
+        axes: Vec<Axis>,
+        act_keep_factor: f64,
+        inputs: &[&TensorRef],
+    ) -> TensorRef {
+        let id = OpId(self.graph.ops.len());
+        self.graph.ops.push(Op {
+            id,
+            name: name.to_string(),
+            kind,
+            out: out.clone(),
+            param,
+            flops_fwd,
+            axes,
+            act_keep_factor,
+        });
+        for inp in inputs {
+            let eid = EdgeId(self.graph.edges.len());
+            self.graph.edges.push(Edge { id: eid, src: inp.op, dst: id });
+        }
+        TensorRef { op: id, spec: out }
+    }
+
+    /// Graph input (data loading). Constrained to data parallelism during
+    /// configuration enumeration, per §4.2 of the paper.
+    pub fn input(&mut self, name: &str, dims: &[(&str, i64)]) -> TensorRef {
+        let out = TensorSpec::f32(
+            dims.iter().map(|(n, s)| Dim::new(n, *s)).collect(),
+        );
+        let axes = vec![Axis {
+            name: dims[0].0.to_string(),
+            kind: AxisKind::Batch,
+            size: dims[0].1,
+        }];
+        self.push_op(name, OpKind::Input, out, None, 0.0, axes, 0.0, &[])
+    }
+
+    /// Fully-connected layer: `out[batch, name_out] = in @ W`.
+    pub fn dense(&mut self, name: &str, x: &TensorRef, out_features: i64) -> TensorRef {
+        let batch_dim = x.spec.dims[0].clone();
+        let in_dim = x.last_dim().clone();
+        let out_name = format!("{name}_out");
+        let out = TensorSpec::f32(vec![batch_dim.clone(), Dim::new(&out_name, out_features)]);
+        let param =
+            TensorSpec::f32(vec![in_dim.clone(), Dim::new(&out_name, out_features)]);
+        // rows of the batch beyond dim 0 (e.g. seq) multiply the flops.
+        let rows: i64 = x.spec.dims[..x.spec.dims.len() - 1].iter().map(|d| d.size).product();
+        let flops = 2.0 * rows as f64 * in_dim.size as f64 * out_features as f64;
+        let axes = vec![
+            Axis { name: batch_dim.name.clone(), kind: AxisKind::Batch, size: batch_dim.size },
+            Axis { name: out_name.clone(), kind: AxisKind::Output, size: out_features },
+            Axis { name: in_dim.name.clone(), kind: AxisKind::Reduce, size: in_dim.size },
+        ];
+        // Dense over >2-D inputs keeps the middle dims in the output.
+        let out = if x.spec.dims.len() > 2 {
+            let mut dims = x.spec.dims.clone();
+            let last = dims.len() - 1;
+            dims[last] = Dim::new(&out_name, out_features);
+            TensorSpec::f32(dims)
+        } else {
+            out
+        };
+        self.push_op(name, OpKind::Dense, out, Some(param), flops, axes, 1.0, &[x])
+    }
+
+    /// 2-D convolution over NHWC input; `k`x`k` kernel, stride `s`.
+    pub fn conv2d(
+        &mut self,
+        name: &str,
+        x: &TensorRef,
+        c_out: i64,
+        k: i64,
+        stride: i64,
+    ) -> TensorRef {
+        let dims = &x.spec.dims;
+        assert_eq!(dims.len(), 4, "conv2d expects NHWC input, got {}", x.spec.shape_str());
+        let (b, h, w, cin) = (dims[0].clone(), dims[1].size, dims[2].size, dims[3].clone());
+        let (ho, wo) = ((h + stride - 1) / stride, (w + stride - 1) / stride);
+        let cname = format!("{name}_c");
+        let out = TensorSpec::f32(vec![
+            b.clone(),
+            Dim::new(&format!("{name}_h"), ho),
+            Dim::new(&format!("{name}_w"), wo),
+            Dim::new(&cname, c_out),
+        ]);
+        let param = TensorSpec::f32(vec![
+            Dim::new(&format!("{name}_kh"), k),
+            Dim::new(&format!("{name}_kw"), k),
+            cin.clone(),
+            Dim::new(&cname, c_out),
+        ]);
+        let flops =
+            2.0 * b.size as f64 * ho as f64 * wo as f64 * (k * k) as f64 * cin.size as f64 * c_out as f64;
+        let axes = vec![
+            Axis { name: b.name.clone(), kind: AxisKind::Batch, size: b.size },
+            Axis { name: cname, kind: AxisKind::Output, size: c_out },
+            Axis { name: cin.name.clone(), kind: AxisKind::Reduce, size: cin.size },
+        ];
+        self.push_op(name, OpKind::Conv, out, Some(param), flops, axes, 1.0, &[x])
+    }
+
+    /// Batch-norm: per-channel scale+shift (param `[2, C]` modeled as `[C]`×2).
+    pub fn batch_norm(&mut self, name: &str, x: &TensorRef) -> TensorRef {
+        let c = x.last_dim().clone();
+        let out = x.spec.clone();
+        let param = TensorSpec::f32(vec![Dim::new("sb", 2), c.clone()]);
+        let flops = 8.0 * x.spec.elems() as f64;
+        let axes = self.passthrough_axes(x, Some(&c.name));
+        self.push_op(name, OpKind::BatchNorm, out, Some(param), flops, axes, 0.5, &[x])
+    }
+
+    /// Layer-norm over the trailing dim.
+    pub fn layer_norm(&mut self, name: &str, x: &TensorRef) -> TensorRef {
+        let c = x.last_dim().clone();
+        let out = x.spec.clone();
+        let param = TensorSpec::f32(vec![Dim::new("sb", 2), c.clone()]);
+        let flops = 8.0 * x.spec.elems() as f64;
+        let axes = self.passthrough_axes(x, Some(&c.name));
+        self.push_op(name, OpKind::LayerNorm, out, Some(param), flops, axes, 0.5, &[x])
+    }
+
+    /// Parameter-free activation (ReLU/GeLU).
+    pub fn activation(&mut self, name: &str, x: &TensorRef) -> TensorRef {
+        let out = x.spec.clone();
+        let flops = 4.0 * x.spec.elems() as f64;
+        let axes = self.passthrough_axes(x, None);
+        // recomputable from the producer-stashed pre-activation in backward.
+        self.push_op(name, OpKind::Activation, out, None, flops, axes, 0.25, &[x])
+    }
+
+    /// Spatial max/avg pool with stride `s` over NHWC.
+    pub fn pool(&mut self, name: &str, x: &TensorRef, s: i64) -> TensorRef {
+        let dims = &x.spec.dims;
+        assert_eq!(dims.len(), 4, "pool expects NHWC");
+        let out = TensorSpec::f32(vec![
+            dims[0].clone(),
+            Dim::new(&format!("{name}_h"), (dims[1].size + s - 1) / s),
+            Dim::new(&format!("{name}_w"), (dims[2].size + s - 1) / s),
+            dims[3].clone(),
+        ]);
+        let flops = (s * s) as f64 * out.elems() as f64;
+        let axes = vec![
+            Axis { name: dims[0].name.clone(), kind: AxisKind::Batch, size: dims[0].size },
+            Axis { name: dims[3].name.clone(), kind: AxisKind::Spatial, size: dims[3].size },
+        ];
+        self.push_op(name, OpKind::Pool, out, None, flops, axes, 0.5, &[x])
+    }
+
+    /// Flatten NHWC to `[batch, features]`.
+    pub fn flatten(&mut self, name: &str, x: &TensorRef) -> TensorRef {
+        let dims = &x.spec.dims;
+        let feat: i64 = dims[1..].iter().map(|d| d.size).product();
+        let out = TensorSpec::f32(vec![
+            dims[0].clone(),
+            Dim::new(&format!("{name}_f"), feat),
+        ]);
+        let axes = vec![Axis {
+            name: dims[0].name.clone(),
+            kind: AxisKind::Batch,
+            size: dims[0].size,
+        }];
+        self.push_op(name, OpKind::Activation, out, None, 0.0, axes, 0.0, &[x])
+    }
+
+    /// Elementwise residual add; both inputs must share dim names.
+    pub fn add(&mut self, name: &str, a: &TensorRef, b: &TensorRef) -> TensorRef {
+        assert_eq!(
+            a.spec.dims.iter().map(|d| d.size).collect::<Vec<_>>(),
+            b.spec.dims.iter().map(|d| d.size).collect::<Vec<_>>(),
+            "residual add with mismatched shapes: {} vs {}",
+            a.spec.shape_str(),
+            b.spec.shape_str()
+        );
+        let out = a.spec.clone();
+        let flops = out.elems() as f64;
+        let axes = self.passthrough_axes(a, None);
+        self.push_op(name, OpKind::Elementwise, out, None, flops, axes, 0.25, &[a, b])
+    }
+
+    /// Embedding lookup: ids `[batch, seq]` -> `[batch, seq, emb]`.
+    pub fn embed(&mut self, name: &str, ids: &TensorRef, vocab: i64, emb: i64) -> TensorRef {
+        let mut dims = ids.spec.dims.clone();
+        let ename = format!("{name}_emb");
+        dims.push(Dim::new(&ename, emb));
+        let out = TensorSpec::f32(dims);
+        let vname = format!("{name}_vocab");
+        let param = TensorSpec::f32(vec![Dim::new(&vname, vocab), Dim::new(&ename, emb)]);
+        let flops = out.elems() as f64; // gather is bandwidth-bound; count a copy
+        let axes = vec![
+            Axis {
+                name: ids.spec.dims[0].name.clone(),
+                kind: AxisKind::Batch,
+                size: ids.spec.dims[0].size,
+            },
+            Axis { name: ename, kind: AxisKind::Output, size: emb },
+            Axis { name: vname, kind: AxisKind::Reduce, size: vocab },
+        ];
+        self.push_op(name, OpKind::Embed, out, Some(param), flops, axes, 1.0, &[ids])
+    }
+
+    /// One LSTM layer over the full sequence: `[batch, seq, in]` ->
+    /// `[batch, seq, hidden]`. Parameter `[in+hidden, 4*hidden]`.
+    pub fn lstm(&mut self, name: &str, x: &TensorRef, hidden: i64) -> TensorRef {
+        let dims = &x.spec.dims;
+        assert_eq!(dims.len(), 3, "lstm expects [batch, seq, feat]");
+        let (b, s, f) = (dims[0].clone(), dims[1].clone(), dims[2].clone());
+        let hname = format!("{name}_h");
+        let out =
+            TensorSpec::f32(vec![b.clone(), s.clone(), Dim::new(&hname, hidden)]);
+        let param = TensorSpec::f32(vec![
+            Dim::new(&format!("{name}_in"), f.size + hidden),
+            Dim::new(&format!("{name}_4h"), 4 * hidden),
+        ]);
+        let flops =
+            2.0 * b.size as f64 * s.size as f64 * (f.size + hidden) as f64 * 4.0 * hidden as f64;
+        let axes = vec![
+            Axis { name: b.name.clone(), kind: AxisKind::Batch, size: b.size },
+            Axis { name: hname, kind: AxisKind::Output, size: hidden },
+            Axis { name: f.name.clone(), kind: AxisKind::Reduce, size: f.size },
+        ];
+        // LSTM stashes gates for backward: keep factor 2.
+        self.push_op(name, OpKind::LstmCell, out, Some(param), flops, axes, 2.0, &[x])
+    }
+
+    /// Multi-head self-attention block (qkv + attention + output proj),
+    /// optionally consuming an attention-mask tensor (BERT's shared mask —
+    /// the fan-out that forces heuristic elimination, §3.2).
+    pub fn attention(
+        &mut self,
+        name: &str,
+        x: &TensorRef,
+        mask: Option<&TensorRef>,
+    ) -> TensorRef {
+        let dims = &x.spec.dims;
+        assert_eq!(dims.len(), 3, "attention expects [batch, seq, d]");
+        let (b, s, d) = (dims[0].clone(), dims[1].clone(), dims[2].clone());
+        let oname = format!("{name}_out");
+        let out = TensorSpec::f32(vec![b.clone(), s.clone(), Dim::new(&oname, d.size)]);
+        // qkv (3 d^2) + output proj (d^2).
+        let param = TensorSpec::f32(vec![d.clone(), Dim::new(&format!("{name}_qkvo"), 4 * d.size)]);
+        let flops = 8.0 * b.size as f64 * s.size as f64 * (d.size as f64).powi(2)
+            + 4.0 * b.size as f64 * (s.size as f64).powi(2) * d.size as f64;
+        let axes = vec![
+            Axis { name: b.name.clone(), kind: AxisKind::Batch, size: b.size },
+            // head split: splits qkvo param outputs and the attention output.
+            Axis { name: oname, kind: AxisKind::Output, size: d.size },
+            Axis { name: d.name.clone(), kind: AxisKind::Reduce, size: d.size },
+        ];
+        let mut inputs = vec![x];
+        if let Some(m) = mask {
+            inputs.push(m);
+        }
+        // Attention stashes qkv projections + context: keep factor 1.5
+        // (scores are recomputed flash-style).
+        self.push_op(name, OpKind::Attention, out, Some(param), flops, axes, 1.5, &inputs)
+    }
+
+    /// Softmax cross-entropy loss against `n_classes`; output `[batch]`.
+    pub fn loss(&mut self, name: &str, logits: &TensorRef, n_classes: i64) -> TensorRef {
+        let b = logits.spec.dims[0].clone();
+        let out = TensorSpec::f32(vec![b.clone()]);
+        let flops = 8.0 * logits.spec.elems() as f64;
+        let _ = n_classes;
+        let axes =
+            vec![Axis { name: b.name.clone(), kind: AxisKind::Batch, size: b.size }];
+        self.push_op(name, OpKind::Loss, out, None, flops, axes, 1.0, &[logits])
+    }
+
+    /// All dims of `x` become passthrough axes: batch dim -> Batch, the
+    /// (optional) param channel -> Output, everything else Spatial. This
+    /// lets elementwise-ish ops accept any producer split without forced
+    /// re-scheduling.
+    fn passthrough_axes(&self, x: &TensorRef, param_channel: Option<&str>) -> Vec<Axis> {
+        x.spec
+            .dims
+            .iter()
+            .enumerate()
+            .map(|(i, d)| Axis {
+                name: d.name.clone(),
+                kind: if i == 0 {
+                    AxisKind::Batch
+                } else if Some(d.name.as_str()) == param_channel {
+                    AxisKind::Output
+                } else {
+                    AxisKind::Spatial
+                },
+                size: d.size,
+            })
+            .collect()
+    }
+
+    pub fn build(self) -> Graph {
+        self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_shapes_and_flops() {
+        let mut b = GraphBuilder::new("t", 32);
+        let x = b.input("x", &[("batch", 32), ("f", 128)]);
+        let y = b.dense("fc", &x, 64);
+        assert_eq!(y.spec.dims[1].name, "fc_out");
+        let g = b.build();
+        let op = &g.ops[1];
+        assert_eq!(op.flops_fwd, 2.0 * 32.0 * 128.0 * 64.0);
+        assert_eq!(op.param.as_ref().unwrap().elems(), 128 * 64);
+    }
+
+    #[test]
+    fn conv_output_shape() {
+        let mut b = GraphBuilder::new("t", 4);
+        let x = b.input("x", &[("batch", 4), ("h", 32), ("w", 32), ("c", 3)]);
+        let y = b.conv2d("c1", &x, 16, 3, 2);
+        assert_eq!(y.spec.dims[1].size, 16);
+        assert_eq!(y.spec.dims[3].size, 16);
+    }
+
+    #[test]
+    fn dense_3d_keeps_seq() {
+        let mut b = GraphBuilder::new("t", 2);
+        let x = b.input("x", &[("batch", 2), ("seq", 8), ("d", 16)]);
+        let y = b.dense("fc", &x, 32);
+        assert_eq!(y.spec.dims.len(), 3);
+        assert_eq!(y.spec.dims[1].size, 8);
+        assert_eq!(y.spec.dims[2].size, 32);
+    }
+
+    #[test]
+    fn attention_with_mask_has_two_inputs() {
+        let mut b = GraphBuilder::new("t", 2);
+        let x = b.input("x", &[("batch", 2), ("seq", 8), ("d", 16)]);
+        let m = b.input("mask", &[("batch", 2), ("seq", 8)]);
+        let y = b.attention("attn", &x, Some(&m));
+        let g = b.build();
+        assert_eq!(g.in_edges(y.op).len(), 2);
+    }
+
+    #[test]
+    fn lstm_param_shape() {
+        let mut b = GraphBuilder::new("t", 2);
+        let x = b.input("x", &[("batch", 2), ("seq", 8), ("f", 16)]);
+        let y = b.lstm("l1", &x, 32);
+        let g = b.build();
+        let p = g.op(y.op).param.as_ref().unwrap();
+        assert_eq!(p.elems(), (16 + 32) * 4 * 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched")]
+    fn add_shape_mismatch_panics() {
+        let mut b = GraphBuilder::new("t", 2);
+        let x = b.input("x", &[("batch", 2), ("f", 16)]);
+        let y = b.input("y", &[("batch", 2), ("g", 32)]);
+        b.add("bad", &x, &y);
+    }
+}

@@ -1,0 +1,256 @@
+//! Computation-graph IR (§2.1 of the paper): operators, dataflow edges,
+//! topological utilities, and the linear-structure marking the FT algorithm
+//! relies on (§3.2 "Mark nodes on the linear graph").
+
+pub mod builder;
+pub mod models;
+pub mod op;
+pub mod tensor;
+
+pub use op::{Axis, AxisKind, Edge, EdgeId, Op, OpId, OpKind};
+pub use tensor::{Dim, TensorSpec};
+
+/// The DNN computation graph `G`: operators + directed dataflow edges.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub ops: Vec<Op>,
+    pub edges: Vec<Edge>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), ops: Vec::new(), edges: Vec::new() }
+    }
+
+    pub fn op(&self, id: OpId) -> &Op {
+        &self.ops[id.0]
+    }
+
+    pub fn edge(&self, id: EdgeId) -> &Edge {
+        &self.edges[id.0]
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Out-edges of an operator.
+    pub fn out_edges(&self, id: OpId) -> Vec<EdgeId> {
+        self.edges.iter().filter(|e| e.src == id).map(|e| e.id).collect()
+    }
+
+    /// In-edges of an operator.
+    pub fn in_edges(&self, id: OpId) -> Vec<EdgeId> {
+        self.edges.iter().filter(|e| e.dst == id).map(|e| e.id).collect()
+    }
+
+    /// Successor op ids (deduplicated, stable order).
+    pub fn successors(&self, id: OpId) -> Vec<OpId> {
+        let mut out = Vec::new();
+        for e in &self.edges {
+            if e.src == id && !out.contains(&e.dst) {
+                out.push(e.dst);
+            }
+        }
+        out
+    }
+
+    /// Predecessor op ids (deduplicated, stable order).
+    pub fn predecessors(&self, id: OpId) -> Vec<OpId> {
+        let mut out = Vec::new();
+        for e in &self.edges {
+            if e.dst == id && !out.contains(&e.src) {
+                out.push(e.src);
+            }
+        }
+        out
+    }
+
+    /// Topological order (Kahn). Panics on cycles — model builders only
+    /// produce DAGs, so a cycle is a programming error.
+    pub fn topo_order(&self) -> Vec<OpId> {
+        let n = self.ops.len();
+        let mut indeg = vec![0usize; n];
+        for e in &self.edges {
+            indeg[e.dst.0] += 1;
+        }
+        let mut queue: Vec<OpId> =
+            (0..n).filter(|&i| indeg[i] == 0).map(OpId).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            order.push(u);
+            for e in &self.edges {
+                if e.src == u {
+                    indeg[e.dst.0] -= 1;
+                    if indeg[e.dst.0] == 0 {
+                        queue.push(e.dst);
+                    }
+                }
+            }
+        }
+        assert_eq!(order.len(), n, "computation graph has a cycle");
+        order
+    }
+
+    /// Total parameter bytes of the model (the "Parameter (GB)" column of
+    /// Table 1).
+    pub fn total_param_bytes(&self) -> f64 {
+        self.ops.iter().map(|o| o.param_bytes()).sum()
+    }
+
+    /// Total forward FLOPs per mini-batch.
+    pub fn total_flops_fwd(&self) -> f64 {
+        self.ops.iter().map(|o| o.flops_fwd).sum()
+    }
+
+    /// Estimated single-device peak training memory (params + grads +
+    /// stashed activations), the "Memory (GB)" column of Table 1.
+    pub fn single_device_memory_bytes(&self) -> f64 {
+        let params = self.total_param_bytes();
+        let acts: f64 =
+            self.ops.iter().map(|o| o.out.bytes() * o.act_keep_factor).sum();
+        // params + gradients + activations kept for backward.
+        2.0 * params + acts
+    }
+
+    /// Mark the operators that form the *linear spine* of the graph
+    /// (§3.2): starting from the first operator in topological order,
+    /// follow while the structure stays linear. Marked operators are never
+    /// eliminated; everything else is folded into the spine by the four
+    /// eliminations, leaving a linear graph for LDP.
+    ///
+    /// An op on the spine is kept if removing off-spine ops would leave it
+    /// with exactly one spine predecessor and one spine successor. We use
+    /// the paper's simple heuristic: walk dominator-like through
+    /// single-successor chains, and at fan-outs jump to the unique
+    /// *reconvergence* op (the next op in topo order through which all
+    /// paths pass).
+    pub fn mark_linear_spine(&self) -> Vec<OpId> {
+        let order = self.topo_order();
+        if order.is_empty() {
+            return Vec::new();
+        }
+        // Count paths reaching each node from the source set to find
+        // reconvergence points: a node is on the spine iff *every* path
+        // from the first op to the last op passes through it. We compute
+        // this with path counting modulo a large prime over the DAG:
+        // spine nodes are those with paths_from_src * paths_to_sink ==
+        // total_paths. (Classic "must-pass vertex" trick.)
+        const P: u64 = 1_000_000_007;
+        let n = self.ops.len();
+        let src = order[0];
+        let sink = *order.last().unwrap();
+        let mut from_src = vec![0u64; n];
+        from_src[src.0] = 1;
+        for &u in &order {
+            for v in self.successors(u) {
+                from_src[v.0] = (from_src[v.0] + from_src[u.0]) % P;
+            }
+        }
+        let mut to_sink = vec![0u64; n];
+        to_sink[sink.0] = 1;
+        for &u in order.iter().rev() {
+            for v in self.successors(u) {
+                to_sink[u.0] = (to_sink[u.0] + to_sink[v.0]) % P;
+            }
+        }
+        let total = from_src[sink.0];
+        let mut spine: Vec<OpId> = order
+            .iter()
+            .copied()
+            .filter(|&u| from_src[u.0] * to_sink[u.0] % P == total)
+            .collect();
+        // Source/sink are always must-pass; keep topological order.
+        if spine.is_empty() {
+            spine.push(src);
+        }
+        spine
+    }
+
+    /// Graphviz dot output for debugging / documentation.
+    pub fn to_dot(&self) -> String {
+        let mut s = format!("digraph \"{}\" {{\n", self.name);
+        for op in &self.ops {
+            s.push_str(&format!(
+                "  n{} [label=\"{}\\n{}\"];\n",
+                op.id.0,
+                op.name,
+                op.out.shape_str()
+            ));
+        }
+        for e in &self.edges {
+            s.push_str(&format!("  n{} -> n{};\n", e.src.0, e.dst.0));
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::builder::GraphBuilder;
+    use super::*;
+
+    /// diamond: input -> a -> {b, c} -> add -> loss
+    fn diamond() -> Graph {
+        let mut b = GraphBuilder::new("diamond", 8);
+        let x = b.input("x", &[("batch", 8), ("f", 16)]);
+        let a = b.dense("a", &x, 16);
+        let l = b.dense("l", &a, 16);
+        let r = b.dense("r", &a, 16);
+        let add = b.add("add", &l, &r);
+        b.loss("loss", &add, 16);
+        b.build()
+    }
+
+    #[test]
+    fn topo_order_valid() {
+        let g = diamond();
+        let order = g.topo_order();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.n_ops()];
+            for (i, id) in order.iter().enumerate() {
+                p[id.0] = i;
+            }
+            p
+        };
+        for e in &g.edges {
+            assert!(pos[e.src.0] < pos[e.dst.0]);
+        }
+    }
+
+    #[test]
+    fn spine_is_must_pass_set() {
+        let g = diamond();
+        let spine = g.mark_linear_spine();
+        let names: Vec<&str> =
+            spine.iter().map(|&id| g.op(id).name.as_str()).collect();
+        // b and c are parallel branches -> not on the spine.
+        assert!(names.contains(&"x"));
+        assert!(names.contains(&"a"));
+        assert!(names.contains(&"add"));
+        assert!(names.contains(&"loss"));
+        assert!(!names.contains(&"l"));
+        assert!(!names.contains(&"r"));
+    }
+
+    #[test]
+    fn pred_succ() {
+        let g = diamond();
+        let add = g.ops.iter().find(|o| o.name == "add").unwrap().id;
+        assert_eq!(g.predecessors(add).len(), 2);
+        assert_eq!(g.successors(add).len(), 1);
+    }
+
+    #[test]
+    fn dot_contains_nodes() {
+        let g = diamond();
+        let dot = g.to_dot();
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("loss"));
+    }
+}

@@ -1,0 +1,63 @@
+//! BERT-like encoder [Devlin et al. 2018] with a *shared attention mask*:
+//! the mask input op fans out to every transformer layer, which node/edge/
+//! branch elimination cannot remove — exactly the case the paper's
+//! *heuristic elimination* exists for (§3.2: "the attention mask is used by
+//! all the transformer layers in BERT and thus cannot be eliminated").
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::Graph;
+
+/// BERT-base-like encoder with an explicit mask input consumed by all
+/// attention blocks.
+pub fn bert(batch: i64) -> Graph {
+    bert_sized(batch, 128, 768, 12, 30_522)
+}
+
+/// Parameterized variant.
+pub fn bert_sized(batch: i64, seq: i64, hidden: i64, layers: usize, vocab: i64) -> Graph {
+    let mut b = GraphBuilder::new("bert", batch);
+    let ids = b.input("ids", &[("batch", batch), ("seq", seq)]);
+    let mask = b.input("mask", &[("batch", batch), ("seq", seq)]);
+    let mut t = b.embed("embed", &ids, vocab, hidden);
+    for l in 1..=layers {
+        let a = b.attention(&format!("l{l}_attn"), &t, Some(&mask));
+        let r1 = b.add(&format!("l{l}_res1"), &a, &t);
+        let n1 = b.layer_norm(&format!("l{l}_ln1"), &r1);
+        let f1 = b.dense(&format!("l{l}_ff1"), &n1, hidden * 4);
+        let g1 = b.activation(&format!("l{l}_gelu"), &f1);
+        let f2 = b.dense(&format!("l{l}_ff2"), &g1, hidden);
+        let r2 = b.add(&format!("l{l}_res2"), &f2, &n1);
+        t = b.layer_norm(&format!("l{l}_ln2"), &r2);
+    }
+    let pooled = b.dense("pooler", &t, hidden);
+    b.loss("loss", &pooled, 2);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_fans_out_to_all_layers() {
+        let g = bert(32);
+        let mask = g.ops.iter().find(|o| o.name == "mask").unwrap().id;
+        assert_eq!(g.successors(mask).len(), 12);
+    }
+
+    #[test]
+    fn mask_not_on_spine() {
+        let g = bert(32);
+        let spine = g.mark_linear_spine();
+        let mask = g.ops.iter().find(|o| o.name == "mask").unwrap().id;
+        assert!(!spine.contains(&mask));
+    }
+
+    #[test]
+    fn param_scale_bert_base() {
+        let g = bert(32);
+        let params = g.total_param_bytes() / 4.0;
+        // BERT-base ≈ 110M params; ours models qkv+proj as one 4d^2 block.
+        assert!(params > 60e6 && params < 180e6, "params {params}");
+    }
+}

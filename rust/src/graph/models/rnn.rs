@@ -1,0 +1,64 @@
+//! Large LSTM language/acoustic model [Sak et al. 2014] — the paper's
+//! huge-parameter workload (Table 1: 108 GB of parameters at batch 256,
+//! dominated by the input embedding and output softmax projections). Few
+//! operators but enormous tensors: FT runs in well under a second on it.
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::Graph;
+
+/// LSTM LM: embed(vocab, 8192) -> 4x LSTM(8192) -> dense(vocab) -> loss.
+/// vocab is sized so total parameters land near the paper's 108 GB.
+pub fn rnn_lm(batch: i64) -> Graph {
+    rnn_lm_sized(batch, 1_630_000, 8192, 4, 64)
+}
+
+/// Fully parameterized variant (used by tests and sweeps).
+pub fn rnn_lm_sized(batch: i64, vocab: i64, hidden: i64, layers: usize, seq: i64) -> Graph {
+    let mut b = GraphBuilder::new("rnn", batch);
+    let ids = b.input("ids", &[("batch", batch), ("seq", seq)]);
+    let mut t = b.embed("embed", &ids, vocab, hidden);
+    for l in 0..layers {
+        t = b.lstm(&format!("lstm{}", l + 1), &t, hidden);
+    }
+    // project the final hidden state sequence to the vocabulary.
+    let logits = b.dense("softmax_proj", &t, vocab);
+    b.loss("loss", &logits, vocab);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_near_108gb() {
+        let gb = 1024f64.powi(3);
+        let g = rnn_lm(256);
+        let p = g.total_param_bytes() / gb;
+        assert!(p > 90.0 && p < 125.0, "params {p} GB");
+    }
+
+    #[test]
+    fn few_operators() {
+        let g = rnn_lm(256);
+        assert!(g.n_ops() < 10, "n_ops {}", g.n_ops());
+    }
+
+    #[test]
+    fn pure_chain() {
+        let g = rnn_lm(256);
+        assert_eq!(g.mark_linear_spine().len(), g.n_ops());
+    }
+
+    #[test]
+    fn embedding_and_softmax_dominate() {
+        let g = rnn_lm(256);
+        let big: f64 = g
+            .ops
+            .iter()
+            .filter(|o| o.name == "embed" || o.name == "softmax_proj")
+            .map(|o| o.param_bytes())
+            .sum();
+        assert!(big / g.total_param_bytes() > 0.8);
+    }
+}

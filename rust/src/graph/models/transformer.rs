@@ -1,0 +1,73 @@
+//! Transformer [Vaswani et al. 2017] — the paper's language workload
+//! (Table 1: 9.7 GB parameters at batch 256) and the model used for the
+//! Figure 7 sweeps (hidden-size scaling, bandwidth scaling).
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::Graph;
+
+/// Transformer configuration. Defaults reproduce the Table-1 scale
+/// (~9.7 GB parameters); `Figure 7a` sweeps `hidden`.
+#[derive(Debug, Clone)]
+pub struct TransformerCfg {
+    pub batch: i64,
+    pub seq: i64,
+    pub hidden: i64,
+    pub ffn_mult: i64,
+    pub layers: usize,
+    pub vocab: i64,
+}
+
+impl Default for TransformerCfg {
+    fn default() -> Self {
+        Self { batch: 256, seq: 128, hidden: 3072, ffn_mult: 4, layers: 20, vocab: 32_000 }
+    }
+}
+
+/// Decoder-only transformer LM.
+pub fn transformer_lm(cfg: TransformerCfg) -> Graph {
+    let mut b = GraphBuilder::new("transformer", cfg.batch);
+    let ids = b.input("ids", &[("batch", cfg.batch), ("seq", cfg.seq)]);
+    let mut t = b.embed("embed", &ids, cfg.vocab, cfg.hidden);
+    for l in 1..=cfg.layers {
+        let a = b.attention(&format!("l{l}_attn"), &t, None);
+        let r1 = b.add(&format!("l{l}_res1"), &a, &t);
+        let n1 = b.layer_norm(&format!("l{l}_ln1"), &r1);
+        let f1 = b.dense(&format!("l{l}_ff1"), &n1, cfg.hidden * cfg.ffn_mult);
+        let g1 = b.activation(&format!("l{l}_gelu"), &f1);
+        let f2 = b.dense(&format!("l{l}_ff2"), &g1, cfg.hidden);
+        let r2 = b.add(&format!("l{l}_res2"), &f2, &n1);
+        t = b.layer_norm(&format!("l{l}_ln2"), &r2);
+    }
+    let logits = b.dense("lm_head", &t, cfg.vocab);
+    b.loss("loss", &logits, cfg.vocab);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_near_9_7gb() {
+        let gb = 1024f64.powi(3);
+        let g = transformer_lm(TransformerCfg::default());
+        let p = g.total_param_bytes() / gb;
+        assert!(p > 7.0 && p < 13.0, "params {p} GB");
+    }
+
+    #[test]
+    fn residuals_create_branches() {
+        let g = transformer_lm(TransformerCfg { layers: 2, ..Default::default() });
+        assert!(g.mark_linear_spine().len() < g.n_ops());
+    }
+
+    #[test]
+    fn hidden_scaling_monotone() {
+        let p = |h| {
+            transformer_lm(TransformerCfg { hidden: h, ..Default::default() })
+                .total_param_bytes()
+        };
+        assert!(p(2048) < p(3072));
+        assert!(p(3072) < p(4096));
+    }
+}

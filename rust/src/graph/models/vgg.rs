@@ -1,0 +1,68 @@
+//! VGG16 [Simonyan & Zisserman 2014] — the classic "conv layers favor data
+//! parallelism, FC layers favor model parallelism" workload (the paper's
+//! one-weird-trick reference). 138 M params ≈ 0.52 GB, matching Table 1.
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::Graph;
+
+/// Standard VGG16 for 224x224x3 inputs, 1000 classes.
+pub fn vgg16(batch: i64) -> Graph {
+    let mut b = GraphBuilder::new("vgg16", batch);
+    let mut t = b.input("x", &[("batch", batch), ("h", 224), ("w", 224), ("c", 3)]);
+    // (blocks, channels) per VGG16 stage.
+    let stages: [(usize, i64); 5] =
+        [(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)];
+    for (si, (reps, ch)) in stages.iter().enumerate() {
+        for ri in 0..*reps {
+            let c = b.conv2d(&format!("conv{}_{}", si + 1, ri + 1), &t, *ch, 3, 1);
+            t = b.activation(&format!("relu{}_{}", si + 1, ri + 1), &c);
+        }
+        t = b.pool(&format!("pool{}", si + 1), &t, 2);
+    }
+    let f = b.flatten("flatten", &t);
+    let d1 = b.dense("fc6", &f, 4096);
+    let r1 = b.activation("relu6", &d1);
+    let d2 = b.dense("fc7", &r1, 4096);
+    let r2 = b.activation("relu7", &d2);
+    let d3 = b.dense("fc8", &r2, 1000);
+    b.loss("loss", &d3, 1000);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_matches_vgg16() {
+        let g = vgg16(256);
+        let params = g.total_param_bytes() / 4.0; // f32 elements
+        // canonical VGG16: ~138.3M weights (we omit biases).
+        assert!((params - 138.3e6).abs() / 138.3e6 < 0.02, "params {params}");
+    }
+
+    #[test]
+    fn is_pure_chain() {
+        let g = vgg16(256);
+        assert_eq!(g.mark_linear_spine().len(), g.n_ops());
+    }
+
+    #[test]
+    fn fc_layers_dominate_params_conv_dominates_flops() {
+        let g = vgg16(256);
+        let fc_params: f64 = g
+            .ops
+            .iter()
+            .filter(|o| o.name.starts_with("fc"))
+            .map(|o| o.param_bytes())
+            .sum();
+        let conv_flops: f64 = g
+            .ops
+            .iter()
+            .filter(|o| o.name.starts_with("conv"))
+            .map(|o| o.flops_fwd)
+            .sum();
+        assert!(fc_params / g.total_param_bytes() > 0.85);
+        assert!(conv_flops / g.total_flops_fwd() > 0.9);
+    }
+}

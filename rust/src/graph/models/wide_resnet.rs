@@ -1,0 +1,88 @@
+//! WideResNet [Zagoruyko & Komodakis 2016] at ImageNet scale with a large
+//! widening factor — the paper's operator-heavy vision model (Table 1:
+//! 7.3 GB params, 83 GB single-GPU memory at batch 256; FT takes ~20 min on
+//! it because of the operator count).
+
+use crate::graph::builder::{GraphBuilder, TensorRef};
+use crate::graph::Graph;
+
+/// WideResNet-50 style: bottleneck blocks `[3, 4, 6, 3]`, base width 64,
+/// widened by `widen` (paper-scale ≈ 14 → ≈ 7 GB of parameters).
+pub fn wide_resnet(batch: i64, widen: i64) -> Graph {
+    let mut b = GraphBuilder::new("wide_resnet", batch);
+    let x = b.input("x", &[("batch", batch), ("h", 224), ("w", 224), ("c", 3)]);
+    let c0 = b.conv2d("stem", &x, 64, 7, 2);
+    let b0 = b.batch_norm("stem_bn", &c0);
+    let r0 = b.activation("stem_relu", &b0);
+    let mut t = b.pool("stem_pool", &r0, 2);
+
+    let stages: [(usize, i64, i64); 4] = [
+        (3, 64 * widen, 1),
+        (4, 128 * widen, 2),
+        (6, 256 * widen, 2),
+        (3, 512 * widen, 2),
+    ];
+    for (si, (reps, width, stride)) in stages.iter().enumerate() {
+        for ri in 0..*reps {
+            let s = if ri == 0 { *stride } else { 1 };
+            t = bottleneck(&mut b, &format!("s{}b{}", si + 1, ri + 1), &t, *width, s);
+        }
+    }
+    let p = b.pool("avgpool", &t, 7);
+    let f = b.flatten("flatten", &p);
+    let d = b.dense("fc", &f, 1000);
+    b.loss("loss", &d, 1000);
+    b.build()
+}
+
+/// Bottleneck residual block: 1x1 reduce -> 3x3 -> 1x1 expand (+ shortcut).
+fn bottleneck(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: &TensorRef,
+    width: i64,
+    stride: i64,
+) -> TensorRef {
+    let out_ch = width * 2;
+    let c1 = b.conv2d(&format!("{name}_c1"), x, width / 2, 1, 1);
+    let n1 = b.batch_norm(&format!("{name}_bn1"), &c1);
+    let r1 = b.activation(&format!("{name}_r1"), &n1);
+    let c2 = b.conv2d(&format!("{name}_c2"), &r1, width / 2, 3, stride);
+    let n2 = b.batch_norm(&format!("{name}_bn2"), &c2);
+    let r2 = b.activation(&format!("{name}_r2"), &n2);
+    let c3 = b.conv2d(&format!("{name}_c3"), &r2, out_ch, 1, 1);
+    let n3 = b.batch_norm(&format!("{name}_bn3"), &c3);
+    // projection shortcut (keeps shapes aligned for the residual add).
+    let sc = b.conv2d(&format!("{name}_sc"), x, out_ch, 1, stride);
+    let s = b.add(&format!("{name}_add"), &n3, &sc);
+    b.activation(&format!("{name}_out"), &s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operator_heavy() {
+        let g = wide_resnet(256, 14);
+        // 16 blocks x ~10 ops + stem/head: the paper's FT-runtime stressor.
+        assert!(g.n_ops() > 150, "n_ops {}", g.n_ops());
+    }
+
+    #[test]
+    fn params_near_paper_scale() {
+        let gb = 1024f64.powi(3);
+        let g = wide_resnet(256, 14);
+        let p = g.total_param_bytes() / gb;
+        assert!(p > 4.0 && p < 12.0, "params {p} GB");
+    }
+
+    #[test]
+    fn residual_blocks_off_spine() {
+        let g = wide_resnet(64, 2);
+        let spine = g.mark_linear_spine();
+        // adds/reconvergence points are on the spine; inner convs are not.
+        assert!(spine.len() < g.n_ops());
+        assert!(spine.len() >= 16, "spine {}", spine.len());
+    }
+}

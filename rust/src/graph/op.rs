@@ -1,0 +1,163 @@
+//! Operators of the computation graph.
+//!
+//! Following OptCNN/FlexFlow/TensorOpt, an "operator" is a layer-level unit
+//! (a convolution, a dense layer, an LSTM cell step, an attention block...).
+//! Each operator carries:
+//!  - its output [`TensorSpec`] and optional parameter [`TensorSpec`],
+//!  - forward FLOPs for a full mini-batch,
+//!  - a set of parallelizable [`Axis`]es, which *generate* the paper's
+//!    parallelization configurations: assigning device-mesh dimensions to
+//!    axes yields exactly the device-mesh + tensor-map configurations of
+//!    §2.1 (including replication when mesh dims are left unassigned, and
+//!    partial outputs that need an all-reduce when a Reduce axis is split).
+
+use super::tensor::TensorSpec;
+
+/// Graph-wide operator id (index into `Graph::ops`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(pub usize);
+
+/// Semantic role of a parallelizable axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AxisKind {
+    /// Sample dimension: splitting it = data parallelism. Parameters are
+    /// replicated across mesh dims mapped here, so gradients need an
+    /// all-reduce (the `t_s` term of Eq. 1).
+    Batch,
+    /// An output dimension also present in the parameter (e.g. out-features
+    /// of a dense layer, out-channels of a conv): splitting it = model
+    /// parallelism on the parameter's output side; no grad sync needed.
+    Output,
+    /// A contraction dimension (in-features / in-channels): splitting it
+    /// partitions the parameter on its input side and makes the operator
+    /// output *partial*, requiring an activation all-reduce in forward (and
+    /// the mirrored gradient communication in backward).
+    Reduce,
+    /// A spatial output dimension not present in the parameter (e.g. the
+    /// sequence dim of attention): splittable, parameter fully replicated
+    /// across mesh dims mapped here (grad all-reduce like Batch).
+    Spatial,
+}
+
+/// One parallelizable axis of an operator. `name` links the axis to tensor
+/// dims (of the output, the parameter, and any input tensor) by name.
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub name: String,
+    pub kind: AxisKind,
+    /// Extent; mesh dims assigned to the axis must divide it.
+    pub size: i64,
+}
+
+/// Operator category — used for display, for special-casing in model
+/// builders and for the MeshTensorFlow baseline's restrictions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Graph input (data loading). The paper constrains it to data
+    /// parallelism so the framework data pipeline can be reused (§4.2).
+    Input,
+    Conv,
+    Dense,
+    Embed,
+    LstmCell,
+    Attention,
+    LayerNorm,
+    BatchNorm,
+    Activation,
+    Pool,
+    /// Residual / elementwise combination of two inputs.
+    Elementwise,
+    /// Final loss (softmax cross-entropy).
+    Loss,
+}
+
+/// A layer-level operator.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub id: OpId,
+    pub name: String,
+    pub kind: OpKind,
+    /// Output tensor (full mini-batch shapes).
+    pub out: TensorSpec,
+    /// Trainable parameter tensor, if any.
+    pub param: Option<TensorSpec>,
+    /// Forward FLOPs for the full mini-batch. Backward is modeled as 2x
+    /// forward (standard for dense/conv compute).
+    pub flops_fwd: f64,
+    /// Parallelizable axes.
+    pub axes: Vec<Axis>,
+    /// Multiplier on output bytes kept alive for the backward pass
+    /// (activation stashing); e.g. 2.0 when both pre- and post-activation
+    /// tensors are needed.
+    pub act_keep_factor: f64,
+}
+
+impl Op {
+    /// Bytes of the (full, unsharded) parameter.
+    pub fn param_bytes(&self) -> f64 {
+        self.param.as_ref().map_or(0.0, |p| p.bytes())
+    }
+
+    /// Axis lookup by name.
+    pub fn axis(&self, name: &str) -> Option<&Axis> {
+        self.axes.iter().find(|a| a.name == name)
+    }
+
+    /// Index of the axis carrying the given name.
+    pub fn axis_index(&self, name: &str) -> Option<usize> {
+        self.axes.iter().position(|a| a.name == name)
+    }
+
+    /// The batch axis index if the op has one.
+    pub fn batch_axis(&self) -> Option<usize> {
+        self.axes.iter().position(|a| a.kind == AxisKind::Batch)
+    }
+}
+
+/// Graph-wide edge id (index into `Graph::edges`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EdgeId(pub usize);
+
+/// A dataflow edge: `src`'s output tensor is consumed by `dst`.
+#[derive(Debug, Clone)]
+pub struct Edge {
+    pub id: EdgeId,
+    pub src: OpId,
+    pub dst: OpId,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::tensor::Dim;
+
+    fn dense_op() -> Op {
+        Op {
+            id: OpId(0),
+            name: "fc".into(),
+            kind: OpKind::Dense,
+            out: TensorSpec::f32(vec![Dim::new("batch", 64), Dim::new("out", 128)]),
+            param: Some(TensorSpec::f32(vec![Dim::new("in", 256), Dim::new("out", 128)])),
+            flops_fwd: 2.0 * 64.0 * 128.0 * 256.0,
+            axes: vec![
+                Axis { name: "batch".into(), kind: AxisKind::Batch, size: 64 },
+                Axis { name: "out".into(), kind: AxisKind::Output, size: 128 },
+                Axis { name: "in".into(), kind: AxisKind::Reduce, size: 256 },
+            ],
+            act_keep_factor: 1.0,
+        }
+    }
+
+    #[test]
+    fn param_bytes() {
+        assert_eq!(dense_op().param_bytes(), 256.0 * 128.0 * 4.0);
+    }
+
+    #[test]
+    fn axis_lookup() {
+        let op = dense_op();
+        assert_eq!(op.axis("in").unwrap().kind, AxisKind::Reduce);
+        assert_eq!(op.batch_axis(), Some(0));
+        assert!(op.axis("zz").is_none());
+    }
+}

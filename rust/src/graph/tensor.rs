@@ -1,0 +1,93 @@
+//! Tensor specifications: named dimensions + dtype width.
+//!
+//! Dimension *names* are the glue of the whole reproduction: a producer's
+//! output dims and a consumer's parallelizable axes refer to the same
+//! logical names (as in MeshTensorFlow's "logical dimensions", §4.2 of the
+//! paper), which is how we derive the *required input split* of a consumer
+//! from its chosen parallelization configuration, and how the
+//! MeshTensorFlow baseline's "consistent split" restriction is expressed.
+
+/// One named tensor dimension.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dim {
+    /// Logical name, e.g. `batch`, `fc1_out`, `blk3_cout`.
+    pub name: String,
+    /// Extent of the dimension.
+    pub size: i64,
+}
+
+impl Dim {
+    pub fn new(name: &str, size: i64) -> Self {
+        Self { name: name.to_string(), size }
+    }
+}
+
+/// A tensor specification: named dims + element width in bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dims: Vec<Dim>,
+    /// Bytes per element (4 for f32; the paper trains in fp32 on V100s).
+    pub elem_bytes: usize,
+}
+
+impl TensorSpec {
+    pub fn f32(dims: Vec<Dim>) -> Self {
+        Self { dims, elem_bytes: 4 }
+    }
+
+    /// Number of elements.
+    pub fn elems(&self) -> i64 {
+        self.dims.iter().map(|d| d.size).product()
+    }
+
+    /// Total bytes of the full (unsharded) tensor.
+    pub fn bytes(&self) -> f64 {
+        self.elems() as f64 * self.elem_bytes as f64
+    }
+
+    /// Index of the dim with the given name, if present.
+    pub fn dim_index(&self, name: &str) -> Option<usize> {
+        self.dims.iter().position(|d| d.name == name)
+    }
+
+    /// Dim extent by name.
+    pub fn dim_size(&self, name: &str) -> Option<i64> {
+        self.dims.iter().find(|d| d.name == name).map(|d| d.size)
+    }
+
+    /// Short human form, e.g. `[batch=256, fc1_out=4096]`.
+    pub fn shape_str(&self) -> String {
+        let inner: Vec<String> =
+            self.dims.iter().map(|d| format!("{}={}", d.name, d.size)).collect();
+        format!("[{}]", inner.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> TensorSpec {
+        TensorSpec::f32(vec![Dim::new("batch", 256), Dim::new("hidden", 1024)])
+    }
+
+    #[test]
+    fn elems_and_bytes() {
+        let t = spec();
+        assert_eq!(t.elems(), 256 * 1024);
+        assert_eq!(t.bytes(), 256.0 * 1024.0 * 4.0);
+    }
+
+    #[test]
+    fn dim_lookup() {
+        let t = spec();
+        assert_eq!(t.dim_index("hidden"), Some(1));
+        assert_eq!(t.dim_size("batch"), Some(256));
+        assert_eq!(t.dim_index("nope"), None);
+    }
+
+    #[test]
+    fn shape_str_formats() {
+        assert_eq!(spec().shape_str(), "[batch=256, hidden=1024]");
+    }
+}

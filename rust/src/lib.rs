@@ -1,0 +1,13 @@
+//! TensorOpt reproduction — see DESIGN.md.
+pub mod baselines;
+pub mod cluster;
+pub mod coordinator;
+pub mod cost;
+pub mod exp;
+pub mod frontier;
+pub mod ft;
+pub mod graph;
+pub mod parallel;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,250 @@
+//! `tensoropt` — CLI for the TensorOpt reproduction.
+//!
+//! Subcommands:
+//!   exp <table1|table2|table3|table4|fig6|fig7|fig8>   regenerate a paper table/figure
+//!   search   --model M --mode <mini_time|mini_parallelism|profiling> [--gpus N]
+//!   train    --strategy <dp|tp> --model <small|e2e> [--devices N] [--steps N] [--fused]
+//!   frontier --model M [--gpus N]                    print the raw cost frontier
+//!
+//! Every experiment prints the paper-style table and writes CSV under
+//! `results/`.
+
+use tensoropt::cluster::Cluster;
+use tensoropt::coordinator::{
+    train_dp, train_tp, FindResult, SearchOption, Session, TrainerCfg,
+};
+use tensoropt::cost::comm::CommModel;
+use tensoropt::exp;
+use tensoropt::ft::{frontier_search, FtOptions};
+use tensoropt::graph::models;
+use tensoropt::util::cli::Args;
+use tensoropt::util::table::Table;
+
+fn save(t: &Table, name: &str) {
+    let path = exp::results_dir().join(format!("{name}.csv"));
+    if let Err(e) = t.save_csv(path.to_str().unwrap()) {
+        eprintln!("warning: could not save {}: {e}", path.display());
+    } else {
+        println!("[saved {}]", path.display());
+    }
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("table1");
+    match which {
+        "table1" => {
+            let t = exp::table1::run();
+            println!("{}", t.render());
+            save(&t, "table1");
+        }
+        "table2" => {
+            let samples = args.get_parse_or("samples", 20usize);
+            let t = exp::table2::run(samples);
+            println!("{}", t.render());
+            save(&t, "table2");
+        }
+        "table3" => {
+            let t = exp::table3::run(args.flag("full"));
+            println!("{}", t.render());
+            save(&t, "table3");
+        }
+        "table4" => {
+            let devices = args.get_parse_or("devices", 2usize);
+            let steps = args.get_parse_or("steps", 20usize);
+            let t = exp::table4::run(devices, steps)?;
+            println!("{}", t.render());
+            save(&t, "table4");
+        }
+        "fig6" => {
+            let model = args.get_or("model", "transformer");
+            let gpus = args.get_parse_or("gpus", 16u32);
+            let (curve, summary) = exp::fig6::run(model, gpus);
+            println!("{}", curve.render());
+            println!("{}", summary.render());
+            save(&curve, &format!("fig6_{model}_curve"));
+            save(&summary, &format!("fig6_{model}_summary"));
+        }
+        "fig7" => {
+            let part = args.get_or("part", "abc");
+            if part.contains('a') {
+                let t = exp::fig7::run_a();
+                println!("{}", t.render());
+                save(&t, "fig7a");
+            }
+            if part.contains('b') {
+                let t = exp::fig7::run_b();
+                println!("{}", t.render());
+                save(&t, "fig7b");
+            }
+            if part.contains('c') {
+                let t = exp::fig7::run_c();
+                println!("{}", t.render());
+                save(&t, "fig7c");
+            }
+        }
+        "fig8" => {
+            let model = args.get_or("model", "transformer");
+            let para: Vec<u32> = args
+                .get_or("parallelism", "4,8,16,24,32")
+                .split(',')
+                .map(|s| s.parse().unwrap())
+                .collect();
+            let t = exp::fig8::run(model, &para);
+            println!("{}", t.render());
+            save(&t, &format!("fig8_{model}"));
+        }
+        other => anyhow::bail!("unknown experiment `{other}`"),
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "transformer");
+    let gpus = args.get_parse_or("gpus", 16u32);
+    let g = models::by_name(model, args.get_parse_or("batch", 256i64))
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let session = Session::new(g, Cluster::with_gpus(gpus as usize));
+    let mode = args.get_or("mode", "mini_time");
+    let opt = match mode {
+        "mini_time" => SearchOption::MiniTime { parallelism: gpus },
+        "mini_parallelism" => SearchOption::MiniParallelism { max_parallelism: gpus },
+        "profiling" => SearchOption::Profiling {
+            parallelisms: (0..)
+                .map(|i| 1u32 << i)
+                .take_while(|&d| d <= gpus)
+                .collect(),
+        },
+        other => anyhow::bail!("unknown mode `{other}`"),
+    };
+    match session.find_strategy(&opt)? {
+        FindResult::Plan(p) => {
+            println!(
+                "plan: parallelism={} est_time={:.4}s est_mem={:.2}GB",
+                p.parallelism,
+                p.est_time,
+                p.est_memory / exp::GB
+            );
+            if args.flag("verbose") {
+                for (op, cfg) in session.graph.ops.iter().zip(&p.strategy.configs) {
+                    println!("  {:30} {}", op.name, cfg.label(op));
+                }
+            }
+        }
+        FindResult::Profile(rows) => {
+            let mut t = Table::new(
+                &format!(
+                    "profiling: {model} (mem budget {:.1} GB)",
+                    session.mem_budget() / exp::GB
+                ),
+                &["gpus", "best_time_s", "min_mem_gb"],
+            );
+            for r in rows {
+                t.row(&[
+                    r.parallelism.to_string(),
+                    r.best_time.map_or("OOM".into(), |x| format!("{x:.4}")),
+                    format!("{:.2}", r.min_memory / exp::GB),
+                ]);
+            }
+            println!("{}", t.render());
+            save(&t, &format!("profiling_{model}"));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = TrainerCfg {
+        model: args.get_or("model", "small").to_string(),
+        devices: args.get_parse_or("devices", 2usize),
+        steps: args.get_parse_or("steps", 50usize),
+        lr: args.get_parse_or("lr", 0.5f32),
+        seed: args.get_parse_or("seed", 7u64),
+        fused: args.flag("fused"),
+        fusion_bucket_bytes: args.get_parse_or("bucket", 4 * 1024 * 1024usize),
+        pallas: args.flag("pallas"),
+        log_every: args.get_parse_or("log-every", 10usize),
+    };
+    let report = match args.get_or("strategy", "dp") {
+        "dp" => train_dp(&cfg)?,
+        "tp" => train_tp(&cfg)?,
+        other => anyhow::bail!("unknown strategy `{other}`"),
+    };
+    println!(
+        "trained {} params for {} steps on {} devices: loss {:.4} -> {:.4}",
+        report.n_params,
+        cfg.steps,
+        cfg.devices,
+        report.losses.first().unwrap_or(&f32::NAN),
+        report.losses.last().unwrap_or(&f32::NAN)
+    );
+    println!(
+        "per-iteration {:.4}s (compute {:.2}s, comm {:.2}s, optimizer {:.2}s over the run)",
+        report.per_iter_s,
+        report.metrics.compute_s,
+        report.metrics.comm_s,
+        report.metrics.optimizer_s
+    );
+    Ok(())
+}
+
+fn cmd_frontier(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "rnn");
+    let gpus = args.get_parse_or("gpus", 16u32);
+    let g = models::by_name(model, 256)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let cluster = Cluster::with_gpus(gpus as usize);
+    let comm = CommModel::profile(&cluster);
+    let r = frontier_search(&g, &cluster, &comm, FtOptions::new(gpus));
+    let mut t = Table::new(
+        &format!("cost frontier: {model} @ {gpus} GPUs ({} strategies)", r.frontier.len()),
+        &["mem_gb", "time_s"],
+    );
+    for tu in &r.frontier.tuples {
+        t.row(&[format!("{:.3}", tu.mem / exp::GB), format!("{:.4}", tu.time)]);
+    }
+    println!("{}", t.render());
+    save(&t, &format!("frontier_{model}_{gpus}"));
+    Ok(())
+}
+
+const HELP: &str = "\
+tensoropt — TensorOpt (Cai et al. 2020) reproduction
+
+USAGE: tensoropt <command> [options]
+
+COMMANDS:
+  exp <table1|table2|table3|table4|fig6|fig7|fig8>  regenerate a paper result
+  search    --model M --mode <mini_time|mini_parallelism|profiling> --gpus N
+  train     --strategy <dp|tp> --model <small|e2e> --devices N --steps N [--fused] [--pallas]
+  frontier  --model M --gpus N
+  help
+
+EXAMPLES:
+  tensoropt exp table1
+  tensoropt exp fig6 --model transformer --gpus 16
+  tensoropt exp fig8 --model transformer --parallelism 8,16,32
+  tensoropt search --model transformer --mode profiling --gpus 32
+  tensoropt train --strategy tp --steps 100
+";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("exp") => cmd_exp(&args),
+        Some("search") => cmd_search(&args),
+        Some("train") => cmd_train(&args),
+        Some("frontier") => cmd_frontier(&args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command `{other}`\n\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}

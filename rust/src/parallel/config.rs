@@ -1,0 +1,370 @@
+//! Parallelization configurations (§2.1): a device mesh plus an assignment
+//! of mesh dimensions to operator axes, which *generates* the paper's
+//! tensor maps for every tensor touched by the operator (output, parameter,
+//! and each input via dimension-name matching).
+//!
+//! Leaving a mesh dim unassigned replicates the computation on it (the
+//! paper explicitly allows redundant computation for memory/communication
+//! saving); assigning a mesh dim to a `Reduce` axis splits the contraction
+//! dimension, making the output *partial* (pending an all-reduce).
+
+use super::mesh::{enumerate_meshes, Mesh};
+use super::split::Split;
+use crate::graph::{AxisKind, Op, OpKind, TensorSpec};
+
+/// One parallelization configuration `s_i^k` for an operator.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ParallelConfig {
+    pub mesh: Mesh,
+    /// `assign[m]` = index of the axis mesh dim `m` splits, or `None` for
+    /// replication along that mesh dim.
+    pub assign: Vec<Option<usize>>,
+}
+
+impl ParallelConfig {
+    /// The single-device / fully-replicated configuration on `d` devices.
+    pub fn replicated(d: u32) -> Self {
+        if d == 1 {
+            Self { mesh: Mesh::new(vec![]), assign: vec![] }
+        } else {
+            Self { mesh: Mesh::new(vec![d]), assign: vec![None] }
+        }
+    }
+
+    /// Pure data parallelism over `d` devices for an op with a batch axis.
+    pub fn data_parallel(op: &Op, d: u32) -> Option<Self> {
+        if d == 1 {
+            return Some(Self::replicated(1));
+        }
+        let b = op.batch_axis()?;
+        if op.axes[b].size % d as i64 != 0 {
+            return None;
+        }
+        Some(Self { mesh: Mesh::new(vec![d]), assign: vec![Some(b)] })
+    }
+
+    pub fn n_devices(&self) -> u32 {
+        self.mesh.n_devices()
+    }
+
+    /// Shard count along axis `a` (product of mesh dims assigned to it).
+    pub fn axis_shards(&self, a: usize) -> u32 {
+        self.assign
+            .iter()
+            .enumerate()
+            .filter(|(_, ax)| **ax == Some(a))
+            .map(|(m, _)| self.mesh.dims[m])
+            .product::<u32>()
+            .max(1)
+    }
+
+    /// Shard count for a *named* dim of any tensor of `op` (1 if no axis
+    /// with that name is split).
+    pub fn dim_shards(&self, op: &Op, dim_name: &str) -> u32 {
+        match op.axis_index(dim_name) {
+            Some(a) => self.axis_shards(a),
+            None => 1,
+        }
+    }
+
+    /// Product of mesh dims assigned to any axis (actual compute fan-out).
+    pub fn compute_parallelism(&self) -> u32 {
+        self.assign
+            .iter()
+            .enumerate()
+            .filter(|(_, ax)| ax.is_some())
+            .map(|(m, _)| self.mesh.dims[m])
+            .product::<u32>()
+            .max(1)
+    }
+
+    /// Replication degree (product of unassigned mesh dims): how many
+    /// devices redundantly compute the same shard.
+    pub fn replication(&self) -> u32 {
+        self.n_devices() / self.compute_parallelism()
+    }
+
+    /// Product of mesh dims assigned to Reduce axes (the partial-sum group
+    /// of the output).
+    pub fn reduce_group(&self, op: &Op) -> u32 {
+        self.assign
+            .iter()
+            .enumerate()
+            .filter(|(_, ax)| ax.map_or(false, |a| op.axes[a].kind == AxisKind::Reduce))
+            .map(|(m, _)| self.mesh.dims[m])
+            .product::<u32>()
+            .max(1)
+    }
+
+    /// Mesh dims (index, size) whose groups must all-reduce parameter
+    /// gradients: dims assigned to Batch/Spatial axes (the parameter is
+    /// replicated across them). Empty when the op has no parameter.
+    pub fn grad_sync_mesh_dims(&self, op: &Op) -> Vec<(usize, u32)> {
+        if op.param.is_none() {
+            return Vec::new();
+        }
+        self.assign
+            .iter()
+            .enumerate()
+            .filter(|(_, ax)| {
+                ax.map_or(false, |a| {
+                    matches!(op.axes[a].kind, AxisKind::Batch | AxisKind::Spatial)
+                })
+            })
+            .map(|(m, _)| (m, self.mesh.dims[m]))
+            .collect()
+    }
+
+    /// Mesh dims (index, size) assigned to Reduce axes (forward activation
+    /// all-reduce groups).
+    pub fn reduce_mesh_dims(&self, op: &Op) -> Vec<(usize, u32)> {
+        self.assign
+            .iter()
+            .enumerate()
+            .filter(|(_, ax)| ax.map_or(false, |a| op.axes[a].kind == AxisKind::Reduce))
+            .map(|(m, _)| (m, self.mesh.dims[m]))
+            .collect()
+    }
+
+    /// Shard count of the parameter tensor (product over mesh dims
+    /// assigned to Output/Reduce axes, which are parameter dims).
+    pub fn param_shards(&self, op: &Op) -> u32 {
+        self.assign
+            .iter()
+            .enumerate()
+            .filter(|(_, ax)| {
+                ax.map_or(false, |a| {
+                    matches!(op.axes[a].kind, AxisKind::Output | AxisKind::Reduce)
+                })
+            })
+            .map(|(m, _)| self.mesh.dims[m])
+            .product::<u32>()
+            .max(1)
+    }
+
+    /// Split of the operator's *output* tensor under this configuration.
+    pub fn out_split(&self, op: &Op) -> Split {
+        let shards: Vec<u32> =
+            op.out.dims.iter().map(|d| self.dim_shards(op, &d.name)).collect();
+        let pending = self.reduce_group(op);
+        let n_sh: u32 = shards.iter().product::<u32>().max(1);
+        let replicas = self.n_devices() / (n_sh * pending);
+        Split { shards, replicas, pending_sum: pending }
+    }
+
+    /// Split this configuration *requires* for an input tensor with the
+    /// given spec (complete tensor, name-matched shards, remainder
+    /// replicated).
+    pub fn required_input_split(&self, op: &Op, input: &TensorSpec) -> Split {
+        let shards: Vec<u32> =
+            input.dims.iter().map(|d| self.dim_shards(op, &d.name)).collect();
+        let n_sh: u32 = shards.iter().product::<u32>().max(1);
+        Split { shards, replicas: self.n_devices() / n_sh, pending_sum: 1 }
+    }
+
+    /// Human-readable form, e.g. `[8,2] 8->batch 2->fc_out`.
+    pub fn label(&self, op: &Op) -> String {
+        let mut s = self.mesh.label();
+        for (m, ax) in self.assign.iter().enumerate() {
+            match ax {
+                Some(a) => s.push_str(&format!(" {}->{}", self.mesh.dims[m], op.axes[*a].name)),
+                None => s.push_str(&format!(" {}->rep", self.mesh.dims[m])),
+            }
+        }
+        s
+    }
+}
+
+/// Enumerate the valid parallelization configurations `S_i` of an operator
+/// on `d` devices.
+///
+/// Rules (the "complete set of rules" the paper defers to its code):
+///  - every mesh dim is assigned to at most one axis; at most one mesh dim
+///    per axis (multi-dim splits of one axis are represented by the mesh
+///    with the merged factor instead);
+///  - an axis' extent must be divisible by its shard count;
+///  - mesh dims of equal size are interchangeable, so assignments are
+///    deduplicated by a canonical non-decreasing order within equal sizes;
+///  - Input and Loss operators only expose their batch axis (§4.2: the
+///    data-loading op is constrained to data parallelism);
+///  - full replication (all mesh dims unassigned) is always valid
+///    (redundant computation, allowed by the paper).
+pub fn enumerate_configs(op: &Op, d: u32, max_mesh_dims: usize) -> Vec<ParallelConfig> {
+    if d == 1 {
+        return vec![ParallelConfig::replicated(1)];
+    }
+    let axes_allowed: Vec<usize> = match op.kind {
+        OpKind::Input | OpKind::Loss => {
+            op.batch_axis().into_iter().collect()
+        }
+        _ => (0..op.axes.len()).collect(),
+    };
+    let mut out = Vec::new();
+    for mesh in enumerate_meshes(d, max_mesh_dims) {
+        let nd = mesh.n_dims();
+        // Backtracking over assignments with canonical ordering for equal
+        // mesh dims: represent None as usize::MAX for the ordering check.
+        let mut assign: Vec<Option<usize>> = vec![None; nd];
+        let mut used: Vec<bool> = vec![false; op.axes.len()];
+        fn rec(
+            m: usize,
+            mesh: &Mesh,
+            op: &Op,
+            axes_allowed: &[usize],
+            assign: &mut Vec<Option<usize>>,
+            used: &mut Vec<bool>,
+            out: &mut Vec<ParallelConfig>,
+        ) {
+            if m == mesh.n_dims() {
+                out.push(ParallelConfig { mesh: mesh.clone(), assign: assign.clone() });
+                return;
+            }
+            // Canonical order among equal-size mesh dims: the assignment
+            // key (axis index; None sorts last as usize::MAX) must be
+            // non-decreasing, so `[4,4] -> (out, batch)` and
+            // `[4,4] -> (batch, out)` are enumerated once.
+            let prev_key: Option<usize> = (m > 0 && mesh.dims[m - 1] == mesh.dims[m])
+                .then(|| assign[m - 1].map_or(usize::MAX, |a| a));
+            // Option 1: leave unassigned (key MAX >= any prev key).
+            assign[m] = None;
+            rec(m + 1, mesh, op, axes_allowed, assign, used, out);
+            // Option 2: assign to an allowed, unused, divisible axis.
+            for &a in axes_allowed {
+                if used[a]
+                    || op.axes[a].size % mesh.dims[m] as i64 != 0
+                    || prev_key.map_or(false, |k| a < k)
+                {
+                    continue;
+                }
+                assign[m] = Some(a);
+                used[a] = true;
+                rec(m + 1, mesh, op, axes_allowed, assign, used, out);
+                used[a] = false;
+                assign[m] = None;
+            }
+        }
+        rec(0, &mesh, op, &axes_allowed, &mut assign, &mut used, &mut out);
+    }
+    // Deduplicate configurations that induce identical behaviour (can arise
+    // from different meshes whose assigned structure collapses, e.g. [8,2]
+    // with both dims unassigned == [16] unassigned).
+    let mut seen = std::collections::HashSet::new();
+    out.retain(|c| {
+        let sig = signature(c, op);
+        seen.insert(sig)
+    });
+    out
+}
+
+/// Behavioural signature used for deduplication: per-axis shard counts +
+/// replication. Two configs with the same signature have identical costs
+/// and splits.
+fn signature(c: &ParallelConfig, op: &Op) -> Vec<u32> {
+    let mut sig: Vec<u32> = (0..op.axes.len()).map(|a| c.axis_shards(a)).collect();
+    sig.push(c.replication());
+    sig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models::tiny_mlp;
+
+    fn dense_op() -> Op {
+        let g = tiny_mlp(64);
+        g.ops.iter().find(|o| o.name == "fc1").unwrap().clone()
+    }
+
+    #[test]
+    fn enumerate_dense_4dev() {
+        let op = dense_op();
+        let cfgs = enumerate_configs(&op, 4, 2);
+        assert!(!cfgs.is_empty());
+        // contains pure DP, pure model-parallel (out), reduce split, replicated.
+        let b = op.batch_axis().unwrap();
+        assert!(cfgs.iter().any(|c| c.axis_shards(b) == 4));
+        assert!(cfgs.iter().any(|c| c.axis_shards(1) == 4));
+        assert!(cfgs.iter().any(|c| c.replication() == 4));
+        // all signatures unique
+        let mut seen = std::collections::HashSet::new();
+        for c in &cfgs {
+            assert!(seen.insert(signature(c, &op)), "dup {:?}", c);
+        }
+    }
+
+    #[test]
+    fn divisibility_respected() {
+        let op = dense_op(); // batch 64, out 128, in 64
+        for c in enumerate_configs(&op, 16, 3) {
+            for (a, ax) in op.axes.iter().enumerate() {
+                assert_eq!(ax.size % c.axis_shards(a) as i64, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn out_split_devices_consistent() {
+        let op = dense_op();
+        for c in enumerate_configs(&op, 8, 3) {
+            let s = c.out_split(&op);
+            assert_eq!(s.n_devices(), 8, "cfg {} split {}", c.label(&op), s.label());
+        }
+    }
+
+    #[test]
+    fn input_op_restricted_to_dp() {
+        let g = tiny_mlp(64);
+        let input = g.ops.iter().find(|o| o.name == "x").unwrap();
+        let cfgs = enumerate_configs(input, 8, 3);
+        for c in &cfgs {
+            // only batch splits or replication; never feature splits.
+            assert!(c.assign.iter().all(|a| a.is_none() || *a == input.batch_axis()));
+        }
+        assert!(cfgs.iter().any(|c| c.compute_parallelism() == 8));
+    }
+
+    #[test]
+    fn data_parallel_helper() {
+        let op = dense_op();
+        let dp = ParallelConfig::data_parallel(&op, 8).unwrap();
+        assert_eq!(dp.axis_shards(op.batch_axis().unwrap()), 8);
+        assert_eq!(dp.param_shards(&op), 1);
+        assert_eq!(dp.grad_sync_mesh_dims(&op), vec![(0, 8)]);
+    }
+
+    #[test]
+    fn reduce_split_makes_partial_output() {
+        let op = dense_op();
+        let cfgs = enumerate_configs(&op, 4, 2);
+        let reduce_axis = op.axes.iter().position(|a| a.kind == AxisKind::Reduce).unwrap();
+        let c = cfgs.iter().find(|c| c.axis_shards(reduce_axis) == 4).unwrap();
+        let s = c.out_split(&op);
+        assert_eq!(s.pending_sum, 4);
+        assert!(!s.is_complete());
+        assert_eq!(c.param_shards(&op), 4);
+        assert!(c.grad_sync_mesh_dims(&op).is_empty());
+    }
+
+    #[test]
+    fn required_input_split_matches_names() {
+        let g = tiny_mlp(64);
+        let fc2 = g.ops.iter().find(|o| o.name == "fc2").unwrap();
+        let relu1 = g.ops.iter().find(|o| o.name == "relu1").unwrap();
+        // fc2 with reduce split over its input features (named fc1_out):
+        let cfgs = enumerate_configs(fc2, 4, 2);
+        let reduce_axis = fc2.axes.iter().position(|a| a.kind == AxisKind::Reduce).unwrap();
+        let c = cfgs.iter().find(|c| c.axis_shards(reduce_axis) == 4).unwrap();
+        let req = c.required_input_split(fc2, &relu1.out);
+        // relu1 out dims: [batch, fc1_out]; reduce axis name is fc1_out.
+        assert_eq!(req.shards, vec![1, 4]);
+        assert_eq!(req.replicas, 1);
+    }
+
+    #[test]
+    fn single_device_trivial() {
+        let op = dense_op();
+        let cfgs = enumerate_configs(&op, 1, 3);
+        assert_eq!(cfgs.len(), 1);
+        assert_eq!(cfgs[0].n_devices(), 1);
+    }
+}

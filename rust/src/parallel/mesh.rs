@@ -1,0 +1,133 @@
+//! Device meshes (§2.1): the logical organization of the devices, e.g. 16
+//! GPUs as `[16]`, `[8,2]` or `[4,2,2]`.
+//!
+//! Devices are laid out machine-major and mesh dims are row-major, so the
+//! *last* mesh dim groups adjacent (intra-machine) devices while earlier
+//! dims form strided groups that typically span machines — this placement
+//! rule is what the communication model uses to decide whether a
+//! collective crosses the inter-machine link.
+
+/// A device mesh: dims with product = number of participating devices.
+/// Canonical form is non-increasing (`[8,2]`, never `[2,8]`): ordering is
+/// redundant because configurations assign mesh dims to operator axes
+/// explicitly.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Mesh {
+    pub dims: Vec<u32>,
+}
+
+impl Mesh {
+    pub fn new(dims: Vec<u32>) -> Self {
+        debug_assert!(dims.windows(2).all(|w| w[0] >= w[1]), "mesh dims must be sorted desc");
+        Self { dims }
+    }
+
+    /// Total devices in the mesh.
+    pub fn n_devices(&self) -> u32 {
+        self.dims.iter().product::<u32>().max(1)
+    }
+
+    pub fn n_dims(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Stride of mesh dim `k` in the flat device numbering (row-major:
+    /// last dim fastest-varying).
+    pub fn stride(&self, k: usize) -> u32 {
+        self.dims[k + 1..].iter().product::<u32>().max(1)
+    }
+
+    /// Span of a group along mesh dim `k`: the distance (inclusive device
+    /// count) from a group's first to last member. Used to decide whether
+    /// the group stays inside one machine.
+    pub fn group_span(&self, k: usize) -> u32 {
+        self.stride(k) * (self.dims[k] - 1) + 1
+    }
+
+    pub fn label(&self) -> String {
+        format!("[{}]", self.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","))
+    }
+}
+
+/// Enumerate canonical meshes for `d` devices with at most `max_dims`
+/// dimensions: all multisets of factors >= 2 with product `d`, sorted
+/// non-increasing. `d = 1` yields the empty mesh (single device).
+pub fn enumerate_meshes(d: u32, max_dims: usize) -> Vec<Mesh> {
+    let mut out = Vec::new();
+    let mut cur = Vec::new();
+    fn rec(remaining: u32, max_factor: u32, max_dims: usize, cur: &mut Vec<u32>, out: &mut Vec<Mesh>) {
+        if remaining == 1 {
+            out.push(Mesh::new(cur.clone()));
+            return;
+        }
+        if cur.len() == max_dims {
+            return;
+        }
+        let mut f = max_factor.min(remaining);
+        while f >= 2 {
+            if remaining % f == 0 {
+                cur.push(f);
+                rec(remaining / f, f, max_dims, cur, out);
+                cur.pop();
+            }
+            f -= 1;
+        }
+    }
+    rec(d, d, max_dims, &mut cur, &mut out);
+    if out.is_empty() {
+        out.push(Mesh::new(vec![]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meshes_for_16() {
+        let ms = enumerate_meshes(16, 2);
+        let labels: Vec<String> = ms.iter().map(|m| m.label()).collect();
+        assert!(labels.contains(&"[16]".to_string()));
+        assert!(labels.contains(&"[8,2]".to_string()));
+        assert!(labels.contains(&"[4,4]".to_string()));
+        assert_eq!(ms.len(), 3);
+        let ms3 = enumerate_meshes(16, 3);
+        assert!(ms3.iter().any(|m| m.label() == "[4,2,2]"));
+    }
+
+    #[test]
+    fn single_device_empty_mesh() {
+        let ms = enumerate_meshes(1, 3);
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].n_devices(), 1);
+        assert_eq!(ms[0].n_dims(), 0);
+    }
+
+    #[test]
+    fn all_products_correct() {
+        for d in [2u32, 4, 8, 12, 16, 24, 32] {
+            for m in enumerate_meshes(d, 4) {
+                assert_eq!(m.n_devices(), d, "mesh {:?}", m.dims);
+            }
+        }
+    }
+
+    #[test]
+    fn stride_and_span() {
+        let m = Mesh::new(vec![4, 2, 2]);
+        assert_eq!(m.stride(0), 4);
+        assert_eq!(m.stride(2), 1);
+        assert_eq!(m.group_span(0), 13); // stride 4 * (4-1) + 1
+        assert_eq!(m.group_span(2), 2);
+    }
+
+    #[test]
+    fn canonical_no_duplicates() {
+        let ms = enumerate_meshes(16, 4);
+        let mut seen = std::collections::HashSet::new();
+        for m in &ms {
+            assert!(seen.insert(m.dims.clone()), "dup {:?}", m.dims);
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Parallelization-strategy machinery: device meshes, per-operator
+//! parallelization configurations (§2.1), tensor splits, tensor
+//! re-scheduling (§4.2 / Figure 5) and tensor-reuse policies.
+
+pub mod config;
+pub mod mesh;
+pub mod resched;
+pub mod reuse;
+pub mod split;
+
+pub use config::{enumerate_configs, ParallelConfig};
+pub use mesh::{enumerate_meshes, Mesh};
+pub use resched::{reschedule, reschedule_cost, Coll, CollectiveCost, ReschedPlan};
+pub use reuse::{edge_cost_options, ReusePolicy};
+pub use split::Split;
+
+/// A complete parallelization strategy `S`: one configuration per operator
+/// (indexed by `OpId.0`).
+#[derive(Debug, Clone)]
+pub struct Strategy {
+    pub configs: Vec<ParallelConfig>,
+}
+
+impl Strategy {
+    pub fn config(&self, op: crate::graph::OpId) -> &ParallelConfig {
+        &self.configs[op.0]
+    }
+
+    /// Pure data parallelism over `d` devices (every op batch-split; ops
+    /// whose batch is indivisible fall back to replication).
+    pub fn all_data_parallel(g: &crate::graph::Graph, d: u32) -> Self {
+        let configs = g
+            .ops
+            .iter()
+            .map(|op| {
+                ParallelConfig::data_parallel(op, d)
+                    .unwrap_or_else(|| ParallelConfig::replicated(d))
+            })
+            .collect();
+        Self { configs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models::tiny_mlp;
+
+    #[test]
+    fn all_dp_strategy() {
+        let g = tiny_mlp(64);
+        let s = Strategy::all_data_parallel(&g, 8);
+        assert_eq!(s.configs.len(), g.n_ops());
+        for (op, c) in g.ops.iter().zip(&s.configs) {
+            if let Some(b) = op.batch_axis() {
+                assert_eq!(c.axis_shards(b), 8, "op {}", op.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! Tensor re-scheduling (§4.2, Figure 5): when a producer's output split
+//! differs from the split a consumer requires, TensorOpt finds the optimal
+//! sequence of collective operations by solving a *shortest-path problem*
+//! over tensor-split states. Nodes are [`Split`]s, edges are single
+//! collectives (all-gather, slice, all-to-all, all-reduce, reduce-scatter),
+//! and edge weights come from the communication model.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
+
+use super::split::Split;
+
+/// Collective operation kinds used for re-scheduling and synchronization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Coll {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+    Broadcast,
+}
+
+/// Cost oracle for one collective operation.
+///
+/// `bytes` is the per-participant payload, `group` the number of
+/// participants, `crossing` whether the group spans machines. Implemented
+/// by the profile-based estimator (`cost::comm::CommModel`), by the
+/// ground-truth simulator (`sim`), and by the naive OptCNN-style model
+/// used in Table 2's error comparison.
+pub trait CollectiveCost {
+    fn coll_time(&self, coll: Coll, bytes: f64, group: u32, crossing: bool) -> f64;
+
+    /// Whether a group of this size spans machines under the standard
+    /// machine-major placement. Default: crosses when larger than one
+    /// machine.
+    fn group_crosses(&self, group: u32) -> bool;
+}
+
+/// One step of a re-scheduling plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Transition {
+    pub coll: Coll,
+    /// Tensor dim affected (source dim for AllToAll).
+    pub dim: usize,
+    /// Second dim for AllToAll (destination), unused otherwise.
+    pub dim2: usize,
+    /// Group size of the collective.
+    pub group: u32,
+    pub cost: f64,
+}
+
+/// A complete re-scheduling plan: ordered collectives + total time.
+#[derive(Debug, Clone, Default)]
+pub struct ReschedPlan {
+    pub steps: Vec<Transition>,
+    pub cost: f64,
+}
+
+#[derive(PartialEq)]
+struct HeapItem {
+    cost: f64,
+    state: Split,
+}
+
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on cost
+        other.cost.partial_cmp(&self.cost).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Small prime factors used for transition granularity.
+fn prime_factors(mut n: u32) -> Vec<u32> {
+    let mut out = Vec::new();
+    for p in [2u32, 3, 5, 7, 11, 13] {
+        while n % p == 0 {
+            if !out.contains(&p) {
+                out.push(p);
+            }
+            n /= p;
+        }
+    }
+    if n > 1 {
+        out.push(n);
+    }
+    out
+}
+
+/// Find the cheapest collective sequence transforming split `from` into
+/// split `to` of a tensor with dim extents `dims` and total size
+/// `full_bytes`. Returns `None` when unreachable (should not happen for
+/// well-formed splits on the same device count).
+pub fn reschedule(
+    full_bytes: f64,
+    dims: &[i64],
+    from: &Split,
+    to: &Split,
+    comm: &dyn CollectiveCost,
+) -> Option<ReschedPlan> {
+    debug_assert_eq!(from.shards.len(), dims.len());
+    debug_assert_eq!(to.shards.len(), dims.len());
+    debug_assert_eq!(from.n_devices(), to.n_devices());
+    if from == to {
+        return Some(ReschedPlan::default());
+    }
+    let mut dist: HashMap<Split, f64> = HashMap::new();
+    let mut prev: HashMap<Split, (Split, Transition)> = HashMap::new();
+    let mut heap = BinaryHeap::new();
+    dist.insert(from.clone(), 0.0);
+    heap.push(HeapItem { cost: 0.0, state: from.clone() });
+
+    while let Some(HeapItem { cost, state }) = heap.pop() {
+        if &state == to {
+            // reconstruct
+            let mut steps = Vec::new();
+            let mut cur = state.clone();
+            while let Some((p, t)) = prev.get(&cur) {
+                steps.push(t.clone());
+                cur = p.clone();
+            }
+            steps.reverse();
+            return Some(ReschedPlan { steps, cost });
+        }
+        if dist.get(&state).map_or(false, |&d| cost > d) {
+            continue;
+        }
+        let mut push = |next: Split, t: Transition, dist: &mut HashMap<Split, f64>,
+                        prev: &mut HashMap<Split, (Split, Transition)>,
+                        heap: &mut BinaryHeap<HeapItem>| {
+            let nc = cost + t.cost;
+            if dist.get(&next).map_or(true, |&d| nc < d) {
+                dist.insert(next.clone(), nc);
+                prev.insert(next.clone(), (state.clone(), t));
+                heap.push(HeapItem { cost: nc, state: next });
+            }
+        };
+        let shard_bytes = state.bytes_per_device(full_bytes);
+        let ndim = dims.len();
+
+        if state.pending_sum > 1 {
+            // all-reduce the partial group -> replicas absorb it.
+            let g = state.pending_sum;
+            let t = Transition {
+                coll: Coll::AllReduce,
+                dim: 0,
+                dim2: 0,
+                group: g,
+                cost: comm.coll_time(Coll::AllReduce, shard_bytes, g, comm.group_crosses(g)),
+            };
+            let next = Split {
+                shards: state.shards.clone(),
+                replicas: state.replicas * g,
+                pending_sum: 1,
+            };
+            push(next, t, &mut dist, &mut prev, &mut heap);
+            // reduce-scatter the partial group onto a tensor dim.
+            for k in 0..ndim {
+                if dims[k] % (state.shards[k] * g) as i64 == 0 {
+                    let mut shards = state.shards.clone();
+                    shards[k] *= g;
+                    let t = Transition {
+                        coll: Coll::ReduceScatter,
+                        dim: k,
+                        dim2: 0,
+                        group: g,
+                        cost: comm.coll_time(
+                            Coll::ReduceScatter,
+                            shard_bytes,
+                            g,
+                            comm.group_crosses(g),
+                        ),
+                    };
+                    let next =
+                        Split { shards, replicas: state.replicas, pending_sum: 1 };
+                    push(next, t, &mut dist, &mut prev, &mut heap);
+                }
+            }
+            continue; // resolve partial sums before anything else
+        }
+
+        for k in 0..ndim {
+            // all-gather along dim k by a prime factor.
+            for g in prime_factors(state.shards[k]) {
+                let mut shards = state.shards.clone();
+                shards[k] /= g;
+                let t = Transition {
+                    coll: Coll::AllGather,
+                    dim: k,
+                    dim2: 0,
+                    group: g,
+                    cost: comm.coll_time(Coll::AllGather, shard_bytes, g, comm.group_crosses(g)),
+                };
+                let next = Split { shards, replicas: state.replicas * g, pending_sum: 1 };
+                push(next, t, &mut dist, &mut prev, &mut heap);
+            }
+            // local slice along dim k (consume replication) — free.
+            for g in prime_factors(state.replicas) {
+                if dims[k] % (state.shards[k] * g) as i64 == 0 {
+                    let mut shards = state.shards.clone();
+                    shards[k] *= g;
+                    let t = Transition { coll: Coll::Broadcast, dim: k, dim2: 0, group: g, cost: 0.0 };
+                    let next = Split { shards, replicas: state.replicas / g, pending_sum: 1 };
+                    push(next, t, &mut dist, &mut prev, &mut heap);
+                }
+            }
+            // all-to-all moving a factor g of split from dim k to dim j.
+            for j in 0..ndim {
+                if j == k {
+                    continue;
+                }
+                for g in prime_factors(state.shards[k]) {
+                    if dims[j] % (state.shards[j] * g) as i64 != 0 {
+                        continue;
+                    }
+                    let mut shards = state.shards.clone();
+                    shards[k] /= g;
+                    shards[j] *= g;
+                    let t = Transition {
+                        coll: Coll::AllToAll,
+                        dim: k,
+                        dim2: j,
+                        group: g,
+                        cost: comm.coll_time(Coll::AllToAll, shard_bytes, g, comm.group_crosses(g)),
+                    };
+                    let next = Split { shards, replicas: state.replicas, pending_sum: 1 };
+                    push(next, t, &mut dist, &mut prev, &mut heap);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Convenience: just the time of the cheapest plan (`f64::INFINITY` when
+/// unreachable).
+pub fn reschedule_cost(
+    full_bytes: f64,
+    dims: &[i64],
+    from: &Split,
+    to: &Split,
+    comm: &dyn CollectiveCost,
+) -> f64 {
+    reschedule(full_bytes, dims, from, to, comm).map_or(f64::INFINITY, |p| p.cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Flat-cost oracle: every collective costs `bytes * factor(coll)`, so
+    /// plans are easy to reason about.
+    struct FlatComm;
+    impl CollectiveCost for FlatComm {
+        fn coll_time(&self, coll: Coll, bytes: f64, group: u32, _crossing: bool) -> f64 {
+            let f = match coll {
+                Coll::AllReduce => 2.0,
+                Coll::AllGather => 1.0,
+                Coll::ReduceScatter => 1.0,
+                Coll::AllToAll => 0.5,
+                Coll::Broadcast => 1.0,
+            };
+            f * bytes * (group as f64 - 1.0) / group as f64 + 1e-6 * group as f64
+        }
+        fn group_crosses(&self, group: u32) -> bool {
+            group > 8
+        }
+    }
+
+    fn split(shards: Vec<u32>, replicas: u32) -> Split {
+        Split { shards, replicas, pending_sum: 1 }
+    }
+
+    #[test]
+    fn identity_is_free() {
+        let s = split(vec![4, 1], 1);
+        let p = reschedule(1024.0, &[64, 64], &s, &s, &FlatComm).unwrap();
+        assert_eq!(p.cost, 0.0);
+        assert!(p.steps.is_empty());
+    }
+
+    #[test]
+    fn fig5_length_to_sample_resplit_uses_alltoall() {
+        // Figure 5: x split over 4 GPUs in the length dim must become
+        // split in the sample dim. Cheapest single collective: all-to-all.
+        let from = split(vec![1, 4], 1);
+        let to = split(vec![4, 1], 1);
+        let p = reschedule(4096.0, &[256, 100], &from, &to, &FlatComm).unwrap();
+        // factor-4 move decomposes into prime-factor all-to-alls.
+        assert!(!p.steps.is_empty());
+        assert!(p.steps.iter().all(|s| s.coll == Coll::AllToAll), "{:?}", p.steps);
+        assert!(p.cost > 0.0);
+    }
+
+    #[test]
+    fn slice_from_replication_is_free() {
+        let from = split(vec![1, 1], 4);
+        let to = split(vec![4, 1], 1);
+        let p = reschedule(4096.0, &[256, 100], &from, &to, &FlatComm).unwrap();
+        assert_eq!(p.cost, 0.0);
+    }
+
+    #[test]
+    fn allgather_for_full_replication() {
+        let from = split(vec![4, 1], 1);
+        let to = split(vec![1, 1], 4);
+        let p = reschedule(4096.0, &[256, 100], &from, &to, &FlatComm).unwrap();
+        assert!(p.steps.iter().all(|s| s.coll == Coll::AllGather));
+        assert!(p.cost > 0.0);
+    }
+
+    #[test]
+    fn partial_resolved_by_reduce_scatter_when_target_split() {
+        // partial over 4 devices -> want split over dim 0 by 4:
+        // reduce-scatter does both at once and is cheaper than
+        // all-reduce + slice (2x bytes vs 1x).
+        let from = Split { shards: vec![1, 1], replicas: 1, pending_sum: 4 };
+        let to = split(vec![4, 1], 1);
+        let p = reschedule(4096.0, &[256, 100], &from, &to, &FlatComm).unwrap();
+        assert_eq!(p.steps.len(), 1);
+        assert_eq!(p.steps[0].coll, Coll::ReduceScatter);
+    }
+
+    #[test]
+    fn partial_to_replicated_resolves_sum_first() {
+        let from = Split { shards: vec![1, 1], replicas: 1, pending_sum: 4 };
+        let to = split(vec![1, 1], 4);
+        let p = reschedule(4096.0, &[256, 100], &from, &to, &FlatComm).unwrap();
+        // first step must resolve the partial sum (all-reduce directly, or
+        // the cheaper reduce-scatter + all-gather decomposition).
+        assert!(matches!(p.steps[0].coll, Coll::AllReduce | Coll::ReduceScatter));
+        assert!(p.cost > 0.0);
+    }
+
+    #[test]
+    fn indivisible_dim_prevents_slice() {
+        // dim extent 6 cannot be split 4 ways; path must route elsewhere.
+        let from = split(vec![1, 2], 2); // dims [6, 64], 4 devices
+        let to = split(vec![2, 2], 1);
+        let p = reschedule(1536.0, &[6, 64], &from, &to, &FlatComm).unwrap();
+        assert!(p.cost >= 0.0);
+        // final state respects divisibility (6 % 2 == 0 so split [2,2] ok)
+        assert_eq!(p.steps.iter().filter(|s| s.cost > 0.0).count(), 0);
+    }
+
+    #[test]
+    fn cost_monotone_in_bytes() {
+        let from = split(vec![4, 1], 1);
+        let to = split(vec![1, 4], 1);
+        let c1 = reschedule_cost(1024.0, &[64, 64], &from, &to, &FlatComm);
+        let c2 = reschedule_cost(4096.0, &[64, 64], &from, &to, &FlatComm);
+        assert!(c2 > c1);
+    }
+}

@@ -1,0 +1,97 @@
+//! Tensor reuse (§4.2): a tensor that was re-scheduled exists in two
+//! physically different layouts (before / after). Both the producer and the
+//! consumer need "their" copy during backward propagation, so TensorOpt
+//! offers three configurations per re-scheduled tensor and lets the FT
+//! algorithm trade memory against communication:
+//!
+//!  - **KeepBoth** — both copies stay resident: no extra communication in
+//!    backward, but the re-scheduled copy's memory is held for the whole
+//!    iteration. (What strategies pick once memory passes the *turning
+//!    point* — this is the paper's explanation for the frontier knee.)
+//!  - **KeepBefore** — only the producer-layout copy stays; the consumer
+//!    re-runs the re-schedule in backward (extra communication).
+//!  - **KeepAfter** — symmetric: only the consumer-layout copy stays; the
+//!    producer's view is reconstructed by the reverse re-schedule.
+
+/// Reuse policy for one re-scheduled tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReusePolicy {
+    KeepBoth,
+    KeepBefore,
+    KeepAfter,
+}
+
+impl ReusePolicy {
+    pub const ALL: [ReusePolicy; 3] =
+        [ReusePolicy::KeepBoth, ReusePolicy::KeepBefore, ReusePolicy::KeepAfter];
+
+    /// (extra_memory_bytes, extra_comm_time) this policy adds on top of
+    /// the unavoidable forward re-schedule.
+    ///
+    /// `fwd_copy_bytes` — per-device size of the re-scheduled (consumer
+    /// side) copy; `resched_time` — time of one re-schedule pass.
+    /// Backward always needs one re-schedule for the *gradient* flowing
+    /// back (mirror of the forward one); Keep{Before,After} additionally
+    /// re-materialize the missing activation copy.
+    pub fn costs(self, fwd_copy_bytes: f64, resched_time: f64) -> (f64, f64) {
+        match self {
+            // memory for the second activation copy, no extra comm.
+            ReusePolicy::KeepBoth => (fwd_copy_bytes, resched_time),
+            // no extra memory; one extra re-schedule in backward.
+            ReusePolicy::KeepBefore | ReusePolicy::KeepAfter => (0.0, 2.0 * resched_time),
+        }
+    }
+}
+
+/// Edge-cost options for a producer→consumer pair whose splits differ:
+/// each reuse policy yields a (memory, time) tuple; the *frontier* over
+/// those tuples is the edge's initial cost set (the forward re-schedule
+/// time is included in all of them). For matching splits this is the
+/// single zero tuple.
+pub fn edge_cost_options(
+    needs_resched: bool,
+    fwd_copy_bytes: f64,
+    resched_time: f64,
+) -> Vec<(f64, f64)> {
+    if !needs_resched {
+        return vec![(0.0, 0.0)];
+    }
+    let mut opts: Vec<(f64, f64)> = ReusePolicy::ALL
+        .iter()
+        .map(|p| {
+            let (m, t) = p.costs(fwd_copy_bytes, resched_time);
+            // forward re-schedule itself:
+            (m, t + resched_time)
+        })
+        .collect();
+    opts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    opts.dedup();
+    opts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keep_both_trades_memory_for_time() {
+        let (m_both, t_both) = ReusePolicy::KeepBoth.costs(100.0, 2.0);
+        let (m_one, t_one) = ReusePolicy::KeepBefore.costs(100.0, 2.0);
+        assert!(m_both > m_one);
+        assert!(t_both < t_one);
+    }
+
+    #[test]
+    fn no_resched_single_zero_option() {
+        assert_eq!(edge_cost_options(false, 100.0, 2.0), vec![(0.0, 0.0)]);
+    }
+
+    #[test]
+    fn resched_options_form_tradeoff() {
+        let opts = edge_cost_options(true, 100.0, 2.0);
+        assert_eq!(opts.len(), 2); // KeepBefore == KeepAfter cost-wise
+        // both dominate nothing: (0, 6) vs (100, 4)
+        assert!(opts.contains(&(0.0, 6.0)));
+        assert!(opts.contains(&(100.0, 4.0)));
+    }
+}

@@ -1,0 +1,88 @@
+//! Tensor splits: how one tensor is partitioned across the devices.
+//!
+//! A [`Split`] is the device-count view of a tensor map (§2.1): per-dim
+//! shard counts plus a replication degree, with
+//! `prod(shards) * replicas = n_devices`. It is the state space of the
+//! tensor re-scheduling shortest-path search (Figure 5) and the interface
+//! between a producer's output layout and a consumer's required input
+//! layout.
+
+/// Partitioning of one tensor across `n` devices.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Split {
+    /// Shard count per tensor dim (1 = not split).
+    pub shards: Vec<u32>,
+    /// Number of replicas of each shard.
+    pub replicas: u32,
+    /// Size of the group holding *partial* values that still need a
+    /// reduction (1 = the tensor is complete). Produced by splitting a
+    /// Reduce axis; consumed by all-reduce / reduce-scatter transitions.
+    pub pending_sum: u32,
+}
+
+impl Split {
+    /// Fully-replicated tensor on `n` devices.
+    pub fn replicated(ndims: usize, n: u32) -> Self {
+        Self { shards: vec![1; ndims], replicas: n, pending_sum: 1 }
+    }
+
+    /// Total shards (product over dims).
+    pub fn n_shards(&self) -> u32 {
+        self.shards.iter().product::<u32>().max(1)
+    }
+
+    /// Total devices covered (shards x replicas x partial-group).
+    pub fn n_devices(&self) -> u32 {
+        self.n_shards() * self.replicas * self.pending_sum
+    }
+
+    /// Bytes held per device given the full tensor size.
+    pub fn bytes_per_device(&self, full_bytes: f64) -> f64 {
+        full_bytes / self.n_shards() as f64
+    }
+
+    /// Whether this split describes a complete (non-partial) tensor.
+    pub fn is_complete(&self) -> bool {
+        self.pending_sum == 1
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "s[{}]x r{}{}",
+            self.shards.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(","),
+            self.replicas,
+            if self.pending_sum > 1 { format!(" partial{}", self.pending_sum) } else { String::new() }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invariants() {
+        let s = Split { shards: vec![4, 2], replicas: 2, pending_sum: 1 };
+        assert_eq!(s.n_shards(), 8);
+        assert_eq!(s.n_devices(), 16);
+        let p = Split { shards: vec![4, 1], replicas: 2, pending_sum: 2 };
+        assert_eq!(p.n_devices(), 16);
+        assert_eq!(s.bytes_per_device(800.0), 100.0);
+        assert!(s.is_complete());
+    }
+
+    #[test]
+    fn replicated_split() {
+        let s = Split::replicated(3, 16);
+        assert_eq!(s.n_shards(), 1);
+        assert_eq!(s.n_devices(), 16);
+        assert_eq!(s.bytes_per_device(64.0), 64.0);
+    }
+
+    #[test]
+    fn partial_labeling() {
+        let s = Split { shards: vec![2], replicas: 1, pending_sum: 4 };
+        assert!(!s.is_complete());
+        assert!(s.label().contains("partial4"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT loading/execution of AOT artifacts, host tensors,
+//! collectives over virtual devices, and the execution-graph engine.
+
+pub mod collective;
+pub mod executor;
+pub mod pjrt;
+pub mod tensor;
+
+pub use executor::{ExecMetrics, ExecStep, Executor};
+pub use pjrt::{default_artifacts_dir, Executable, Runtime};
+pub use tensor::HostTensor;

@@ -1,0 +1,112 @@
+//! Host-side tensors moved between the coordinator and PJRT executions.
+
+/// A dense host tensor (f32 or i32 payload).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// f32 payload (panics on i32 tensors — coordinator-internal misuse).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            HostTensor::I32 { .. } => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            HostTensor::I32 { .. } => panic!("expected f32 tensor"),
+        }
+    }
+
+    /// Convert to an XLA literal with this tensor's shape.
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Build from an XLA literal (f32 or i32/s32).
+    pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<Self> {
+        let shape = lit.shape()?;
+        let dims: Vec<usize> = match &shape {
+            xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+            _ => anyhow::bail!("tuple literal passed to from_literal"),
+        };
+        match lit.ty()? {
+            xla::ElementType::F32 => Ok(HostTensor::f32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(HostTensor::i32(dims, lit.to_vec::<i32>()?)),
+            t => anyhow::bail!("unsupported element type {t:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_len() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        HostTensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32(vec![4], vec![1, 2, 3, 4]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+}

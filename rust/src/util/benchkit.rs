@@ -1,0 +1,140 @@
+//! Benchmark harness for `cargo bench` targets (criterion is not vendored
+//! in this offline environment).
+//!
+//! Each `rust/benches/bench_*.rs` is a `harness = false` binary that builds
+//! a [`Bench`] set, runs it, and prints a criterion-like summary plus the
+//! paper-style table/CSV output for the experiment it regenerates.
+
+use std::time::Instant;
+
+/// Result of one benchmark: wall-clock stats over the measured iterations.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchStats {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12} (min {:>12}, max {:>12}, sd {:>10}, n={})",
+            self.name,
+            crate::util::human_secs(self.mean_s),
+            crate::util::human_secs(self.min_s),
+            crate::util::human_secs(self.max_s),
+            crate::util::human_secs(self.stddev_s),
+            self.iters
+        )
+    }
+}
+
+/// A named set of benchmarks sharing warmup/measurement configuration.
+pub struct Bench {
+    pub group: String,
+    /// Minimum number of measured iterations.
+    pub min_iters: usize,
+    /// Target total measurement time; iteration stops after both
+    /// `min_iters` and this budget are satisfied (or `max_iters` hit).
+    pub target_secs: f64,
+    pub max_iters: usize,
+    pub warmup_iters: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        Self {
+            group: group.to_string(),
+            min_iters: 3,
+            target_secs: 1.0,
+            max_iters: 1000,
+            warmup_iters: 1,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick configuration for expensive end-to-end benches.
+    pub fn slow(mut self) -> Self {
+        self.min_iters = 2;
+        self.target_secs = 0.0;
+        self.max_iters = 3;
+        self.warmup_iters = 0;
+        self
+    }
+
+    /// Run `f` repeatedly, record timing stats under `name`.
+    /// The closure's return value is black-boxed to keep the work alive.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchStats {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            let done_iters = samples.len() >= self.min_iters;
+            let done_time = start.elapsed().as_secs_f64() >= self.target_secs;
+            if (done_iters && done_time) || samples.len() >= self.max_iters {
+                break;
+            }
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: n,
+            mean_s: mean,
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_s: samples.iter().cloned().fold(0.0, f64::max),
+            stddev_s: var.sqrt(),
+        };
+        println!("bench [{}] {}", self.group, stats.line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All recorded stats.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Print the closing summary block.
+    pub fn finish(&self) {
+        println!("\n== bench group `{}`: {} benchmarks ==", self.group, self.results.len());
+        for r in &self.results {
+            println!("  {}", r.line());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_at_least_min_iters() {
+        let mut b = Bench::new("t");
+        b.min_iters = 5;
+        b.target_secs = 0.0;
+        let s = b.run("noop", || 1 + 1).clone();
+        assert!(s.iters >= 5);
+        assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s + 1e-12);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let mut b = Bench::new("t");
+        b.min_iters = 1;
+        b.target_secs = 100.0;
+        b.max_iters = 4;
+        let s = b.run("noop", || ()).clone();
+        assert_eq!(s.iters, 4);
+    }
+}

@@ -1,0 +1,127 @@
+//! Minimal CLI argument parser (clap is not vendored in this offline
+//! environment).
+//!
+//! Supports the patterns the `tensoropt` binary needs:
+//! `tensoropt <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand, `--key value` options, bare `--flag`
+/// switches and positional arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable); the first element is the
+    /// subcommand if it does not start with `--`.
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare `--flag`.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// String option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Typed option with default; panics with a readable message on a
+    /// malformed value (CLI surface, not library surface).
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("invalid value for --{key}: {v}: {e}")),
+        }
+    }
+
+    /// Bare `--flag` presence.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_opts() {
+        let a = parse("exp --model transformer --gpus 16 fig6");
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.get("model"), Some("transformer"));
+        assert_eq!(a.get_parse_or::<usize>("gpus", 0), 16);
+        assert_eq!(a.positional, vec!["fig6"]);
+    }
+
+    #[test]
+    fn eq_style_and_flags() {
+        let a = parse("train --steps=100 --verbose");
+        assert_eq!(a.get_parse_or::<usize>("steps", 0), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("mode", "mini_time"), "mini_time");
+        assert_eq!(a.get_parse_or::<f64>("lr", 0.1), 0.1);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

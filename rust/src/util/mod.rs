@@ -1,0 +1,61 @@
+//! Small self-contained utilities.
+//!
+//! This build is fully offline (see `.cargo/config.toml`): tokio / clap /
+//! criterion / proptest are not vendored, so this module provides the
+//! minimal replacements the rest of the crate needs: a deterministic RNG
+//! ([`rng::XorShift`]), a tiny CLI argument parser ([`cli::Args`]), ASCII
+//! table / CSV formatting ([`table::Table`]), a benchmark harness
+//! ([`benchkit`]) used by every `rust/benches/bench_*.rs`, and a
+//! property-testing harness ([`ptest`]).
+
+pub mod benchkit;
+pub mod par;
+pub mod cli;
+pub mod ptest;
+pub mod rng;
+pub mod table;
+
+/// Format a byte count with binary units, e.g. `1.50 GB`.
+pub fn human_bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Format a duration in seconds with an adaptive unit, e.g. `1.23 ms`.
+pub fn human_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512.0), "512.00 B");
+        assert_eq!(human_bytes(2048.0), "2.00 KB");
+        assert_eq!(human_bytes(1.5 * 1024.0 * 1024.0 * 1024.0), "1.50 GB");
+    }
+
+    #[test]
+    fn human_secs_units() {
+        assert_eq!(human_secs(2.5), "2.500 s");
+        assert_eq!(human_secs(0.0025), "2.500 ms");
+        assert_eq!(human_secs(2.5e-6), "2.500 us");
+        assert_eq!(human_secs(5e-9), "5.0 ns");
+    }
+}

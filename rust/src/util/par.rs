@@ -1,0 +1,64 @@
+//! Minimal data-parallel map over indices (rayon is not vendored in this
+//! offline environment). Used by FT's multi-threaded LDP and eliminations
+//! (§3.2 "Multi-threading for efficiency").
+
+/// Compute `f(0..n)` across `threads` OS threads, preserving order.
+/// `threads <= 1` runs inline (the paper's "no multi-thread" ablation).
+pub fn par_map_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let threads = threads.min(n);
+    let chunk = n.div_ceil(threads);
+    let mut chunks: Vec<Vec<T>> = Vec::with_capacity(threads);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            let f = &f;
+            handles.push(scope.spawn(move || (lo..hi).map(f).collect::<Vec<T>>()));
+        }
+        for h in handles {
+            chunks.push(h.join().expect("worker thread panicked"));
+        }
+    });
+    let mut out = Vec::with_capacity(n);
+    for c in chunks {
+        out.extend(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let v = par_map_indexed(100, 7, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_fallback() {
+        let v = par_map_indexed(5, 1, |i| i + 1);
+        assert_eq!(v, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let v = par_map_indexed(3, 16, |i| i);
+        assert_eq!(v, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn empty() {
+        let v: Vec<usize> = par_map_indexed(0, 4, |i| i);
+        assert!(v.is_empty());
+    }
+}

@@ -1,0 +1,94 @@
+//! Tiny property-testing harness (proptest is not vendored offline).
+//!
+//! A property is a closure from a deterministic RNG to `Result<(), String>`;
+//! the harness runs it `cases` times with derived seeds and reports the
+//! first failing seed so the case can be replayed exactly. This gives the
+//! core of property-based testing (many generated cases + reproducibility)
+//! without shrinking.
+
+use super::rng::XorShift;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` for `cfg.cases` generated cases. Panics (test failure) with
+/// the failing seed and message on the first violation.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut XorShift) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        // Each case gets an independent, reconstructible seed.
+        let case_seed = cfg.seed ^ (0x9E3779B97F4A7C15u64.wrapping_mul(case as u64 + 1));
+        let mut rng = XorShift::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Shorthand with default config.
+pub fn quick<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut XorShift) -> Result<(), String>,
+{
+    check(name, Config::default(), prop);
+}
+
+/// Assert helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        quick("sum-commutes", |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            prop_assert!(a + b == b + a, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        quick("always-false", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut seen1 = Vec::new();
+        check("collect1", Config { cases: 8, seed: 1 }, |rng| {
+            seen1.push(rng.next_u64());
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        check("collect2", Config { cases: 8, seed: 1 }, |rng| {
+            seen2.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen1, seen2);
+    }
+}

@@ -1,0 +1,127 @@
+//! Cross-module integration tests: the full FT pipeline against the
+//! simulator, session-level searches on real models, strategy unrolling
+//! consistency, and (when artifacts are built) the PJRT execution engine.
+
+use tensoropt::cluster::Cluster;
+use tensoropt::coordinator::{FindResult, SearchOption, Session};
+use tensoropt::cost::comm::CommModel;
+use tensoropt::cost::estimator::{eval_strategy, ReuseChoice};
+use tensoropt::ft::{frontier_search, FtOptions};
+use tensoropt::graph::models;
+use tensoropt::sim::{simulate, SimConfig};
+use tensoropt::util::ptest;
+
+const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// FT on the real RNN model: frontier strategies re-evaluate to (nearly)
+/// their frontier costs, and the simulator confirms the ordering.
+#[test]
+fn ft_frontier_consistent_with_estimator_and_sim() {
+    let g = models::rnn_lm(256);
+    let cluster = Cluster::paper_testbed();
+    let comm = CommModel::profile(&cluster);
+    let r = frontier_search(&g, &cluster, &comm, FtOptions::new(16));
+    assert!(r.frontier.len() >= 2, "rnn frontier should have a trade-off");
+
+    let lo = r.frontier.min_mem().unwrap();
+    let hi = r.frontier.min_time().unwrap();
+    let (s_lo, _) = r.strategy_of(lo);
+    let (s_hi, _) = r.strategy_of(hi);
+    let c_lo = eval_strategy(&g, &s_lo, &cluster, &comm, ReuseChoice::KeepOne);
+    let c_hi = eval_strategy(&g, &s_hi, &cluster, &comm, ReuseChoice::KeepBoth);
+    // min-mem strategy uses less memory; min-time strategy less time.
+    assert!(c_lo.memory <= c_hi.memory * 1.05, "{} vs {}", c_lo.memory / GB, c_hi.memory / GB);
+    assert!(c_hi.time <= c_lo.time * 1.05);
+
+    // simulator agrees on the time ordering.
+    let sim_lo = simulate(&g, &s_lo, &cluster, &SimConfig::default());
+    let sim_hi = simulate(&g, &s_hi, &cluster, &SimConfig::default());
+    assert!(sim_hi.time <= sim_lo.time * 1.10, "{} vs {}", sim_hi.time, sim_lo.time);
+}
+
+/// Paper §5.1 headline: every large model's frontier has a knee — time
+/// rises sharply below it, flattens above it.
+#[test]
+fn turning_point_exists_for_large_models() {
+    let cluster = Cluster::paper_testbed();
+    for model in ["rnn", "transformer"] {
+        let g = models::by_name(model, 256).unwrap();
+        let comm = CommModel::profile(&cluster);
+        let r = frontier_search(&g, &cluster, &comm, FtOptions::new(16));
+        let f = &r.frontier;
+        assert!(f.len() >= 2, "{model}: frontier too small");
+        let spread = f.min_mem().unwrap().time / f.min_time().unwrap().time;
+        assert!(spread > 1.0, "{model}: no time spread on the frontier");
+    }
+}
+
+/// Session mini-time on the transformer fits the 16 GB V100 budget.
+#[test]
+fn session_mini_time_respects_memory() {
+    let session = Session::new(models::by_name("transformer", 256).unwrap(), Cluster::paper_testbed());
+    let FindResult::Plan(p) =
+        session.find_strategy(&SearchOption::MiniTime { parallelism: 16 }).unwrap()
+    else {
+        panic!()
+    };
+    assert!(p.est_memory <= session.mem_budget());
+    assert!(p.est_time > 0.0);
+}
+
+/// Property: for random (model, device-count) pairs, unrolled frontier
+/// strategies always cover every operator with a configuration on the
+/// right device count.
+#[test]
+fn prop_unrolled_strategies_are_complete() {
+    ptest::check(
+        "unroll-complete",
+        ptest::Config { cases: 6, seed: 0xF7 },
+        |rng| {
+            let d = *rng.choose(&[2u32, 4, 8]);
+            let g = match rng.below(3) {
+                0 => models::tiny_mlp(64),
+                1 => models::tiny_resnet(8),
+                _ => models::bert_like_test(8),
+            };
+            let cluster = Cluster::with_gpus(d as usize);
+            let comm = CommModel::profile(&cluster);
+            let r = frontier_search(&g, &cluster, &comm, FtOptions::new(d));
+            crate::require(!r.frontier.is_empty(), "empty frontier")?;
+            for (s, _, _) in r.all_strategies() {
+                crate::require(s.configs.len() == g.n_ops(), "missing op config")?;
+                for cfg in &s.configs {
+                    crate::require(
+                        cfg.n_devices() == d || cfg.n_devices() == 1,
+                        "wrong device count",
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn require(cond: bool, msg: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Full-stack smoke (needs `make artifacts`): train DP and TP briefly on
+/// the real PJRT executor; losses must be finite and comparable.
+#[test]
+fn executor_dp_and_tp_agree_on_scale() {
+    use tensoropt::coordinator::{train_dp, train_tp, TrainerCfg};
+    if !tensoropt::runtime::default_artifacts_dir().join("manifest.txt").exists() {
+        eprintln!("skipping executor test: run `make artifacts`");
+        return;
+    }
+    let cfg = TrainerCfg { steps: 5, log_every: 0, ..Default::default() };
+    let dp = train_dp(&cfg).unwrap();
+    let tp = train_tp(&cfg).unwrap();
+    // same model/init scheme: initial losses both near ln(512).
+    assert!((dp.losses[0] - 6.24).abs() < 1.5, "dp init {}", dp.losses[0]);
+    assert!((tp.losses[0] - 6.24).abs() < 1.5, "tp init {}", tp.losses[0]);
+}
