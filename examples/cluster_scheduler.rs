@@ -1,0 +1,87 @@
+//! Multi-job elastic cluster scheduling (the paper's §4.1 Profiling
+//! motivation taken to its conclusion): several tenants submit training
+//! jobs over time; the scheduler reads each job's *whole* memory/time
+//! frontier off one Profiling sweep — no job ever runs to be measured —
+//! and water-fills the cluster by marginal throughput per device,
+//! re-balancing elastically on every arrival and completion.
+//!
+//! Compared against the allocations a frontier-less scheduler is stuck
+//! with: a static equal share, FIFO run-to-completion, and time-only
+//! greedy grabbing.
+//!
+//! Run: `cargo run --release --example cluster_scheduler`
+
+use tensoropt::cluster::Cluster;
+use tensoropt::sched::{run_workload, FrontierCache, Policy, SchedConfig, Workload};
+use tensoropt::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let cluster = Cluster::paper_testbed();
+    let jobs = Workload::synthetic(
+        4,
+        &[("vgg16", 256), ("wideresnet", 256), ("transformer", 256)],
+        60.0,
+        (500, 2000),
+        7,
+    );
+
+    let mut wl = Table::new(
+        &format!("workload: {} jobs on {}", jobs.len(), cluster.name),
+        &["job", "model", "iterations", "priority", "arrival_s"],
+    );
+    for j in &jobs {
+        wl.row(&[
+            j.name.clone(),
+            j.model.clone(),
+            j.iterations.to_string(),
+            format!("{:.0}", j.priority),
+            format!("{:.1}", j.arrival),
+        ]);
+    }
+    println!("{}", wl.render());
+
+    // One cache for every policy: the comparison costs one FT sweep per
+    // distinct (model, parallelism), everything else is a lookup.
+    let cache = FrontierCache::new(cluster.clone());
+    let cfg = SchedConfig::for_cluster(&cluster);
+
+    let mut t = Table::new(
+        "policy comparison",
+        &["policy", "makespan_s", "mean_jct_s", "utilization", "rescales"],
+    );
+    let mut elastic_jct = 0.0;
+    let mut static_jct = 0.0;
+    for policy in Policy::all() {
+        let r = run_workload(&jobs, &cluster, policy, &cache, &cfg);
+        match policy {
+            Policy::ElasticFrontier => elastic_jct = r.mean_jct,
+            Policy::StaticEqual => static_jct = r.mean_jct,
+            _ => {}
+        }
+        t.row(&[
+            policy.name().to_string(),
+            format!("{:.1}", r.makespan),
+            format!("{:.1}", r.mean_jct),
+            format!("{:.1}%", r.utilization * 100.0),
+            r.total_rescales.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let stats = cache.stats();
+    println!(
+        "frontier cache: {} hits / {} misses — {} FT searches served the \
+         entire 4-policy comparison",
+        stats.hits, stats.misses, stats.misses
+    );
+    println!(
+        "elastic-frontier mean JCT {:.1}s vs static-equal {:.1}s ({:.2}x): the \
+         frontier tells the scheduler exactly how many devices each job can \
+         convert into throughput, so freed devices flow to whoever scales \
+         best instead of sitting in fixed shares",
+        elastic_jct,
+        static_jct,
+        static_jct / elastic_jct
+    );
+    Ok(())
+}

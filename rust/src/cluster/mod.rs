@@ -97,6 +97,24 @@ impl Cluster {
         }
     }
 
+    /// A sub-allocation of this cluster: same device type and link
+    /// classes, `total` devices filling machines at this cluster's
+    /// per-machine width. (Unlike [`Cluster::with_gpus`], non-default
+    /// interconnects are preserved — used by the session and scheduler so
+    /// profiling at reduced parallelism stays on the caller's hardware.)
+    pub fn sub_cluster(&self, total: usize) -> Self {
+        let per = total.min(self.gpus_per_machine.max(1));
+        let machines = total.div_ceil(per.max(1)).max(1);
+        Self {
+            name: format!("{machines}x{per} of {}", self.name),
+            n_machines: machines,
+            gpus_per_machine: per,
+            device: self.device,
+            intra: self.intra,
+            inter: self.inter,
+        }
+    }
+
     /// Figure-7b variants over cross-machine bandwidth.
     pub fn with_inter(kind: LinkKind) -> Self {
         Self { inter: kind, name: format!("2x8xV100 inter={kind:?}"), ..Self::paper_testbed() }

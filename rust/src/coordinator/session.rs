@@ -7,6 +7,7 @@ use crate::cost::comm::CommModel;
 use crate::ft::{frontier_search, FtOptions, FtResult};
 use crate::graph::Graph;
 use crate::parallel::Strategy;
+use crate::util::par::par_map_indexed;
 
 /// The paper's strategy-search options (§4.1).
 #[derive(Debug, Clone)]
@@ -40,6 +41,16 @@ pub struct ProfilePoint {
     pub min_memory: f64,
 }
 
+/// One profiling row together with the plan that achieved its best time
+/// (`None` when even the min-memory strategy overflows). Consumed by the
+/// cluster scheduler's frontier cache, which needs the concrete strategy
+/// to hand to the simulator.
+#[derive(Debug, Clone)]
+pub struct ProfiledPlan {
+    pub point: ProfilePoint,
+    pub plan: Option<Plan>,
+}
+
 /// A TensorOpt session: model graph + cluster, with cached FT results per
 /// parallelism.
 pub struct Session {
@@ -55,11 +66,58 @@ impl Session {
     }
 
     fn ft_at(&self, d: u32) -> FtResult {
-        let cluster = Cluster::with_gpus(d as usize);
+        self.ft_at_threads(d, self.opts_proto.threads)
+    }
+
+    fn ft_at_threads(&self, d: u32, threads: usize) -> FtResult {
+        let cluster = self.cluster.sub_cluster(d as usize);
         let comm = CommModel::profile(&cluster);
         let mut opts = self.opts_proto.clone();
         opts.devices = d;
+        opts.threads = threads;
         frontier_search(&self.graph, &cluster, &comm, opts)
+    }
+
+    /// The Profiling sweep (§4.1): best feasible time per parallelism.
+    ///
+    /// Each parallelism's FT search is independent, so the sweep is
+    /// data-parallel across parallelisms (`util::par`); the thread budget
+    /// is split between the outer sweep and each search's inner LDP
+    /// threading so the total stays at `opts_proto.threads`. Results are
+    /// identical to the sequential sweep (FT is deterministic regardless
+    /// of thread count).
+    pub fn profile(&self, parallelisms: &[u32]) -> Vec<ProfilePoint> {
+        self.profile_plans(parallelisms).into_iter().map(|p| p.point).collect()
+    }
+
+    /// [`Session::profile`] variant that also unrolls the chosen strategy
+    /// at every feasible parallelism (for schedulers that execute or
+    /// simulate the plan, not just read the time off).
+    pub fn profile_plans(&self, parallelisms: &[u32]) -> Vec<ProfiledPlan> {
+        let budget = self.mem_budget();
+        let n = parallelisms.len();
+        let total = self.opts_proto.threads.max(1);
+        let outer = total.min(n.max(1));
+        let inner = (total / outer).max(1);
+        par_map_indexed(n, outer, |i| {
+            let d = parallelisms[i];
+            let r = self.ft_at_threads(d, inner);
+            let best = r.frontier.min_time_within(budget);
+            let plan = best.map(|t| {
+                let (strategy, _) = r.strategy_of(t);
+                Plan { parallelism: d, strategy, est_time: t.time, est_memory: t.mem }
+            });
+            let min_memory =
+                r.frontier.min_mem().map(|t| t.mem).unwrap_or(f64::INFINITY);
+            ProfiledPlan {
+                point: ProfilePoint {
+                    parallelism: d,
+                    best_time: best.map(|t| t.time),
+                    min_memory,
+                },
+                plan,
+            }
+        })
     }
 
     /// Device memory budget with the paper's safety margin (§5.2: pick
@@ -108,18 +166,7 @@ impl Session {
                 anyhow::bail!("model does not fit within {max_parallelism} devices")
             }
             SearchOption::Profiling { parallelisms } => {
-                let budget = self.mem_budget();
-                let rows = parallelisms
-                    .iter()
-                    .map(|&d| {
-                        let r = self.ft_at(d);
-                        let best = r.frontier.min_time_within(budget).map(|t| t.time);
-                        let min_mem =
-                            r.frontier.min_mem().map(|t| t.mem).unwrap_or(f64::INFINITY);
-                        ProfilePoint { parallelism: d, best_time: best, min_memory: min_mem }
-                    })
-                    .collect();
-                Ok(FindResult::Profile(rows))
+                Ok(FindResult::Profile(self.profile(parallelisms)))
             }
         }
     }
@@ -159,6 +206,34 @@ mod tests {
             .unwrap();
         let FindResult::Plan(p) = r else { panic!() };
         assert_eq!(p.parallelism, 1, "tiny model fits a single device");
+    }
+
+    #[test]
+    fn parallel_profile_matches_sequential_searches() {
+        let s = session();
+        let budget = s.mem_budget();
+        let rows = s.profile(&[1, 2, 4]);
+        assert_eq!(rows.len(), 3);
+        for row in &rows {
+            let r = s.ft_at_threads(row.parallelism, 1);
+            assert_eq!(
+                row.best_time,
+                r.frontier.min_time_within(budget).map(|t| t.time),
+                "parallelism {}",
+                row.parallelism
+            );
+        }
+    }
+
+    #[test]
+    fn profile_plans_carry_strategies() {
+        let s = session();
+        for pp in s.profile_plans(&[2, 4]) {
+            let plan = pp.plan.expect("tiny model is always feasible");
+            assert_eq!(plan.parallelism, pp.point.parallelism);
+            assert_eq!(Some(plan.est_time), pp.point.best_time);
+            assert_eq!(plan.strategy.configs.len(), s.graph.n_ops());
+        }
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub fn by_name(name: &str, batch: i64) -> Option<Graph> {
         })),
         "bert" => Some(bert(batch)),
         "tiny" | "tiny_mlp" => Some(tiny_mlp(batch)),
+        "tiny_resnet" => Some(tiny_resnet(batch)),
         _ => None,
     }
 }

@@ -9,5 +9,6 @@ pub mod ft;
 pub mod graph;
 pub mod parallel;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod util;

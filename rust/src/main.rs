@@ -5,6 +5,7 @@
 //!   search   --model M --mode <mini_time|mini_parallelism|profiling> [--gpus N]
 //!   train    --strategy <dp|tp> --model <small|e2e> [--devices N] [--steps N] [--fused]
 //!   frontier --model M [--gpus N]                    print the raw cost frontier
+//!   sched    --jobs N --gpus N [--models A,B,C]      multi-job elastic scheduling
 //!
 //! Every experiment prints the paper-style table and writes CSV under
 //! `results/`.
@@ -211,6 +212,46 @@ fn cmd_frontier(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_sched(args: &Args) -> anyhow::Result<()> {
+    let batch = args.get_parse_or("batch", 256i64);
+    let models: Vec<(String, i64)> = args
+        .get_or("models", "vgg16,wideresnet,transformer")
+        .split(',')
+        .map(|m| (m.trim().to_string(), batch))
+        .collect();
+    let cfg = exp::sched::SchedExpCfg {
+        gpus: args.get_parse_or("gpus", 16u32),
+        n_jobs: args.get_parse_or("jobs", 4usize),
+        models,
+        iters: (
+            args.get_parse_or("min-iters", 500u64),
+            args.get_parse_or("max-iters", 2000u64),
+        ),
+        mean_interarrival_s: args.get_parse_or("interarrival", 60.0f64),
+        seed: args.get_parse_or("seed", 7u64),
+    };
+    anyhow::ensure!(cfg.n_jobs >= 1, "--jobs must be >= 1");
+    anyhow::ensure!(cfg.gpus >= 1, "--gpus must be >= 1");
+    // with_gpus fills machines 8-at-a-time, so e.g. 12 would silently
+    // become a 2x8 = 16-device cluster — reject counts that don't map to
+    // exactly the requested device count.
+    anyhow::ensure!(
+        Cluster::with_gpus(cfg.gpus as usize).n_devices() == cfg.gpus as usize,
+        "--gpus {} does not fill whole machines; use <= 8 or a multiple of 8",
+        cfg.gpus
+    );
+    anyhow::ensure!(cfg.iters.1 > cfg.iters.0, "--max-iters must exceed --min-iters");
+    for (m, b) in &cfg.models {
+        anyhow::ensure!(models::by_name(m, *b).is_some(), "unknown model `{m}`");
+    }
+    let (summary, detail) = exp::sched::run(&cfg);
+    println!("{}", summary.render());
+    println!("{}", detail.render());
+    save(&summary, "sched_summary");
+    save(&detail, "sched_jobs");
+    Ok(())
+}
+
 const HELP: &str = "\
 tensoropt — TensorOpt (Cai et al. 2020) reproduction
 
@@ -221,6 +262,7 @@ COMMANDS:
   search    --model M --mode <mini_time|mini_parallelism|profiling> --gpus N
   train     --strategy <dp|tp> --model <small|e2e> --devices N --steps N [--fused] [--pallas]
   frontier  --model M --gpus N
+  sched     --jobs N --gpus N --models A,B,C --seed S [--interarrival S] [--min-iters N] [--max-iters N]
   help
 
 EXAMPLES:
@@ -229,6 +271,7 @@ EXAMPLES:
   tensoropt exp fig8 --model transformer --parallelism 8,16,32
   tensoropt search --model transformer --mode profiling --gpus 32
   tensoropt train --strategy tp --steps 100
+  tensoropt sched --jobs 4 --gpus 16 --models vgg16,wideresnet,transformer
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -238,6 +281,7 @@ fn main() -> anyhow::Result<()> {
         Some("search") => cmd_search(&args),
         Some("train") => cmd_train(&args),
         Some("frontier") => cmd_frontier(&args),
+        Some("sched") => cmd_sched(&args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())

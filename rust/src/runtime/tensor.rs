@@ -53,6 +53,7 @@ impl HostTensor {
     }
 
     /// Convert to an XLA literal with this tensor's shape.
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -63,6 +64,7 @@ impl HostTensor {
     }
 
     /// Build from an XLA literal (f32 or i32/s32).
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<Self> {
         let shape = lit.shape()?;
         let dims: Vec<usize> = match &shape {
@@ -94,6 +96,7 @@ mod tests {
         HostTensor::f32(vec![2, 3], vec![0.0; 5]);
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_roundtrip_f32() {
         let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
@@ -102,6 +105,7 @@ mod tests {
         assert_eq!(t, back);
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_roundtrip_i32() {
         let t = HostTensor::i32(vec![4], vec![1, 2, 3, 4]);

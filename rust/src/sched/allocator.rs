@@ -1,0 +1,291 @@
+//! Marginal-gain water-filling over per-job cost frontiers.
+//!
+//! Single-objective planners hand a scheduler one point per job; the FT
+//! frontier hands it the whole memory/time continuum, so allocation
+//! becomes a concave-ish resource-filling problem: give every admitted job
+//! its **mini-parallelism floor** (the smallest parallelism whose
+//! min-memory strategy fits — a hard memory constraint, §4.1), then pour
+//! the remaining devices one upgrade at a time into whichever job buys the
+//! most priority-weighted throughput per extra device. Deterministic by
+//! construction: admission order is (priority desc, id asc) and upgrade
+//! ties break toward the lower job id.
+
+use super::cache::ProfileCurve;
+
+/// One job's claim on the cluster at an allocation event.
+#[derive(Debug, Clone)]
+pub struct AllocRequest {
+    pub job_id: usize,
+    pub priority: f64,
+    pub curve: ProfileCurve,
+}
+
+/// Admission order shared by every policy: (priority desc, id asc).
+/// Centralised so the elastic allocator and the baselines can never
+/// silently diverge on tie-breaking (determinism depends on it).
+pub fn admission_order(reqs: &[AllocRequest]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..reqs.len()).collect();
+    order.sort_by(|&a, &b| {
+        reqs[b]
+            .priority
+            .partial_cmp(&reqs[a].priority)
+            .unwrap()
+            .then(reqs[a].job_id.cmp(&reqs[b].job_id))
+    });
+    order
+}
+
+/// Allocate `n_devices` across `reqs`. Returns device counts aligned with
+/// `reqs` (0 = queued: the job's floor does not fit right now).
+pub fn allocate(n_devices: u32, reqs: &[AllocRequest]) -> Vec<u32> {
+    let mut alloc = vec![0u32; reqs.len()];
+    let mut free = n_devices;
+
+    // Admission in (priority desc, id asc) order: floors are hard memory
+    // constraints, granted whole or not at all.
+    for &i in &admission_order(reqs) {
+        if let Some(floor) = reqs[i].curve.floor() {
+            if floor <= free {
+                alloc[i] = floor;
+                free -= floor;
+            }
+        }
+    }
+
+    // Water-filling: repeatedly apply the best-gain upgrade that fits.
+    // Gains are priority-weighted marginal throughput per extra device;
+    // considering *all* feasible points above the current level (not just
+    // the next) keeps non-convex curves from stalling the fill.
+    loop {
+        let mut best: Option<(f64, usize, u32)> = None; // (gain, req idx, new d)
+        for (i, r) in reqs.iter().enumerate() {
+            if alloc[i] == 0 {
+                continue;
+            }
+            let cur_tp = r.curve.throughput(alloc[i]);
+            for p in r.curve.feasible_above(alloc[i]) {
+                let extra = p.parallelism - alloc[i];
+                if extra > free {
+                    continue;
+                }
+                let tp = 1.0 / p.est_time.unwrap();
+                let gain = r.priority * (tp - cur_tp) / extra as f64;
+                if gain <= 0.0 {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((g, bi, _)) => {
+                        gain > g || (gain == g && r.job_id < reqs[bi].job_id)
+                    }
+                };
+                if better {
+                    best = Some((gain, i, p.parallelism));
+                }
+            }
+        }
+        match best {
+            Some((_, i, d)) => {
+                free -= d - alloc[i];
+                alloc[i] = d;
+            }
+            None => break,
+        }
+    }
+    alloc
+}
+
+/// Check the allocator's hard invariants; returns a description of the
+/// first violation. Used by tests and the simulator's debug assertions.
+pub fn check_invariants(
+    n_devices: u32,
+    reqs: &[AllocRequest],
+    alloc: &[u32],
+) -> Result<(), String> {
+    if alloc.len() != reqs.len() {
+        return Err(format!("alloc len {} != reqs len {}", alloc.len(), reqs.len()));
+    }
+    let total: u32 = alloc.iter().sum();
+    if total > n_devices {
+        return Err(format!("allocated {total} devices on a {n_devices}-device cluster"));
+    }
+    for (r, &d) in reqs.iter().zip(alloc) {
+        if d == 0 {
+            continue;
+        }
+        match r.curve.floor() {
+            None => {
+                return Err(format!("job {} allocated but has no feasible point", r.job_id))
+            }
+            Some(floor) => {
+                if d < floor {
+                    return Err(format!(
+                        "job {} below its mini-parallelism floor: {d} < {floor}",
+                        r.job_id
+                    ));
+                }
+            }
+        }
+        match r.curve.point(d) {
+            Some(p) if p.feasible() => {}
+            _ => {
+                return Err(format!(
+                    "job {} allocated {d} devices, not a feasible curve point",
+                    r.job_id
+                ))
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::cache::CurvePoint;
+    use crate::util::ptest;
+    use crate::util::rng::XorShift;
+
+    /// Curve where time scales perfectly: t(d) = base / d.
+    fn scaling_curve(base: f64, floor: u32, ladder: &[u32]) -> ProfileCurve {
+        ProfileCurve {
+            points: ladder
+                .iter()
+                .map(|&d| CurvePoint {
+                    parallelism: d,
+                    est_time: if d >= floor { Some(base / d as f64) } else { None },
+                    sim_time: if d >= floor { Some(1.05 * base / d as f64) } else { None },
+                    min_memory: 1e9 / d as f64,
+                })
+                .collect(),
+        }
+    }
+
+    /// Curve that does not improve past its floor (flat throughput).
+    fn flat_curve(base: f64, floor: u32, ladder: &[u32]) -> ProfileCurve {
+        ProfileCurve {
+            points: ladder
+                .iter()
+                .map(|&d| CurvePoint {
+                    parallelism: d,
+                    est_time: if d >= floor { Some(base) } else { None },
+                    sim_time: if d >= floor { Some(base * 1.05) } else { None },
+                    min_memory: 1e9,
+                })
+                .collect(),
+        }
+    }
+
+    const LADDER: [u32; 5] = [1, 2, 4, 8, 16];
+
+    fn req(id: usize, priority: f64, curve: ProfileCurve) -> AllocRequest {
+        AllocRequest { job_id: id, priority, curve }
+    }
+
+    #[test]
+    fn floors_respected_and_devices_conserved() {
+        let reqs = vec![
+            req(0, 1.0, scaling_curve(1.0, 2, &LADDER)),
+            req(1, 1.0, scaling_curve(1.0, 4, &LADDER)),
+        ];
+        let a = allocate(8, &reqs);
+        check_invariants(8, &reqs, &a).unwrap();
+        assert!(a[0] >= 2 && a[1] >= 4);
+        assert!(a.iter().sum::<u32>() <= 8);
+    }
+
+    #[test]
+    fn upgrades_go_to_the_scalable_job() {
+        // job 0 scales, job 1 is flat past its floor: all spare devices
+        // must go to job 0.
+        let reqs = vec![
+            req(0, 1.0, scaling_curve(1.0, 1, &LADDER)),
+            req(1, 1.0, flat_curve(1.0, 1, &LADDER)),
+        ];
+        let a = allocate(16, &reqs);
+        check_invariants(16, &reqs, &a).unwrap();
+        assert_eq!(a[1], 1, "flat job stays at its floor");
+        assert!(a[0] >= 8, "scalable job absorbs the spare devices: {a:?}");
+    }
+
+    #[test]
+    fn priority_breaks_contention() {
+        // cluster of 4, floors of 4 each: only one job fits, and it must
+        // be the high-priority one regardless of id order.
+        let reqs = vec![
+            req(0, 1.0, scaling_curve(1.0, 4, &LADDER)),
+            req(1, 2.0, scaling_curve(1.0, 4, &LADDER)),
+        ];
+        let a = allocate(4, &reqs);
+        check_invariants(4, &reqs, &a).unwrap();
+        assert_eq!(a, vec![0, 4]);
+    }
+
+    #[test]
+    fn oversubscription_queues_latest_low_priority() {
+        let reqs = vec![
+            req(0, 1.0, scaling_curve(1.0, 4, &LADDER)),
+            req(1, 1.0, scaling_curve(1.0, 4, &LADDER)),
+            req(2, 1.0, scaling_curve(1.0, 4, &LADDER)),
+        ];
+        let a = allocate(8, &reqs);
+        check_invariants(8, &reqs, &a).unwrap();
+        assert_eq!(a, vec![4, 4, 0], "ids admitted in order, last queued");
+    }
+
+    #[test]
+    fn infeasible_job_gets_nothing() {
+        let reqs = vec![req(0, 1.0, flat_curve(1.0, 32, &LADDER))];
+        let a = allocate(16, &reqs);
+        assert_eq!(a, vec![0]);
+        check_invariants(16, &reqs, &a).unwrap();
+    }
+
+    #[test]
+    fn deterministic_and_order_independent() {
+        let mk = || {
+            vec![
+                req(2, 1.0, scaling_curve(2.0, 1, &LADDER)),
+                req(0, 2.0, scaling_curve(1.0, 2, &LADDER)),
+                req(1, 1.0, flat_curve(0.5, 1, &LADDER)),
+            ]
+        };
+        let a = allocate(16, &mk());
+        let b = allocate(16, &mk());
+        assert_eq!(a, b);
+        // permuting the request order permutes, but does not change, the
+        // per-job outcome (job_id-keyed tie-breaks).
+        let mut reqs = mk();
+        reqs.rotate_left(1);
+        let c = allocate(16, &reqs);
+        for (k, r) in reqs.iter().enumerate() {
+            let orig_pos = mk().iter().position(|x| x.job_id == r.job_id).unwrap();
+            assert_eq!(c[k], a[orig_pos], "job {} differs", r.job_id);
+        }
+    }
+
+    /// Property: invariants hold for random curve sets.
+    #[test]
+    fn prop_invariants_on_random_curves() {
+        ptest::quick("allocator-invariants", |rng: &mut XorShift| {
+            let n_jobs = rng.range(1, 6);
+            let n_devices = rng.range(1, 33) as u32;
+            let reqs: Vec<AllocRequest> = (0..n_jobs)
+                .map(|id| {
+                    let base = 0.5 + rng.f64() * 4.0;
+                    let floor = LADDER[rng.below(LADDER.len())];
+                    let prio = 1.0 + rng.below(3) as f64;
+                    let curve = if rng.below(2) == 0 {
+                        scaling_curve(base, floor, &LADDER)
+                    } else {
+                        flat_curve(base, floor, &LADDER)
+                    };
+                    AllocRequest { job_id: id, priority: prio, curve }
+                })
+                .collect();
+            let a = allocate(n_devices, &reqs);
+            check_invariants(n_devices, &reqs, &a)?;
+            Ok(())
+        });
+    }
+}

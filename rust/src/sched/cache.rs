@@ -1,0 +1,265 @@
+//! Shared frontier cache: one FT search per (model, batch, parallelism)
+//! across *all* jobs of the cluster, the reason the paper's Profiling
+//! option pays for itself in a multi-job setting — concurrent jobs running
+//! the same model reuse each other's searches, and re-allocation events
+//! re-read cached points instead of re-searching.
+//!
+//! Each cached point carries both the frontier's *estimated* best feasible
+//! time (what the allocator optimizes) and the discrete-event simulator's
+//! *ground-truth* time for the chosen strategy (what the multi-job
+//! timeline advances with), mirroring the paper's estimate-vs-actual
+//! split (§5.2).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::cluster::Cluster;
+use crate::coordinator::Session;
+use crate::graph::models;
+use crate::sim::{simulate, SimConfig};
+
+/// One cached (model, parallelism) measurement.
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    pub parallelism: u32,
+    /// Best feasible estimated per-iteration time from the cost frontier
+    /// (`None`: even the min-memory strategy overflows device memory).
+    pub est_time: Option<f64>,
+    /// Ground-truth per-iteration time of the chosen strategy from the
+    /// discrete-event simulator (`None` iff `est_time` is `None`).
+    pub sim_time: Option<f64>,
+    /// Memory of the min-memory strategy (the mini-parallelism test).
+    pub min_memory: f64,
+}
+
+impl CurvePoint {
+    pub fn feasible(&self) -> bool {
+        self.est_time.is_some()
+    }
+}
+
+/// A job's profile curve: cached points at ascending parallelism. This is
+/// the §4.1 Profiling output reshaped for allocation decisions.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileCurve {
+    pub points: Vec<CurvePoint>,
+}
+
+impl ProfileCurve {
+    /// Mini-parallelism floor: the smallest feasible parallelism, `None`
+    /// when the model fits at no candidate parallelism.
+    pub fn floor(&self) -> Option<u32> {
+        self.points.iter().find(|p| p.feasible()).map(|p| p.parallelism)
+    }
+
+    pub fn point(&self, d: u32) -> Option<&CurvePoint> {
+        self.points.iter().find(|p| p.parallelism == d)
+    }
+
+    /// Estimated per-iteration time at parallelism `d`.
+    pub fn est_time(&self, d: u32) -> Option<f64> {
+        self.point(d).and_then(|p| p.est_time)
+    }
+
+    /// Timeline per-iteration time at `d`: simulator ground truth when
+    /// available, frontier estimate otherwise.
+    pub fn iter_time(&self, d: u32, ground_truth: bool) -> Option<f64> {
+        self.point(d).and_then(|p| {
+            if ground_truth {
+                p.sim_time.or(p.est_time)
+            } else {
+                p.est_time
+            }
+        })
+    }
+
+    /// Estimated iterations/second at `d` (0 when infeasible/unallocated).
+    pub fn throughput(&self, d: u32) -> f64 {
+        self.est_time(d).map_or(0.0, |t| 1.0 / t)
+    }
+
+    /// Fastest feasible point using at most `limit` devices.
+    pub fn fastest_within(&self, limit: u32) -> Option<&CurvePoint> {
+        self.points
+            .iter()
+            .filter(|p| p.feasible() && p.parallelism <= limit)
+            .min_by(|a, b| {
+                (a.est_time.unwrap(), a.parallelism)
+                    .partial_cmp(&(b.est_time.unwrap(), b.parallelism))
+                    .unwrap()
+            })
+    }
+
+    /// Feasible points strictly above parallelism `d` (water-filling
+    /// upgrade candidates).
+    pub fn feasible_above(&self, d: u32) -> Vec<&CurvePoint> {
+        self.points.iter().filter(|p| p.feasible() && p.parallelism > d).collect()
+    }
+}
+
+/// Cache hit/miss counters (one miss = one FT search + one simulation).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+}
+
+/// The shared cache. Keyed by (`model@batch`, parallelism). Thread-safe;
+/// note that concurrent callers racing on the same cold key may each run
+/// the search (the miss check and the insert are separate critical
+/// sections) — correctness is unaffected, and the scheduler's single
+/// event loop never races itself.
+pub struct FrontierCache {
+    cluster: Cluster,
+    entries: Mutex<HashMap<(String, u32), CurvePoint>>,
+    stats: Mutex<CacheStats>,
+}
+
+impl FrontierCache {
+    /// `cluster` fixes the device type (memory budget), machine geometry
+    /// and interconnects jobs are profiled against; sub-allocations use
+    /// `Cluster::sub_cluster` exactly like the single-job Session, so
+    /// non-default links are preserved at reduced parallelism.
+    pub fn new(cluster: Cluster) -> Self {
+        Self {
+            cluster,
+            entries: Mutex::new(HashMap::new()),
+            stats: Mutex::new(CacheStats::default()),
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Profile `model@batch` at every requested parallelism, serving from
+    /// the cache where possible. Misses run one parallel Profiling sweep
+    /// through the Session (satisfying them all at once) plus one
+    /// simulator run per feasible point for ground truth.
+    pub fn curve(&self, model: &str, batch: i64, parallelisms: &[u32]) -> ProfileCurve {
+        let key = format!("{model}@{batch}");
+        let mut ds: Vec<u32> = parallelisms.to_vec();
+        ds.sort_unstable();
+        ds.dedup();
+        let mut missing: Vec<u32> = Vec::new();
+        {
+            let entries = self.entries.lock().unwrap();
+            for &d in &ds {
+                if !entries.contains_key(&(key.clone(), d)) {
+                    missing.push(d);
+                }
+            }
+        }
+        if !missing.is_empty() {
+            let g = models::by_name(model, batch)
+                .unwrap_or_else(|| panic!("unknown model `{model}` in job spec"));
+            let session = Session::new(g, self.cluster.clone());
+            let plans = session.profile_plans(&missing);
+            let mut computed: Vec<CurvePoint> = Vec::with_capacity(plans.len());
+            for pp in &plans {
+                let d = pp.point.parallelism;
+                let sim_time = pp.plan.as_ref().map(|plan| {
+                    let sub = self.cluster.sub_cluster(d as usize);
+                    simulate(&session.graph, &plan.strategy, &sub, &SimConfig::default())
+                        .time
+                });
+                computed.push(CurvePoint {
+                    parallelism: d,
+                    est_time: pp.point.best_time,
+                    sim_time,
+                    min_memory: pp.point.min_memory,
+                });
+            }
+            let mut entries = self.entries.lock().unwrap();
+            for p in computed {
+                entries.insert((key.clone(), p.parallelism), p);
+            }
+        }
+        let entries = self.entries.lock().unwrap();
+        let mut stats = self.stats.lock().unwrap();
+        stats.hits += ds.len() - missing.len();
+        stats.misses += missing.len();
+        let points: Vec<CurvePoint> =
+            ds.iter().map(|&d| entries[&(key.clone(), d)].clone()).collect();
+        ProfileCurve { points }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> FrontierCache {
+        FrontierCache::new(Cluster::with_gpus(4))
+    }
+
+    #[test]
+    fn curve_points_sorted_and_feasible_for_tiny_model() {
+        let c = cache();
+        let curve = c.curve("tiny", 256, &[1, 2, 4]);
+        assert_eq!(curve.points.len(), 3);
+        for w in curve.points.windows(2) {
+            assert!(w[0].parallelism < w[1].parallelism);
+        }
+        assert_eq!(curve.floor(), Some(1), "tiny model fits one device");
+        for p in &curve.points {
+            assert!(p.feasible());
+            let sim = p.sim_time.unwrap();
+            let est = p.est_time.unwrap();
+            assert!(sim > 0.0 && est > 0.0);
+            // §5.2: the profile-based estimate consistently underestimates.
+            assert!(sim > est, "sim {sim} vs est {est} at d={}", p.parallelism);
+        }
+    }
+
+    #[test]
+    fn second_lookup_hits_cache() {
+        let c = cache();
+        c.curve("tiny", 256, &[1, 2]);
+        let s1 = c.stats();
+        assert_eq!(s1.misses, 2);
+        assert_eq!(s1.hits, 0);
+        c.curve("tiny", 256, &[1, 2]);
+        let s2 = c.stats();
+        assert_eq!(s2.misses, 2, "no new searches");
+        assert_eq!(s2.hits, 2);
+    }
+
+    #[test]
+    fn cache_key_includes_batch() {
+        let c = cache();
+        c.curve("tiny", 256, &[1]);
+        c.curve("tiny", 128, &[1]);
+        assert_eq!(c.stats().misses, 2, "different batch = different entry");
+    }
+
+    #[test]
+    fn fastest_within_and_feasible_above() {
+        let curve = ProfileCurve {
+            points: vec![
+                CurvePoint { parallelism: 1, est_time: None, sim_time: None, min_memory: 9e9 },
+                CurvePoint {
+                    parallelism: 2,
+                    est_time: Some(4.0),
+                    sim_time: Some(4.2),
+                    min_memory: 5e9,
+                },
+                CurvePoint {
+                    parallelism: 4,
+                    est_time: Some(2.0),
+                    sim_time: Some(2.1),
+                    min_memory: 3e9,
+                },
+            ],
+        };
+        assert_eq!(curve.floor(), Some(2));
+        assert!(curve.fastest_within(1).is_none());
+        assert_eq!(curve.fastest_within(2).unwrap().parallelism, 2);
+        assert_eq!(curve.fastest_within(8).unwrap().parallelism, 4);
+        let ups = curve.feasible_above(2);
+        assert_eq!(ups.len(), 1);
+        assert_eq!(ups[0].parallelism, 4);
+        assert_eq!(curve.throughput(4), 0.5);
+        assert_eq!(curve.throughput(1), 0.0);
+    }
+}

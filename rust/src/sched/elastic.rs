@@ -1,0 +1,157 @@
+//! Elastic re-allocation: when a job arrives or completes, the scheduler
+//! re-runs the water-filling allocator and moves running jobs to their new
+//! parallelism. A move is not free — the coordinator checkpoints parameter
+//! state, re-searches the strategy at the new parallelism (a frontier-
+//! cache read, i.e. an FT search on a miss), re-shards the state across
+//! the new device set and restarts — so rescales carry an explicit cost
+//! the simulator charges before the job makes progress again.
+
+use crate::cluster::Cluster;
+use crate::coordinator::Manifest;
+
+use super::allocator::{allocate, AllocRequest};
+
+/// Cost model for moving a running job between parallelisms.
+#[derive(Debug, Clone)]
+pub struct RescaleModel {
+    /// Fixed coordinator overhead per rescale: stop, strategy re-search at
+    /// the new parallelism, execution-graph rebuild, restart.
+    pub base_s: f64,
+    /// Aggregate re-shard bandwidth in bytes/s; parameter state crosses
+    /// the slowest (inter-machine) links when the device set changes.
+    pub reshard_bw: f64,
+}
+
+impl RescaleModel {
+    pub fn from_cluster(c: &Cluster) -> Self {
+        Self { base_s: 2.0, reshard_bw: c.inter_link().bandwidth }
+    }
+
+    /// Seconds of downtime to move a job holding `param_bytes` of
+    /// parameter state from `old` to `new` devices. Unchanged allocations
+    /// and initial placements (0 -> d) are free; a pause (d -> 0)
+    /// checkpoints state and pays like a move.
+    pub fn cost(&self, param_bytes: f64, old: u32, new: u32) -> f64 {
+        if old == new || old == 0 {
+            return 0.0;
+        }
+        self.base_s + param_bytes / self.reshard_bw
+    }
+}
+
+/// Parameter bytes of a manifest-backed job (f32 parameters), for tenants
+/// that submit AOT-compiled artifacts instead of model-zoo names.
+pub fn manifest_param_bytes(m: &Manifest, tag: &str) -> anyhow::Result<f64> {
+    Ok(m.model(tag)?.n_params() as f64 * 4.0)
+}
+
+/// One re-allocation decision: new device counts (aligned with the
+/// requests) plus the downtime each moved job must pay.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub alloc: Vec<u32>,
+    pub penalties: Vec<f64>,
+    /// Jobs whose running allocation changed (shrink, grow or pause).
+    pub n_rescaled: usize,
+}
+
+/// Price a proposed allocation against the current one: downtime per job
+/// and the number of running jobs being moved. Shared by every policy the
+/// simulator plays (non-elastic policies never move a running job, so
+/// their penalties come out zero).
+pub fn price_moves(
+    rescale: &RescaleModel,
+    alloc: Vec<u32>,
+    current: &[u32],
+    param_bytes: &[f64],
+) -> Decision {
+    let mut penalties = vec![0.0; alloc.len()];
+    let mut n_rescaled = 0usize;
+    for i in 0..alloc.len() {
+        penalties[i] = rescale.cost(param_bytes[i], current[i], alloc[i]);
+        if alloc[i] != current[i] && current[i] != 0 {
+            n_rescaled += 1;
+        }
+    }
+    Decision { alloc, penalties, n_rescaled }
+}
+
+/// The elastic policy: frontier-driven water-filling at every event, with
+/// rescale penalties computed against the current allocation.
+#[derive(Debug, Clone)]
+pub struct ElasticScheduler {
+    pub n_devices: u32,
+    pub rescale: RescaleModel,
+}
+
+impl ElasticScheduler {
+    pub fn new(cluster: &Cluster) -> Self {
+        Self {
+            n_devices: cluster.n_devices() as u32,
+            rescale: RescaleModel::from_cluster(cluster),
+        }
+    }
+
+    /// Re-allocate. `current[i]` / `param_bytes[i]` align with `reqs[i]`.
+    pub fn decide(&self, reqs: &[AllocRequest], current: &[u32], param_bytes: &[f64]) -> Decision {
+        price_moves(&self.rescale, allocate(self.n_devices, reqs), current, param_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::cache::{CurvePoint, ProfileCurve};
+
+    fn curve() -> ProfileCurve {
+        ProfileCurve {
+            points: [1u32, 2, 4, 8]
+                .iter()
+                .map(|&d| CurvePoint {
+                    parallelism: d,
+                    est_time: Some(1.0 / d as f64),
+                    sim_time: Some(1.05 / d as f64),
+                    min_memory: 1e9,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn rescale_cost_shape() {
+        let m = RescaleModel { base_s: 2.0, reshard_bw: 1e9 };
+        assert_eq!(m.cost(4e9, 4, 4), 0.0, "unchanged is free");
+        assert_eq!(m.cost(4e9, 0, 8), 0.0, "initial placement is free");
+        let grow = m.cost(4e9, 4, 8);
+        assert!((grow - 6.0).abs() < 1e-9, "base 2s + 4GB/1GBps = 6s, got {grow}");
+        assert!(m.cost(4e9, 8, 0) > 0.0, "pausing checkpoints state");
+    }
+
+    #[test]
+    fn decide_charges_only_moved_jobs() {
+        let cluster = Cluster::with_gpus(8);
+        let sched = ElasticScheduler::new(&cluster);
+        let reqs = vec![
+            AllocRequest { job_id: 0, priority: 1.0, curve: curve() },
+            AllocRequest { job_id: 1, priority: 1.0, curve: curve() },
+        ];
+        // job 0 previously held the full cluster, job 1 just arrived.
+        let d = sched.decide(&reqs, &[8, 0], &[1e9, 1e9]);
+        assert_eq!(d.alloc.iter().sum::<u32>() <= 8, true);
+        assert!(d.alloc[1] > 0, "arrival gets admitted");
+        assert!(d.alloc[0] < 8, "incumbent shrinks");
+        assert!(d.penalties[0] > 0.0, "incumbent pays the rescale");
+        assert_eq!(d.penalties[1], 0.0, "initial placement is free");
+        assert_eq!(d.n_rescaled, 1);
+    }
+
+    #[test]
+    fn manifest_params() {
+        let m = Manifest::parse(
+            "model small vocab=8 batch=2\nparam small embed f32 8,4\nparam small head f32 4,8\n",
+        )
+        .unwrap();
+        assert_eq!(manifest_param_bytes(&m, "small").unwrap(), (8 * 4 + 4 * 8) as f64 * 4.0);
+        assert!(manifest_param_bytes(&m, "nope").is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! L4 cluster scheduler: frontier-driven elastic multi-job allocation.
+//!
+//! TensorOpt's Profiling option (§4.1) exists so that "cluster schedulers
+//! and cloud users" can read the best feasible time at every parallelism
+//! off the cost frontier without running the job. This layer exploits
+//! that: each job contributes its whole memory/time continuum (a
+//! [`cache::ProfileCurve`] served by the shared [`cache::FrontierCache`]),
+//! and the [`allocator`] water-fills devices across jobs by marginal
+//! priority-weighted throughput — with each job's mini-parallelism floor
+//! as a hard memory constraint. [`elastic`] re-allocates on every arrival
+//! and completion, charging an explicit rescale cost, and [`simulate`]
+//! plays whole workloads against static-share, FIFO and time-only-greedy
+//! baselines on a discrete-event timeline driven by the L1 simulator's
+//! ground-truth iteration times.
+
+pub mod allocator;
+pub mod cache;
+pub mod elastic;
+pub mod job;
+pub mod simulate;
+
+pub use allocator::{allocate, check_invariants, AllocRequest};
+pub use cache::{CacheStats, CurvePoint, FrontierCache, ProfileCurve};
+pub use elastic::{manifest_param_bytes, price_moves, Decision, ElasticScheduler, RescaleModel};
+pub use job::{JobSpec, Workload};
+pub use simulate::{run_workload, JobOutcome, MultiJobReport, Policy, SchedConfig};
