@@ -1,7 +1,14 @@
-//! Device graph `D` (§2.1): machines, accelerators, and the links between
-//! them, with presets matching the paper's testbed (2 machines x 8 V100
-//! 16 GB; NVLink intra-machine, 100 Gbps EDR InfiniBand RDMA inter-machine)
-//! and the Figure-7 variants (no-RDMA, 4x RDMA / DGX, PCIe-only).
+//! Device graph `D` (§2.1) as a **machine list**: every machine carries its
+//! own accelerator model, GPU count and intra-machine interconnect, and
+//! inter-machine links come from a per-pair link matrix — so mixed device
+//! generations (V100 next to A100) and asymmetric fabrics (one machine on a
+//! slower NIC than the rest) are first-class, not just the paper's
+//! homogeneous testbed (2 machines x 8 V100 16 GB; NVLink intra-machine,
+//! 100 Gbps EDR InfiniBand RDMA inter-machine) and its Figure-7 variants.
+//!
+//! Homogeneous presets construct uniform machine lists, so every consumer
+//! of the old `(n_machines, gpus_per_machine, device, intra, inter)` model
+//! sees identical numbers through the accessor methods.
 
 /// A link class with (profile-anchor) bandwidth and latency.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -14,18 +21,19 @@ pub struct Link {
 }
 
 /// Interconnect technology presets. Bandwidths are effective (achievable)
-/// figures, not marketing peaks.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// figures, not marketing peaks; the unit test `preset_bandwidths_match_docs`
+/// pins each value to the figure documented here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LinkKind {
-    /// NVLink 2.0 on V100: ~130 GB/s effective aggregate per GPU pair group.
+    /// NVLink 2.0 on V100: 130 GB/s effective aggregate per GPU pair group.
     NvLink,
-    /// PCIe 3.0 x16: ~12 GB/s effective (paper: ≈ 1/20 of NVLink).
+    /// PCIe 3.0 x16: 6.5 GB/s effective (paper: ≈ 1/20 of NVLink).
     Pcie,
-    /// 100 Gbps EDR InfiniBand with RDMA: ~10 GB/s effective.
+    /// 100 Gbps EDR InfiniBand with RDMA: 10 GB/s effective.
     IbRdma,
-    /// Same NIC with RDMA disabled (paper: ≈ 0.5x RDMA).
+    /// Same NIC with RDMA disabled: 5 GB/s (paper: ≈ 0.5x RDMA).
     IbNoRdma,
-    /// DGX-like: 4 IB NICs (paper's "4x RDMA").
+    /// DGX-like: 4 IB NICs (paper's "4x RDMA"): 40 GB/s.
     IbRdma4x,
 }
 
@@ -39,11 +47,25 @@ impl LinkKind {
             LinkKind::IbRdma4x => Link { bandwidth: 40e9, latency: 15e-6 },
         }
     }
+
+    /// Short label used in cluster fingerprints.
+    pub fn tag(self) -> &'static str {
+        match self {
+            LinkKind::NvLink => "nvl",
+            LinkKind::Pcie => "pcie",
+            LinkKind::IbRdma => "ib",
+            LinkKind::IbNoRdma => "ibnr",
+            LinkKind::IbRdma4x => "ib4x",
+        }
+    }
 }
 
 /// One accelerator model.
 #[derive(Debug, Clone, Copy)]
 pub struct DeviceSpec {
+    /// Generation tag ("V100", "A100"): the scheduler's placement prefers
+    /// same-generation grants, and cluster fingerprints include it.
+    pub gen: &'static str,
     /// Achievable dense-math throughput, FLOP/s (V100 fp32 peak is
     /// 15.7 TFLOP/s; ~55% is what large fused training steps achieve).
     pub flops: f64,
@@ -55,90 +77,334 @@ pub struct DeviceSpec {
 
 impl DeviceSpec {
     pub fn v100() -> Self {
-        Self { flops: 8.6e12, memory: 16.0 * 1024f64.powi(3), mem_bw: 750e9 }
+        Self { gen: "V100", flops: 8.6e12, memory: 16.0 * 1024f64.powi(3), mem_bw: 750e9 }
+    }
+
+    /// A100 40 GB SXM: TF32 training steps achieve roughly 2.2x the V100
+    /// rate; HBM2e delivers ~1.4 TB/s effective.
+    pub fn a100() -> Self {
+        Self { gen: "A100", flops: 19.0e12, memory: 40.0 * 1024f64.powi(3), mem_bw: 1.4e12 }
     }
 }
 
-/// The device graph: `n_machines` x `gpus_per_machine` homogeneous
-/// accelerators; one intra-machine link class and one inter-machine class.
+/// One machine of the device graph: its accelerator model, GPU count and
+/// intra-machine interconnect.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub device: DeviceSpec,
+    pub gpus: usize,
+    pub intra: LinkKind,
+}
+
+impl Machine {
+    pub fn new(device: DeviceSpec, gpus: usize, intra: LinkKind) -> Self {
+        Self { device, gpus, intra }
+    }
+}
+
+/// The device graph: a list of (possibly dissimilar) machines plus a
+/// symmetric per-pair inter-machine link matrix. Devices are numbered
+/// machine-major (machine 0's GPUs first).
 #[derive(Debug, Clone)]
 pub struct Cluster {
     pub name: String,
-    pub n_machines: usize,
-    pub gpus_per_machine: usize,
-    pub device: DeviceSpec,
-    pub intra: LinkKind,
-    pub inter: LinkKind,
+    pub machines: Vec<Machine>,
+    /// `inter[i][j]` is the link class between machines `i` and `j`
+    /// (symmetric; the diagonal is unused).
+    inter: Vec<Vec<LinkKind>>,
 }
 
 impl Cluster {
+    /// Build a cluster from an explicit machine list; every machine pair
+    /// starts on `default_inter` (override pairs with [`Cluster::set_inter`]).
+    pub fn from_machines(name: &str, machines: Vec<Machine>, default_inter: LinkKind) -> Self {
+        assert!(!machines.is_empty(), "cluster needs at least one machine");
+        let n = machines.len();
+        Self { name: name.to_string(), machines, inter: vec![vec![default_inter; n]; n] }
+    }
+
+    /// Uniform helper: `n_machines` identical machines.
+    fn uniform(
+        name: &str,
+        n_machines: usize,
+        gpus_per_machine: usize,
+        device: DeviceSpec,
+        intra: LinkKind,
+        inter: LinkKind,
+    ) -> Self {
+        let machines =
+            (0..n_machines).map(|_| Machine::new(device, gpus_per_machine, intra)).collect();
+        Self::from_machines(name, machines, inter)
+    }
+
+    /// Set the link class between machines `i` and `j` (both directions).
+    pub fn set_inter(&mut self, i: usize, j: usize, kind: LinkKind) {
+        self.inter[i][j] = kind;
+        self.inter[j][i] = kind;
+    }
+
+    /// The link between a concrete machine pair.
+    pub fn inter_between(&self, i: usize, j: usize) -> Link {
+        self.inter[i][j].link()
+    }
+
+    // ---------------------------------------------------------------- presets
+
     /// The paper's testbed: 2 machines x 8 V100, NVLink + EDR IB RDMA.
     pub fn paper_testbed() -> Self {
-        Self {
-            name: "2x8xV100 NVLink+IB-RDMA".into(),
-            n_machines: 2,
-            gpus_per_machine: 8,
-            device: DeviceSpec::v100(),
-            intra: LinkKind::NvLink,
-            inter: LinkKind::IbRdma,
-        }
+        Self::uniform(
+            "2x8xV100 NVLink+IB-RDMA",
+            2,
+            8,
+            DeviceSpec::v100(),
+            LinkKind::NvLink,
+            LinkKind::IbRdma,
+        )
     }
 
-    /// Same machines, different device count (for the Figure-8 parallelism
-    /// sweep): devices fill machines 8-at-a-time.
+    /// Same machine class, exact device count (for the Figure-8 parallelism
+    /// sweep and CLI `--gpus`): V100 machines filled 8-at-a-time, the last
+    /// machine holding the remainder.
     pub fn with_gpus(total: usize) -> Self {
-        let per = total.min(8);
-        let machines = total.div_ceil(per.max(1)).max(1);
-        Self {
-            name: format!("{machines}x{per}xV100"),
-            n_machines: machines,
-            gpus_per_machine: per,
-            ..Self::paper_testbed()
+        let total = total.max(1);
+        let mut machines = Vec::new();
+        let mut left = total;
+        while left > 0 {
+            let g = left.min(8);
+            machines.push(Machine::new(DeviceSpec::v100(), g, LinkKind::NvLink));
+            left -= g;
         }
-    }
-
-    /// A sub-allocation of this cluster: same device type and link
-    /// classes, `total` devices filling machines at this cluster's
-    /// per-machine width. (Unlike [`Cluster::with_gpus`], non-default
-    /// interconnects are preserved — used by the session and scheduler so
-    /// profiling at reduced parallelism stays on the caller's hardware.)
-    pub fn sub_cluster(&self, total: usize) -> Self {
-        let per = total.min(self.gpus_per_machine.max(1));
-        let machines = total.div_ceil(per.max(1)).max(1);
-        Self {
-            name: format!("{machines}x{per} of {}", self.name),
-            n_machines: machines,
-            gpus_per_machine: per,
-            device: self.device,
-            intra: self.intra,
-            inter: self.inter,
-        }
+        let n = machines.len();
+        let per = machines[0].gpus;
+        let name = if total % per == 0 {
+            format!("{n}x{per}xV100")
+        } else {
+            format!("{total}xV100 ({per}/machine)")
+        };
+        Self::from_machines(&name, machines, LinkKind::IbRdma)
     }
 
     /// Figure-7b variants over cross-machine bandwidth.
     pub fn with_inter(kind: LinkKind) -> Self {
-        Self { inter: kind, name: format!("2x8xV100 inter={kind:?}"), ..Self::paper_testbed() }
+        Self::uniform(
+            &format!("2x8xV100 inter={kind:?}"),
+            2,
+            8,
+            DeviceSpec::v100(),
+            LinkKind::NvLink,
+            kind,
+        )
     }
 
     /// Figure-7c variant: single machine, 8 GPUs, chosen intra link.
     pub fn single_machine(intra: LinkKind) -> Self {
-        Self {
-            name: format!("1x8xV100 intra={intra:?}"),
-            n_machines: 1,
-            gpus_per_machine: 8,
-            device: DeviceSpec::v100(),
+        Self::uniform(
+            &format!("1x8xV100 intra={intra:?}"),
+            1,
+            8,
+            DeviceSpec::v100(),
             intra,
-            inter: LinkKind::IbRdma,
+            LinkKind::IbRdma,
+        )
+    }
+
+    /// Mixed-generation testbed: one 8xA100 DGX next to one 8xV100 box,
+    /// NVLink inside both, EDR IB RDMA between them.
+    pub fn mixed_generation() -> Self {
+        Self::from_machines(
+            "8xA100+8xV100 mixed-gen",
+            vec![
+                Machine::new(DeviceSpec::a100(), 8, LinkKind::NvLink),
+                Machine::new(DeviceSpec::v100(), 8, LinkKind::NvLink),
+            ],
+            LinkKind::IbRdma,
+        )
+    }
+
+    /// Straggler-link testbed: three identical 8xV100 machines, the first
+    /// two on 4x RDMA, the third reachable only over RDMA-less IB — the
+    /// asymmetry a single global `inter` preset cannot express.
+    pub fn straggler_link() -> Self {
+        let mut c = Self::uniform(
+            "3x8xV100 straggler-link",
+            3,
+            8,
+            DeviceSpec::v100(),
+            LinkKind::NvLink,
+            LinkKind::IbRdma4x,
+        );
+        c.set_inter(0, 2, LinkKind::IbNoRdma);
+        c.set_inter(1, 2, LinkKind::IbNoRdma);
+        c
+    }
+
+    /// big.LITTLE-style 8+2: an 8xA100 NVLink machine plus a 2xV100 PCIe
+    /// box on the same IB fabric. The memory floor is set by the 16 GB
+    /// V100s, not the A100s a spec-sheet planner would assume.
+    pub fn big_little() -> Self {
+        Self::from_machines(
+            "8xA100+2xV100 big.LITTLE",
+            vec![
+                Machine::new(DeviceSpec::a100(), 8, LinkKind::NvLink),
+                Machine::new(DeviceSpec::v100(), 2, LinkKind::Pcie),
+            ],
+            LinkKind::IbRdma,
+        )
+    }
+
+    /// The cluster a homogeneity-assuming planner believes it has: every
+    /// machine gets machine 0's device spec and intra link, and every
+    /// machine pair gets the best (highest-bandwidth) link present in the
+    /// matrix. `exp hetero` plans on this and executes on `self` to price
+    /// the assumption.
+    pub fn homogenized(&self) -> Self {
+        let proto = self.machines[0].clone();
+        let machines: Vec<Machine> = self
+            .machines
+            .iter()
+            .map(|m| Machine::new(proto.device, m.gpus, proto.intra))
+            .collect();
+        let n = machines.len();
+        let mut best = LinkKind::IbRdma;
+        let mut best_bw = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let l = self.inter[i][j];
+                if l.link().bandwidth > best_bw {
+                    best_bw = l.link().bandwidth;
+                    best = l;
+                }
+            }
         }
+        Self::from_machines(&format!("{} (homogenized)", self.name), machines, best)
+    }
+
+    // -------------------------------------------------------------- sub-allocs
+
+    /// The sub-allocation holding the first `total` devices of this cluster
+    /// (machine-major): per-machine device specs and intra links are
+    /// preserved, the last machine may be partially used, and the
+    /// inter-machine link matrix is restricted to the machines kept. Used
+    /// by the session and scheduler so profiling at reduced parallelism
+    /// stays on the caller's actual hardware. `total` is clamped to the
+    /// cluster size.
+    pub fn sub_cluster(&self, total: usize) -> Self {
+        let want = total.clamp(1, self.n_devices());
+        let mut machines = Vec::new();
+        let mut left = want;
+        for m in &self.machines {
+            if left == 0 {
+                break;
+            }
+            let g = m.gpus.min(left);
+            machines.push(Machine::new(m.device, g, m.intra));
+            left -= g;
+        }
+        let k = machines.len();
+        let inter: Vec<Vec<LinkKind>> =
+            (0..k).map(|i| (0..k).map(|j| self.inter[i][j]).collect()).collect();
+        Self { name: format!("{want} of {}", self.name), machines, inter }
+    }
+
+    /// An arbitrary machine subset (for schedulers granting non-contiguous
+    /// machine sets): machine specs, intra links, and the pairwise inter
+    /// links between the selected machines are all preserved.
+    pub fn select_machines(&self, which: &[usize]) -> Self {
+        assert!(!which.is_empty(), "select_machines needs at least one machine");
+        let machines: Vec<Machine> = which.iter().map(|&i| self.machines[i].clone()).collect();
+        let inter: Vec<Vec<LinkKind>> = which
+            .iter()
+            .map(|&i| which.iter().map(|&j| self.inter[i][j]).collect())
+            .collect();
+        Self { name: format!("{which:?} of {}", self.name), machines, inter }
+    }
+
+    // -------------------------------------------------------------- accessors
+
+    pub fn n_machines(&self) -> usize {
+        self.machines.len()
     }
 
     pub fn n_devices(&self) -> usize {
-        self.n_machines * self.gpus_per_machine
+        self.machines.iter().map(|m| m.gpus).sum()
     }
 
     /// Machine index of a device (devices are numbered machine-major).
     pub fn machine_of(&self, device: usize) -> usize {
-        device / self.gpus_per_machine
+        let mut seen = 0usize;
+        for (i, m) in self.machines.iter().enumerate() {
+            seen += m.gpus;
+            if device < seen {
+                return i;
+            }
+        }
+        self.machines.len() - 1
+    }
+
+    /// Device spec of a concrete (global, machine-major) device id.
+    pub fn device_at(&self, device: usize) -> &DeviceSpec {
+        &self.machines[self.machine_of(device)].device
+    }
+
+    /// Generation tag of a concrete device id (placement groups by this).
+    pub fn generation_of(&self, device: usize) -> &'static str {
+        self.device_at(device).gen
+    }
+
+    /// Smallest device memory in the set — the hard feasibility floor for
+    /// any state that must exist on every participating device (§4.1).
+    pub fn min_device_memory(&self) -> f64 {
+        self.machines.iter().map(|m| m.device.memory).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Narrowest machine in the set: a collective group wider than this
+    /// must cross machines somewhere in the tiled machine-major layout.
+    pub fn min_machine_gpus(&self) -> usize {
+        self.machines.iter().map(|m| m.gpus).min().unwrap_or(1)
+    }
+
+    /// Does tiling the device line into contiguous groups of `g` cross a
+    /// machine boundary anywhere? Exact under machine-major placement: the
+    /// boundary after a machine prefix of `b` devices splits a (complete)
+    /// group iff `b` is not a multiple of `g` and the group containing
+    /// device `b` fits on the line — which catches small groups straddling
+    /// a partial last machine, not just groups wider than one machine.
+    pub fn tiling_crosses(&self, g: usize) -> bool {
+        if g <= 1 {
+            return false;
+        }
+        let total = self.n_devices();
+        let mut b = 0usize;
+        for m in &self.machines[..self.machines.len() - 1] {
+            b += m.gpus;
+            if b % g != 0 && (b / g + 1) * g <= total {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Bottleneck compute spec over the first `n` devices (machine-major):
+    /// a synchronous step advances at the slowest participant's rate, so
+    /// Eq. 1 charges the minimum FLOP rate / memory bandwidth / memory of
+    /// the participating prefix.
+    pub fn bottleneck_device(&self, n: usize) -> DeviceSpec {
+        let n = n.clamp(1, self.n_devices());
+        let last_machine = self.machine_of(n - 1);
+        let mut out = self.machines[0].device;
+        for m in &self.machines[..=last_machine] {
+            if m.device.flops < out.flops {
+                out.flops = m.device.flops;
+                out.gen = m.device.gen;
+            }
+            if m.device.mem_bw < out.mem_bw {
+                out.mem_bw = m.device.mem_bw;
+            }
+            if m.device.memory < out.memory {
+                out.memory = m.device.memory;
+            }
+        }
+        out
     }
 
     /// Does a contiguous group of `group` devices starting at `start` span
@@ -147,12 +413,104 @@ impl Cluster {
         group > 0 && self.machine_of(start) != self.machine_of(start + group - 1)
     }
 
+    /// Bottleneck intra-machine link: layer-wide collectives run one group
+    /// per machine concurrently and synchronize afterwards, so the slowest
+    /// machine's interconnect sets the pace.
     pub fn intra_link(&self) -> Link {
-        self.intra.link()
+        let mut out = self.machines[0].intra.link();
+        for m in &self.machines[1..] {
+            let l = m.intra.link();
+            if l.bandwidth < out.bandwidth {
+                out.bandwidth = l.bandwidth;
+            }
+            if l.latency > out.latency {
+                out.latency = l.latency;
+            }
+        }
+        out
     }
 
+    /// Bottleneck link on the machine-major ring that crossing collectives
+    /// are routed over: minimum bandwidth / maximum latency across the
+    /// consecutive machine pairs of the route (wrap edge included beyond
+    /// two machines). Falls back to the intra link on single-machine
+    /// clusters. This replaces the old single global `inter` preset with
+    /// the slowest link actually on the path.
     pub fn inter_link(&self) -> Link {
-        self.inter.link()
+        let n = self.machines.len();
+        if n < 2 {
+            return self.intra_link();
+        }
+        let mut pairs: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        if n > 2 {
+            pairs.push((n - 1, 0));
+        }
+        let mut out = self.inter_between(pairs[0].0, pairs[0].1);
+        for &(i, j) in &pairs[1..] {
+            let l = self.inter_between(i, j);
+            if l.bandwidth < out.bandwidth {
+                out.bandwidth = l.bandwidth;
+            }
+            if l.latency > out.latency {
+                out.latency = l.latency;
+            }
+        }
+        out
+    }
+
+    /// Any mixed generations, mixed intra links, or asymmetric inter links?
+    pub fn is_heterogeneous(&self) -> bool {
+        let m0 = &self.machines[0];
+        let dev_mixed = self
+            .machines
+            .iter()
+            .any(|m| m.device.gen != m0.device.gen || m.intra != m0.intra);
+        let n = self.machines.len();
+        let mut first: Option<LinkKind> = None;
+        let mut link_mixed = false;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                match first {
+                    None => first = Some(self.inter[i][j]),
+                    Some(f) => {
+                        if self.inter[i][j] != f {
+                            link_mixed = true;
+                        }
+                    }
+                }
+            }
+        }
+        dev_mixed || link_mixed
+    }
+
+    /// Compact deterministic identity of the device graph — generations
+    /// (plus raw FLOP/memory figures, so a derated spec under the same gen
+    /// tag still gets its own identity), per-machine widths, intra links
+    /// and the inter matrix. Frontier-cache keys include this so plans
+    /// computed for one topology are never served to another.
+    pub fn fingerprint(&self) -> String {
+        let mut s = String::new();
+        for (i, m) in self.machines.iter().enumerate() {
+            if i > 0 {
+                s.push('|');
+            }
+            s.push_str(&format!(
+                "{}x{}[{:.3e},{:.3e},{:.3e}]@{}",
+                m.gpus,
+                m.device.gen,
+                m.device.flops,
+                m.device.memory,
+                m.device.mem_bw,
+                m.intra.tag()
+            ));
+        }
+        let n = self.machines.len();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                s.push_str(&format!(";{i}-{j}:{}", self.inter[i][j].tag()));
+            }
+        }
+        s
     }
 }
 
@@ -166,6 +524,7 @@ mod tests {
         assert_eq!(c.n_devices(), 16);
         assert_eq!(c.machine_of(7), 0);
         assert_eq!(c.machine_of(8), 1);
+        assert!(!c.is_heterogeneous());
     }
 
     #[test]
@@ -177,13 +536,18 @@ mod tests {
     }
 
     #[test]
-    fn with_gpus_partial() {
+    fn with_gpus_exact() {
         let c = Cluster::with_gpus(4);
         assert_eq!(c.n_devices(), 4);
-        assert_eq!(c.n_machines, 1);
+        assert_eq!(c.n_machines(), 1);
         let c = Cluster::with_gpus(24);
         assert_eq!(c.n_devices(), 24);
-        assert_eq!(c.n_machines, 3);
+        assert_eq!(c.n_machines(), 3);
+        // non-multiples fill a partial last machine instead of rounding up.
+        let c = Cluster::with_gpus(12);
+        assert_eq!(c.n_devices(), 12);
+        assert_eq!(c.n_machines(), 2);
+        assert_eq!(c.machines[1].gpus, 4);
     }
 
     #[test]
@@ -197,5 +561,103 @@ mod tests {
         assert!(nv > r4 && r4 > r && r > nr);
         assert!(nv / r4 >= 3.0, "paper: even 4x RDMA ~10x slower than NVLink");
         assert!((nv / pcie - 20.0).abs() < 2.0);
+    }
+
+    /// One source of truth: each preset's code value equals its doc-stated
+    /// effective bandwidth (the old `Pcie` comment claimed 12 GB/s while
+    /// the code used 6.5e9 — the code matches the paper's "1/20 of
+    /// NVLink", so the docs now say 6.5).
+    #[test]
+    fn preset_bandwidths_match_docs() {
+        assert_eq!(LinkKind::NvLink.link().bandwidth, 130e9);
+        assert_eq!(LinkKind::Pcie.link().bandwidth, 6.5e9);
+        assert_eq!(LinkKind::IbRdma.link().bandwidth, 10e9);
+        assert_eq!(LinkKind::IbNoRdma.link().bandwidth, 5e9);
+        assert_eq!(LinkKind::IbRdma4x.link().bandwidth, 40e9);
+        // documented relationships.
+        assert_eq!(LinkKind::IbNoRdma.link().bandwidth * 2.0, LinkKind::IbRdma.link().bandwidth);
+        assert_eq!(LinkKind::IbRdma.link().bandwidth * 4.0, LinkKind::IbRdma4x.link().bandwidth);
+    }
+
+    #[test]
+    fn a100_dominates_v100() {
+        let a = DeviceSpec::a100();
+        let v = DeviceSpec::v100();
+        assert!(a.flops > v.flops && a.memory > v.memory && a.mem_bw > v.mem_bw);
+        assert_eq!(a.gen, "A100");
+        assert_eq!(v.gen, "V100");
+    }
+
+    #[test]
+    fn mixed_presets_are_heterogeneous() {
+        for c in [Cluster::mixed_generation(), Cluster::straggler_link(), Cluster::big_little()] {
+            assert!(c.is_heterogeneous(), "{}", c.name);
+            assert!(!c.homogenized().is_heterogeneous(), "{}", c.name);
+            assert_eq!(c.homogenized().n_devices(), c.n_devices(), "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn bottleneck_device_tracks_prefix() {
+        let c = Cluster::mixed_generation(); // 8xA100 then 8xV100
+        assert_eq!(c.bottleneck_device(8).gen, "A100");
+        assert_eq!(c.bottleneck_device(9).gen, "V100");
+        assert_eq!(c.min_device_memory(), DeviceSpec::v100().memory);
+    }
+
+    #[test]
+    fn straggler_inter_is_the_bottleneck() {
+        let c = Cluster::straggler_link();
+        // ring 0-1-2(-0) includes the slow pairs to machine 2.
+        assert_eq!(c.inter_link().bandwidth, LinkKind::IbNoRdma.link().bandwidth);
+        assert_eq!(c.inter_between(0, 1).bandwidth, LinkKind::IbRdma4x.link().bandwidth);
+        // the 16-device prefix avoids machine 2 entirely.
+        let fast = c.sub_cluster(16);
+        assert_eq!(fast.n_machines(), 2);
+        assert_eq!(fast.inter_link().bandwidth, LinkKind::IbRdma4x.link().bandwidth);
+    }
+
+    #[test]
+    fn tiling_crossing_exact_on_partial_machines() {
+        let c = Cluster::paper_testbed(); // [8, 8]
+        assert!(!c.tiling_crosses(2));
+        assert!(!c.tiling_crosses(8));
+        assert!(c.tiling_crosses(16));
+        let p = Cluster::with_gpus(12); // machines [8, 4]
+        assert!(p.tiling_crosses(3), "group {{6,7,8}} straddles the boundary at 8");
+        assert!(!p.tiling_crosses(4), "4-groups align with the boundary");
+        assert!(!p.tiling_crosses(2));
+    }
+
+    #[test]
+    fn fingerprints_distinguish_topologies() {
+        let a = Cluster::straggler_link().fingerprint();
+        let b = Cluster::straggler_link().homogenized().fingerprint();
+        let c = Cluster::mixed_generation().fingerprint();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, Cluster::straggler_link().fingerprint(), "deterministic");
+        // same gen tag, derated spec -> different identity.
+        let mut derated = Cluster::paper_testbed();
+        derated.machines[0].device.flops *= 0.5;
+        assert_ne!(derated.fingerprint(), Cluster::paper_testbed().fingerprint());
+    }
+
+    #[test]
+    fn width_accessors() {
+        assert_eq!(Cluster::big_little().min_machine_gpus(), 2);
+        assert_eq!(Cluster::paper_testbed().min_machine_gpus(), 8);
+        assert_eq!(Cluster::with_gpus(12).min_machine_gpus(), 4);
+    }
+
+    #[test]
+    fn sub_cluster_partial_machine() {
+        let c = Cluster::big_little();
+        let s = c.sub_cluster(9);
+        assert_eq!(s.n_devices(), 9);
+        assert_eq!(s.machines[0].gpus, 8);
+        assert_eq!(s.machines[1].gpus, 1);
+        assert_eq!(s.machines[1].device.gen, "V100");
+        assert_eq!(s.machines[1].intra, LinkKind::Pcie);
     }
 }

@@ -73,7 +73,10 @@ impl Session {
         let cluster = self.cluster.sub_cluster(d as usize);
         let comm = CommModel::profile(&cluster);
         let mut opts = self.opts_proto.clone();
-        opts.devices = d;
+        // sub_cluster clamps to the session cluster's size; keep the
+        // search's device count consistent with the topology it is costed
+        // on (never search meshes wider than the devices that exist).
+        opts.devices = cluster.n_devices() as u32;
         opts.threads = threads;
         frontier_search(&self.graph, &cluster, &comm, opts)
     }
@@ -121,9 +124,11 @@ impl Session {
     }
 
     /// Device memory budget with the paper's safety margin (§5.2: pick
-    /// ~`capacity / 1.1` so consistent underestimation cannot OOM).
+    /// ~`capacity / 1.1` so consistent underestimation cannot OOM). On a
+    /// mixed-generation cluster the floor is the smallest device's memory:
+    /// a strategy must fit on every device it touches.
     pub fn mem_budget(&self) -> f64 {
-        self.cluster.device.memory / 1.1
+        self.cluster.min_device_memory() / 1.1
     }
 
     /// Run a search option.
@@ -147,23 +152,34 @@ impl Session {
             }
             SearchOption::MiniParallelism { max_parallelism } => {
                 let budget = self.mem_budget();
+                // probing beyond the session cluster would cost imaginary
+                // devices against a clamped topology — cap at what exists.
+                let cap = (self.cluster.n_devices() as u32).min(*max_parallelism).max(1);
                 let mut d = 1u32;
-                while d <= *max_parallelism {
-                    let r = self.ft_at(d);
+                loop {
+                    let probe = d.min(cap);
+                    let r = self.ft_at(probe);
                     if let Some(t) = r.frontier.min_mem() {
                         if t.mem <= budget {
                             let (strategy, _) = r.strategy_of(t);
                             return Ok(FindResult::Plan(Plan {
-                                parallelism: d,
+                                parallelism: probe,
                                 strategy,
                                 est_time: t.time,
                                 est_memory: t.mem,
                             }));
                         }
                     }
+                    if probe >= cap {
+                        break;
+                    }
                     d *= 2;
                 }
-                anyhow::bail!("model does not fit within {max_parallelism} devices")
+                anyhow::bail!(
+                    "model does not fit within {} devices (cluster holds {})",
+                    max_parallelism,
+                    self.cluster.n_devices()
+                )
             }
             SearchOption::Profiling { parallelisms } => {
                 Ok(FindResult::Profile(self.profile(parallelisms)))

@@ -58,13 +58,18 @@ impl GroundTruthComm {
     /// collective layer-wide, each machine's NIC multiplexes
     /// `max(1, groups/machines)` flows (the paper's "different groups may
     /// still contend for bandwidth").
+    /// Crossing rings are routed machine-major over the allocation's
+    /// machines, so the bandwidth is the slowest pairwise link on that
+    /// route ([`Cluster::inter_link`] is the ring bottleneck) — on an
+    /// asymmetric fabric one straggler NIC paces every crossing
+    /// collective, which a single global `inter` preset cannot express.
     pub fn effective_bw(&self, g: u32, crossing: bool) -> f64 {
         if !crossing {
             self.cluster.intra_link().bandwidth
         } else {
             let d = self.cluster.n_devices() as u32;
             let groups = (d / g.max(1)).max(1);
-            let contention = (groups as f64 / self.cluster.n_machines as f64).max(1.0);
+            let contention = (groups as f64 / self.cluster.n_machines() as f64).max(1.0);
             self.cluster.inter_link().bandwidth / contention
         }
     }
@@ -88,7 +93,7 @@ impl CollectiveCost for GroundTruthComm {
     }
 
     fn group_crosses(&self, group: u32) -> bool {
-        group as usize > self.cluster.gpus_per_machine
+        self.cluster.tiling_crosses(group as usize)
     }
 }
 
@@ -188,7 +193,7 @@ impl CollectiveCost for CommModel {
     }
 
     fn group_crosses(&self, group: u32) -> bool {
-        group as usize > self.cluster.gpus_per_machine
+        self.cluster.tiling_crosses(group as usize)
     }
 }
 
@@ -213,7 +218,7 @@ impl CollectiveCost for NaiveComm {
     }
 
     fn group_crosses(&self, group: u32) -> bool {
-        group as usize > self.cluster.gpus_per_machine
+        self.cluster.tiling_crosses(group as usize)
     }
 }
 
@@ -280,6 +285,18 @@ mod tests {
         let g = gt();
         // 8 groups of 2 crossing machines contend harder than 1 group of 16.
         assert!(g.effective_bw(2, true) < g.effective_bw(16, true));
+    }
+
+    #[test]
+    fn straggler_link_paces_crossing_collectives() {
+        // 16-device prefix of the straggler testbed stays on 4x RDMA; the
+        // full 24 devices route the ring over the RDMA-less NIC.
+        let full = Cluster::straggler_link();
+        let fast = GroundTruthComm::new(full.sub_cluster(16));
+        let slow = GroundTruthComm::new(full);
+        let a = fast.coll_time(Coll::AllReduce, 1e8, 8, true);
+        let b = slow.coll_time(Coll::AllReduce, 1e8, 8, true);
+        assert!(b > 4.0 * a, "straggler ring {b} vs fast ring {a}");
     }
 
     #[test]

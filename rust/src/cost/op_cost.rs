@@ -36,10 +36,39 @@ impl OpCost {
     }
 }
 
-/// Does the group along mesh dim `m` of `cfg` cross machines? Uses the
-/// machine-major row-major placement rule (see `parallel::mesh`).
+/// Does any group along mesh dim `m` of `cfg` cross machines? Exact under
+/// the machine-major row-major placement rule: device ids within a group
+/// are increasing, so a group crosses iff its first and last members sit
+/// on different machines; every group origin is checked, which matters on
+/// clusters with a partial last machine where small groups can straddle
+/// the boundary.
 pub fn mesh_dim_crosses(cfg: &ParallelConfig, m: usize, cluster: &Cluster) -> bool {
-    cluster.n_machines > 1 && cfg.mesh.group_span(m) as usize > cluster.gpus_per_machine
+    if cluster.n_machines() <= 1 {
+        return false;
+    }
+    // Group origins occupy [k*period, k*period + stride) and the group at
+    // origin `o` covers device ids [o, o + span_end]. The boundary between
+    // devices b-1 and b is straddled iff some origin lies in
+    // [b - span_end, b) — an O(n_machines) check with no allocation (this
+    // sits in op_cost, the FT search's innermost cost evaluation).
+    let stride = cfg.mesh.stride(m) as usize;
+    let size = cfg.mesh.dims[m] as usize;
+    let period = stride * size;
+    let span_end = period - stride;
+    let total = cfg.mesh.n_devices() as usize;
+    let mut b = 0usize;
+    for mach in &cluster.machines {
+        b += mach.gpus;
+        if b >= total {
+            break;
+        }
+        let lo = b.saturating_sub(span_end);
+        let origin = if lo % period < stride { lo } else { (lo / period + 1) * period };
+        if origin < b {
+            return true;
+        }
+    }
+    false
 }
 
 /// Eq. 1: cost of operator `op` under configuration `cfg`.
@@ -49,7 +78,11 @@ pub fn op_cost(
     cluster: &Cluster,
     comm: &dyn CollectiveCost,
 ) -> OpCost {
-    let dev = cluster.device;
+    // A synchronous step advances at the slowest participating device
+    // (the mesh occupies the first n_devices of the machine-major
+    // numbering), so mixed-generation sets are charged the bottleneck
+    // FLOP rate and memory bandwidth.
+    let dev = cluster.bottleneck_device(cfg.n_devices() as usize);
     let par = cfg.compute_parallelism() as f64;
 
     // ---- t_c: fwd + bwd ≈ 3x fwd FLOPs, divided over the compute shards,
@@ -183,6 +216,44 @@ mod tests {
         // one option trades memory for time:
         assert!(opts.iter().any(|&(m, _)| m > 0.0));
         assert!(opts.iter().any(|&(m, _)| m == 0.0));
+    }
+
+    #[test]
+    fn bottleneck_device_governs_mixed_cluster_compute() {
+        use crate::cluster::{DeviceSpec, LinkKind, Machine};
+        let g = tiny_mlp(256);
+        let fc1 = g.ops.iter().find(|o| o.name == "fc1").unwrap();
+        let cfg = ParallelConfig::data_parallel(fc1, 4).unwrap();
+        let mk = |machines: Vec<Machine>, name: &str| {
+            Cluster::from_machines(name, machines, LinkKind::IbRdma)
+        };
+        let all_v = mk(
+            vec![
+                Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+                Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+            ],
+            "2x2xV100",
+        );
+        let all_a = mk(
+            vec![
+                Machine::new(DeviceSpec::a100(), 2, LinkKind::NvLink),
+                Machine::new(DeviceSpec::a100(), 2, LinkKind::NvLink),
+            ],
+            "2x2xA100",
+        );
+        let mixed = mk(
+            vec![
+                Machine::new(DeviceSpec::a100(), 2, LinkKind::NvLink),
+                Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+            ],
+            "2xA100+2xV100",
+        );
+        let c_v = op_cost(fc1, &cfg, &all_v, &GroundTruthComm::new(all_v.clone()));
+        let c_a = op_cost(fc1, &cfg, &all_a, &GroundTruthComm::new(all_a.clone()));
+        let c_m = op_cost(fc1, &cfg, &mixed, &GroundTruthComm::new(mixed.clone()));
+        assert!(c_a.t_compute < c_v.t_compute, "A100s must be faster");
+        // the V100 in the set drags the mixed cluster to V100 pace.
+        assert_eq!(c_m.t_compute, c_v.t_compute);
     }
 
     #[test]

@@ -18,7 +18,7 @@ use super::GB;
 /// Feasibility = strategy's per-device memory within capacity/1.1 (§5.2
 /// safety margin).
 fn feasible(mem: f64, cluster: &Cluster) -> bool {
-    mem <= cluster.device.memory / 1.1
+    mem <= cluster.min_device_memory() / 1.1
 }
 
 pub fn run(model: &str, parallelisms: &[u32]) -> Table {
@@ -30,7 +30,7 @@ pub fn run(model: &str, parallelisms: &[u32]) -> Table {
     for &d in parallelisms {
         let cluster = Cluster::with_gpus(d as usize);
         let comm = CommModel::profile(&cluster);
-        let budget = cluster.device.memory / 1.1;
+        let budget = cluster.min_device_memory() / 1.1;
         let fmt = |time: f64, mem: f64| -> String {
             if feasible(mem, &cluster) {
                 format!("{time:.3}")

@@ -1,0 +1,247 @@
+//! **exp hetero** — what knowing the topology is worth, on three mixed
+//! testbeds (mixed-generation V100+A100, straggler-link, big.LITTLE 8+2).
+//!
+//! Two questions, two tables:
+//!
+//! 1. **Plans**: search a strategy under (a) the homogeneity assumption —
+//!    every machine looks like machine 0, every link like the best link
+//!    in the fabric (`Cluster::homogenized`) — and (b) the real mixed
+//!    topology, then execute *both* strategies on the real cluster's
+//!    ground-truth simulator. The gap column is the per-iteration slowdown
+//!    the assumption costs.
+//! 2. **Scheduling**: run the same multi-job workload through the elastic
+//!    frontier scheduler with each belief (`FrontierCache::with_assumption`
+//!    vs `FrontierCache::new`); the timeline always advances with the real
+//!    cluster's ground truth. The headline is the makespan gap the
+//!    scheduler closes by knowing the topology — on the straggler-link
+//!    testbed the aware scheduler stops water-filling before the ring
+//!    picks up the RDMA-less machine, the optimistic one does not.
+
+use crate::cluster::Cluster;
+use crate::cost::comm::CommModel;
+use crate::ft::{frontier_search, FtOptions};
+use crate::graph::models;
+use crate::sched::{run_workload, FrontierCache, Policy, SchedConfig, Workload};
+use crate::sim::{simulate, SimConfig};
+use crate::util::table::Table;
+
+use super::GB;
+
+/// Experiment knobs (the test scales them down).
+#[derive(Debug, Clone)]
+pub struct HeteroCfg {
+    pub model: String,
+    pub batch: i64,
+    pub n_jobs: usize,
+    pub mean_interarrival_s: f64,
+    /// Iteration counts drawn uniformly from [min, max).
+    pub iters: (u64, u64),
+    pub seed: u64,
+}
+
+impl Default for HeteroCfg {
+    fn default() -> Self {
+        Self {
+            model: "vgg16".into(),
+            batch: 256,
+            n_jobs: 3,
+            mean_interarrival_s: 30.0,
+            iters: (300, 1200),
+            seed: 7,
+        }
+    }
+}
+
+/// The three mixed testbeds of the experiment.
+pub fn presets() -> Vec<Cluster> {
+    vec![Cluster::mixed_generation(), Cluster::straggler_link(), Cluster::big_little()]
+}
+
+/// Single-plan comparison on one testbed: search under each belief,
+/// execute both strategies on the real cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanGap {
+    pub est_homo: f64,
+    pub sim_homo: f64,
+    pub mem_homo: f64,
+    pub est_aware: f64,
+    pub sim_aware: f64,
+    pub mem_aware: f64,
+    /// Real feasibility budget (smallest device's memory / 1.1).
+    pub budget: f64,
+}
+
+/// Search the best-feasible plan under `belief`'s cost model and budget,
+/// then execute it on `real`: (est_time, actual_time, actual_memory).
+fn plan_on(g: &crate::graph::Graph, belief: &Cluster, real: &Cluster) -> (f64, f64, f64) {
+    let comm = CommModel::profile(belief);
+    let r = frontier_search(g, belief, &comm, FtOptions::new(belief.n_devices() as u32));
+    let t = r
+        .frontier
+        .min_time_within(belief.min_device_memory() / 1.1)
+        .or_else(|| r.frontier.min_mem())
+        .unwrap_or_else(|| panic!("empty frontier on {}", belief.name));
+    let (s, _) = r.strategy_of(t);
+    let sim = simulate(g, &s, real, &SimConfig::default());
+    (t.time, sim.time, sim.memory)
+}
+
+pub fn plan_gap(cluster: &Cluster, model: &str, batch: i64) -> PlanGap {
+    let g = models::by_name(model, batch)
+        .unwrap_or_else(|| panic!("unknown model `{model}`"));
+    let budget = cluster.min_device_memory() / 1.1;
+    // (a) plan on the homogenized belief (with its own optimistic budget),
+    // (b) plan on the real topology — both executed on the real cluster.
+    let (est_homo, sim_homo, mem_homo) = plan_on(&g, &cluster.homogenized(), cluster);
+    let (est_aware, sim_aware, mem_aware) = plan_on(&g, cluster, cluster);
+    PlanGap { est_homo, sim_homo, mem_homo, est_aware, sim_aware, mem_aware, budget }
+}
+
+/// Scheduler comparison on one testbed: the same workload through the
+/// elastic frontier policy under each belief.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedGap {
+    pub makespan_homo: f64,
+    pub makespan_aware: f64,
+    pub jct_homo: f64,
+    pub jct_aware: f64,
+    pub mixed_homo: usize,
+    pub mixed_aware: usize,
+}
+
+pub fn sched_gap(cluster: &Cluster, cfg: &HeteroCfg) -> SchedGap {
+    let jobs = Workload::synthetic(
+        cfg.n_jobs,
+        &[(cfg.model.as_str(), cfg.batch)],
+        cfg.mean_interarrival_s,
+        cfg.iters,
+        cfg.seed,
+    );
+    let sched_cfg = SchedConfig::for_cluster(cluster);
+    let aware_cache = FrontierCache::new(cluster.clone());
+    let homo_cache = FrontierCache::with_assumption(cluster.clone(), cluster.homogenized());
+    let aware = run_workload(&jobs, cluster, Policy::ElasticFrontier, &aware_cache, &sched_cfg);
+    let homo = run_workload(&jobs, cluster, Policy::ElasticFrontier, &homo_cache, &sched_cfg);
+    SchedGap {
+        makespan_homo: homo.makespan,
+        makespan_aware: aware.makespan,
+        jct_homo: homo.mean_jct,
+        jct_aware: aware.mean_jct,
+        mixed_homo: homo.mixed_grants,
+        mixed_aware: aware.mixed_grants,
+    }
+}
+
+/// Run the full comparison; returns (plan table, scheduler table).
+pub fn run(cfg: &HeteroCfg) -> (Table, Table) {
+    let mut plans = Table::new(
+        &format!(
+            "hetero plans: homogeneous assumption vs topology-aware ({}@{})",
+            cfg.model, cfg.batch
+        ),
+        &["testbed", "plan", "est_s", "actual_s", "actual_mem_gb", "fits", "slowdown"],
+    );
+    let mut scheds = Table::new(
+        &format!(
+            "hetero scheduling: elastic-frontier with each belief ({} x {} jobs)",
+            cfg.model, cfg.n_jobs
+        ),
+        &["testbed", "belief", "makespan_s", "mean_jct_s", "mixed_grants", "makespan_gap"],
+    );
+    for cluster in presets() {
+        let pg = plan_gap(&cluster, &cfg.model, cfg.batch);
+        let fits = |mem: f64| if mem <= pg.budget { "yes" } else { "NO" };
+        plans.row(&[
+            cluster.name.clone(),
+            "homogeneous-assumed".into(),
+            format!("{:.4}", pg.est_homo),
+            format!("{:.4}", pg.sim_homo),
+            format!("{:.2}", pg.mem_homo / GB),
+            fits(pg.mem_homo).into(),
+            format!("{:.2}x", pg.sim_homo / pg.sim_aware),
+        ]);
+        plans.row(&[
+            cluster.name.clone(),
+            "topology-aware".into(),
+            format!("{:.4}", pg.est_aware),
+            format!("{:.4}", pg.sim_aware),
+            format!("{:.2}", pg.mem_aware / GB),
+            fits(pg.mem_aware).into(),
+            "1.00x".into(),
+        ]);
+
+        let sg = sched_gap(&cluster, cfg);
+        let gap = format!("{:.2}x", sg.makespan_homo / sg.makespan_aware);
+        scheds.row(&[
+            cluster.name.clone(),
+            "homogeneous-assumed".into(),
+            format!("{:.1}", sg.makespan_homo),
+            format!("{:.1}", sg.jct_homo),
+            sg.mixed_homo.to_string(),
+            gap.clone(),
+        ]);
+        scheds.row(&[
+            cluster.name.clone(),
+            "topology-aware".into(),
+            format!("{:.1}", sg.makespan_aware),
+            format!("{:.1}", sg.jct_aware),
+            sg.mixed_aware.to_string(),
+            "1.00x".into(),
+        ]);
+    }
+    (plans, scheds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{DeviceSpec, LinkKind, Machine};
+
+    fn straggler_small() -> Cluster {
+        let mut c = Cluster::from_machines(
+            "3x2xV100 straggler test",
+            vec![
+                Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+                Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+                Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+            ],
+            LinkKind::IbRdma4x,
+        );
+        c.set_inter(0, 2, LinkKind::IbNoRdma);
+        c.set_inter(1, 2, LinkKind::IbNoRdma);
+        c
+    }
+
+    #[test]
+    fn plan_gap_small_straggler_aware_not_worse() {
+        let c = straggler_small();
+        let pg = plan_gap(&c, "tiny", 256);
+        assert!(pg.est_homo > 0.0 && pg.est_aware > 0.0);
+        // the homogeneous belief can only be optimistic about its own plan…
+        assert!(pg.est_homo <= pg.est_aware * 1.0001, "{pg:?}");
+        // …while the aware plan, optimized against the real links, must
+        // not lose on the real cluster (slack: the simulator's coordination
+        // overheads are not part of either search objective, and tiny
+        // models are latency-dominated).
+        assert!(pg.sim_aware <= pg.sim_homo * 1.10, "{pg:?}");
+    }
+
+    #[test]
+    fn sched_gap_small_straggler_aware_not_worse() {
+        let c = straggler_small();
+        let cfg = HeteroCfg {
+            model: "tiny".into(),
+            batch: 256,
+            n_jobs: 3,
+            mean_interarrival_s: 0.01,
+            iters: (2000, 4000),
+            seed: 7,
+        };
+        let sg = sched_gap(&c, &cfg);
+        assert!(sg.makespan_aware > 0.0 && sg.makespan_homo > 0.0);
+        assert!(
+            sg.makespan_aware <= sg.makespan_homo * 1.10,
+            "topology knowledge should not hurt: {sg:?}"
+        );
+    }
+}

@@ -232,7 +232,7 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
 
         // ---- choose k*: weighted combination of own cost and the average
         // best-case cost of the incident edges (normalized per term).
-        let dev_mem = self.space.cluster.device.memory;
+        let dev_mem = self.space.cluster.min_device_memory();
         let mut best = (f64::INFINITY, 0usize);
         for k in 0..ki {
             let own = &self.space.op_costs[i][k];

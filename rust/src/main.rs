@@ -1,7 +1,8 @@
 //! `tensoropt` — CLI for the TensorOpt reproduction.
 //!
 //! Subcommands:
-//!   exp <table1|table2|table3|table4|fig6|fig7|fig8>   regenerate a paper table/figure
+//!   exp <table1|table2|table3|table4|fig6|fig7|fig8|hetero>   regenerate a paper table/figure
+//!            (hetero: homogeneous-assumption vs topology-aware on mixed testbeds)
 //!   search   --model M --mode <mini_time|mini_parallelism|profiling> [--gpus N]
 //!   train    --strategy <dp|tp> --model <small|e2e> [--devices N] [--steps N] [--fused]
 //!   frontier --model M [--gpus N]                    print the raw cost frontier
@@ -86,6 +87,24 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
                 println!("{}", t.render());
                 save(&t, "fig7c");
             }
+        }
+        "hetero" => {
+            let cfg = exp::hetero::HeteroCfg {
+                model: args.get_or("model", "vgg16").to_string(),
+                batch: args.get_parse_or("batch", 256i64),
+                n_jobs: args.get_parse_or("jobs", 3usize),
+                mean_interarrival_s: args.get_parse_or("interarrival", 30.0f64),
+                iters: (
+                    args.get_parse_or("min-iters", 300u64),
+                    args.get_parse_or("max-iters", 1200u64),
+                ),
+                seed: args.get_parse_or("seed", 7u64),
+            };
+            let (plans, scheds) = exp::hetero::run(&cfg);
+            println!("{}", plans.render());
+            println!("{}", scheds.render());
+            save(&plans, "hetero_plans");
+            save(&scheds, "hetero_sched");
         }
         "fig8" => {
             let model = args.get_or("model", "transformer");
@@ -231,15 +250,9 @@ fn cmd_sched(args: &Args) -> anyhow::Result<()> {
         seed: args.get_parse_or("seed", 7u64),
     };
     anyhow::ensure!(cfg.n_jobs >= 1, "--jobs must be >= 1");
+    // with_gpus builds exact device counts (partial last machine), so any
+    // --gpus >= 1 maps to a real cluster.
     anyhow::ensure!(cfg.gpus >= 1, "--gpus must be >= 1");
-    // with_gpus fills machines 8-at-a-time, so e.g. 12 would silently
-    // become a 2x8 = 16-device cluster — reject counts that don't map to
-    // exactly the requested device count.
-    anyhow::ensure!(
-        Cluster::with_gpus(cfg.gpus as usize).n_devices() == cfg.gpus as usize,
-        "--gpus {} does not fill whole machines; use <= 8 or a multiple of 8",
-        cfg.gpus
-    );
     anyhow::ensure!(cfg.iters.1 > cfg.iters.0, "--max-iters must exceed --min-iters");
     for (m, b) in &cfg.models {
         anyhow::ensure!(models::by_name(m, *b).is_some(), "unknown model `{m}`");
@@ -259,6 +272,8 @@ USAGE: tensoropt <command> [options]
 
 COMMANDS:
   exp <table1|table2|table3|table4|fig6|fig7|fig8>  regenerate a paper result
+  exp hetero [--model M --jobs N --seed S]          mixed-cluster comparison: homogeneous-assumption
+                                                    vs heterogeneity-aware plans + scheduling
   search    --model M --mode <mini_time|mini_parallelism|profiling> --gpus N
   train     --strategy <dp|tp> --model <small|e2e> --devices N --steps N [--fused] [--pallas]
   frontier  --model M --gpus N
@@ -267,6 +282,7 @@ COMMANDS:
 
 EXAMPLES:
   tensoropt exp table1
+  tensoropt exp hetero
   tensoropt exp fig6 --model transformer --gpus 16
   tensoropt exp fig8 --model transformer --parallelism 8,16,32
   tensoropt search --model transformer --mode profiling --gpus 32

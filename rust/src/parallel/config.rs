@@ -90,7 +90,7 @@ impl ParallelConfig {
         self.assign
             .iter()
             .enumerate()
-            .filter(|(_, ax)| ax.map_or(false, |a| op.axes[a].kind == AxisKind::Reduce))
+            .filter(|(_, ax)| ax.is_some_and(|a| op.axes[a].kind == AxisKind::Reduce))
             .map(|(m, _)| self.mesh.dims[m])
             .product::<u32>()
             .max(1)
@@ -107,7 +107,7 @@ impl ParallelConfig {
             .iter()
             .enumerate()
             .filter(|(_, ax)| {
-                ax.map_or(false, |a| {
+                ax.is_some_and(|a| {
                     matches!(op.axes[a].kind, AxisKind::Batch | AxisKind::Spatial)
                 })
             })
@@ -121,7 +121,7 @@ impl ParallelConfig {
         self.assign
             .iter()
             .enumerate()
-            .filter(|(_, ax)| ax.map_or(false, |a| op.axes[a].kind == AxisKind::Reduce))
+            .filter(|(_, ax)| ax.is_some_and(|a| op.axes[a].kind == AxisKind::Reduce))
             .map(|(m, _)| (m, self.mesh.dims[m]))
             .collect()
     }
@@ -133,7 +133,7 @@ impl ParallelConfig {
             .iter()
             .enumerate()
             .filter(|(_, ax)| {
-                ax.map_or(false, |a| {
+                ax.is_some_and(|a| {
                     matches!(op.axes[a].kind, AxisKind::Output | AxisKind::Reduce)
                 })
             })
@@ -232,7 +232,7 @@ pub fn enumerate_configs(op: &Op, d: u32, max_mesh_dims: usize) -> Vec<ParallelC
             for &a in axes_allowed {
                 if used[a]
                     || op.axes[a].size % mesh.dims[m] as i64 != 0
-                    || prev_key.map_or(false, |k| a < k)
+                    || prev_key.is_some_and(|k| a < k)
                 {
                     continue;
                 }

@@ -47,6 +47,25 @@ impl Mesh {
     pub fn label(&self) -> String {
         format!("[{}]", self.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","))
     }
+
+    /// Concrete device id at mesh coordinate `coord` (row-major; the
+    /// all-zero coordinate is device 0). Placement is machine-major over
+    /// the allocation's devices, so which machine — and therefore which
+    /// generation and which links — a coordinate lands on is fully
+    /// determined by the cluster's machine list.
+    pub fn device_at(&self, coord: &[u32]) -> u32 {
+        debug_assert_eq!(coord.len(), self.dims.len());
+        coord.iter().enumerate().map(|(k, &c)| c * self.stride(k)).sum()
+    }
+
+    /// The concrete device ids of the group along mesh dim `k` containing
+    /// `coord` — the devices a dim-`k` collective synchronizes.
+    pub fn group_devices(&self, k: usize, coord: &[u32]) -> Vec<u32> {
+        let mut base = coord.to_vec();
+        base[k] = 0;
+        let origin = self.device_at(&base);
+        (0..self.dims[k]).map(|i| origin + i * self.stride(k)).collect()
+    }
 }
 
 /// Enumerate canonical meshes for `d` devices with at most `max_dims`
@@ -120,6 +139,18 @@ mod tests {
         assert_eq!(m.stride(2), 1);
         assert_eq!(m.group_span(0), 13); // stride 4 * (4-1) + 1
         assert_eq!(m.group_span(2), 2);
+    }
+
+    #[test]
+    fn concrete_device_placement() {
+        let m = Mesh::new(vec![4, 2]);
+        assert_eq!(m.device_at(&[0, 0]), 0);
+        assert_eq!(m.device_at(&[1, 0]), 2);
+        assert_eq!(m.device_at(&[3, 1]), 7);
+        // outer-dim group: strided across the range (machine-crossing).
+        assert_eq!(m.group_devices(0, &[2, 1]), vec![1, 3, 5, 7]);
+        // inner-dim group: adjacent devices (intra-machine).
+        assert_eq!(m.group_devices(1, &[2, 1]), vec![4, 5]);
     }
 
     #[test]

@@ -127,14 +127,14 @@ pub fn reschedule(
             steps.reverse();
             return Some(ReschedPlan { steps, cost });
         }
-        if dist.get(&state).map_or(false, |&d| cost > d) {
+        if dist.get(&state).is_some_and(|&d| cost > d) {
             continue;
         }
         let mut push = |next: Split, t: Transition, dist: &mut HashMap<Split, f64>,
                         prev: &mut HashMap<Split, (Split, Transition)>,
                         heap: &mut BinaryHeap<HeapItem>| {
             let nc = cost + t.cost;
-            if dist.get(&next).map_or(true, |&d| nc < d) {
+            if !dist.get(&next).is_some_and(|&d| nc >= d) {
                 dist.insert(next.clone(), nc);
                 prev.insert(next.clone(), (state.clone(), t));
                 heap.push(HeapItem { cost: nc, state: next });

@@ -104,25 +104,52 @@ pub struct CacheStats {
     pub misses: usize,
 }
 
-/// The shared cache. Keyed by (`model@batch`, parallelism). Thread-safe;
-/// note that concurrent callers racing on the same cold key may each run
-/// the search (the miss check and the insert are separate critical
-/// sections) — correctness is unaffected, and the scheduler's single
-/// event loop never races itself.
+/// The shared cache. Keyed by (`model@batch#cluster-fingerprint`,
+/// parallelism) — the fingerprint guards against plans computed for one
+/// topology ever being served to another. Thread-safe; note that
+/// concurrent callers racing on the same cold key may each run the search
+/// (the miss check and the insert are separate critical sections) —
+/// correctness is unaffected, and the scheduler's single event loop never
+/// races itself.
 pub struct FrontierCache {
+    /// Ground-truth cluster the simulator runs on.
     cluster: Cluster,
+    /// The cluster the *planner* believes it has. Equal to `cluster` by
+    /// default; `with_assumption` splits them so `exp hetero` can price a
+    /// homogeneity-assuming planner against reality.
+    est_cluster: Cluster,
+    key_prefix: String,
     entries: Mutex<HashMap<(String, u32), CurvePoint>>,
     stats: Mutex<CacheStats>,
 }
 
 impl FrontierCache {
-    /// `cluster` fixes the device type (memory budget), machine geometry
+    /// `cluster` fixes the device specs (memory budget), machine geometry
     /// and interconnects jobs are profiled against; sub-allocations use
     /// `Cluster::sub_cluster` exactly like the single-job Session, so
-    /// non-default links are preserved at reduced parallelism.
+    /// per-machine specs and non-default links are preserved at reduced
+    /// parallelism.
     pub fn new(cluster: Cluster) -> Self {
+        let assumed = cluster.clone();
+        Self::with_assumption(cluster, assumed)
+    }
+
+    /// Split the planner's belief from reality: `est_time`, feasibility
+    /// floors and the chosen strategies come from FT searches on
+    /// `assumed`; `sim_time` (what the multi-job timeline advances with)
+    /// executes those strategies on `real`. With `assumed == real` this is
+    /// exactly [`FrontierCache::new`].
+    pub fn with_assumption(real: Cluster, assumed: Cluster) -> Self {
+        assert_eq!(
+            real.n_devices(),
+            assumed.n_devices(),
+            "assumed cluster must match the real device count"
+        );
+        let key_prefix = format!("{}>{}", assumed.fingerprint(), real.fingerprint());
         Self {
-            cluster,
+            cluster: real,
+            est_cluster: assumed,
+            key_prefix,
             entries: Mutex::new(HashMap::new()),
             stats: Mutex::new(CacheStats::default()),
         }
@@ -137,7 +164,7 @@ impl FrontierCache {
     /// through the Session (satisfying them all at once) plus one
     /// simulator run per feasible point for ground truth.
     pub fn curve(&self, model: &str, batch: i64, parallelisms: &[u32]) -> ProfileCurve {
-        let key = format!("{model}@{batch}");
+        let key = format!("{model}@{batch}#{}", self.key_prefix);
         let mut ds: Vec<u32> = parallelisms.to_vec();
         ds.sort_unstable();
         ds.dedup();
@@ -153,7 +180,7 @@ impl FrontierCache {
         if !missing.is_empty() {
             let g = models::by_name(model, batch)
                 .unwrap_or_else(|| panic!("unknown model `{model}` in job spec"));
-            let session = Session::new(g, self.cluster.clone());
+            let session = Session::new(g, self.est_cluster.clone());
             let plans = session.profile_plans(&missing);
             let mut computed: Vec<CurvePoint> = Vec::with_capacity(plans.len());
             for pp in &plans {
@@ -231,6 +258,33 @@ mod tests {
         c.curve("tiny", 256, &[1]);
         c.curve("tiny", 128, &[1]);
         assert_eq!(c.stats().misses, 2, "different batch = different entry");
+    }
+
+    #[test]
+    fn assumption_split_is_optimistic_on_a_straggler_link() {
+        use crate::cluster::{DeviceSpec, LinkKind, Machine};
+        let mut real = Cluster::from_machines(
+            "3x2xV100 straggler",
+            vec![
+                Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+                Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+                Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+            ],
+            LinkKind::IbRdma4x,
+        );
+        real.set_inter(0, 2, LinkKind::IbNoRdma);
+        real.set_inter(1, 2, LinkKind::IbNoRdma);
+        let aware = FrontierCache::new(real.clone());
+        let homo = FrontierCache::with_assumption(real.clone(), real.homogenized());
+        let ca = aware.curve("tiny", 256, &[6]);
+        let ch = homo.curve("tiny", 256, &[6]);
+        let (ea, eh) = (ca.est_time(6).unwrap(), ch.est_time(6).unwrap());
+        // the homogenized belief (every link = 4x RDMA) can only make the
+        // crossing parallelism look faster, never slower.
+        assert!(eh <= ea * 1.0001, "homo est {eh} vs aware est {ea}");
+        // ground truth always executes on the real straggler cluster.
+        assert!(ca.point(6).unwrap().sim_time.unwrap() > 0.0);
+        assert!(ch.point(6).unwrap().sim_time.unwrap() > 0.0);
     }
 
     #[test]

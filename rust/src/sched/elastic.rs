@@ -137,7 +137,7 @@ mod tests {
         ];
         // job 0 previously held the full cluster, job 1 just arrived.
         let d = sched.decide(&reqs, &[8, 0], &[1e9, 1e9]);
-        assert_eq!(d.alloc.iter().sum::<u32>() <= 8, true);
+        assert!(d.alloc.iter().sum::<u32>() <= 8);
         assert!(d.alloc[1] > 0, "arrival gets admitted");
         assert!(d.alloc[0] < 8, "incumbent shrinks");
         assert!(d.penalties[0] > 0.0, "incumbent pays the rescale");

@@ -17,10 +17,12 @@ pub mod allocator;
 pub mod cache;
 pub mod elastic;
 pub mod job;
+pub mod placement;
 pub mod simulate;
 
 pub use allocator::{allocate, check_invariants, AllocRequest};
 pub use cache::{CacheStats, CurvePoint, FrontierCache, ProfileCurve};
 pub use elastic::{manifest_param_bytes, price_moves, Decision, ElasticScheduler, RescaleModel};
 pub use job::{JobSpec, Workload};
+pub use placement::{mixed_grants, place, Placement};
 pub use simulate::{run_workload, JobOutcome, MultiJobReport, Policy, SchedConfig};

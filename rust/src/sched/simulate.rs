@@ -110,6 +110,14 @@ pub struct MultiJobReport {
     /// Jobs infeasible at every candidate parallelism (dropped at
     /// arrival).
     pub unschedulable: Vec<usize>,
+    /// Grants (re)applied during the run whose concrete placement had to
+    /// mix device generations (0 on homogeneous clusters; placement
+    /// prefers same-generation contiguous grants and mixes only when
+    /// forced). Heuristic indicator, not a persistent assignment: the
+    /// packing is recomputed from scratch at each event (see the
+    /// count-based-allocation approximation in DESIGN.md), and unchanged
+    /// allocations are not recounted.
+    pub mixed_grants: usize,
 }
 
 struct Active {
@@ -204,6 +212,7 @@ pub fn run_workload(
     let mut t = 0.0f64;
     let mut busy = 0.0f64;
     let mut total_rescales = 0usize;
+    let mut mixed_grant_total = 0usize;
     let mut peak_devices = 0u32;
     let mut unschedulable: Vec<usize> = Vec::new();
 
@@ -332,6 +341,18 @@ pub fn run_workload(
             }
         };
 
+        // ---- concrete placement of the new allocation: same-generation
+        // contiguous ranges preferred. Count mixing only for grants being
+        // (re)applied at this event, so an unchanged mixed grant is not
+        // recounted on every later arrival/completion.
+        let placed = super::placement::place(cluster, &decision.alloc);
+        for (k, p) in placed.iter().enumerate() {
+            let applied = decision.alloc[k] != current[k];
+            if applied && p.as_ref().is_some_and(|p| p.generations > 1) {
+                mixed_grant_total += 1;
+            }
+        }
+
         // ---- apply, charging rescale penalties on moved jobs.
         total_rescales += decision.n_rescaled;
         for (k, &i) in active.iter().enumerate() {
@@ -390,6 +411,7 @@ pub fn run_workload(
         total_rescales,
         peak_devices,
         unschedulable,
+        mixed_grants: mixed_grant_total,
     }
 }
 

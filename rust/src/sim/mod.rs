@@ -125,15 +125,20 @@ pub fn simulate(
             }
         }
 
-        // ---- compute (forward + backward), jittered per device.
+        // ---- compute (forward + backward), jittered per device, at each
+        // device's own rate: `base` is the bottleneck (slowest-participant)
+        // time from Eq. 1, faster generations finish their shards early and
+        // wait at the next barrier — stragglers emerge naturally on mixed
+        // clusters. Devices outside the op's mesh mirror the bottleneck
+        // pace (rate clamped to 1), matching the homogeneous behaviour.
         let oc = op_cost(op, c, cluster, &comm);
         let base = oc.t_compute;
-        let mut max_end = 0.0f64;
+        let slow_flops = cluster.bottleneck_device(c.n_devices() as usize).flops;
         for dev in 0..d {
+            let rate = (slow_flops / cluster.device_at(dev).flops).min(1.0);
             let jit = 1.0 + cfg.jitter * rng.f64();
-            let dur = (base - LAUNCH_OVERHEAD) * jit + LAUNCH_OVERHEAD;
+            let dur = (base - LAUNCH_OVERHEAD) * rate * jit + LAUNCH_OVERHEAD;
             clocks[dev] += dur;
-            max_end = max_end.max(clocks[dev]);
         }
         compute_total += base;
 
@@ -207,6 +212,34 @@ mod tests {
         let b = simulate(&g, &s, &cluster, &SimConfig::default());
         assert_eq!(a.time, b.time);
         assert_eq!(a.memory, b.memory);
+    }
+
+    #[test]
+    fn mixed_generation_runs_at_the_slow_devices_pace() {
+        use crate::cluster::{DeviceSpec, LinkKind, Machine};
+        let g = tiny_mlp(256);
+        let s = Strategy::all_data_parallel(&g, 4);
+        let all_a = Cluster::from_machines(
+            "2x2xA100",
+            vec![
+                Machine::new(DeviceSpec::a100(), 2, LinkKind::NvLink),
+                Machine::new(DeviceSpec::a100(), 2, LinkKind::NvLink),
+            ],
+            LinkKind::IbRdma,
+        );
+        let mixed = Cluster::from_machines(
+            "2xA100+2xV100",
+            vec![
+                Machine::new(DeviceSpec::a100(), 2, LinkKind::NvLink),
+                Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+            ],
+            LinkKind::IbRdma,
+        );
+        let fast = simulate(&g, &s, &all_a, &SimConfig::default());
+        let slow = simulate(&g, &s, &mixed, &SimConfig::default());
+        // barriers synchronize at the slowest participant, so swapping two
+        // A100s for V100s cannot speed the iteration up.
+        assert!(fast.time <= slow.time, "all-A100 {} vs mixed {}", fast.time, slow.time);
     }
 
     #[test]

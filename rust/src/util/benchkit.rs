@@ -66,10 +66,23 @@ impl Bench {
         self
     }
 
+    /// CI quick mode: `BENCH_QUICK` in the environment caps every bench at
+    /// one warmup-free iteration pair so the whole suite finishes in
+    /// seconds (statistics are indicative only — the regression gate uses
+    /// a generous threshold).
+    fn quick() -> bool {
+        std::env::var("BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0")
+    }
+
     /// Run `f` repeatedly, record timing stats under `name`.
     /// The closure's return value is black-boxed to keep the work alive.
     pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchStats {
-        for _ in 0..self.warmup_iters {
+        let (min_iters, target_secs, max_iters, warmup_iters) = if Self::quick() {
+            (1, 0.0, 2, 0)
+        } else {
+            (self.min_iters, self.target_secs, self.max_iters, self.warmup_iters)
+        };
+        for _ in 0..warmup_iters {
             std::hint::black_box(f());
         }
         let mut samples = Vec::new();
@@ -78,9 +91,9 @@ impl Bench {
             let t0 = Instant::now();
             std::hint::black_box(f());
             samples.push(t0.elapsed().as_secs_f64());
-            let done_iters = samples.len() >= self.min_iters;
-            let done_time = start.elapsed().as_secs_f64() >= self.target_secs;
-            if (done_iters && done_time) || samples.len() >= self.max_iters {
+            let done_iters = samples.len() >= min_iters;
+            let done_time = start.elapsed().as_secs_f64() >= target_secs;
+            if (done_iters && done_time) || samples.len() >= max_iters {
                 break;
             }
         }
@@ -105,12 +118,43 @@ impl Bench {
         &self.results
     }
 
-    /// Print the closing summary block.
+    /// Print the closing summary block; when `BENCH_JSON_DIR` is set, also
+    /// write this group's stats there for the CI regression gate.
     pub fn finish(&self) {
         println!("\n== bench group `{}`: {} benchmarks ==", self.group, self.results.len());
         for r in &self.results {
             println!("  {}", r.line());
         }
+        if let Some(dir) = std::env::var_os("BENCH_JSON_DIR") {
+            let dir = std::path::PathBuf::from(dir);
+            match self.save_json(&dir) {
+                Ok(path) => println!("[bench json: {}]", path.display()),
+                Err(e) => eprintln!("warning: could not write bench json: {e}"),
+            }
+        }
+    }
+
+    /// Write this group's stats as `<dir>/<group>.json` (hand-rolled — no
+    /// serde in the offline build). `scripts/bench_merge.py` collects the
+    /// per-group files into one `BENCH_<sha>.json` artifact and
+    /// `scripts/bench_compare.py` gates regressions against
+    /// `BENCH_baseline.json`.
+    pub fn save_json(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let mut s = String::new();
+        s.push_str(&format!("{{\n  \"group\": \"{}\",\n  \"results\": [\n", self.group));
+        for (i, r) in self.results.iter().enumerate() {
+            let sep = if i + 1 == self.results.len() { "" } else { "," };
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {:e}, \
+                 \"min_s\": {:e}, \"max_s\": {:e}, \"stddev_s\": {:e}}}{sep}\n",
+                r.name, r.iters, r.mean_s, r.min_s, r.max_s, r.stddev_s
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        let path = dir.join(format!("{}.json", self.group));
+        std::fs::write(&path, s)?;
+        Ok(path)
     }
 }
 
@@ -126,6 +170,25 @@ mod tests {
         let s = b.run("noop", || 1 + 1).clone();
         assert!(s.iters >= 5);
         assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s + 1e-12);
+    }
+
+    #[test]
+    fn save_json_is_valid() {
+        let mut b = Bench::new("jsontest");
+        b.min_iters = 2;
+        b.target_secs = 0.0;
+        b.run("noop", || 1 + 1);
+        b.run("noop2", || 2 + 2);
+        let dir = std::env::temp_dir().join("tensoropt_benchkit_json_test");
+        let path = b.save_json(&dir).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"group\": \"jsontest\""));
+        assert!(s.contains("\"name\": \"noop\""));
+        assert!(s.contains("\"name\": \"noop2\""));
+        // structural sanity: balanced braces/brackets, no trailing comma.
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+        assert!(!s.contains(",\n  ]"));
     }
 
     #[test]

@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""CI bench regression gate: fail when any benchmark's mean time regresses
+more than --threshold (default 25%) versus the checked-in baseline.
+
+A baseline with "placeholder": true disables the gate — promote a real
+CI-produced BENCH_<sha>.json artifact to BENCH_baseline.json to arm it.
+
+Usage:
+  bench_compare.py <baseline.json> <new.json> [--threshold 0.25]
+  bench_compare.py --self-test
+"""
+import argparse
+import json
+import sys
+
+
+def index(doc):
+    """Map (group, benchmark name) -> mean seconds."""
+    out = {}
+    for g in doc.get("groups", []):
+        for r in g.get("results", []):
+            out[(g["group"], r["name"])] = r["mean_s"]
+    return out
+
+
+def compare(base, new, threshold):
+    """Regressions beyond threshold: [((group, name), old_s, new_s)]."""
+    b, n = index(base), index(new)
+    regs = []
+    for key, old in sorted(b.items()):
+        cur = n.get(key)
+        if cur is not None and cur > old * (1.0 + threshold):
+            regs.append((key, old, cur))
+    return regs
+
+
+def self_test():
+    base = {"groups": [{"group": "g", "results": [
+        {"name": "a", "mean_s": 1.0}, {"name": "b", "mean_s": 1.0}]}]}
+    ok = {"groups": [{"group": "g", "results": [
+        {"name": "a", "mean_s": 1.2}, {"name": "b", "mean_s": 0.9}]}]}
+    bad = {"groups": [{"group": "g", "results": [
+        {"name": "a", "mean_s": 1.3}, {"name": "b", "mean_s": 1.0}]}]}
+    assert compare(base, ok, 0.25) == []
+    assert [k for k, _, _ in compare(base, bad, 0.25)] == [("g", "a")]
+    assert compare(base, {"groups": []}, 0.25) == []  # missing names skip
+    print("bench_compare self-test ok")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", nargs="?")
+    ap.add_argument("new", nargs="?")
+    ap.add_argument("--threshold", type=float, default=0.25)
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        self_test()
+        return
+    if not args.baseline or not args.new:
+        ap.error("baseline and new files are required (or --self-test)")
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    if base.get("placeholder"):
+        print("baseline is a placeholder — recording only, regression gate disabled.")
+        print("promote this run's BENCH_<sha>.json artifact to BENCH_baseline.json to arm it.")
+        return
+    regs = compare(base, new, args.threshold)
+    for (group, name), old, cur in regs:
+        pct = (cur / old - 1.0) * 100.0
+        print(f"REGRESSION {group}/{name}: {old:.6g}s -> {cur:.6g}s (+{pct:.1f}%)")
+    missing = [k for k in index(base) if k not in index(new)]
+    if missing:
+        print(f"note: {len(missing)} baseline benchmarks missing from this run")
+    if regs:
+        sys.exit(1)
+    print(f"bench gate ok: {len(index(new))} benchmarks, none regressed "
+          f"beyond {args.threshold * 100:.0f}% of baseline")
+
+
+if __name__ == "__main__":
+    main()

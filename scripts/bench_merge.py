@@ -1,0 +1,33 @@
+#!/usr/bin/env python3
+"""Merge the per-group bench JSONs written by util::benchkit (one file per
+bench binary under BENCH_JSON_DIR) into a single BENCH_<sha>.json artifact
+for CI upload and regression gating.
+
+Usage: bench_merge.py <json_dir> <out_file>
+"""
+import glob
+import json
+import os
+import sys
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit("usage: bench_merge.py <json_dir> <out_file>")
+    json_dir, out_file = sys.argv[1], sys.argv[2]
+    groups = []
+    for path in sorted(glob.glob(os.path.join(json_dir, "*.json"))):
+        with open(path) as f:
+            groups.append(json.load(f))
+    if not groups:
+        sys.exit(f"no bench JSONs found under {json_dir}")
+    doc = {"sha": os.environ.get("GITHUB_SHA", "local"), "groups": groups}
+    with open(out_file, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    n = sum(len(g.get("results", [])) for g in groups)
+    print(f"wrote {out_file}: {n} benchmarks in {len(groups)} groups")
+
+
+if __name__ == "__main__":
+    main()
