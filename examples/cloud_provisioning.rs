@@ -1,62 +1,143 @@
 //! Cloud provisioning (the paper's §1 motivation): a user renting GPUs
-//! needs the cost-vs-efficiency trade-off to decide how much to buy. The
-//! cost frontier gives the whole continuum in one search: we price V100
-//! instances per GPU-hour, sweep parallelism with the `profiling` option,
-//! and report $-per-epoch vs wall-time so the user can pick a point.
+//! needs the cost-vs-efficiency trade-off to decide how much to buy.
+//!
+//! This used to hand-roll a $/GPU-hour constant next to the profiling
+//! sweep; it now drives the real pricing layer end to end: the FT search
+//! runs *priced* (every frontier tuple carries dollars as a third
+//! objective), candidate cluster sizes are pooled into one 3-D Pareto set
+//! by `exp::provision`, and the two questions a tenant actually asks —
+//! cheapest under a deadline, fastest under a budget — are answered from
+//! that set, for both on-demand and spot billing.
 //!
 //! Run: `cargo run --release --example cloud_provisioning`
 
 use tensoropt::cluster::Cluster;
-use tensoropt::coordinator::{FindResult, SearchOption, Session};
-use tensoropt::graph::models::{transformer_lm, TransformerCfg};
+use tensoropt::cost::comm::CommModel;
+use tensoropt::cost::pricing::{self, Billing};
+use tensoropt::exp::provision::{
+    candidates, cheapest_under_deadline, fastest_under_budget, pareto, ProvisionCfg,
+};
+use tensoropt::exp::GB;
+use tensoropt::frontier::{reduce, Mode, Tuple};
+use tensoropt::ft::{frontier_search, FtOptions};
+use tensoropt::graph::models;
 use tensoropt::util::table::Table;
 
-const PRICE_PER_GPU_HOUR: f64 = 3.06; // p3.2xlarge-style V100 pricing
-const ITERS_PER_EPOCH: f64 = 5_000.0;
+const ITERS_PER_EPOCH: u64 = 5_000;
 
 fn main() -> anyhow::Result<()> {
-    let graph = transformer_lm(TransformerCfg::default());
-    let session = Session::new(graph, Cluster::paper_testbed());
-    let parallelisms = vec![4u32, 8, 16, 32];
-    let FindResult::Profile(rows) =
-        session.find_strategy(&SearchOption::Profiling { parallelisms })?
-    else {
-        unreachable!()
+    let cluster = Cluster::paper_testbed(); // 2 x 8 x V100 @ $3.06/GPU-hour
+    let cfg = ProvisionCfg {
+        model: "transformer".into(),
+        batch: 256,
+        iters: ITERS_PER_EPOCH,
+        billing: Billing::OnDemand,
+        sizes: vec![4, 8, 16],
     };
 
+    let cands = candidates(&cluster, &cfg);
+    let frontier = pareto(&cands);
     let mut t = Table::new(
-        "cloud provisioning: transformer, $3.06/GPU-hour, 5k iters/epoch",
-        &["gpus", "s/iter", "epoch (h)", "$ / epoch", "note"],
+        &format!(
+            "transformer epoch pricing on {} (on-demand): {} candidates, {} Pareto-optimal",
+            cluster.name,
+            cands.len(),
+            frontier.len()
+        ),
+        &["gpus", "mem_gb", "epoch_h", "usd", "cluster_usd_h"],
     );
-    let mut best: Option<(u32, f64)> = None;
-    for r in &rows {
-        match r.best_time {
-            None => t.row(&[r.parallelism.to_string(), "OOM".into(), "-".into(), "-".into(),
-                "cannot run: model does not fit".into()]),
-            Some(s) => {
-                let epoch_h = s * ITERS_PER_EPOCH / 3600.0;
-                let dollars = epoch_h * r.parallelism as f64 * PRICE_PER_GPU_HOUR;
-                if best.map_or(true, |(_, b)| dollars < b) {
-                    best = Some((r.parallelism, dollars));
-                }
-                t.row(&[
-                    r.parallelism.to_string(),
-                    format!("{s:.3}"),
-                    format!("{epoch_h:.2}"),
-                    format!("{dollars:.0}"),
-                    String::new(),
-                ]);
-            }
-        }
+    for c in &frontier {
+        t.row(&[
+            c.gpus.to_string(),
+            format!("{:.2}", c.mem / GB),
+            format!("{:.2}", c.wall_s / 3600.0),
+            format!("{:.0}", c.usd),
+            format!("{:.2}", c.usd_hour),
+        ]);
     }
     println!("{}", t.render());
-    if let Some((gpus, dollars)) = best {
+
+    let fastest = frontier
+        .iter()
+        .map(|c| c.wall_s)
+        .fold(f64::INFINITY, f64::min);
+    let cheapest = frontier.iter().map(|c| c.usd).fold(f64::INFINITY, f64::min);
+
+    if let Some(c) = cheapest_under_deadline(&frontier, fastest * 1.5) {
         println!(
-            "cheapest feasible configuration: {gpus} GPUs at ~${dollars:.0}/epoch \
-             (per-GPU throughput falls with parallelism, so the smallest feasible \
-             allocation is usually the most cost-effective — the paper's \
-             mini-parallelism rationale)"
+            "cheapest inside 1.5x the best epoch time ({:.2}h): {} GPUs at ${:.0}/epoch \
+             — per-GPU throughput falls with parallelism, so the smallest allocation \
+             that meets the deadline is the cost-effective one (the paper's \
+             mini-parallelism rationale, now in dollars)",
+            fastest * 1.5 / 3600.0,
+            c.gpus,
+            c.usd
         );
     }
+    if let Some(c) = fastest_under_budget(&frontier, cheapest * 1.5) {
+        println!(
+            "fastest inside 1.5x the cheapest epoch (${:.0}): {} GPUs finishing in {:.2}h",
+            cheapest * 1.5,
+            c.gpus,
+            c.wall_s / 3600.0
+        );
+    }
+
+    // The same questions can be asked of a single pooled `Frontier`: map
+    // each size's priced per-iteration tuples to whole-epoch (mem,
+    // seconds, dollars) points and union them. Across sizes cost is no
+    // longer proportional to time, so the 3-D selectors become real
+    // trade-off queries (within one fixed-rate search they degenerate to
+    // min-time).
+    let g = models::by_name("transformer", 256).expect("model zoo");
+    let iters = ITERS_PER_EPOCH as f64;
+    let mut pooled: Vec<Tuple> = Vec::new();
+    for n in [4usize, 16] {
+        let sub = cluster.sub_cluster(n);
+        let comm = CommModel::profile(&sub);
+        let rate = pricing::usd_hour(&sub, Billing::OnDemand);
+        let r =
+            frontier_search(&g, &sub, &comm, FtOptions::new(n as u32).with_pricing(rate));
+        let budget = sub.min_device_memory() / 1.1;
+        for t in r.frontier.tuples.iter().filter(|t| t.mem <= budget) {
+            pooled.push(Tuple::with_cost(
+                t.mem,
+                t.time * iters,
+                t.cost * iters,
+                t.trace.clone(),
+            ));
+        }
+    }
+    let pooled = reduce(pooled, Mode::Pareto);
+    if let (Some(fast), Some(cheap)) = (pooled.min_time(), pooled.min_cost()) {
+        // feasibility was filtered per size above, so the memory budget is
+        // unconstrained here.
+        if let Some(pick) = pooled.min_cost_within(f64::INFINITY, fast.time * 1.5) {
+            println!(
+                "pooled 4/16-GPU frontier ({} Pareto points): cheapest epoch within \
+                 1.5x the fastest ({:.2}h) costs ${:.0}",
+                pooled.len(),
+                fast.time * 1.5 / 3600.0,
+                pick.cost
+            );
+        }
+        if let Some(pick) = pooled.min_time_within_cost(f64::INFINITY, cheap.cost * 1.5) {
+            println!(
+                "and the fastest epoch within 1.5x the cheapest (${:.0}) takes {:.2}h",
+                cheap.cost * 1.5,
+                pick.time / 3600.0
+            );
+        }
+    }
+
+    // spot billing rescales every dollar figure without changing the
+    // frontier itself — rerun the sweep to show the discount.
+    let spot = pareto(&candidates(&cluster, &ProvisionCfg { billing: Billing::Spot, ..cfg }));
+    let spot_cheapest = spot.iter().map(|c| c.usd).fold(f64::INFINITY, f64::min);
+    println!(
+        "same run on spot capacity: cheapest epoch ${spot_cheapest:.0} vs ${cheapest:.0} \
+         on-demand ({}% off)",
+        ((1.0 - spot_cheapest / cheapest) * 100.0).round()
+    );
     Ok(())
 }

@@ -23,8 +23,11 @@ use crate::parallel::{ParallelConfig, Strategy};
 /// Axis classes standing in for MeshTF's shared logical dim names.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AxisClass {
+    /// Sample dimension (data parallelism).
     Batch,
+    /// Output-feature/channel dimension (model parallelism).
     Feature,
+    /// Contraction dimension (induces partial sums).
     Reduce,
 }
 
@@ -64,9 +67,13 @@ fn induced_config(op: &Op, mesh: &crate::parallel::Mesh, classes: &[Option<AxisC
 /// One evaluated global option.
 #[derive(Debug, Clone)]
 pub struct MeshTfOption {
+    /// Mesh shape label (e.g. `[8,2]`).
     pub mesh_label: String,
+    /// Axis class assigned to each mesh dim (`None` = replicated).
     pub classes: Vec<Option<AxisClass>>,
+    /// The per-op strategy the global assignment induces.
     pub strategy: Strategy,
+    /// Evaluated cost of the strategy.
     pub cost: StrategyCost,
 }
 

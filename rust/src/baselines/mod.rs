@@ -31,8 +31,11 @@ pub use mesh_tf::mesh_tensorflow_frontier;
 /// A named single-strategy baseline result.
 #[derive(Debug, Clone)]
 pub struct BaselinePoint {
+    /// Baseline label (table row name).
     pub name: &'static str,
+    /// The strategy the baseline picked.
     pub strategy: Strategy,
+    /// Evaluated cost of the strategy.
     pub cost: StrategyCost,
 }
 

@@ -38,6 +38,7 @@ pub enum LinkKind {
 }
 
 impl LinkKind {
+    /// The (bandwidth, latency) profile anchor for this link class.
     pub fn link(self) -> Link {
         match self {
             LinkKind::NvLink => Link { bandwidth: 130e9, latency: 5e-6 },
@@ -73,17 +74,36 @@ pub struct DeviceSpec {
     pub memory: f64,
     /// Achievable HBM bandwidth, bytes/s (for bandwidth-bound ops).
     pub mem_bw: f64,
+    /// On-demand rental rate in $/GPU-hour (cloud list pricing; the test
+    /// `preset_prices_match_docs` pins each preset's figure). Spot
+    /// discounts are a [`crate::cost::pricing::Billing`] concern, not a
+    /// device property.
+    pub usd_hour: f64,
 }
 
 impl DeviceSpec {
+    /// V100 16 GB SXM2. Priced like AWS p3 on-demand: $3.06/GPU-hour.
     pub fn v100() -> Self {
-        Self { gen: "V100", flops: 8.6e12, memory: 16.0 * 1024f64.powi(3), mem_bw: 750e9 }
+        Self {
+            gen: "V100",
+            flops: 8.6e12,
+            memory: 16.0 * 1024f64.powi(3),
+            mem_bw: 750e9,
+            usd_hour: 3.06,
+        }
     }
 
     /// A100 40 GB SXM: TF32 training steps achieve roughly 2.2x the V100
-    /// rate; HBM2e delivers ~1.4 TB/s effective.
+    /// rate; HBM2e delivers ~1.4 TB/s effective. Priced like AWS p4d
+    /// on-demand: $32.77/machine-hour over 8 GPUs ≈ $4.10/GPU-hour.
     pub fn a100() -> Self {
-        Self { gen: "A100", flops: 19.0e12, memory: 40.0 * 1024f64.powi(3), mem_bw: 1.4e12 }
+        Self {
+            gen: "A100",
+            flops: 19.0e12,
+            memory: 40.0 * 1024f64.powi(3),
+            mem_bw: 1.4e12,
+            usd_hour: 4.10,
+        }
     }
 }
 
@@ -91,14 +111,24 @@ impl DeviceSpec {
 /// intra-machine interconnect.
 #[derive(Debug, Clone)]
 pub struct Machine {
+    /// Accelerator model installed in this machine.
     pub device: DeviceSpec,
+    /// Number of GPUs in this machine.
     pub gpus: usize,
+    /// Intra-machine interconnect between this machine's GPUs.
     pub intra: LinkKind,
 }
 
 impl Machine {
+    /// A machine with `gpus` copies of `device` joined by `intra`.
     pub fn new(device: DeviceSpec, gpus: usize, intra: LinkKind) -> Self {
         Self { device, gpus, intra }
+    }
+
+    /// On-demand rental rate of the whole machine in $/hour (GPU-instance
+    /// style pricing: host, NICs and power ride on the per-GPU rate).
+    pub fn usd_hour(&self) -> f64 {
+        self.gpus as f64 * self.device.usd_hour
     }
 }
 
@@ -107,7 +137,9 @@ impl Machine {
 /// machine-major (machine 0's GPUs first).
 #[derive(Debug, Clone)]
 pub struct Cluster {
+    /// Human-readable cluster description (presets fill this in).
     pub name: String,
+    /// The machine list; devices are numbered machine-major.
     pub machines: Vec<Machine>,
     /// `inter[i][j]` is the link class between machines `i` and `j`
     /// (symmetric; the diagonal is unused).
@@ -321,12 +353,23 @@ impl Cluster {
 
     // -------------------------------------------------------------- accessors
 
+    /// Number of machines in the cluster.
     pub fn n_machines(&self) -> usize {
         self.machines.len()
     }
 
+    /// Total device (GPU) count across all machines.
     pub fn n_devices(&self) -> usize {
         self.machines.iter().map(|m| m.gpus).sum()
+    }
+
+    /// On-demand rental rate of the whole cluster in $/hour: the sum of
+    /// the per-machine rates. A `sub_cluster` holding fewer GPUs rents
+    /// (and pays for) only the devices it keeps, per-GPU-instance style.
+    /// Billing-model discounts (spot) are applied by
+    /// [`crate::cost::pricing`].
+    pub fn usd_hour(&self) -> f64 {
+        self.machines.iter().map(|m| m.usd_hour()).sum()
     }
 
     /// Machine index of a device (devices are numbered machine-major).
@@ -648,6 +691,21 @@ mod tests {
         assert_eq!(Cluster::big_little().min_machine_gpus(), 2);
         assert_eq!(Cluster::paper_testbed().min_machine_gpus(), 8);
         assert_eq!(Cluster::with_gpus(12).min_machine_gpus(), 4);
+    }
+
+    /// One source of truth for pricing: each preset's code value equals
+    /// its doc-stated $/GPU-hour rate, and cluster rates are machine sums.
+    #[test]
+    fn preset_prices_match_docs() {
+        assert_eq!(DeviceSpec::v100().usd_hour, 3.06);
+        assert_eq!(DeviceSpec::a100().usd_hour, 4.10);
+        let c = Cluster::paper_testbed(); // 2 x 8 x V100
+        assert!((c.usd_hour() - 16.0 * 3.06).abs() < 1e-9);
+        let bl = Cluster::big_little(); // 8xA100 + 2xV100
+        assert!((bl.usd_hour() - (8.0 * 4.10 + 2.0 * 3.06)).abs() < 1e-9);
+        // sub-allocations pay only for the devices they keep.
+        assert!((bl.sub_cluster(9).usd_hour() - (8.0 * 4.10 + 3.06)).abs() < 1e-9);
+        assert!(bl.usd_hour() > c.sub_cluster(10).usd_hour());
     }
 
     #[test]

@@ -11,11 +11,14 @@ use anyhow::{bail, Context, Result};
 /// One parameter buffer.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParamSpec {
+    /// Buffer name (train-step argument name).
     pub name: String,
+    /// Dense shape.
     pub shape: Vec<usize>,
 }
 
 impl ParamSpec {
+    /// Number of elements.
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
     }
@@ -24,13 +27,16 @@ impl ParamSpec {
 /// One model scale shipped as artifacts.
 #[derive(Debug, Clone, Default)]
 pub struct ModelMeta {
+    /// Model tag ("small", "e2e", ...).
     pub tag: String,
+    /// Hyper-parameters recorded by the AOT exporter.
     pub hyper: HashMap<String, i64>,
     /// Parameters in train-step argument order.
     pub params: Vec<ParamSpec>,
 }
 
 impl ModelMeta {
+    /// Required hyper-parameter lookup.
     pub fn hyper_get(&self, key: &str) -> Result<i64> {
         self.hyper
             .get(key)
@@ -38,6 +44,7 @@ impl ModelMeta {
             .with_context(|| format!("model `{}` missing hyper `{key}`", self.tag))
     }
 
+    /// Total parameter element count across all buffers.
     pub fn n_params(&self) -> usize {
         self.params.iter().map(|p| p.elems()).sum()
     }
@@ -46,11 +53,14 @@ impl ModelMeta {
 /// The parsed manifest.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
+    /// Models by tag.
     pub models: HashMap<String, ModelMeta>,
+    /// Tensor-parallel shard count the artifacts were exported for.
     pub tp_shards: usize,
 }
 
 impl Manifest {
+    /// Parse the `manifest.txt` format written by the AOT exporter.
     pub fn parse(text: &str) -> Result<Manifest> {
         let mut m = Manifest::default();
         for (lno, line) in text.lines().enumerate() {
@@ -97,6 +107,7 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Load `<dir>/manifest.txt`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let path = dir.as_ref().join("manifest.txt");
         let text = std::fs::read_to_string(&path)
@@ -104,6 +115,7 @@ impl Manifest {
         Self::parse(&text)
     }
 
+    /// Model lookup by tag.
     pub fn model(&self, tag: &str) -> Result<&ModelMeta> {
         self.models.get(tag).with_context(|| format!("unknown model `{tag}`"))
     }

@@ -4,6 +4,7 @@
 
 use crate::cluster::Cluster;
 use crate::cost::comm::CommModel;
+use crate::cost::pricing::{self, Billing};
 use crate::ft::{frontier_search, FtOptions, FtResult};
 use crate::graph::Graph;
 use crate::parallel::Strategy;
@@ -26,19 +27,36 @@ pub enum SearchOption {
 /// A chosen plan.
 #[derive(Debug, Clone)]
 pub struct Plan {
+    /// Device count the plan parallelizes over.
     pub parallelism: u32,
+    /// Per-op parallelization configurations.
     pub strategy: Strategy,
+    /// Estimated per-iteration time in seconds.
     pub est_time: f64,
+    /// Estimated peak per-device memory in bytes.
     pub est_memory: f64,
+    /// Estimated dollars per iteration at the session's billing model
+    /// (0.0 only if the sub-cluster priced out at $0, which no preset
+    /// does).
+    pub est_usd_iter: f64,
 }
 
 /// One profiling row: parallelism -> best feasible time (None = cannot
 /// run: even the min-memory strategy overflows).
 #[derive(Debug, Clone)]
 pub struct ProfilePoint {
+    /// Device count this row was searched at.
     pub parallelism: u32,
+    /// Best feasible per-iteration time (None = model does not fit).
     pub best_time: Option<f64>,
+    /// Memory of the min-memory strategy (the mini-parallelism test).
     pub min_memory: f64,
+    /// Rental rate of the sub-cluster at this parallelism, $/hour under
+    /// the session's billing model.
+    pub usd_hour: f64,
+    /// Dollars per iteration of the best-time strategy (None iff
+    /// `best_time` is None).
+    pub best_usd_iter: Option<f64>,
 }
 
 /// One profiling row together with the plan that achieved its best time
@@ -47,22 +65,38 @@ pub struct ProfilePoint {
 /// to hand to the simulator.
 #[derive(Debug, Clone)]
 pub struct ProfiledPlan {
+    /// The profiling row.
     pub point: ProfilePoint,
+    /// The strategy that achieved the row's best time (None = infeasible).
     pub plan: Option<Plan>,
 }
 
 /// A TensorOpt session: model graph + cluster, with cached FT results per
 /// parallelism.
 pub struct Session {
+    /// The model being parallelized.
     pub graph: Graph,
+    /// The cluster searches run against (sub-clusters of it at reduced
+    /// parallelism).
     pub cluster: Cluster,
+    /// Prototype search options cloned per FT search.
     pub opts_proto: FtOptions,
+    /// Billing model used to dollar-stamp every search (on-demand by
+    /// default; see [`Session::with_billing`]).
+    pub billing: Billing,
 }
 
 impl Session {
+    /// New session on `cluster` with default options (on-demand billing).
     pub fn new(graph: Graph, cluster: Cluster) -> Self {
         let opts_proto = FtOptions::new(cluster.n_devices() as u32);
-        Self { graph, cluster, opts_proto }
+        Self { graph, cluster, opts_proto, billing: Billing::OnDemand }
+    }
+
+    /// Switch the billing model (spot vs on-demand) used to price plans.
+    pub fn with_billing(mut self, billing: Billing) -> Self {
+        self.billing = billing;
+        self
     }
 
     fn ft_at(&self, d: u32) -> FtResult {
@@ -78,6 +112,7 @@ impl Session {
         // on (never search meshes wider than the devices that exist).
         opts.devices = cluster.n_devices() as u32;
         opts.threads = threads;
+        opts.usd_hour = pricing::usd_hour(&cluster, self.billing);
         frontier_search(&self.graph, &cluster, &comm, opts)
     }
 
@@ -108,15 +143,25 @@ impl Session {
             let best = r.frontier.min_time_within(budget);
             let plan = best.map(|t| {
                 let (strategy, _) = r.strategy_of(t);
-                Plan { parallelism: d, strategy, est_time: t.time, est_memory: t.mem }
+                Plan {
+                    parallelism: d,
+                    strategy,
+                    est_time: t.time,
+                    est_memory: t.mem,
+                    est_usd_iter: t.cost,
+                }
             });
             let min_memory =
                 r.frontier.min_mem().map(|t| t.mem).unwrap_or(f64::INFINITY);
+            let usd_hour =
+                pricing::usd_hour(&self.cluster.sub_cluster(d as usize), self.billing);
             ProfiledPlan {
                 point: ProfilePoint {
                     parallelism: d,
                     best_time: best.map(|t| t.time),
                     min_memory,
+                    usd_hour,
+                    best_usd_iter: best.map(|t| t.cost),
                 },
                 plan,
             }
@@ -148,6 +193,7 @@ impl Session {
                     strategy,
                     est_time: t.time,
                     est_memory: t.mem,
+                    est_usd_iter: t.cost,
                 }))
             }
             SearchOption::MiniParallelism { max_parallelism } => {
@@ -167,6 +213,7 @@ impl Session {
                                 strategy,
                                 est_time: t.time,
                                 est_memory: t.mem,
+                                est_usd_iter: t.cost,
                             }));
                         }
                     }
@@ -190,7 +237,9 @@ impl Session {
 
 /// Result of `find_strategy`.
 pub enum FindResult {
+    /// A single chosen plan (mini-time / mini-parallelism).
     Plan(Plan),
+    /// One row per requested parallelism (profiling).
     Profile(Vec<ProfilePoint>),
 }
 
@@ -250,6 +299,32 @@ mod tests {
             assert_eq!(Some(plan.est_time), pp.point.best_time);
             assert_eq!(plan.strategy.configs.len(), s.graph.n_ops());
         }
+    }
+
+    #[test]
+    fn profile_rows_price_consistently() {
+        use crate::cost::pricing::{self, Billing};
+        let s = session();
+        for row in s.profile(&[1, 2, 4]) {
+            let sub = s.cluster.sub_cluster(row.parallelism as usize);
+            let rate = pricing::usd_hour(&sub, Billing::OnDemand);
+            assert!((row.usd_hour - rate).abs() < 1e-9);
+            let (t, usd) = (row.best_time.unwrap(), row.best_usd_iter.unwrap());
+            // dollars-per-iteration = time x the sub-cluster's $/s rate.
+            assert!(
+                (usd - t * rate / 3600.0).abs() <= usd * 1e-9 + 1e-18,
+                "d={} usd {usd} vs t*rate {}",
+                row.parallelism,
+                t * rate / 3600.0
+            );
+            assert!(usd > 0.0);
+        }
+        // spot billing scales every price by the documented multiplier.
+        let spot = Session::new(tiny_mlp(256), Cluster::paper_testbed())
+            .with_billing(Billing::Spot);
+        let (a, b) = (s.profile(&[2]), spot.profile(&[2]));
+        let (od, sp) = (a[0].best_usd_iter.unwrap(), b[0].best_usd_iter.unwrap());
+        assert!((sp - od * pricing::SPOT_MULTIPLIER).abs() < od * 1e-6, "{sp} vs {od}");
     }
 
     #[test]

@@ -18,14 +18,19 @@ pub struct TrainerCfg {
     /// Virtual devices (data-parallel width; TP width comes from the
     /// manifest's `tp_shards`).
     pub devices: usize,
+    /// Training steps to run.
     pub steps: usize,
+    /// SGD learning rate.
     pub lr: f32,
+    /// Parameter-init / data RNG seed.
     pub seed: u64,
     /// Horovod-style fused gradient all-reduce (vs per-tensor).
     pub fused: bool,
+    /// Fusion bucket size in bytes (with `fused`).
     pub fusion_bucket_bytes: usize,
     /// Use the Pallas-kernel variant of the small train step.
     pub pallas: bool,
+    /// Steps between loss log lines (0 = silent).
     pub log_every: usize,
 }
 
@@ -50,9 +55,13 @@ impl Default for TrainerCfg {
 pub struct TrainReport {
     /// Mean loss per step.
     pub losses: Vec<f32>,
+    /// Total wall-clock seconds.
     pub wall_s: f64,
+    /// Executor time breakdown (compute/comm/optimizer).
     pub metrics: crate::runtime::ExecMetrics,
+    /// Trained parameter element count.
     pub n_params: usize,
+    /// Mean wall-clock seconds per training step.
     pub per_iter_s: f64,
 }
 

@@ -42,10 +42,12 @@ fn latency_steps(coll: Coll, g: u32) -> f64 {
 /// α–β ground truth with NIC contention.
 #[derive(Debug, Clone)]
 pub struct GroundTruthComm {
+    /// The device graph whose links are being priced.
     pub cluster: Cluster,
 }
 
 impl GroundTruthComm {
+    /// Oracle for `cluster`.
     pub fn new(cluster: Cluster) -> Self {
         Self { cluster }
     }
@@ -201,6 +203,7 @@ impl CollectiveCost for CommModel {
 /// nominal link bandwidth, ignoring latency and contention.
 #[derive(Debug, Clone)]
 pub struct NaiveComm {
+    /// The device graph whose links are being priced.
     pub cluster: Cluster,
 }
 

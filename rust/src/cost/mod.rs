@@ -1,10 +1,13 @@
 //! Execution-cost models: operator/edge costs (Eq. 1-2), whole-strategy
-//! evaluation (Eq. 3), and the three communication-time oracles of §3.2.
+//! evaluation (Eq. 3), the three communication-time oracles of §3.2, and
+//! the pricing layer converting (time, cluster) into dollars.
 
 pub mod comm;
 pub mod estimator;
 pub mod op_cost;
+pub mod pricing;
 
 pub use comm::{CommModel, GroundTruthComm, NaiveComm};
 pub use estimator::{eval_strategy, ReuseChoice, StrategyCost};
 pub use op_cost::{edge_costs, mesh_dim_crosses, op_cost, OpCost};
+pub use pricing::Billing;

@@ -23,6 +23,7 @@ pub const LAUNCH_OVERHEAD: f64 = 10e-6;
 /// Decomposed operator cost.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct OpCost {
+    /// Peak per-device bytes (params + grads + stashed activations).
     pub mem: f64,
     /// t_c: forward+backward compute.
     pub t_compute: f64,
@@ -31,6 +32,7 @@ pub struct OpCost {
 }
 
 impl OpCost {
+    /// Total operator time `t_c + t_s` (Eq. 1).
     pub fn time(&self) -> f64 {
         self.t_compute + self.t_sync
     }

@@ -1,0 +1,125 @@
+//! Pricing layer: convert (time, cluster) into dollars.
+//!
+//! The paper's §1 motivation is a cloud user who wants to "improve the
+//! efficiency or reduce the cost" of training; this module is where cost
+//! stops being a metaphor and becomes money. Raw on-demand $/GPU-hour
+//! rates live on [`DeviceSpec`](crate::cluster::DeviceSpec) (so mixed
+//! clusters price each machine at its own generation's rate); this module
+//! owns the *billing model* (on-demand vs spot), the time-to-dollars
+//! conversions, and the dollar cost of elastic rescales — the pieces the
+//! frontier search, the provisioning experiment and the scheduler all
+//! share.
+
+use crate::cluster::Cluster;
+
+/// Spot-market discount relative to on-demand list price (~68% off, the
+/// long-run average for GPU instances; interruptions are out of scope —
+/// the simulator treats spot capacity as stable).
+pub const SPOT_MULTIPLIER: f64 = 0.32;
+
+/// How rented capacity is billed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Billing {
+    /// On-demand list price.
+    #[default]
+    OnDemand,
+    /// Spot / preemptible price ([`SPOT_MULTIPLIER`] x on-demand).
+    Spot,
+}
+
+impl Billing {
+    /// Multiplier applied to on-demand list rates.
+    pub fn multiplier(self) -> f64 {
+        match self {
+            Billing::OnDemand => 1.0,
+            Billing::Spot => SPOT_MULTIPLIER,
+        }
+    }
+
+    /// CLI label.
+    pub fn name(self) -> &'static str {
+        match self {
+            Billing::OnDemand => "on-demand",
+            Billing::Spot => "spot",
+        }
+    }
+
+    /// Parse a CLI flag value (`ondemand` / `on-demand` / `spot`).
+    pub fn parse(s: &str) -> Option<Billing> {
+        match s {
+            "ondemand" | "on-demand" | "od" => Some(Billing::OnDemand),
+            "spot" => Some(Billing::Spot),
+            _ => None,
+        }
+    }
+}
+
+/// Rental rate of `cluster` in $/hour under `billing`.
+pub fn usd_hour(cluster: &Cluster, billing: Billing) -> f64 {
+    cluster.usd_hour() * billing.multiplier()
+}
+
+/// Rental rate of `cluster` in $/second under `billing`.
+pub fn usd_per_sec(cluster: &Cluster, billing: Billing) -> f64 {
+    usd_hour(cluster, billing) / 3600.0
+}
+
+/// Dollars to hold `cluster` for `time_s` seconds under `billing` — the
+/// core (time, cluster) -> $ conversion. Billing is wall-clock: devices
+/// cost money whether they compute or idle, which is exactly why slower-
+/// but-smaller points on a frontier can be the cheaper ones.
+pub fn usd(time_s: f64, cluster: &Cluster, billing: Billing) -> f64 {
+    time_s * usd_per_sec(cluster, billing)
+}
+
+/// Dollars burned by an elastic rescale: the job makes no progress for
+/// `downtime_s` (checkpoint, strategy re-search, re-shard, restart — see
+/// [`crate::sched::RescaleModel`]) while the devices keep billing. Charged
+/// at the *new* allocation's cluster rate, since that is what is being
+/// held during the move.
+pub fn rescale_usd(downtime_s: f64, cluster: &Cluster, billing: Billing) -> f64 {
+    usd(downtime_s, cluster, billing)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_are_consistent() {
+        let c = Cluster::with_gpus(4); // 4 x V100 at $3.06
+        let rate = usd_hour(&c, Billing::OnDemand);
+        assert!((rate - 4.0 * 3.06).abs() < 1e-9);
+        assert!((usd_per_sec(&c, Billing::OnDemand) - rate / 3600.0).abs() < 1e-12);
+        // one hour at the hourly rate costs the hourly rate.
+        assert!((usd(3600.0, &c, Billing::OnDemand) - rate).abs() < 1e-9);
+        assert_eq!(usd(0.0, &c, Billing::OnDemand), 0.0);
+    }
+
+    #[test]
+    fn spot_is_cheaper_by_the_documented_multiplier() {
+        let c = Cluster::mixed_generation();
+        let od = usd_hour(&c, Billing::OnDemand);
+        let spot = usd_hour(&c, Billing::Spot);
+        assert!((spot - od * SPOT_MULTIPLIER).abs() < 1e-9);
+        assert!(spot < od);
+    }
+
+    #[test]
+    fn rescale_dollars_scale_with_downtime() {
+        let c = Cluster::with_gpus(8);
+        let a = rescale_usd(10.0, &c, Billing::OnDemand);
+        let b = rescale_usd(20.0, &c, Billing::OnDemand);
+        assert!((b - 2.0 * a).abs() < 1e-9);
+        assert!(a > 0.0);
+    }
+
+    #[test]
+    fn billing_parse_roundtrip() {
+        assert_eq!(Billing::parse("spot"), Some(Billing::Spot));
+        assert_eq!(Billing::parse("ondemand"), Some(Billing::OnDemand));
+        assert_eq!(Billing::parse("on-demand"), Some(Billing::OnDemand));
+        assert_eq!(Billing::parse("free"), None);
+        assert_eq!(Billing::default(), Billing::OnDemand);
+    }
+}

@@ -21,6 +21,7 @@ fn feasible(mem: f64, cluster: &Cluster) -> bool {
     mem <= cluster.min_device_memory() / 1.1
 }
 
+/// Run the Figure-8 sweep (frontier vs parallelism) for `model`.
 pub fn run(model: &str, parallelisms: &[u32]) -> Table {
     let g = models::by_name(model, 256).unwrap_or_else(|| panic!("unknown model {model}"));
     let mut t = Table::new(

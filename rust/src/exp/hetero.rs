@@ -30,12 +30,17 @@ use super::GB;
 /// Experiment knobs (the test scales them down).
 #[derive(Debug, Clone)]
 pub struct HeteroCfg {
+    /// Model zoo name.
     pub model: String,
+    /// Global batch size.
     pub batch: i64,
+    /// Jobs in the synthetic workload.
     pub n_jobs: usize,
+    /// Mean exponential inter-arrival gap in seconds.
     pub mean_interarrival_s: f64,
     /// Iteration counts drawn uniformly from [min, max).
     pub iters: (u64, u64),
+    /// Workload RNG seed.
     pub seed: u64,
 }
 
@@ -61,11 +66,17 @@ pub fn presets() -> Vec<Cluster> {
 /// execute both strategies on the real cluster.
 #[derive(Debug, Clone, Copy)]
 pub struct PlanGap {
+    /// Estimated time of the homogeneous-assumed plan.
     pub est_homo: f64,
+    /// Ground-truth time of that plan on the real cluster.
     pub sim_homo: f64,
+    /// Actual memory of the homogeneous-assumed plan.
     pub mem_homo: f64,
+    /// Estimated time of the topology-aware plan.
     pub est_aware: f64,
+    /// Ground-truth time of the topology-aware plan.
     pub sim_aware: f64,
+    /// Actual memory of the topology-aware plan.
     pub mem_aware: f64,
     /// Real feasibility budget (smallest device's memory / 1.1).
     pub budget: f64,
@@ -86,6 +97,7 @@ fn plan_on(g: &crate::graph::Graph, belief: &Cluster, real: &Cluster) -> (f64, f
     (t.time, sim.time, sim.memory)
 }
 
+/// Search under both beliefs and execute both plans on the real cluster.
 pub fn plan_gap(cluster: &Cluster, model: &str, batch: i64) -> PlanGap {
     let g = models::by_name(model, batch)
         .unwrap_or_else(|| panic!("unknown model `{model}`"));
@@ -101,14 +113,21 @@ pub fn plan_gap(cluster: &Cluster, model: &str, batch: i64) -> PlanGap {
 /// elastic frontier policy under each belief.
 #[derive(Debug, Clone, Copy)]
 pub struct SchedGap {
+    /// Makespan under the homogeneous belief.
     pub makespan_homo: f64,
+    /// Makespan with full topology knowledge.
     pub makespan_aware: f64,
+    /// Mean JCT under the homogeneous belief.
     pub jct_homo: f64,
+    /// Mean JCT with full topology knowledge.
     pub jct_aware: f64,
+    /// Mixed-generation grants under the homogeneous belief.
     pub mixed_homo: usize,
+    /// Mixed-generation grants with full topology knowledge.
     pub mixed_aware: usize,
 }
 
+/// Run the same workload through the elastic scheduler under each belief.
 pub fn sched_gap(cluster: &Cluster, cfg: &HeteroCfg) -> SchedGap {
     let jobs = Workload::synthetic(
         cfg.n_jobs,

@@ -6,6 +6,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod hetero;
+pub mod provision;
 pub mod sched;
 pub mod table1;
 pub mod table2;
@@ -19,6 +20,7 @@ pub fn results_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results")
 }
 
+/// Bytes per gigabyte (table formatting).
 pub const GB: f64 = 1024.0 * 1024.0 * 1024.0;
 
 /// Locate the *turning point* of a frontier (§5.1): walking from low to

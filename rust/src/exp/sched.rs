@@ -12,13 +12,17 @@ use crate::util::table::Table;
 /// Experiment configuration (CLI-exposed knobs).
 #[derive(Debug, Clone)]
 pub struct SchedExpCfg {
+    /// Cluster size in devices.
     pub gpus: u32,
+    /// Jobs in the synthetic workload.
     pub n_jobs: usize,
     /// (model name, batch) pairs cycled across jobs.
     pub models: Vec<(String, i64)>,
     /// Iteration counts drawn uniformly from [min, max).
     pub iters: (u64, u64),
+    /// Mean exponential inter-arrival gap in seconds.
     pub mean_interarrival_s: f64,
+    /// Workload RNG seed.
     pub seed: u64,
 }
 
@@ -71,7 +75,15 @@ pub fn run(cfg: &SchedExpCfg) -> (Table, Table) {
             "multi-job scheduling: {} jobs on {} (frontier cache: {} hits / {} misses)",
             cfg.n_jobs, cluster.name, stats.hits, stats.misses
         ),
-        &["policy", "makespan_s", "mean_jct_s", "utilization", "rescales", "jct_vs_static"],
+        &[
+            "policy",
+            "makespan_s",
+            "mean_jct_s",
+            "utilization",
+            "rescales",
+            "jct_vs_static",
+            "total_usd",
+        ],
     );
     for r in &reports {
         let ratio = if r.mean_jct > 0.0 && static_jct > 0.0 {
@@ -86,12 +98,24 @@ pub fn run(cfg: &SchedExpCfg) -> (Table, Table) {
             format!("{:.1}%", r.utilization * 100.0),
             r.total_rescales.to_string(),
             ratio,
+            format!("{:.2}", r.total_usd),
         ]);
     }
 
     let mut detail = Table::new(
         "per-job detail under elastic-frontier",
-        &["job", "model", "prio", "arrival_s", "start_s", "finish_s", "jct_s", "rescales", "final_gpus"],
+        &[
+            "job",
+            "model",
+            "prio",
+            "arrival_s",
+            "start_s",
+            "finish_s",
+            "jct_s",
+            "rescales",
+            "final_gpus",
+            "usd",
+        ],
     );
     if let Some(e) = reports.iter().find(|r| r.policy == Policy::ElasticFrontier) {
         for o in &e.outcomes {
@@ -105,6 +129,7 @@ pub fn run(cfg: &SchedExpCfg) -> (Table, Table) {
                 format!("{:.1}", o.jct),
                 o.n_rescales.to_string(),
                 o.final_devices.to_string(),
+                format!("{:.2}", o.cost_usd),
             ]);
         }
     }

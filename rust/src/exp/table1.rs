@@ -6,6 +6,7 @@ use crate::util::table::Table;
 
 use super::GB;
 
+/// Regenerate Table 1 (model zoo statistics).
 pub fn run() -> Table {
     let mut t = Table::new(
         "Table 1: Statistics of the models (paper: RNN 108/126, WideResNet 7.3/83, Transformer 9.7/74, VGG16 0.52/30)",

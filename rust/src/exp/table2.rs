@@ -25,10 +25,15 @@ fn random_strategy(g: &crate::graph::Graph, d: u32, rng: &mut XorShift) -> Strat
     Strategy { configs }
 }
 
+/// Mean absolute relative errors of the estimators vs ground truth.
 pub struct ErrorStats {
+    /// Execution-time error of the profile-based estimator.
     pub exec: f64,
+    /// Network-time error of the profile-based estimator.
     pub net: f64,
+    /// Memory estimation error.
     pub mem: f64,
+    /// Network-time error of the naive (spec-sheet) estimator.
     pub naive_net: f64,
 }
 
@@ -55,6 +60,7 @@ pub fn errors_for(model: &str, n: usize, seed: u64) -> ErrorStats {
     ErrorStats { exec: e_t / n, net: e_n / n, mem: e_m / n, naive_net: e_naive / n }
 }
 
+/// Regenerate Table 2 over `samples` random strategies.
 pub fn run(samples: usize) -> Table {
     let mut t = Table::new(
         "Table 2: FT estimation error, 20 random strategies (paper: <8%, consistent underestimates; naive net error ~74.8% on RNN)",

@@ -11,13 +11,19 @@ use crate::ft::{frontier_search, frontier_search_elimination, FtOptions};
 use crate::graph::models;
 use crate::util::table::Table;
 
+/// One model row of Table 3 (search-time comparison).
 pub struct Row {
+    /// Model zoo name.
     pub model: &'static str,
+    /// FT-LDP search seconds (multi-threaded).
     pub ldp_s: f64,
+    /// FT-Elimination search seconds (None = skipped).
     pub elim_s: Option<f64>,
+    /// FT-LDP search seconds, single-threaded.
     pub ldp_single_s: f64,
 }
 
+/// Time the searches for one model.
 pub fn measure(model: &'static str, with_elimination: bool) -> Row {
     let g = models::by_name(model, 256).unwrap();
     let cluster = Cluster::paper_testbed();

@@ -10,13 +10,19 @@
 use crate::coordinator::{train_dp, train_tp, TrainerCfg};
 use crate::util::table::Table;
 
+/// Per-iteration seconds of each training configuration.
 pub struct Row {
+    /// Mini-time strategy (simulated).
     pub mini_time: f64,
+    /// Data parallelism (executed).
     pub dp: f64,
+    /// Fused data parallelism (executed).
     pub horovod: f64,
+    /// Tensor parallelism (executed).
     pub tp: f64,
 }
 
+/// Measure all configurations at one device count.
 pub fn measure(devices: usize, steps: usize) -> anyhow::Result<Row> {
     let base = TrainerCfg {
         model: "small".into(),
@@ -38,6 +44,7 @@ pub fn measure(devices: usize, steps: usize) -> anyhow::Result<Row> {
     Ok(Row { mini_time: mini, dp: dp.per_iter_s, horovod: hv.per_iter_s, tp: tp.per_iter_s })
 }
 
+/// Regenerate the Table-4 comparison.
 pub fn run(devices: usize, steps: usize) -> anyhow::Result<Table> {
     let r = measure(devices, steps)?;
     let mut t = Table::new(

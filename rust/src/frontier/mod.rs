@@ -1,13 +1,32 @@
 //! Cost frontiers (§3.1) and the three operations FT manipulates them
-//! with: **product**, **union** and **reduce** (Algorithm 1).
+//! with: **product**, **union** and **reduce** (Algorithm 1), generalized
+//! from the paper's two objectives to three.
 //!
-//! A tuple is (memory, time, trace); the trace is a persistent,
+//! A tuple is (memory, time, dollars, trace); the trace is a persistent,
 //! structurally-shared provenance tree ([`Trace`]) recording which
 //! parallelization configuration / edge-reuse option produced the tuple.
 //! Unrolling a strategy (§3.2 "Unroll LDP and elimination") is a walk of
 //! this tree — no separate per-elimination bookkeeping is needed, and
 //! `Arc` sharing keeps memory linear in the number of algebra operations
 //! rather than in strategies x operators.
+//!
+//! ## The third objective: monetary cost
+//!
+//! The paper motivates auto-parallelism with cloud users who want to
+//! "improve the efficiency or reduce the cost" of training. [`Tuple::cost`]
+//! carries dollars as a first-class objective: leaves are stamped by the
+//! search space when the cluster is priced (`FtOptions::usd_hour`),
+//! [`Tuple::combine`] adds costs exactly like memory and time, and
+//! [`reduce`] applies 3-D Pareto dominance with per-objective ε-thinning.
+//! Within a single fixed-price search, cost is proportional to time, so
+//! 3-D dominance degenerates to the paper's 2-D staircase and frontier
+//! sizes do not grow; the third dimension earns its keep when frontiers
+//! from *differently priced clusters* (cluster sizes, device generations,
+//! spot vs on-demand) are unioned — a point that is slower but cheaper
+//! survives a union where 2-D dominance would drop it, which is exactly
+//! what `exp provision` reports. Unpriced searches leave `cost == 0.0`
+//! everywhere, and every operation then reproduces the 2-D behavior
+//! bit-for-bit.
 
 use std::sync::Arc;
 
@@ -19,59 +38,90 @@ pub use trace::Trace;
 /// and ToFu (memory-only) baselines.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
+    /// Keep the full (memory, time, cost) Pareto frontier (FT).
     Pareto,
+    /// Keep only the minimum-time tuple (the OptCNN baseline).
     TimeOnly,
+    /// Keep only the minimum-memory tuple (the ToFu baseline).
     MemOnly,
 }
 
-/// One (partial-)strategy tuple `(S, m, t)`.
+/// One (partial-)strategy tuple `(S, m, t, $)`.
 #[derive(Debug, Clone)]
 pub struct Tuple {
+    /// Peak per-device memory in bytes.
     pub mem: f64,
+    /// Per-iteration execution time in seconds.
     pub time: f64,
+    /// Monetary cost in dollars (per iteration, when the search space is
+    /// priced via `FtOptions::usd_hour`); 0.0 on unpriced searches, in
+    /// which case every frontier operation reduces to the paper's
+    /// two-objective behavior.
+    pub cost: f64,
+    /// Provenance of the tuple (which configs / reuse options built it).
     pub trace: Arc<Trace>,
 }
 
 impl Tuple {
+    /// Unpriced tuple (`cost = 0.0`) — the paper's two-objective form.
     pub fn new(mem: f64, time: f64, trace: Arc<Trace>) -> Self {
-        Self { mem, time, trace }
+        Self { mem, time, cost: 0.0, trace }
     }
 
-    /// Combine two tuples (costs add; traces pair up) — the elementwise
-    /// step of the *product* operation.
+    /// Tuple with an explicit dollar cost.
+    pub fn with_cost(mem: f64, time: f64, cost: f64, trace: Arc<Trace>) -> Self {
+        Self { mem, time, cost, trace }
+    }
+
+    /// Combine two tuples (all three costs add; traces pair up) — the
+    /// elementwise step of the *product* operation.
     pub fn combine(&self, other: &Tuple) -> Tuple {
         Tuple {
             mem: self.mem + other.mem,
             time: self.time + other.time,
+            cost: self.cost + other.cost,
             trace: Trace::pair(&self.trace, &other.trace),
         }
     }
+
+    /// Exact 3-D Pareto dominance: `self` is no worse than `other` on
+    /// every objective (and they may be equal on all three).
+    pub fn dominates(&self, other: &Tuple) -> bool {
+        self.mem <= other.mem && self.time <= other.time && self.cost <= other.cost
+    }
 }
 
-/// A cost frontier: tuples sorted by ascending memory, strictly descending
-/// time (the invariant established by [`reduce`]).
+/// A cost frontier: mutually non-dominated tuples sorted by ascending
+/// (memory, time, cost) — the invariant established by [`reduce`]. With
+/// all costs zero this is the paper's staircase (strictly ascending
+/// memory, strictly descending time).
 #[derive(Debug, Clone, Default)]
 pub struct Frontier {
+    /// The tuples, sorted ascending by (mem, time, cost).
     pub tuples: Vec<Tuple>,
 }
 
 impl Frontier {
-    /// Frontier containing a single tuple.
+    /// Frontier containing a single unpriced tuple.
     pub fn singleton(mem: f64, time: f64, trace: Arc<Trace>) -> Self {
         Self { tuples: vec![Tuple::new(mem, time, trace)] }
     }
 
+    /// Number of tuples on the frontier.
     pub fn len(&self) -> usize {
         self.tuples.len()
     }
 
+    /// Is the frontier empty?
     pub fn is_empty(&self) -> bool {
         self.tuples.is_empty()
     }
 
-    /// Minimum-time tuple (right end of the frontier).
+    /// Minimum-time tuple (ties broken toward lower memory, then cost).
     pub fn min_time(&self) -> Option<&Tuple> {
-        self.tuples.last()
+        self.tuples.iter().min_by(|a, b| {
+            (a.time, a.mem, a.cost).partial_cmp(&(b.time, b.mem, b.cost)).unwrap()
+        })
     }
 
     /// Minimum-memory tuple (left end of the frontier).
@@ -79,14 +129,63 @@ impl Frontier {
         self.tuples.first()
     }
 
-    /// Minimum-time tuple subject to a memory budget.
-    pub fn min_time_within(&self, mem_budget: f64) -> Option<&Tuple> {
-        self.tuples.iter().rev().find(|t| t.mem <= mem_budget)
+    /// Minimum-cost tuple (ties broken toward lower memory, then time).
+    pub fn min_cost(&self) -> Option<&Tuple> {
+        self.tuples.iter().min_by(|a, b| {
+            (a.cost, a.mem, a.time).partial_cmp(&(b.cost, b.mem, b.time)).unwrap()
+        })
     }
 
-    /// Check the frontier invariant (ascending mem, descending time).
+    /// Minimum-time tuple subject to a memory budget.
+    pub fn min_time_within(&self, mem_budget: f64) -> Option<&Tuple> {
+        self.tuples.iter().filter(|t| t.mem <= mem_budget).min_by(|a, b| {
+            (a.time, a.mem, a.cost).partial_cmp(&(b.time, b.mem, b.cost)).unwrap()
+        })
+    }
+
+    /// Cheapest tuple whose time meets `deadline` (and memory fits
+    /// `mem_budget`) — the provisioning question "cheapest strategy that
+    /// trains in time".
+    pub fn min_cost_within(&self, mem_budget: f64, deadline: f64) -> Option<&Tuple> {
+        self.tuples
+            .iter()
+            .filter(|t| t.mem <= mem_budget && t.time <= deadline)
+            .min_by(|a, b| {
+                (a.cost, a.time, a.mem).partial_cmp(&(b.cost, b.time, b.mem)).unwrap()
+            })
+    }
+
+    /// Fastest tuple whose cost fits `budget_usd` (and memory fits
+    /// `mem_budget`) — the provisioning question "fastest strategy money
+    /// can buy".
+    pub fn min_time_within_cost(&self, mem_budget: f64, budget_usd: f64) -> Option<&Tuple> {
+        self.tuples
+            .iter()
+            .filter(|t| t.mem <= mem_budget && t.cost <= budget_usd)
+            .min_by(|a, b| {
+                (a.time, a.cost, a.mem).partial_cmp(&(b.time, b.cost, b.mem)).unwrap()
+            })
+    }
+
+    /// Check the frontier invariant: sorted by ascending (mem, time, cost)
+    /// and mutually non-dominated (for all-zero costs this is exactly the
+    /// paper's staircase: strictly ascending memory, strictly descending
+    /// time).
     pub fn is_valid(&self) -> bool {
-        self.tuples.windows(2).all(|w| w[0].mem < w[1].mem && w[0].time > w[1].time)
+        let sorted = self.tuples.windows(2).all(|w| {
+            (w[0].mem, w[0].time, w[0].cost) <= (w[1].mem, w[1].time, w[1].cost)
+        });
+        if !sorted {
+            return false;
+        }
+        for (i, a) in self.tuples.iter().enumerate() {
+            for (j, b) in self.tuples.iter().enumerate() {
+                if i != j && a.dominates(b) {
+                    return false;
+                }
+            }
+        }
+        true
     }
 
     /// **Product** ⊗ (Cartesian; costs add, traces pair), reduced.
@@ -97,40 +196,41 @@ impl Frontier {
     /// dominated the LDP profile.
     pub fn product(&self, other: &Frontier, mode: Mode) -> Frontier {
         // Perf (§Perf opt-2): a product with a singleton frontier is a
-        // uniform cost shift — it preserves the staircase invariant, so
-        // the sort+scan can be skipped entirely. LDP multiplies by the
-        // singleton operator frontier `F(o_i, s_i^p)` at every step, and
-        // the eliminations by `F(o_i, s_i^k)`, so this path is hot.
+        // uniform cost shift — it preserves dominance relations and the
+        // sort order, so the sort+scan can be skipped entirely. LDP
+        // multiplies by the singleton operator frontier `F(o_i, s_i^p)` at
+        // every step, and the eliminations by `F(o_i, s_i^k)`, so this
+        // path is hot.
         if mode == Mode::Pareto && other.len() == 1 {
             let b = &other.tuples[0];
             return Frontier {
-                tuples: self
-                    .tuples
-                    .iter()
-                    .map(|a| {
-                        Tuple::new(a.mem + b.mem, a.time + b.time, Trace::pair(&a.trace, &b.trace))
-                    })
-                    .collect(),
+                tuples: self.tuples.iter().map(|a| a.combine(b)).collect(),
             };
         }
         if mode == Mode::Pareto && self.len() == 1 {
             return other.product(self, mode);
         }
-        let mut combos: Vec<(f64, f64, (u32, u32))> =
+        let mut combos: Vec<(f64, f64, f64, (u32, u32))> =
             Vec::with_capacity(self.len() * other.len());
         for (i, a) in self.tuples.iter().enumerate() {
             for (j, b) in other.tuples.iter().enumerate() {
-                combos.push((a.mem + b.mem, a.time + b.time, (i as u32, j as u32)));
+                combos.push((
+                    a.mem + b.mem,
+                    a.time + b.time,
+                    a.cost + b.cost,
+                    (i as u32, j as u32),
+                ));
             }
         }
         let kept = reduce_by(combos, mode);
         Frontier {
             tuples: kept
                 .into_iter()
-                .map(|(mem, time, (i, j))| {
-                    Tuple::new(
+                .map(|(mem, time, cost, (i, j))| {
+                    Tuple::with_cost(
                         mem,
                         time,
+                        cost,
                         Trace::pair(
                             &self.tuples[i as usize].trace,
                             &other.tuples[j as usize].trace,
@@ -150,9 +250,9 @@ impl Frontier {
     }
 }
 
-/// Relative ε for frontier thinning: a tuple must improve time by at
-/// least this factor over the previously kept tuple to stay on the
-/// frontier.
+/// Relative ε for frontier thinning: a tuple survives only if no kept
+/// tuple is within this relative factor of beating it on *every*
+/// non-memory objective.
 ///
 /// The paper's complexity analysis rests on the *random order* assumption
 /// (Assumption 1) under which frontiers stay `O(log K)`; real cost
@@ -160,25 +260,59 @@ impl Frontier {
 /// grow into the millions and stall the DP. ε-dominance keeps the
 /// staircase within a 0.5 % band of the exact frontier (each kept point is
 /// a real strategy; only near-duplicate alternatives are dropped) and
-/// bounds every frontier to `O(log(t_max/t_min)/ε)` points. The global
-/// min-time and min-memory points are always preserved exactly.
+/// bounds every frontier to `O(log(t_max/t_min)/ε)` points per objective.
+/// The global minimum memory, time and cost *values* are always achieved
+/// exactly by some kept tuple (thinning may substitute a different tuple
+/// attaining the same extreme — e.g. one with the same minimal cost but
+/// more memory — which is the standard ε-dominance approximation).
 pub const THIN_EPS: f64 = 5e-3;
 
-/// **Reduce** (Algorithm 1 + ε-thinning): sort by ascending memory and
-/// keep each tuple that improves the best time seen so far by at least
-/// `THIN_EPS` (relative). Ties on memory keep the faster tuple.
-/// `Mode::TimeOnly` / `Mode::MemOnly` truncate the result to the single
-/// optimal tuple for that objective (OptCNN / ToFu).
+/// **Reduce** (Algorithm 1 + ε-thinning, generalized to three
+/// objectives): sort by ascending memory and keep each tuple not
+/// ε-dominated by an already-kept tuple — kept `q` ε-dominates `t` when
+/// `q.time·(1-ε) ≤ t.time` *and* `q.cost·(1-ε) ≤ t.cost` (the memory
+/// condition is implied by the sort order). With all costs equal this is
+/// exactly the paper's staircase scan. Ties on memory keep the faster
+/// tuple. `Mode::TimeOnly` / `Mode::MemOnly` truncate the result to the
+/// single optimal tuple for that objective (OptCNN / ToFu).
 pub fn reduce(tuples: Vec<Tuple>, mode: Mode) -> Frontier {
-    let combos: Vec<(f64, f64, Tuple)> =
-        tuples.into_iter().map(|t| (t.mem, t.time, t)).collect();
-    Frontier { tuples: reduce_by(combos, mode).into_iter().map(|(_, _, t)| t).collect() }
+    let combos: Vec<(f64, f64, f64, Tuple)> =
+        tuples.into_iter().map(|t| (t.mem, t.time, t.cost, t)).collect();
+    Frontier { tuples: reduce_by(combos, mode).into_iter().map(|(_, _, _, t)| t).collect() }
 }
 
-/// Algorithm 1 over (mem, time, payload) triples — shared by [`reduce`]
-/// (payload = full tuple) and [`Frontier::product`] (payload = index pair,
-/// so traces are only allocated for survivors).
-fn reduce_by<T: Clone>(mut items: Vec<(f64, f64, T)>, mode: Mode) -> Vec<(f64, f64, T)> {
+/// Exact 3-D Pareto filter over raw `(mem, time, cost)` points: indices of
+/// the points no other point dominates (duplicates keep the lowest
+/// index). No ε-thinning — used by `exp provision` and tests to *verify*
+/// Pareto-optimality of reported points rather than to thin search
+/// frontiers.
+pub fn pareto_indices(points: &[(f64, f64, f64)]) -> Vec<usize> {
+    let dominates = |a: &(f64, f64, f64), b: &(f64, f64, f64)| {
+        a.0 <= b.0 && a.1 <= b.1 && a.2 <= b.2
+    };
+    let mut kept = Vec::new();
+    'outer: for (i, p) in points.iter().enumerate() {
+        for (j, q) in points.iter().enumerate() {
+            if i == j || !dominates(q, p) {
+                continue;
+            }
+            // strict domination kills p; an exact tie keeps the lowest index.
+            if q != p || j < i {
+                continue 'outer;
+            }
+        }
+        kept.push(i);
+    }
+    kept
+}
+
+/// Algorithm 1 over (mem, time, cost, payload) entries — shared by
+/// [`reduce`] (payload = full tuple) and [`Frontier::product`] (payload =
+/// index pair, so traces are only allocated for survivors).
+fn reduce_by<T: Clone>(
+    mut items: Vec<(f64, f64, f64, T)>,
+    mode: Mode,
+) -> Vec<(f64, f64, f64, T)> {
     if items.is_empty() {
         return items;
     }
@@ -186,54 +320,73 @@ fn reduce_by<T: Clone>(mut items: Vec<(f64, f64, T)>, mode: Mode) -> Vec<(f64, f
         Mode::TimeOnly => {
             let best = items
                 .into_iter()
-                .min_by(|a, b| (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap())
+                .min_by(|a, b| (a.1, a.0, a.2).partial_cmp(&(b.1, b.0, b.2)).unwrap())
                 .unwrap();
             return vec![best];
         }
         Mode::MemOnly => {
             let best = items
                 .into_iter()
-                .min_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap())
+                .min_by(|a, b| (a.0, a.1, a.2).partial_cmp(&(b.0, b.1, b.2)).unwrap())
                 .unwrap();
             return vec![best];
         }
         Mode::Pareto => {}
     }
-    // Algorithm 1: ascending memory (time as tiebreak).
-    items.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
-    // remember the global min-time item so thinning can never lose it.
+    // Algorithm 1: ascending memory (time, then cost, as tiebreaks).
+    items.sort_by(|a, b| (a.0, a.1, a.2).partial_cmp(&(b.0, b.1, b.2)).unwrap());
+    // remember the global min-time / min-cost items so thinning can never
+    // lose the objective extremes.
     let best_time = items
         .iter()
-        .min_by(|a, b| (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap())
+        .min_by(|a, b| (a.1, a.0, a.2).partial_cmp(&(b.1, b.0, b.2)).unwrap())
         .cloned()
         .unwrap();
-    let mut out: Vec<(f64, f64, T)> = Vec::new();
-    let mut v = f64::INFINITY;
+    let best_cost = items
+        .iter()
+        .min_by(|a, b| (a.2, a.0, a.1).partial_cmp(&(b.2, b.0, b.1)).unwrap())
+        .cloned()
+        .unwrap();
+    let mut out: Vec<(f64, f64, f64, T)> = Vec::new();
     for t in items {
-        if t.1 < v * (1.0 - THIN_EPS) {
-            v = t.1;
-            // equal-memory entries: the sort guarantees the first (fastest)
-            // wins; later equal-mem tuples have larger time and are skipped
-            // by the time test unless mem strictly increased.
-            if let Some(last) = out.last() {
-                if last.0 == t.0 {
-                    continue;
-                }
-            }
+        // every kept q has q.mem <= t.mem by the sort, so ε-dominance only
+        // needs the time and cost conditions. With all costs equal the
+        // cost condition is vacuous and this is the 2-D staircase scan.
+        let eps_dominated = out
+            .iter()
+            .any(|q| q.1 * (1.0 - THIN_EPS) <= t.1 && q.2 * (1.0 - THIN_EPS) <= t.2);
+        if !eps_dominated {
             out.push(t);
         }
     }
-    // re-attach the exact min-time point if thinning dropped it.
-    if let Some(last) = out.last() {
-        if last.1 > best_time.1 {
-            if last.0 == best_time.0 {
-                *out.last_mut().unwrap() = best_time;
-            } else {
-                out.push(best_time);
-            }
-        }
+    // re-attach the exact objective extremes if thinning dropped them.
+    if out.iter().all(|q| q.1 > best_time.1) {
+        out.push(best_time);
     }
-    out
+    if out.iter().all(|q| q.2 > best_cost.2) {
+        out.push(best_cost);
+    }
+    out.sort_by(|a, b| (a.0, a.1, a.2).partial_cmp(&(b.0, b.1, b.2)).unwrap());
+    // drop anything the re-attached extremes exactly dominate, so the
+    // result is a minimal (mutually non-dominated) set.
+    let n = out.len();
+    let keep: Vec<bool> = (0..n)
+        .map(|i| {
+            !(0..n).any(|j| {
+                if i == j {
+                    return false;
+                }
+                let (qi, qj) = (&out[i], &out[j]);
+                let dom = qj.0 <= qi.0 && qj.1 <= qi.1 && qj.2 <= qi.2;
+                let tie = qj.0 == qi.0 && qj.1 == qi.1 && qj.2 == qi.2;
+                dom && (!tie || j < i)
+            })
+        })
+        .collect();
+    out.into_iter()
+        .zip(keep)
+        .filter_map(|(t, k)| if k { Some(t) } else { None })
+        .collect()
 }
 
 #[cfg(test)]
@@ -244,6 +397,10 @@ mod tests {
 
     fn tup(mem: f64, time: f64) -> Tuple {
         Tuple::new(mem, time, Trace::empty())
+    }
+
+    fn tup3(mem: f64, time: f64, cost: f64) -> Tuple {
+        Tuple::with_cost(mem, time, cost, Trace::empty())
     }
 
     #[test]
@@ -286,6 +443,15 @@ mod tests {
     }
 
     #[test]
+    fn product_adds_dollar_costs() {
+        let a = reduce(vec![tup3(1.0, 4.0, 1.5), tup3(2.0, 2.0, 3.0)], Mode::Pareto);
+        let b = reduce(vec![tup3(10.0, 40.0, 2.0)], Mode::Pareto);
+        let p = a.product(&b, Mode::Pareto);
+        assert_eq!(p.min_cost().unwrap().cost, 3.5);
+        assert_eq!(p.min_time().unwrap().cost, 5.0);
+    }
+
+    #[test]
     fn min_time_within_budget() {
         let f = reduce(vec![tup(1.0, 10.0), tup(2.0, 5.0), tup(4.0, 4.0)], Mode::Pareto);
         assert_eq!(f.min_time_within(3.0).unwrap().time, 5.0);
@@ -293,28 +459,131 @@ mod tests {
         assert!(f.min_time_within(0.5).is_none());
     }
 
-    /// Property (Definition 1): every input tuple is dominated by some
-    /// frontier tuple, and no frontier tuple dominates another.
+    // ------------------------------------------------- edge cases (PR 3)
+
+    #[test]
+    fn empty_frontier_is_harmless() {
+        let e = reduce(Vec::new(), Mode::Pareto);
+        assert!(e.is_empty());
+        assert_eq!(e.len(), 0);
+        assert!(e.is_valid(), "the empty frontier is trivially valid");
+        assert!(e.min_time().is_none());
+        assert!(e.min_mem().is_none());
+        assert!(e.min_cost().is_none());
+        assert!(e.min_time_within(1e30).is_none());
+        assert!(e.min_cost_within(1e30, 1e30).is_none());
+        // products and unions with the empty frontier are empty / identity.
+        let f = reduce(vec![tup(1.0, 2.0)], Mode::Pareto);
+        assert!(f.product(&e, Mode::Pareto).is_empty());
+        assert_eq!(f.union(&e, Mode::Pareto).len(), 1);
+        assert!(reduce(Vec::new(), Mode::TimeOnly).is_empty());
+        assert!(reduce(Vec::new(), Mode::MemOnly).is_empty());
+    }
+
+    #[test]
+    fn single_point_frontier() {
+        let f = reduce(vec![tup3(2.0, 3.0, 4.0)], Mode::Pareto);
+        assert_eq!(f.len(), 1);
+        assert!(f.is_valid());
+        assert_eq!(f.min_time().unwrap().time, 3.0);
+        assert_eq!(f.min_mem().unwrap().mem, 2.0);
+        assert_eq!(f.min_cost().unwrap().cost, 4.0);
+        // all selectors agree on the only point.
+        assert_eq!(f.min_cost_within(2.0, 3.0).unwrap().cost, 4.0);
+        assert!(f.min_cost_within(1.0, 3.0).is_none(), "memory budget filters");
+        assert!(f.min_time_within_cost(2.0, 1.0).is_none(), "dollar budget filters");
+    }
+
+    #[test]
+    fn duplicate_mem_time_pairs_collapse_to_one() {
+        // exact duplicates in (mem, time) — and in cost — keep one tuple.
+        let f = reduce(
+            vec![tup(1.0, 5.0), tup(1.0, 5.0), tup(1.0, 5.0), tup(2.0, 1.0), tup(2.0, 1.0)],
+            Mode::Pareto,
+        );
+        let pts: Vec<(f64, f64)> = f.tuples.iter().map(|t| (t.mem, t.time)).collect();
+        assert_eq!(pts, vec![(1.0, 5.0), (2.0, 1.0)]);
+        assert!(f.is_valid());
+        // duplicate (mem, time) differing only in cost: cheaper one wins.
+        let g = reduce(vec![tup3(1.0, 5.0, 9.0), tup3(1.0, 5.0, 2.0)], Mode::Pareto);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.tuples[0].cost, 2.0);
+    }
+
+    /// The PR's headline property: a point strictly dominated in the
+    /// (mem, time) plane but cheapest in dollars is 2-D-dead yet must
+    /// survive a 3-D reduce.
+    #[test]
+    fn point_dominated_in_2d_survives_in_3d() {
+        let cheap_slow = tup3(4.0, 9.0, 1.0); // dominated by (2, 3) in 2-D
+        let fast = tup3(2.0, 3.0, 10.0);
+        let small = tup3(1.0, 20.0, 8.0);
+        let f = reduce(vec![fast.clone(), cheap_slow.clone(), small.clone()], Mode::Pareto);
+        assert_eq!(f.len(), 3, "all three are 3-D Pareto-optimal: {:?}", f.tuples);
+        assert!(f.is_valid());
+        assert_eq!(f.min_cost().unwrap().cost, 1.0, "the 2-D-dominated point survives");
+        // sanity: with costs zeroed the same point dies.
+        let f2 = reduce(vec![tup(2.0, 3.0), tup(4.0, 9.0), tup(1.0, 20.0)], Mode::Pareto);
+        assert_eq!(f2.len(), 2);
+    }
+
+    #[test]
+    fn pareto_indices_exact_filter() {
+        let pts = vec![
+            (1.0, 1.0, 1.0), // optimal
+            (2.0, 2.0, 2.0), // dominated by 0
+            (0.5, 3.0, 3.0), // optimal (min mem)
+            (1.0, 1.0, 1.0), // duplicate of 0 -> only the first kept
+            (3.0, 0.5, 9.0), // optimal (min time)
+        ];
+        assert_eq!(pareto_indices(&pts), vec![0, 2, 4]);
+        assert!(pareto_indices(&[]).is_empty());
+    }
+
+    #[test]
+    fn extremes_always_survive_thinning() {
+        // a dense cloud within ε of each other plus distinct extremes.
+        let mut ts: Vec<Tuple> = (0..50)
+            .map(|i| tup3(10.0 + i as f64 * 1e-4, 5.0 + i as f64 * 1e-4, 7.0))
+            .collect();
+        ts.push(tup3(100.0, 1.0, 50.0)); // exact min-time
+        ts.push(tup3(50.0, 50.0, 0.25)); // exact min-cost
+        let f = reduce(ts, Mode::Pareto);
+        assert!(f.is_valid());
+        assert_eq!(f.min_time().unwrap().time, 1.0);
+        assert_eq!(f.min_cost().unwrap().cost, 0.25);
+        assert_eq!(f.min_mem().unwrap().mem, 10.0);
+    }
+
+    /// Property (Definition 1, 3-D): every input tuple is dominated by
+    /// some frontier tuple, and no frontier tuple dominates another.
     #[test]
     fn prop_reduce_is_minimal_dominating_set() {
         ptest::quick("reduce-dominates", |rng: &mut XorShift| {
             let n = rng.range(1, 60);
-            let tuples: Vec<Tuple> =
-                (0..n).map(|_| tup((rng.below(30) + 1) as f64, (rng.below(30) + 1) as f64)).collect();
+            let with_cost = rng.below(2) == 1;
+            let tuples: Vec<Tuple> = (0..n)
+                .map(|_| {
+                    let c = if with_cost { (rng.below(30) + 1) as f64 } else { 0.0 };
+                    tup3((rng.below(30) + 1) as f64, (rng.below(30) + 1) as f64, c)
+                })
+                .collect();
             let f = reduce(tuples.clone(), Mode::Pareto);
             crate::prop_assert!(f.is_valid(), "invariant violated");
             for t in &tuples {
-                let dominated = f
-                    .tuples
-                    .iter()
-                    .any(|ft| ft.mem <= t.mem && ft.time <= t.time);
-                crate::prop_assert!(dominated, "tuple ({},{}) not dominated", t.mem, t.time);
+                let dominated = f.tuples.iter().any(|ft| ft.dominates(t));
+                crate::prop_assert!(
+                    dominated,
+                    "tuple ({},{},{}) not dominated",
+                    t.mem,
+                    t.time,
+                    t.cost
+                );
             }
             for (i, a) in f.tuples.iter().enumerate() {
                 for (j, b) in f.tuples.iter().enumerate() {
                     if i != j {
-                        let dom = a.mem <= b.mem && a.time <= b.time;
-                        crate::prop_assert!(!dom, "frontier not minimal");
+                        crate::prop_assert!(!a.dominates(b), "frontier not minimal");
                     }
                 }
             }
@@ -339,7 +608,7 @@ mod tests {
             crate::prop_assert!(p1.len() == p2.len(), "commutativity size");
             for (x, y) in p1.tuples.iter().zip(&p2.tuples) {
                 crate::prop_assert!(
-                    x.mem == y.mem && x.time == y.time,
+                    x.mem == y.mem && x.time == y.time && x.cost == y.cost,
                     "commutativity content"
                 );
             }

@@ -31,14 +31,17 @@ fn empty_arc() -> Arc<Trace> {
 }
 
 impl Trace {
+    /// The shared no-op trace.
     pub fn empty() -> Arc<Trace> {
         empty_arc()
     }
 
+    /// Leaf: operator `op` chose configuration `cfg`.
     pub fn op_choice(op: u32, cfg: u32) -> Arc<Trace> {
         Arc::new(Trace::OpChoice { op, cfg })
     }
 
+    /// Leaf: edge `edge` chose reuse option `opt`.
     pub fn edge_choice(edge: u32, opt: u8) -> Arc<Trace> {
         Arc::new(Trace::EdgeChoice { edge, opt })
     }

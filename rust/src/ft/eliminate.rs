@@ -30,19 +30,26 @@ use super::space::SearchSpace;
 /// A live edge of the working graph with its (K_src x K_dst) frontier
 /// table.
 pub struct WorkEdge {
+    /// Source op index.
     pub src: usize,
+    /// Destination op index.
     pub dst: usize,
+    /// `table[k][p]` — frontier for (src cfg `k`, dst cfg `p`).
     pub table: Vec<Vec<Frontier>>,
 }
 
 /// The mutable elimination state.
 pub struct WorkGraph<'s, 'a> {
+    /// The immutable search space being eliminated.
     pub space: &'s SearchSpace<'a>,
     /// Per-op per-config frontiers (branch/heuristic elimination folds
     /// neighbour costs into these).
     pub node_frontiers: Vec<Vec<Frontier>>,
+    /// Whether each op is still in the working graph.
     pub alive: Vec<bool>,
+    /// Non-eliminable (linear-spine) ops.
     pub marked: Vec<bool>,
+    /// Live edges with their frontier tables.
     pub edges: Vec<WorkEdge>,
     /// Heuristically-pinned configurations (op -> cfg index).
     pub forced: HashMap<u32, u32>,

@@ -18,6 +18,7 @@ pub use space::{FtOptions, SearchSpace};
 /// Output of a frontier search: the cost frontier plus everything needed
 /// to reconstruct any strategy on it.
 pub struct FtResult {
+    /// The final cost frontier.
     pub frontier: Frontier,
     /// Per-op configuration lists (index space of the traces).
     pub configs: Vec<Vec<ParallelConfig>>,

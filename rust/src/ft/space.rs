@@ -25,29 +25,53 @@ pub struct FtOptions {
     /// Worker threads for LDP / eliminations (1 = sequential; the paper's
     /// "no multi-thread" ablation).
     pub threads: usize,
+    /// Rental rate of the cluster being searched, in $/hour (already
+    /// billing-adjusted — see [`crate::cost::pricing`]). When non-zero,
+    /// every leaf tuple is stamped with its dollar cost (`time x rate`)
+    /// and the third frontier objective flows through product/union/
+    /// reduce and LDP; 0.0 (the default) reproduces the paper's unpriced
+    /// two-objective search exactly. Within one search cost is
+    /// proportional to time, so frontier sizes do not grow — the third
+    /// dimension matters when differently-priced searches are compared,
+    /// as in `exp provision`.
+    pub usd_hour: f64,
 }
 
 impl FtOptions {
+    /// Default options for a `devices`-wide search (full Pareto mode, all
+    /// available threads, unpriced).
     pub fn new(devices: u32) -> Self {
         let threads = std::thread::available_parallelism().map_or(4, |n| n.get());
-        Self { devices, max_mesh_dims: 2, mode: Mode::Pareto, threads }
+        Self { devices, max_mesh_dims: 2, mode: Mode::Pareto, threads, usd_hour: 0.0 }
     }
 
+    /// Single-threaded variant (the paper's "no multi-thread" ablation).
     pub fn sequential(mut self) -> Self {
         self.threads = 1;
         self
     }
 
+    /// Set the frontier mode (Pareto / time-only / memory-only).
     pub fn with_mode(mut self, mode: Mode) -> Self {
         self.mode = mode;
+        self
+    }
+
+    /// Price the search: stamp leaf tuples with dollar costs at the given
+    /// cluster rental rate in $/hour.
+    pub fn with_pricing(mut self, usd_hour: f64) -> Self {
+        self.usd_hour = usd_hour;
         self
     }
 }
 
 /// Immutable, pre-computed search space.
 pub struct SearchSpace<'a> {
+    /// The computation graph being parallelized.
     pub graph: &'a Graph,
+    /// The device graph the search is costed on.
     pub cluster: &'a Cluster,
+    /// Search options (devices, mode, threads, pricing).
     pub opts: FtOptions,
     /// `configs[op][k]` — the valid configurations S_i.
     pub configs: Vec<Vec<ParallelConfig>>,
@@ -120,25 +144,44 @@ impl<'a> SearchSpace<'a> {
         Self { graph, cluster, opts, configs, op_costs, edge_tables }
     }
 
+    /// Number of valid configurations K_i for op `op`.
     pub fn k(&self, op: usize) -> usize {
         self.configs[op].len()
     }
 
+    /// Dollars charged for `time_s` seconds of the priced cluster (0.0 on
+    /// unpriced searches).
+    fn leaf_cost(&self, time_s: f64) -> f64 {
+        time_s * self.opts.usd_hour / 3600.0
+    }
+
     /// Initial node frontier for op `i`, config `k`: the singleton
-    /// `F(o_i, s_i^k)` with an `OpChoice` trace.
+    /// `F(o_i, s_i^k)` with an `OpChoice` trace (dollar-stamped when the
+    /// search is priced).
     pub fn node_frontier(&self, i: usize, k: usize) -> Frontier {
         let c = &self.op_costs[i][k];
-        Frontier::singleton(c.mem, c.time(), Trace::op_choice(i as u32, k as u32))
+        let t = c.time();
+        Frontier {
+            tuples: vec![Tuple::with_cost(
+                c.mem,
+                t,
+                self.leaf_cost(t),
+                Trace::op_choice(i as u32, k as u32),
+            )],
+        }
     }
 
     /// Initial edge frontier `F(e, s_i^k, s_j^p)`: the reuse options as a
-    /// small frontier with `EdgeChoice` traces.
+    /// small frontier with `EdgeChoice` traces (dollar-stamped when the
+    /// search is priced).
     pub fn edge_frontier(&self, edge: usize, k: usize, p: usize) -> Frontier {
         let opts = &self.edge_tables[edge][k][p];
         let tuples: Vec<Tuple> = opts
             .iter()
             .enumerate()
-            .map(|(o, &(m, t))| Tuple::new(m, t, Trace::edge_choice(edge as u32, o as u8)))
+            .map(|(o, &(m, t))| {
+                Tuple::with_cost(m, t, self.leaf_cost(t), Trace::edge_choice(edge as u32, o as u8))
+            })
             .collect();
         reduce(tuples, self.opts.mode)
     }

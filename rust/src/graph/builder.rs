@@ -14,7 +14,9 @@ use super::Graph;
 /// Handle to an operator's output tensor.
 #[derive(Debug, Clone)]
 pub struct TensorRef {
+    /// Producing operator.
     pub op: OpId,
+    /// Shape of the produced tensor.
     pub spec: TensorSpec,
 }
 
@@ -33,6 +35,7 @@ pub struct GraphBuilder {
 }
 
 impl GraphBuilder {
+    /// Start a graph named `name` with global batch size `batch`.
     pub fn new(name: &str, batch: i64) -> Self {
         Self { graph: Graph::new(name), batch }
     }
@@ -334,6 +337,7 @@ impl GraphBuilder {
             .collect()
     }
 
+    /// Finish and return the graph.
     pub fn build(self) -> Graph {
         self.graph
     }

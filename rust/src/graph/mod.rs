@@ -13,24 +13,31 @@ pub use tensor::{Dim, TensorSpec};
 /// The DNN computation graph `G`: operators + directed dataflow edges.
 #[derive(Debug, Clone, Default)]
 pub struct Graph {
+    /// Model name (table/cache label).
     pub name: String,
+    /// Operators, indexed by `OpId.0`.
     pub ops: Vec<Op>,
+    /// Dataflow edges, indexed by `EdgeId.0`.
     pub edges: Vec<Edge>,
 }
 
 impl Graph {
+    /// Empty graph.
     pub fn new(name: &str) -> Self {
         Self { name: name.to_string(), ops: Vec::new(), edges: Vec::new() }
     }
 
+    /// Operator lookup.
     pub fn op(&self, id: OpId) -> &Op {
         &self.ops[id.0]
     }
 
+    /// Edge lookup.
     pub fn edge(&self, id: EdgeId) -> &Edge {
         &self.edges[id.0]
     }
 
+    /// Number of operators.
     pub fn n_ops(&self) -> usize {
         self.ops.len()
     }

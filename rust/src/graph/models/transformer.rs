@@ -9,11 +9,17 @@ use crate::graph::Graph;
 /// (~9.7 GB parameters); `Figure 7a` sweeps `hidden`.
 #[derive(Debug, Clone)]
 pub struct TransformerCfg {
+    /// Global batch size.
     pub batch: i64,
+    /// Sequence length.
     pub seq: i64,
+    /// Model (hidden) width.
     pub hidden: i64,
+    /// FFN width as a multiple of `hidden`.
     pub ffn_mult: i64,
+    /// Transformer block count.
     pub layers: usize,
+    /// Vocabulary size.
     pub vocab: i64,
 }
 

@@ -43,7 +43,9 @@ pub enum AxisKind {
 /// dims (of the output, the parameter, and any input tensor) by name.
 #[derive(Debug, Clone)]
 pub struct Axis {
+    /// Axis name (matches tensor dim names).
     pub name: String,
+    /// How splitting this axis behaves.
     pub kind: AxisKind,
     /// Extent; mesh dims assigned to the axis must divide it.
     pub size: i64,
@@ -56,14 +58,23 @@ pub enum OpKind {
     /// Graph input (data loading). The paper constrains it to data
     /// parallelism so the framework data pipeline can be reused (§4.2).
     Input,
+    /// Convolution.
     Conv,
+    /// Fully-connected / matmul layer.
     Dense,
+    /// Embedding table lookup.
     Embed,
+    /// Recurrent (LSTM) cell.
     LstmCell,
+    /// Multi-head attention block.
     Attention,
+    /// Layer normalization.
     LayerNorm,
+    /// Batch normalization.
     BatchNorm,
+    /// Elementwise activation.
     Activation,
+    /// Pooling / reduction over spatial dims.
     Pool,
     /// Residual / elementwise combination of two inputs.
     Elementwise,
@@ -74,8 +85,11 @@ pub enum OpKind {
 /// A layer-level operator.
 #[derive(Debug, Clone)]
 pub struct Op {
+    /// Graph-wide operator id.
     pub id: OpId,
+    /// Display name (unique within the model builders).
     pub name: String,
+    /// Operator category.
     pub kind: OpKind,
     /// Output tensor (full mini-batch shapes).
     pub out: TensorSpec,
@@ -121,8 +135,11 @@ pub struct EdgeId(pub usize);
 /// A dataflow edge: `src`'s output tensor is consumed by `dst`.
 #[derive(Debug, Clone)]
 pub struct Edge {
+    /// Graph-wide edge id.
     pub id: EdgeId,
+    /// Producer.
     pub src: OpId,
+    /// Consumer.
     pub dst: OpId,
 }
 

@@ -17,6 +17,7 @@ pub struct Dim {
 }
 
 impl Dim {
+    /// Named dimension of extent `size`.
     pub fn new(name: &str, size: i64) -> Self {
         Self { name: name.to_string(), size }
     }
@@ -25,12 +26,14 @@ impl Dim {
 /// A tensor specification: named dims + element width in bytes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Named dimensions, outermost first.
     pub dims: Vec<Dim>,
     /// Bytes per element (4 for f32; the paper trains in fp32 on V100s).
     pub elem_bytes: usize,
 }
 
 impl TensorSpec {
+    /// An f32 tensor spec.
     pub fn f32(dims: Vec<Dim>) -> Self {
         Self { dims, elem_bytes: 4 }
     }

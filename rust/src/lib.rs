@@ -1,4 +1,9 @@
-//! TensorOpt reproduction — see DESIGN.md.
+//! TensorOpt reproduction — auto-parallelism over (memory, time, dollars)
+//! cost frontiers, plus a frontier-driven multi-job elastic cluster
+//! scheduler. See DESIGN.md for the layer map and README.md for the CLI
+//! walkthrough.
+#![warn(missing_docs)]
+
 pub mod baselines;
 pub mod cluster;
 pub mod coordinator;

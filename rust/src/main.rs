@@ -1,8 +1,10 @@
 //! `tensoropt` — CLI for the TensorOpt reproduction.
 //!
 //! Subcommands:
-//!   exp <table1|table2|table3|table4|fig6|fig7|fig8|hetero>   regenerate a paper table/figure
-//!            (hetero: homogeneous-assumption vs topology-aware on mixed testbeds)
+//!   exp <table1|table2|table3|table4|fig6|fig7|fig8|hetero|provision>
+//!            regenerate a paper table/figure
+//!            (hetero: homogeneous-assumption vs topology-aware on mixed testbeds;
+//!             provision: dollar-priced cheapest-under-deadline / fastest-under-budget)
 //!   search   --model M --mode <mini_time|mini_parallelism|profiling> [--gpus N]
 //!   train    --strategy <dp|tp> --model <small|e2e> [--devices N] [--steps N] [--fused]
 //!   frontier --model M [--gpus N]                    print the raw cost frontier
@@ -106,6 +108,27 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             save(&plans, "hetero_plans");
             save(&scheds, "hetero_sched");
         }
+        "provision" => {
+            let billing_s = args.get_or("billing", "ondemand");
+            let billing = tensoropt::cost::pricing::Billing::parse(billing_s)
+                .ok_or_else(|| anyhow::anyhow!("unknown billing model `{billing_s}`"))?;
+            let sizes: Vec<usize> = args
+                .get("sizes")
+                .map(|s| s.split(',').map(|x| x.parse().unwrap()).collect())
+                .unwrap_or_default();
+            let cfg = exp::provision::ProvisionCfg {
+                model: args.get_or("model", "vgg16").to_string(),
+                batch: args.get_parse_or("batch", 256i64),
+                iters: args.get_parse_or("iters", 20_000u64),
+                billing,
+                sizes,
+            };
+            let (cheap, fast) = exp::provision::run(&cfg);
+            println!("{}", cheap.render());
+            println!("{}", fast.render());
+            save(&cheap, "provision_deadline");
+            save(&fast, "provision_budget");
+        }
         "fig8" => {
             let model = args.get_or("model", "transformer");
             let para: Vec<u32> = args
@@ -160,13 +183,15 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
                     "profiling: {model} (mem budget {:.1} GB)",
                     session.mem_budget() / exp::GB
                 ),
-                &["gpus", "best_time_s", "min_mem_gb"],
+                &["gpus", "best_time_s", "min_mem_gb", "usd_per_hour", "usd_per_iter"],
             );
             for r in rows {
                 t.row(&[
                     r.parallelism.to_string(),
                     r.best_time.map_or("OOM".into(), |x| format!("{x:.4}")),
                     format!("{:.2}", r.min_memory / exp::GB),
+                    format!("{:.2}", r.usd_hour),
+                    r.best_usd_iter.map_or("-".into(), |x| format!("{x:.5}")),
                 ]);
             }
             println!("{}", t.render());
@@ -274,6 +299,9 @@ COMMANDS:
   exp <table1|table2|table3|table4|fig6|fig7|fig8>  regenerate a paper result
   exp hetero [--model M --jobs N --seed S]          mixed-cluster comparison: homogeneous-assumption
                                                     vs heterogeneity-aware plans + scheduling
+  exp provision [--model M --batch B --iters N --billing <ondemand|spot> --sizes 4,8,16]
+                                                    dollar-priced provisioning on the mixed testbeds:
+                                                    cheapest-under-deadline / fastest-under-budget
   search    --model M --mode <mini_time|mini_parallelism|profiling> --gpus N
   train     --strategy <dp|tp> --model <small|e2e> --devices N --steps N [--fused] [--pallas]
   frontier  --model M --gpus N
@@ -283,6 +311,7 @@ COMMANDS:
 EXAMPLES:
   tensoropt exp table1
   tensoropt exp hetero
+  tensoropt exp provision --billing spot --iters 50000
   tensoropt exp fig6 --model transformer --gpus 16
   tensoropt exp fig8 --model transformer --parallelism 8,16,32
   tensoropt search --model transformer --mode profiling --gpus 32

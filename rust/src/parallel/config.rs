@@ -15,6 +15,7 @@ use crate::graph::{AxisKind, Op, OpKind, TensorSpec};
 /// One parallelization configuration `s_i^k` for an operator.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ParallelConfig {
+    /// The device mesh the op runs on.
     pub mesh: Mesh,
     /// `assign[m]` = index of the axis mesh dim `m` splits, or `None` for
     /// replication along that mesh dim.
@@ -43,6 +44,7 @@ impl ParallelConfig {
         Some(Self { mesh: Mesh::new(vec![d]), assign: vec![Some(b)] })
     }
 
+    /// Devices the configuration occupies.
     pub fn n_devices(&self) -> u32 {
         self.mesh.n_devices()
     }

@@ -13,10 +13,12 @@
 /// explicitly.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Mesh {
+    /// Mesh extents, sorted non-increasing.
     pub dims: Vec<u32>,
 }
 
 impl Mesh {
+    /// Mesh from canonical (non-increasing) dims.
     pub fn new(dims: Vec<u32>) -> Self {
         debug_assert!(dims.windows(2).all(|w| w[0] >= w[1]), "mesh dims must be sorted desc");
         Self { dims }
@@ -27,6 +29,7 @@ impl Mesh {
         self.dims.iter().product::<u32>().max(1)
     }
 
+    /// Mesh rank.
     pub fn n_dims(&self) -> usize {
         self.dims.len()
     }
@@ -44,6 +47,7 @@ impl Mesh {
         self.stride(k) * (self.dims[k] - 1) + 1
     }
 
+    /// Display form, e.g. `[8,2]`.
     pub fn label(&self) -> String {
         format!("[{}]", self.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","))
     }

@@ -18,10 +18,12 @@ pub use split::Split;
 /// (indexed by `OpId.0`).
 #[derive(Debug, Clone)]
 pub struct Strategy {
+    /// One configuration per operator, indexed by `OpId.0`.
     pub configs: Vec<ParallelConfig>,
 }
 
 impl Strategy {
+    /// Configuration of one operator.
     pub fn config(&self, op: crate::graph::OpId) -> &ParallelConfig {
         &self.configs[op.0]
     }

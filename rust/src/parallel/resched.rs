@@ -13,10 +13,15 @@ use super::split::Split;
 /// Collective operation kinds used for re-scheduling and synchronization.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Coll {
+    /// Sum-reduce everywhere (data-parallel gradient sync).
     AllReduce,
+    /// Collect shards onto every participant.
     AllGather,
+    /// Sum-reduce, leaving each participant one shard.
     ReduceScatter,
+    /// Re-shard from one tensor dim to another.
     AllToAll,
+    /// Replicate from one source to the group.
     Broadcast,
 }
 
@@ -28,6 +33,8 @@ pub enum Coll {
 /// ground-truth simulator (`sim`), and by the naive OptCNN-style model
 /// used in Table 2's error comparison.
 pub trait CollectiveCost {
+    /// Seconds for one collective of `bytes` per participant over `group`
+    /// devices.
     fn coll_time(&self, coll: Coll, bytes: f64, group: u32, crossing: bool) -> f64;
 
     /// Whether a group of this size spans machines under the standard
@@ -39,6 +46,7 @@ pub trait CollectiveCost {
 /// One step of a re-scheduling plan.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Transition {
+    /// Collective kind.
     pub coll: Coll,
     /// Tensor dim affected (source dim for AllToAll).
     pub dim: usize,
@@ -46,13 +54,16 @@ pub struct Transition {
     pub dim2: usize,
     /// Group size of the collective.
     pub group: u32,
+    /// Time of this step in seconds.
     pub cost: f64,
 }
 
 /// A complete re-scheduling plan: ordered collectives + total time.
 #[derive(Debug, Clone, Default)]
 pub struct ReschedPlan {
+    /// Ordered collectives realizing the transition.
     pub steps: Vec<Transition>,
+    /// Time of this step in seconds.
     pub cost: f64,
 }
 

@@ -16,12 +16,16 @@
 /// Reuse policy for one re-scheduled tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ReusePolicy {
+    /// Keep source and re-scheduled copies (min time, max memory).
     KeepBoth,
+    /// Keep only the source copy; redo the re-schedule backward.
     KeepBefore,
+    /// Keep only the re-scheduled copy; reverse it backward.
     KeepAfter,
 }
 
 impl ReusePolicy {
+    /// The three §4.2 options, in enumeration order.
     pub const ALL: [ReusePolicy; 3] =
         [ReusePolicy::KeepBoth, ReusePolicy::KeepBefore, ReusePolicy::KeepAfter];
 

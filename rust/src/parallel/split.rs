@@ -46,6 +46,7 @@ impl Split {
         self.pending_sum == 1
     }
 
+    /// Display form, e.g. `s[2,1]x r2`.
     pub fn label(&self) -> String {
         format!(
             "s[{}]x r{}{}",

@@ -46,13 +46,18 @@ pub enum ExecStep {
 /// Wall-clock accounting per step category.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ExecMetrics {
+    /// Seconds in compute steps.
     pub compute_s: f64,
+    /// Seconds in collectives.
     pub comm_s: f64,
+    /// Seconds in optimizer updates.
     pub optimizer_s: f64,
+    /// Executed step count.
     pub steps: usize,
 }
 
 impl ExecMetrics {
+    /// Total accounted wall-clock seconds.
     pub fn total(&self) -> f64 {
         self.compute_s + self.comm_s + self.optimizer_s
     }
@@ -60,12 +65,16 @@ impl ExecMetrics {
 
 /// Executor state: one buffer namespace per virtual device.
 pub struct Executor {
+    /// Virtual device count.
     pub n_devices: usize,
+    /// Per-device named buffers.
     pub state: Vec<HashMap<String, HostTensor>>,
+    /// Accumulated time accounting.
     pub metrics: ExecMetrics,
 }
 
 impl Executor {
+    /// Executor over `n_devices` empty buffer namespaces.
     pub fn new(n_devices: usize) -> Self {
         Self {
             n_devices,
@@ -86,6 +95,7 @@ impl Executor {
         }
     }
 
+    /// Read a tensor from one device.
     pub fn get(&self, dev: usize, name: &str) -> Option<&HostTensor> {
         self.state[dev].get(name)
     }

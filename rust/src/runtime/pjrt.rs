@@ -32,6 +32,7 @@ use super::tensor::HostTensor;
 #[cfg(feature = "xla")]
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (file stem under the artifacts dir).
     pub name: String,
 }
 
@@ -78,6 +79,7 @@ impl Runtime {
         })
     }
 
+    /// PJRT platform name.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -112,11 +114,13 @@ impl Runtime {
 /// constructed or run.
 #[cfg(not(feature = "xla"))]
 pub struct Executable {
+    /// Artifact name (file stem under the artifacts dir).
     pub name: String,
 }
 
 #[cfg(not(feature = "xla"))]
 impl Executable {
+    /// Always fails: built without the `xla` feature.
     pub fn run(&self, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         anyhow::bail!(
             "{}: binary built without the `xla` feature — PJRT execution is \
@@ -137,6 +141,7 @@ pub struct Runtime {
 
 #[cfg(not(feature = "xla"))]
 impl Runtime {
+    /// Always fails: built without the `xla` feature.
     pub fn cpu(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
         let _ = artifacts_dir;
         anyhow::bail!(
@@ -145,14 +150,17 @@ impl Runtime {
         )
     }
 
+    /// PJRT platform name.
     pub fn platform(&self) -> String {
         "unavailable".to_string()
     }
 
+    /// Always fails: built without the `xla` feature.
     pub fn load(&mut self, name: &str) -> Result<std::sync::Arc<Executable>> {
         anyhow::bail!("cannot load `{name}`: built without the `xla` feature")
     }
 
+    /// Whether an artifact exists on disk (works without `xla`).
     pub fn has_artifact(&self, name: &str) -> bool {
         self.artifacts_dir.join(format!("{name}.hlo.txt")).exists()
     }

@@ -3,36 +3,44 @@
 /// A dense host tensor (f32 or i32 payload).
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostTensor {
+    /// Dense f32 tensor.
     F32 { shape: Vec<usize>, data: Vec<f32> },
+    /// Dense i32 tensor.
     I32 { shape: Vec<usize>, data: Vec<i32> },
 }
 
 impl HostTensor {
+    /// f32 tensor from shape + data (lengths must agree).
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         HostTensor::F32 { shape, data }
     }
 
+    /// i32 tensor from shape + data (lengths must agree).
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         HostTensor::I32 { shape, data }
     }
 
+    /// All-zero f32 tensor.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         HostTensor::F32 { shape, data: vec![0.0; n] }
     }
 
+    /// The tensor shape.
     pub fn shape(&self) -> &[usize] {
         match self {
             HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
         }
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         self.shape().iter().product()
     }
 
+    /// Whether the tensor has zero elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -45,6 +53,7 @@ impl HostTensor {
         }
     }
 
+    /// Mutable f32 payload (panics on i32 tensors).
     pub fn as_f32_mut(&mut self) -> &mut [f32] {
         match self {
             HostTensor::F32 { data, .. } => data,

@@ -6,18 +6,86 @@
 //! its **mini-parallelism floor** (the smallest parallelism whose
 //! min-memory strategy fits — a hard memory constraint, §4.1), then pour
 //! the remaining devices one upgrade at a time into whichever job buys the
-//! most priority-weighted throughput per extra device. Deterministic by
-//! construction: admission order is (priority desc, id asc) and upgrade
-//! ties break toward the lower job id.
+//! most priority-weighted throughput. Deterministic by construction:
+//! admission order is (priority desc, id asc) and upgrade ties break
+//! toward the lower job id.
+//!
+//! ## Budgets, deadlines and cost-aware gain
+//!
+//! A request may carry a [`JobConstraint`] — the per-tenant
+//! (budget, deadline) pair of the provisioning story. Semantics:
+//!
+//! - the **floor is always admissible** (memory is a hard constraint,
+//!   money is advisory): a tenant is never evicted for being poor, it just
+//!   stops being upgraded;
+//! - **upgrades never break the budget**: a candidate point is skipped
+//!   when its projected remaining spend (`remaining_iters x est_time x
+//!   $/s`) exceeds the remaining dollars;
+//! - **deadlines pull upgrades forward**: before water-filling, each job
+//!   missing its deadline at the current allocation is upgraded to the
+//!   deadline-meeting feasible point with the least projected remaining
+//!   spend (within budget and free devices — best effort, never
+//!   guaranteed);
+//! - **gain is per marginal dollar** when every request in the event is
+//!   priced (per marginal device otherwise, so gains always share a
+//!   unit): an upgrade that buys the same throughput on cheaper hardware
+//!   wins. On a homogeneous cluster the two denominators differ by a
+//!   constant factor and rank identically, so unpriced behavior is
+//!   unchanged.
 
-use super::cache::ProfileCurve;
+use super::cache::{CurvePoint, ProfileCurve};
+
+/// Budget/deadline constraints for one job at an allocation event.
+/// Everything is *remaining* (not total): the caller decrements dollars as
+/// they are spent and the deadline as time passes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JobConstraint {
+    /// Iterations left to run (projects spend and finish time).
+    pub remaining_iters: f64,
+    /// Dollars left in the tenant's budget (`None` = unlimited).
+    pub budget_usd: Option<f64>,
+    /// Seconds left until the tenant's deadline (`None` = no deadline).
+    pub deadline_s: Option<f64>,
+}
 
 /// One job's claim on the cluster at an allocation event.
 #[derive(Debug, Clone)]
 pub struct AllocRequest {
+    /// Dense job id (deterministic tie-breaking key).
     pub job_id: usize,
+    /// Scheduling weight (> 0).
     pub priority: f64,
+    /// The job's profile curve (frontier-cache output).
     pub curve: ProfileCurve,
+    /// Budget/deadline pair (`None` = unconstrained).
+    pub constraint: Option<JobConstraint>,
+}
+
+/// Slack for float comparisons against budgets/deadlines.
+const CONSTRAINT_EPS: f64 = 1e-9;
+
+impl AllocRequest {
+    /// Would running out the job at `p` stay within its remaining budget?
+    /// Unpriced points (rate 0) cost nothing and always fit.
+    fn within_budget(&self, p: &CurvePoint) -> bool {
+        let Some(c) = self.constraint else { return true };
+        let Some(budget) = c.budget_usd else { return true };
+        match p.usd_for_iters(c.remaining_iters) {
+            Some(usd) => usd <= budget * (1.0 + CONSTRAINT_EPS) + CONSTRAINT_EPS,
+            None => false,
+        }
+    }
+
+    /// Would running out the job at `p` meet its deadline? `true` when no
+    /// deadline is set; `false` for infeasible points.
+    fn meets_deadline(&self, p: &CurvePoint) -> bool {
+        let Some(c) = self.constraint else { return true };
+        let Some(deadline) = c.deadline_s else { return true };
+        match p.est_time {
+            Some(t) => c.remaining_iters * t <= deadline * (1.0 + CONSTRAINT_EPS) + CONSTRAINT_EPS,
+            None => false,
+        }
+    }
 }
 
 /// Admission order shared by every policy: (priority desc, id asc).
@@ -42,7 +110,8 @@ pub fn allocate(n_devices: u32, reqs: &[AllocRequest]) -> Vec<u32> {
     let mut free = n_devices;
 
     // Admission in (priority desc, id asc) order: floors are hard memory
-    // constraints, granted whole or not at all.
+    // constraints, granted whole or not at all (budgets never block the
+    // floor — see the module docs).
     for &i in &admission_order(reqs) {
         if let Some(floor) = reqs[i].curve.floor() {
             if floor <= free {
@@ -52,10 +121,61 @@ pub fn allocate(n_devices: u32, reqs: &[AllocRequest]) -> Vec<u32> {
         }
     }
 
+    // Deadline pass: a job missing its deadline at the current allocation
+    // is moved to the feasible point that meets it with the least
+    // projected remaining spend — the same dollars-to-finish quantity the
+    // budget test and `exp provision` rank by, so a faster-but-pricier-
+    // per-hour point wins when it finishes cheaply enough (best effort:
+    // within budget and the free pool; ties toward the smaller
+    // parallelism; unpriced curves tie at $0 and fall to the parallelism
+    // tiebreak).
+    for &i in &admission_order(reqs) {
+        let r = &reqs[i];
+        let Some(c) = r.constraint else { continue };
+        if alloc[i] == 0 || c.deadline_s.is_none() {
+            continue;
+        }
+        let met_now = r.curve.point(alloc[i]).is_some_and(|p| r.meets_deadline(p));
+        if met_now {
+            continue;
+        }
+        let spend = |p: &CurvePoint| {
+            p.usd_for_iters(c.remaining_iters).unwrap_or(f64::INFINITY)
+        };
+        let fix = r
+            .curve
+            .feasible_above(alloc[i])
+            .into_iter()
+            .filter(|p| {
+                p.parallelism - alloc[i] <= free
+                    && r.meets_deadline(p)
+                    && r.within_budget(p)
+            })
+            .min_by(|a, b| {
+                (spend(a), a.parallelism)
+                    .partial_cmp(&(spend(b), b.parallelism))
+                    .unwrap()
+            });
+        if let Some(p) = fix {
+            free -= p.parallelism - alloc[i];
+            alloc[i] = p.parallelism;
+        }
+    }
+
     // Water-filling: repeatedly apply the best-gain upgrade that fits.
-    // Gains are priority-weighted marginal throughput per extra device;
-    // considering *all* feasible points above the current level (not just
-    // the next) keeps non-convex curves from stalling the fill.
+    // Gains are priority-weighted marginal throughput per marginal dollar
+    // (per device on unpriced curves); considering *all* feasible points
+    // above the current level (not just the next) keeps non-convex curves
+    // from stalling the fill.
+    //
+    // Units must be comparable across jobs, so the dollar denominator is
+    // used only when *every* request's feasible points carry a rental
+    // rate; one unpriced curve drops the whole event to per-device gains
+    // (mixing $-denominated and device-denominated gains would make the
+    // ranking depend on the dollar unit's magnitude).
+    let priced = reqs.iter().all(|r| {
+        r.curve.points.iter().filter(|p| p.feasible()).all(|p| p.usd_hour > 0.0)
+    });
     loop {
         let mut best: Option<(f64, usize, u32)> = None; // (gain, req idx, new d)
         for (i, r) in reqs.iter().enumerate() {
@@ -63,13 +183,25 @@ pub fn allocate(n_devices: u32, reqs: &[AllocRequest]) -> Vec<u32> {
                 continue;
             }
             let cur_tp = r.curve.throughput(alloc[i]);
+            let cur_rate = r.curve.point(alloc[i]).map_or(0.0, |p| p.usd_hour);
+            let cur_meets = r.curve.point(alloc[i]).is_some_and(|p| r.meets_deadline(p));
             for p in r.curve.feasible_above(alloc[i]) {
                 let extra = p.parallelism - alloc[i];
-                if extra > free {
+                if extra > free || !r.within_budget(p) {
+                    continue;
+                }
+                // never trade a met deadline away (non-convex curves can
+                // be slower at higher parallelism).
+                if cur_meets && !r.meets_deadline(p) {
                     continue;
                 }
                 let tp = 1.0 / p.est_time.unwrap();
-                let gain = r.priority * (tp - cur_tp) / extra as f64;
+                let delta_usd = p.usd_hour - cur_rate;
+                let gain = if priced && delta_usd > 0.0 {
+                    r.priority * (tp - cur_tp) / delta_usd
+                } else {
+                    r.priority * (tp - cur_tp) / extra as f64
+                };
                 if gain <= 0.0 {
                     continue;
                 }
@@ -124,6 +256,19 @@ pub fn check_invariants(
                         r.job_id
                     ));
                 }
+                // money is advisory at the floor, binding above it.
+                if d > floor {
+                    match r.curve.point(d) {
+                        Some(p) if r.within_budget(p) => {}
+                        Some(_) => {
+                            return Err(format!(
+                                "job {} upgraded to {d} devices over its budget",
+                                r.job_id
+                            ))
+                        }
+                        None => {}
+                    }
+                }
             }
         }
         match r.curve.point(d) {
@@ -156,6 +301,7 @@ mod tests {
                     est_time: if d >= floor { Some(base / d as f64) } else { None },
                     sim_time: if d >= floor { Some(1.05 * base / d as f64) } else { None },
                     min_memory: 1e9 / d as f64,
+                    usd_hour: 0.0,
                 })
                 .collect(),
         }
@@ -171,15 +317,25 @@ mod tests {
                     est_time: if d >= floor { Some(base) } else { None },
                     sim_time: if d >= floor { Some(base * 1.05) } else { None },
                     min_memory: 1e9,
+                    usd_hour: 0.0,
                 })
                 .collect(),
         }
     }
 
+    /// Priced scaling curve: rate = `usd_per_gpu` x parallelism.
+    fn priced_curve(base: f64, floor: u32, usd_per_gpu: f64, ladder: &[u32]) -> ProfileCurve {
+        let mut c = scaling_curve(base, floor, ladder);
+        for p in &mut c.points {
+            p.usd_hour = usd_per_gpu * p.parallelism as f64;
+        }
+        c
+    }
+
     const LADDER: [u32; 5] = [1, 2, 4, 8, 16];
 
     fn req(id: usize, priority: f64, curve: ProfileCurve) -> AllocRequest {
-        AllocRequest { job_id: id, priority, curve }
+        AllocRequest { job_id: id, priority, curve, constraint: None }
     }
 
     #[test]
@@ -264,7 +420,168 @@ mod tests {
         }
     }
 
-    /// Property: invariants hold for random curve sets.
+    // ------------------------------------------- budget/deadline (PR 3)
+
+    #[test]
+    fn budget_caps_upgrades_but_never_the_floor() {
+        // $1/GPU-hour, 1000 iters at 1s/iter base: at d=1 the projected
+        // spend is 1000 x 1 x (1/3600) ≈ $0.28; at d=4 it is 1000 x 0.25 x
+        // (4/3600) — same dollars (perfect scaling is spend-neutral), so
+        // cap the budget below even the floor spend to pin "floor always
+        // admitted", and use a flat curve to make upgrades strictly more
+        // expensive.
+        let broke = AllocRequest {
+            job_id: 0,
+            priority: 1.0,
+            curve: priced_curve(1.0, 1, 1.0, &LADDER),
+            constraint: Some(JobConstraint {
+                remaining_iters: 1000.0,
+                budget_usd: Some(1e-6),
+                deadline_s: None,
+            }),
+        };
+        let a = allocate(16, &[broke.clone()]);
+        check_invariants(16, &[broke], &a).unwrap();
+        assert_eq!(a, vec![1], "floor admitted, every upgrade over budget");
+    }
+
+    #[test]
+    fn budget_constrained_job_leaves_devices_to_others() {
+        // sub-linear scaler priced per GPU: t(d) = 1/sqrt(d), rate = $d/h,
+        // so running out 3600 iters at parallelism d costs sqrt(d) dollars
+        // — a budget of $1.9 affords d=2 ($1.41) but not d=4 ($2).
+        let ladder = [1u32, 2, 4, 8];
+        let sqrt_curve = ProfileCurve {
+            points: ladder
+                .iter()
+                .map(|&d| CurvePoint {
+                    parallelism: d,
+                    est_time: Some(1.0 / (d as f64).sqrt()),
+                    sim_time: Some(1.05 / (d as f64).sqrt()),
+                    min_memory: 1e9,
+                    usd_hour: d as f64,
+                })
+                .collect(),
+        };
+        let constrained = AllocRequest {
+            job_id: 1,
+            priority: 1.0,
+            curve: sqrt_curve.clone(),
+            constraint: Some(JobConstraint {
+                remaining_iters: 3600.0,
+                budget_usd: Some(1.9),
+                deadline_s: None,
+            }),
+        };
+        let reqs = vec![req(0, 1.0, scaling_curve(1.0, 1, &ladder)), constrained.clone()];
+        let a = allocate(8, &reqs);
+        check_invariants(8, &reqs, &a).unwrap();
+        assert_eq!(a[1], 2, "budget $1.9 affords d=2, not d=4: {a:?}");
+        assert!(a[0] >= 4, "unconstrained job absorbs what job 1 cannot buy: {a:?}");
+        // the same job with no budget climbs past d=2.
+        let unconstrained = AllocRequest { constraint: None, ..constrained };
+        let reqs2 = vec![req(0, 1.0, scaling_curve(1.0, 1, &ladder)), unconstrained];
+        let b = allocate(8, &reqs2);
+        check_invariants(8, &reqs2, &b).unwrap();
+        assert!(b[1] > 2, "without the budget the job keeps scaling: {b:?}");
+    }
+
+    #[test]
+    fn deadline_pulls_an_upgrade_forward_under_contention() {
+        // job 0 scales weakly (1.0s -> 0.9s/iter) but must finish 1000
+        // iters inside 950s, which requires d=2; job 1 scales perfectly
+        // and would win the single spare device on marginal gain. The
+        // deadline pass must hand it to job 0 first.
+        let ladder = [1u32, 2];
+        let weak = ProfileCurve {
+            points: vec![
+                CurvePoint {
+                    parallelism: 1,
+                    est_time: Some(1.0),
+                    sim_time: Some(1.05),
+                    min_memory: 1e9,
+                    usd_hour: 0.0,
+                },
+                CurvePoint {
+                    parallelism: 2,
+                    est_time: Some(0.9),
+                    sim_time: Some(0.95),
+                    min_memory: 1e9,
+                    usd_hour: 0.0,
+                },
+            ],
+        };
+        let deadline_job = AllocRequest {
+            job_id: 0,
+            priority: 1.0,
+            curve: weak,
+            constraint: Some(JobConstraint {
+                remaining_iters: 1000.0,
+                budget_usd: None,
+                deadline_s: Some(950.0),
+            }),
+        };
+        let reqs = vec![deadline_job.clone(), req(1, 1.0, scaling_curve(1.0, 1, &ladder))];
+        let a = allocate(3, &reqs);
+        check_invariants(3, &reqs, &a).unwrap();
+        assert_eq!(a, vec![2, 1], "deadline job takes the spare device: {a:?}");
+        // without the deadline, the strong scaler wins that device.
+        let no_deadline = AllocRequest { constraint: None, ..deadline_job };
+        let reqs2 = vec![no_deadline, req(1, 1.0, scaling_curve(1.0, 1, &ladder))];
+        let b = allocate(3, &reqs2);
+        assert_eq!(b, vec![1, 2], "marginal gain favors the scaler: {b:?}");
+    }
+
+    #[test]
+    fn deadline_pass_minimizes_projected_spend_not_rate() {
+        // both d=2 and d=4 meet job 0's deadline; d=4 has the higher
+        // hourly rate ($3 vs $2) but finishes so much faster that it is
+        // the cheaper run ($0.42 vs $0.50 for 1000 iters). The pass must
+        // jump straight to d=4 — ranking by rate would park job 0 at d=2
+        // and let the competing scaler absorb the remaining devices.
+        let mk = |d: u32, t: f64, rate: f64| CurvePoint {
+            parallelism: d,
+            est_time: Some(t),
+            sim_time: Some(t * 1.05),
+            min_memory: 1e9,
+            usd_hour: rate,
+        };
+        let deadline_job = AllocRequest {
+            job_id: 0,
+            priority: 1.0,
+            curve: ProfileCurve {
+                points: vec![mk(1, 1.0, 1.0), mk(2, 0.9, 2.0), mk(4, 0.5, 3.0)],
+            },
+            constraint: Some(JobConstraint {
+                remaining_iters: 1000.0,
+                budget_usd: None,
+                deadline_s: Some(950.0),
+            }),
+        };
+        let reqs =
+            vec![deadline_job, req(1, 1.0, priced_curve(1.0, 1, 1.0, &[1, 2, 4]))];
+        let a = allocate(6, &reqs);
+        check_invariants(6, &reqs, &a).unwrap();
+        assert_eq!(a, vec![4, 2], "spend-ranked deadline fix takes d=4 first: {a:?}");
+    }
+
+    #[test]
+    fn cost_aware_gain_prefers_cheaper_throughput() {
+        // same throughput gain for both jobs, but job 1's hardware is
+        // cheaper per hour: with one free device the per-dollar gain must
+        // send it to job 1 even though per-device gain ties toward job 0.
+        let ladder = [1u32, 2];
+        let reqs = vec![
+            req(0, 1.0, priced_curve(1.0, 1, 4.0, &ladder)), // $4/GPU-hr
+            req(1, 1.0, priced_curve(1.0, 1, 1.0, &ladder)), // $1/GPU-hr
+        ];
+        let a = allocate(3, &reqs);
+        check_invariants(3, &reqs, &a).unwrap();
+        assert_eq!(a, vec![1, 2], "the marginal dollar buys more on job 1: {a:?}");
+    }
+
+    /// Property: invariants hold for random curve sets, with and without
+    /// random budget/deadline constraints.
     #[test]
     fn prop_invariants_on_random_curves() {
         ptest::quick("allocator-invariants", |rng: &mut XorShift| {
@@ -275,12 +592,29 @@ mod tests {
                     let base = 0.5 + rng.f64() * 4.0;
                     let floor = LADDER[rng.below(LADDER.len())];
                     let prio = 1.0 + rng.below(3) as f64;
-                    let curve = if rng.below(2) == 0 {
-                        scaling_curve(base, floor, &LADDER)
-                    } else {
-                        flat_curve(base, floor, &LADDER)
+                    let curve = match rng.below(3) {
+                        0 => scaling_curve(base, floor, &LADDER),
+                        1 => flat_curve(base, floor, &LADDER),
+                        _ => priced_curve(base, floor, 0.5 + rng.f64() * 4.0, &LADDER),
                     };
-                    AllocRequest { job_id: id, priority: prio, curve }
+                    let constraint = if rng.below(2) == 0 {
+                        Some(JobConstraint {
+                            remaining_iters: 1.0 + rng.below(5000) as f64,
+                            budget_usd: if rng.below(2) == 0 {
+                                Some(rng.f64() * 10.0)
+                            } else {
+                                None
+                            },
+                            deadline_s: if rng.below(2) == 0 {
+                                Some(rng.f64() * 1000.0)
+                            } else {
+                                None
+                            },
+                        })
+                    } else {
+                        None
+                    };
+                    AllocRequest { job_id: id, priority: prio, curve, constraint }
                 })
                 .collect();
             let a = allocate(n_devices, &reqs);

@@ -21,6 +21,7 @@ use crate::sim::{simulate, SimConfig};
 /// One cached (model, parallelism) measurement.
 #[derive(Debug, Clone)]
 pub struct CurvePoint {
+    /// Device count this point was profiled at.
     pub parallelism: u32,
     /// Best feasible estimated per-iteration time from the cost frontier
     /// (`None`: even the min-memory strategy overflows device memory).
@@ -30,11 +31,22 @@ pub struct CurvePoint {
     pub sim_time: Option<f64>,
     /// Memory of the min-memory strategy (the mini-parallelism test).
     pub min_memory: f64,
+    /// Rental rate of the sub-cluster at this parallelism in $/hour
+    /// (0.0 in unpriced synthetic curves) — what the cost-aware allocator
+    /// trades throughput against.
+    pub usd_hour: f64,
 }
 
 impl CurvePoint {
+    /// Does the model fit at this parallelism?
     pub fn feasible(&self) -> bool {
         self.est_time.is_some()
+    }
+
+    /// Projected dollars to run `iters` more iterations at this point's
+    /// estimated speed and rental rate (None = infeasible).
+    pub fn usd_for_iters(&self, iters: f64) -> Option<f64> {
+        self.est_time.map(|t| iters * t * self.usd_hour / 3600.0)
     }
 }
 
@@ -42,6 +54,7 @@ impl CurvePoint {
 /// the §4.1 Profiling output reshaped for allocation decisions.
 #[derive(Debug, Clone, Default)]
 pub struct ProfileCurve {
+    /// Cached points at ascending parallelism.
     pub points: Vec<CurvePoint>,
 }
 
@@ -52,6 +65,7 @@ impl ProfileCurve {
         self.points.iter().find(|p| p.feasible()).map(|p| p.parallelism)
     }
 
+    /// The cached point at parallelism `d`, if profiled.
     pub fn point(&self, d: u32) -> Option<&CurvePoint> {
         self.points.iter().find(|p| p.parallelism == d)
     }
@@ -100,7 +114,9 @@ impl ProfileCurve {
 /// Cache hit/miss counters (one miss = one FT search + one simulation).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups served from the cache.
     pub hits: usize,
+    /// Lookups that ran a fresh FT search + simulation.
     pub misses: usize,
 }
 
@@ -135,10 +151,11 @@ impl FrontierCache {
     }
 
     /// Split the planner's belief from reality: `est_time`, feasibility
-    /// floors and the chosen strategies come from FT searches on
-    /// `assumed`; `sim_time` (what the multi-job timeline advances with)
-    /// executes those strategies on `real`. With `assumed == real` this is
-    /// exactly [`FrontierCache::new`].
+    /// floors, the chosen strategies — and the `usd_hour` rates the
+    /// cost-aware allocator reads — come from FT searches on `assumed`;
+    /// `sim_time` (what the multi-job timeline advances with) executes
+    /// those strategies on `real`. With `assumed == real` this is exactly
+    /// [`FrontierCache::new`].
     pub fn with_assumption(real: Cluster, assumed: Cluster) -> Self {
         assert_eq!(
             real.n_devices(),
@@ -155,6 +172,7 @@ impl FrontierCache {
         }
     }
 
+    /// Snapshot of the hit/miss counters.
     pub fn stats(&self) -> CacheStats {
         *self.stats.lock().unwrap()
     }
@@ -195,6 +213,7 @@ impl FrontierCache {
                     est_time: pp.point.best_time,
                     sim_time,
                     min_memory: pp.point.min_memory,
+                    usd_hour: pp.point.usd_hour,
                 });
             }
             let mut entries = self.entries.lock().unwrap();
@@ -291,18 +310,26 @@ mod tests {
     fn fastest_within_and_feasible_above() {
         let curve = ProfileCurve {
             points: vec![
-                CurvePoint { parallelism: 1, est_time: None, sim_time: None, min_memory: 9e9 },
+                CurvePoint {
+                    parallelism: 1,
+                    est_time: None,
+                    sim_time: None,
+                    min_memory: 9e9,
+                    usd_hour: 3.0,
+                },
                 CurvePoint {
                     parallelism: 2,
                     est_time: Some(4.0),
                     sim_time: Some(4.2),
                     min_memory: 5e9,
+                    usd_hour: 6.0,
                 },
                 CurvePoint {
                     parallelism: 4,
                     est_time: Some(2.0),
                     sim_time: Some(2.1),
                     min_memory: 3e9,
+                    usd_hour: 12.0,
                 },
             ],
         };
@@ -315,5 +342,23 @@ mod tests {
         assert_eq!(ups[0].parallelism, 4);
         assert_eq!(curve.throughput(4), 0.5);
         assert_eq!(curve.throughput(1), 0.0);
+        // projected spend: iters x est_time x $/s.
+        let usd = curve.point(2).unwrap().usd_for_iters(900.0).unwrap();
+        assert!((usd - 900.0 * 4.0 * 6.0 / 3600.0).abs() < 1e-9);
+        assert!(curve.point(1).unwrap().usd_for_iters(900.0).is_none());
+    }
+
+    #[test]
+    fn curve_points_carry_subcluster_rates() {
+        let c = cache(); // 4 x V100 on-demand
+        let curve = c.curve("tiny", 256, &[1, 2, 4]);
+        for p in &curve.points {
+            assert!(
+                (p.usd_hour - p.parallelism as f64 * 3.06).abs() < 1e-9,
+                "d={} rate {}",
+                p.parallelism,
+                p.usd_hour
+            );
+        }
     }
 }

@@ -23,6 +23,8 @@ pub struct RescaleModel {
 }
 
 impl RescaleModel {
+    /// Default overheads for `c`: 2 s coordinator cost plus re-sharding
+    /// over the cluster's bottleneck inter-machine link.
     pub fn from_cluster(c: &Cluster) -> Self {
         Self { base_s: 2.0, reshard_bw: c.inter_link().bandwidth }
     }
@@ -49,7 +51,11 @@ pub fn manifest_param_bytes(m: &Manifest, tag: &str) -> anyhow::Result<f64> {
 /// requests) plus the downtime each moved job must pay.
 #[derive(Debug, Clone)]
 pub struct Decision {
+    /// New device counts, aligned with the requests.
     pub alloc: Vec<u32>,
+    /// Downtime seconds each moved job must pay before progressing
+    /// (devices keep billing during this — the simulator converts it to
+    /// dollars at the job's rental rate).
     pub penalties: Vec<f64>,
     /// Jobs whose running allocation changed (shrink, grow or pause).
     pub n_rescaled: usize,
@@ -77,14 +83,20 @@ pub fn price_moves(
 }
 
 /// The elastic policy: frontier-driven water-filling at every event, with
-/// rescale penalties computed against the current allocation.
+/// rescale penalties computed against the current allocation. Requests
+/// carrying a [`crate::sched::JobConstraint`] get budget-capped,
+/// deadline-aware allocations (the water-filling passes live in
+/// [`crate::sched::allocator`]).
 #[derive(Debug, Clone)]
 pub struct ElasticScheduler {
+    /// Cluster capacity in devices.
     pub n_devices: u32,
+    /// Cost model for moving running jobs.
     pub rescale: RescaleModel,
 }
 
 impl ElasticScheduler {
+    /// Scheduler for `cluster` with the default rescale model.
     pub fn new(cluster: &Cluster) -> Self {
         Self {
             n_devices: cluster.n_devices() as u32,
@@ -112,6 +124,7 @@ mod tests {
                     est_time: Some(1.0 / d as f64),
                     sim_time: Some(1.05 / d as f64),
                     min_memory: 1e9,
+                    usd_hour: 0.0,
                 })
                 .collect(),
         }
@@ -132,8 +145,8 @@ mod tests {
         let cluster = Cluster::with_gpus(8);
         let sched = ElasticScheduler::new(&cluster);
         let reqs = vec![
-            AllocRequest { job_id: 0, priority: 1.0, curve: curve() },
-            AllocRequest { job_id: 1, priority: 1.0, curve: curve() },
+            AllocRequest { job_id: 0, priority: 1.0, curve: curve(), constraint: None },
+            AllocRequest { job_id: 1, priority: 1.0, curve: curve(), constraint: None },
         ];
         // job 0 previously held the full cluster, job 1 just arrived.
         let d = sched.decide(&reqs, &[8, 0], &[1e9, 1e9]);

@@ -10,9 +10,11 @@ pub struct JobSpec {
     /// Dense id, unique within a workload (used for deterministic
     /// tie-breaking everywhere in the scheduler).
     pub id: usize,
+    /// Display name.
     pub name: String,
     /// Model zoo name (`graph::models::by_name`).
     pub model: String,
+    /// Global batch size.
     pub batch: i64,
     /// Training length in iterations; per-iteration time comes from the
     /// job's cost frontier at the allocated parallelism.
@@ -22,6 +24,14 @@ pub struct JobSpec {
     pub priority: f64,
     /// Submission time in seconds since workload start.
     pub arrival: f64,
+    /// Tenant dollar budget for the whole job (`None` = unlimited). The
+    /// allocator never upgrades the job past the point where its projected
+    /// remaining spend would exceed what is left of this.
+    pub budget_usd: Option<f64>,
+    /// Tenant deadline in seconds *after arrival* (`None` = none). Best
+    /// effort: the allocator pulls upgrades forward to meet it but never
+    /// guarantees it.
+    pub deadline_s: Option<f64>,
 }
 
 impl JobSpec {
@@ -69,6 +79,8 @@ impl Workload {
                 iterations,
                 priority,
                 arrival: t,
+                budget_usd: None,
+                deadline_s: None,
             });
         }
         jobs

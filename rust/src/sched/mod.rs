@@ -12,6 +12,12 @@
 //! plays whole workloads against static-share, FIFO and time-only-greedy
 //! baselines on a discrete-event timeline driven by the L1 simulator's
 //! ground-truth iteration times.
+//!
+//! Since PR 3 the allocator is dollar-aware: profile-curve points carry
+//! the sub-cluster's rental rate, jobs may carry a per-tenant
+//! (budget, deadline) pair ([`allocator::JobConstraint`]), upgrades are
+//! ranked by marginal throughput per marginal dollar, and the timeline
+//! meters each job's spend (rescale downtime included).
 
 pub mod allocator;
 pub mod cache;
@@ -20,7 +26,7 @@ pub mod job;
 pub mod placement;
 pub mod simulate;
 
-pub use allocator::{allocate, check_invariants, AllocRequest};
+pub use allocator::{allocate, check_invariants, AllocRequest, JobConstraint};
 pub use cache::{CacheStats, CurvePoint, FrontierCache, ProfileCurve};
 pub use elastic::{manifest_param_bytes, price_moves, Decision, ElasticScheduler, RescaleModel};
 pub use job::{JobSpec, Workload};

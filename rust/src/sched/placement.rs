@@ -17,6 +17,7 @@ use crate::cluster::Cluster;
 pub struct Placement {
     /// First global device id of the range.
     pub start: usize,
+    /// Devices in the range.
     pub len: usize,
     /// Number of distinct device generations inside the range.
     pub generations: usize,

@@ -20,7 +20,7 @@
 use crate::cluster::Cluster;
 use crate::graph::models;
 
-use super::allocator::{admission_order, check_invariants, AllocRequest};
+use super::allocator::{admission_order, check_invariants, AllocRequest, JobConstraint};
 use super::cache::{FrontierCache, ProfileCurve};
 use super::elastic::{price_moves, ElasticScheduler, RescaleModel};
 use super::job::JobSpec;
@@ -28,13 +28,18 @@ use super::job::JobSpec;
 /// Scheduling policy under test.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
+    /// Frontier-driven water-filling with elastic re-allocation (ours).
     ElasticFrontier,
+    /// Equal cluster split fixed at submission, never re-balanced.
     StaticEqual,
+    /// Run-to-completion, one job at a time at its fastest parallelism.
     FifoExclusive,
+    /// Every job greedily grabs its fastest feasible parallelism.
     TimeGreedy,
 }
 
 impl Policy {
+    /// CLI / table label.
     pub fn name(&self) -> &'static str {
         match self {
             Policy::ElasticFrontier => "elastic-frontier",
@@ -44,6 +49,7 @@ impl Policy {
         }
     }
 
+    /// Every policy, in reporting order.
     pub fn all() -> [Policy; 4] {
         [
             Policy::ElasticFrontier,
@@ -62,6 +68,7 @@ pub struct SchedConfig {
     /// Advance the timeline with simulator ground truth (default) or with
     /// the raw frontier estimates (ablation).
     pub ground_truth: bool,
+    /// Downtime model for moving running jobs.
     pub rescale: RescaleModel,
 }
 
@@ -83,27 +90,42 @@ impl SchedConfig {
 /// Per-job result.
 #[derive(Debug, Clone)]
 pub struct JobOutcome {
+    /// The submitted spec.
     pub job: JobSpec,
     /// First instant the job held devices (None: never ran).
     pub start: Option<f64>,
+    /// Completion instant.
     pub finish: f64,
     /// Job completion time = finish - arrival.
     pub jct: f64,
+    /// Times the running job was moved between parallelisms.
     pub n_rescales: usize,
+    /// Devices held at completion.
     pub final_devices: u32,
+    /// Dollars billed to this job: wall-clock seconds holding devices
+    /// (rescale downtime included — you pay while re-sharding) times the
+    /// held sub-cluster's rental rate. 0.0 on unpriced curves.
+    pub cost_usd: f64,
 }
 
 /// Workload-level result.
 #[derive(Debug, Clone)]
 pub struct MultiJobReport {
+    /// The policy that produced this report.
     pub policy: Policy,
+    /// Per-job outcomes, in spec order.
     pub outcomes: Vec<JobOutcome>,
     /// Last completion instant (workload starts at t=0).
     pub makespan: f64,
+    /// Mean job completion time over the scheduled jobs.
     pub mean_jct: f64,
     /// Useful device-seconds over cluster capacity x makespan.
     pub utilization: f64,
+    /// Total rescale events across all jobs.
     pub total_rescales: usize,
+    /// Total dollars billed across all jobs ([`JobOutcome::cost_usd`]
+    /// summed).
+    pub total_usd: f64,
     /// Peak simultaneously-allocated devices (must never exceed the
     /// cluster size).
     pub peak_devices: u32,
@@ -127,6 +149,8 @@ struct Active {
     remaining: f64,
     devices: u32,
     penalty: f64,
+    /// Dollars billed so far (wall-clock held-device time x rental rate).
+    spent_usd: f64,
     started: Option<f64>,
     finish: f64,
     rescales: usize,
@@ -197,6 +221,7 @@ pub fn run_workload(
                 param_bytes,
                 devices: 0,
                 penalty: 0.0,
+                spent_usd: 0.0,
                 started: None,
                 finish: 0.0,
                 rescales: 0,
@@ -245,6 +270,10 @@ pub fn run_workload(
                     j.remaining = 0.0;
                 }
                 busy += j.devices as f64 * work_dt;
+                // billing is wall-clock at the held sub-cluster's rate:
+                // rescale downtime costs money without buying progress.
+                let rate = j.curve.point(j.devices).map_or(0.0, |p| p.usd_hour);
+                j.spent_usd += dt * rate / 3600.0;
             }
         }
         t = te;
@@ -285,10 +314,30 @@ pub fn run_workload(
             Policy::ElasticFrontier | Policy::TimeGreedy => {
                 let reqs: Vec<AllocRequest> = active
                     .iter()
-                    .map(|&i| AllocRequest {
-                        job_id: st[i].spec.id,
-                        priority: st[i].spec.priority,
-                        curve: st[i].curve.clone(),
+                    .map(|&i| {
+                        let spec = &st[i].spec;
+                        // budgets and deadlines are *remaining* at time t.
+                        let constraint = if spec.budget_usd.is_some()
+                            || spec.deadline_s.is_some()
+                        {
+                            Some(JobConstraint {
+                                remaining_iters: st[i].remaining,
+                                budget_usd: spec
+                                    .budget_usd
+                                    .map(|b| (b - st[i].spent_usd).max(0.0)),
+                                deadline_s: spec
+                                    .deadline_s
+                                    .map(|d| (spec.arrival + d - t).max(0.0)),
+                            })
+                        } else {
+                            None
+                        };
+                        AllocRequest {
+                            job_id: spec.id,
+                            priority: spec.priority,
+                            curve: st[i].curve.clone(),
+                            constraint,
+                        }
                     })
                     .collect();
                 let d = if policy == Policy::ElasticFrontier {
@@ -385,6 +434,7 @@ pub fn run_workload(
             jct: (j.finish - j.spec.arrival).max(0.0),
             n_rescales: j.rescales,
             final_devices: j.final_devices,
+            cost_usd: j.spent_usd,
         })
         .collect();
     let scheduled: Vec<&JobOutcome> = outcomes
@@ -402,6 +452,7 @@ pub fn run_workload(
     } else {
         0.0
     };
+    let total_usd = outcomes.iter().map(|o| o.cost_usd).sum();
     MultiJobReport {
         policy,
         outcomes,
@@ -409,6 +460,7 @@ pub fn run_workload(
         mean_jct,
         utilization,
         total_rescales,
+        total_usd,
         peak_devices,
         unschedulable,
         mixed_grants: mixed_grant_total,
@@ -429,6 +481,8 @@ mod tests {
                 iterations: 4 * iter_scale,
                 priority: 1.0,
                 arrival: 0.0,
+                budget_usd: None,
+                deadline_s: None,
             },
             JobSpec {
                 id: 1,
@@ -438,6 +492,8 @@ mod tests {
                 iterations: 2 * iter_scale,
                 priority: 1.0,
                 arrival: 0.001,
+                budget_usd: None,
+                deadline_s: None,
             },
             JobSpec {
                 id: 2,
@@ -447,6 +503,8 @@ mod tests {
                 iterations: iter_scale,
                 priority: 2.0,
                 arrival: 0.002,
+                budget_usd: None,
+                deadline_s: None,
             },
         ]
     }
@@ -510,6 +568,57 @@ mod tests {
     }
 
     #[test]
+    fn dollars_metered_and_budget_respected() {
+        let (cluster, cache, cfg) = setup();
+        let mut jobs = jobs_3(2000);
+        let r = run_workload(&jobs, &cluster, Policy::ElasticFrontier, &cache, &cfg);
+        // every job pays > $0 on a priced (V100) cluster, and the report
+        // total is the per-job sum.
+        let sum: f64 = r.outcomes.iter().map(|o| o.cost_usd).sum();
+        assert!((r.total_usd - sum).abs() < 1e-9);
+        for o in &r.outcomes {
+            assert!(o.cost_usd > 0.0, "{} ran for free", o.job.name);
+            // sanity bound: never more than holding the whole 4xV100
+            // cluster for the job's entire lifetime.
+            let holding_all = (o.finish - o.job.arrival) * 4.0 * 3.06 / 3600.0;
+            assert!(o.cost_usd <= holding_all * (1.0 + 1e-9), "{}", o.job.name);
+        }
+        // a tight per-job budget caps the spend near the floor spend: the
+        // budgeted job may never be *upgraded* into the red.
+        let unbounded = r.outcomes[0].cost_usd;
+        jobs[0].budget_usd = Some(unbounded * 0.01);
+        let cache2 = FrontierCache::new(cluster.clone());
+        let b = run_workload(&jobs, &cluster, Policy::ElasticFrontier, &cache2, &cfg);
+        let curve = cache2.curve(&jobs[0].model, jobs[0].batch, &cfg.ladder);
+        let floor = curve.floor().unwrap();
+        assert_eq!(
+            b.outcomes[0].final_devices, floor,
+            "over-budget job must be parked at its mini-parallelism floor"
+        );
+    }
+
+    #[test]
+    fn deadline_pressure_never_slows_the_job() {
+        let (cluster, cache, cfg) = setup();
+        let mut jobs = jobs_3(4000);
+        let base = run_workload(&jobs, &cluster, Policy::ElasticFrontier, &cache, &cfg);
+        // give the *last-priority* job a deadline just over its floor-speed
+        // runtime; the allocator must not leave it at the floor.
+        let slow_jct = base.outcomes[1].jct;
+        jobs[1].deadline_s = Some(slow_jct * 0.5);
+        let cache2 = FrontierCache::new(cluster.clone());
+        let d = run_workload(&jobs, &cluster, Policy::ElasticFrontier, &cache2, &cfg);
+        // deadline pressure must not materially slow the job down (small
+        // slack: the earlier upgrades can shift rescale-penalty timing).
+        assert!(
+            d.outcomes[1].jct <= base.outcomes[1].jct * 1.05 + 1e-9,
+            "deadline pressure slowed the job: {} vs {}",
+            d.outcomes[1].jct,
+            base.outcomes[1].jct
+        );
+    }
+
+    #[test]
     fn single_job_gets_upgraded_beyond_its_floor_when_it_pays() {
         let (cluster, cache, cfg) = setup();
         let jobs = vec![JobSpec {
@@ -520,6 +629,8 @@ mod tests {
             iterations: 1000,
             priority: 1.0,
             arrival: 0.0,
+            budget_usd: None,
+            deadline_s: None,
         }];
         let r = run_workload(&jobs, &cluster, Policy::ElasticFrontier, &cache, &cfg);
         // whatever parallelism was chosen, the finish time must match the

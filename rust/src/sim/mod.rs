@@ -31,6 +31,7 @@ use crate::util::rng::XorShift;
 /// paper's single-digit-percent regime).
 #[derive(Debug, Clone)]
 pub struct SimConfig {
+    /// Jitter RNG seed.
     pub seed: u64,
     /// Max fractional compute jitter per (op, device).
     pub jitter: f64,

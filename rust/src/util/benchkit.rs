@@ -10,15 +10,22 @@ use std::time::Instant;
 /// Result of one benchmark: wall-clock stats over the measured iterations.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Benchmark name.
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Fastest iteration.
     pub min_s: f64,
+    /// Slowest iteration.
     pub max_s: f64,
+    /// Standard deviation across iterations.
     pub stddev_s: f64,
 }
 
 impl BenchStats {
+    /// Criterion-style one-line summary.
     pub fn line(&self) -> String {
         format!(
             "{:<44} {:>12} (min {:>12}, max {:>12}, sd {:>10}, n={})",
@@ -34,18 +41,22 @@ impl BenchStats {
 
 /// A named set of benchmarks sharing warmup/measurement configuration.
 pub struct Bench {
+    /// Group name (one JSON file per group in CI).
     pub group: String,
     /// Minimum number of measured iterations.
     pub min_iters: usize,
     /// Target total measurement time; iteration stops after both
     /// `min_iters` and this budget are satisfied (or `max_iters` hit).
     pub target_secs: f64,
+    /// Hard iteration cap.
     pub max_iters: usize,
+    /// Unmeasured warmup iterations.
     pub warmup_iters: usize,
     results: Vec<BenchStats>,
 }
 
 impl Bench {
+    /// A bench group with default iteration budgets.
     pub fn new(group: &str) -> Self {
         Self {
             group: group.to_string(),

@@ -10,9 +10,11 @@ use std::collections::HashMap;
 /// switches and positional arguments.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// First bare argument, if any.
     pub subcommand: Option<String>,
     opts: HashMap<String, String>,
     flags: Vec<String>,
+    /// Remaining bare arguments.
     pub positional: Vec<String>,
 }
 

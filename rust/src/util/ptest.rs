@@ -11,7 +11,9 @@ use super::rng::XorShift;
 /// Configuration for a property run.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Generated cases per property.
     pub cases: usize,
+    /// Base seed (case `i` runs on `seed + i`).
     pub seed: u64,
 }
 

@@ -7,12 +7,16 @@
 /// A simple column-aligned table.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Table caption.
     pub title: String,
+    /// Column names.
     pub header: Vec<String>,
+    /// Row cells (padded to the header width).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with a caption and column names.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Self {
             title: title.to_string(),

@@ -40,6 +40,8 @@ fn three_jobs(cache: &FrontierCache, cfg: &SchedConfig, target_s: f64) -> Vec<Jo
                 iterations: ((target_s / it).ceil() as u64).max(1),
                 priority: 1.0,
                 arrival: i as f64 * target_s * 0.1,
+                budget_usd: None,
+                deadline_s: None,
             }
         })
         .collect()

@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Promote a CI-produced bench artifact to BENCH_baseline.json, arming the
+>25% regression gate in bench_compare.py.
+
+Procedure (also documented in README.md):
+  1. Open a green CI run on the runner pool you care about and download
+     the `bench-<sha>` artifact (it contains BENCH_<sha>.json).
+  2. python3 scripts/bench_promote.py BENCH_<sha>.json
+  3. Commit the updated BENCH_baseline.json.
+
+The script refuses inputs that are placeholders, empty, or missing the
+fields bench_compare.py reads, so a broken artifact can never silently
+disarm the gate.
+
+Usage:
+  bench_promote.py <BENCH_sha.json> [--out BENCH_baseline.json] [--self-test]
+"""
+import argparse
+import json
+import os
+import sys
+
+
+def validate(doc):
+    """Return a list of problems (empty = promotable)."""
+    problems = []
+    if doc.get("placeholder"):
+        problems.append("input is itself a placeholder baseline")
+    groups = doc.get("groups")
+    if not isinstance(groups, list) or not groups:
+        problems.append("no bench groups")
+        return problems
+    n = 0
+    for g in groups:
+        if "group" not in g:
+            problems.append("group missing its name")
+            continue
+        for r in g.get("results", []):
+            if "name" not in r or not isinstance(r.get("mean_s"), (int, float)):
+                problems.append(f"malformed result in group {g['group']!r}")
+                continue
+            if r["mean_s"] <= 0:
+                problems.append(f"non-positive mean_s for {g['group']}/{r['name']}")
+            n += 1
+    if n == 0:
+        problems.append("no benchmark results")
+    return problems
+
+
+def promote(src, out):
+    with open(src) as f:
+        doc = json.load(f)
+    problems = validate(doc)
+    if problems:
+        for p in problems:
+            print(f"refusing to promote: {p}", file=sys.stderr)
+        sys.exit(1)
+    doc.pop("placeholder", None)
+    doc["promoted_from"] = os.path.basename(src)
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    n = sum(len(g.get("results", [])) for g in doc["groups"])
+    print(
+        f"promoted {src} -> {out}: {n} benchmarks in {len(doc['groups'])} "
+        f"groups (sha {doc.get('sha', '?')}); commit the file to arm the gate"
+    )
+
+
+def self_test():
+    ok = {"sha": "abc", "groups": [{"group": "g", "results": [{"name": "a", "mean_s": 1.0}]}]}
+    assert validate(ok) == []
+    assert validate({"placeholder": True, "groups": ok["groups"]}) != []
+    assert validate({"groups": []}) != []
+    assert validate({"groups": [{"group": "g", "results": []}]}) != []
+    assert validate({"groups": [{"group": "g", "results": [{"name": "a", "mean_s": 0}]}]}) != []
+    assert validate({"groups": [{"group": "g", "results": [{"name": "a"}]}]}) != []
+    print("bench_promote self-test ok")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifact", nargs="?")
+    ap.add_argument("--out", default="BENCH_baseline.json")
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        self_test()
+        return
+    if not args.artifact:
+        ap.error("artifact required (or --self-test)")
+    promote(args.artifact, args.out)
+
+
+if __name__ == "__main__":
+    main()
