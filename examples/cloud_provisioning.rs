@@ -12,15 +12,13 @@
 //! Run: `cargo run --release --example cloud_provisioning`
 
 use tensoropt::cluster::Cluster;
-use tensoropt::cost::comm::CommModel;
-use tensoropt::cost::pricing::{self, Billing};
+use tensoropt::cost::pricing::Billing;
 use tensoropt::exp::provision::{
     candidates, cheapest_under_deadline, fastest_under_budget, pareto, ProvisionCfg,
 };
 use tensoropt::exp::GB;
 use tensoropt::frontier::{reduce, Mode, Tuple};
-use tensoropt::ft::{frontier_search, FtOptions};
-use tensoropt::graph::models;
+use tensoropt::plan::{PlanRequest, Planner};
 use tensoropt::util::table::Table;
 
 const ITERS_PER_EPOCH: u64 = 5_000;
@@ -35,7 +33,11 @@ fn main() -> anyhow::Result<()> {
         sizes: vec![4, 8, 16],
     };
 
-    let cands = candidates(&cluster, &cfg);
+    // one planner serves every sweep in this example: the spot re-run
+    // below reuses all of the on-demand run's leaf tables and elimination
+    // structure (incremental re-billing).
+    let planner = Planner::new();
+    let cands = candidates(&planner, &cluster, &cfg);
     let frontier = pareto(&cands);
     let mut t = Table::new(
         &format!(
@@ -89,16 +91,16 @@ fn main() -> anyhow::Result<()> {
     // longer proportional to time, so the 3-D selectors become real
     // trade-off queries (within one fixed-rate search they degenerate to
     // min-time).
-    let g = models::by_name("transformer", 256).expect("model zoo");
     let iters = ITERS_PER_EPOCH as f64;
+    let fp = planner.register_cluster(&cluster);
     let mut pooled: Vec<Tuple> = Vec::new();
-    for n in [4usize, 16] {
-        let sub = cluster.sub_cluster(n);
-        let comm = CommModel::profile(&sub);
-        let rate = pricing::usd_hour(&sub, Billing::OnDemand);
-        let r =
-            frontier_search(&g, &sub, &comm, FtOptions::new(n as u32).with_pricing(rate));
-        let budget = sub.min_device_memory() / 1.1;
+    for n in [4u32, 16] {
+        // served warm: candidates() above already ran these exact priced
+        // searches through the same planner.
+        let req =
+            PlanRequest::new("transformer", 256, &fp, n).with_billing(Billing::OnDemand);
+        let r = planner.plan(&req)?.result;
+        let budget = cluster.sub_cluster(n as usize).mem_budget();
         for t in r.frontier.tuples.iter().filter(|t| t.mem <= budget) {
             pooled.push(Tuple::with_cost(
                 t.mem,
@@ -132,7 +134,8 @@ fn main() -> anyhow::Result<()> {
 
     // spot billing rescales every dollar figure without changing the
     // frontier itself — rerun the sweep to show the discount.
-    let spot = pareto(&candidates(&cluster, &ProvisionCfg { billing: Billing::Spot, ..cfg }));
+    let spot =
+        pareto(&candidates(&planner, &cluster, &ProvisionCfg { billing: Billing::Spot, ..cfg }));
     let spot_cheapest = spot.iter().map(|c| c.usd).fold(f64::INFINITY, f64::min);
     println!(
         "same run on spot capacity: cheapest epoch ${spot_cheapest:.0} vs ${cheapest:.0} \

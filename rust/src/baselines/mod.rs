@@ -19,12 +19,13 @@
 pub mod mesh_tf;
 
 use crate::cluster::Cluster;
+use crate::cost::comm::CommModel;
 use crate::cost::estimator::{eval_strategy, ReuseChoice, StrategyCost};
 use crate::frontier::Mode;
-use crate::ft::{frontier_search, frontier_search_filtered, FtOptions};
-use crate::graph::{Graph, Op};
+use crate::graph::Graph;
 use crate::parallel::resched::CollectiveCost;
-use crate::parallel::{ParallelConfig, Strategy};
+use crate::parallel::Strategy;
+use crate::plan::{ConfigFilter, PlanRequest, Planner};
 
 pub use mesh_tf::mesh_tensorflow_frontier;
 
@@ -51,83 +52,99 @@ pub fn data_parallel(
     BaselinePoint { name: "DataParallel", strategy, cost }
 }
 
-/// OptCNN: minimize per-iteration time, ignore memory.
-pub fn optcnn(
-    g: &Graph,
-    cluster: &Cluster,
-    comm: &dyn CollectiveCost,
-    opts: FtOptions,
-) -> BaselinePoint {
-    let r = frontier_search(g, cluster, comm, opts.with_mode(Mode::TimeOnly));
-    let t = r.frontier.min_time().expect("OptCNN found no strategy");
-    let (strategy, _) = r.strategy_of(t);
-    let cost = eval_strategy(g, &strategy, cluster, comm, ReuseChoice::KeepBoth);
+/// The evaluation context of a planner-served baseline: the resolved
+/// graph, the sub-cluster the search ran on, and its profiled comm model
+/// (the same one the planner's search used, so the re-evaluation is
+/// apples-to-apples).
+fn eval_ctx(planner: &Planner, req: &PlanRequest) -> (std::sync::Arc<Graph>, Cluster, CommModel) {
+    let g = planner.graph_of(req).expect("baseline graph resolves");
+    let cluster = planner.sub_cluster_of(req).expect("baseline cluster registered");
+    let comm = CommModel::profile(&cluster);
+    (g, cluster, comm)
+}
+
+/// OptCNN: minimize per-iteration time, ignore memory. Served through the
+/// unified planner engine: the search is `req` in `Mode::TimeOnly`
+/// (memoized and shared like every other plan).
+pub fn optcnn(planner: &Planner, req: &PlanRequest) -> BaselinePoint {
+    let req = req.clone().with_mode(Mode::TimeOnly);
+    let resp = planner.plan(&req).expect("OptCNN plan");
+    let t = resp.result.frontier.min_time().expect("OptCNN found no strategy");
+    let (strategy, _) = resp.result.strategy_of(t);
+    let (g, cluster, comm) = eval_ctx(planner, &req);
+    let cost = eval_strategy(&g, &strategy, &cluster, &comm, ReuseChoice::KeepBoth);
     BaselinePoint { name: "OptCNN", strategy, cost }
 }
 
 /// ToFu: minimize memory; no replication, tensors split across all
-/// devices whenever the operator admits it.
-pub fn tofu(
-    g: &Graph,
-    cluster: &Cluster,
-    comm: &dyn CollectiveCost,
-    opts: FtOptions,
-) -> BaselinePoint {
-    let filter = |_op: &Op, c: &ParallelConfig| c.replication() == 1;
-    let r = frontier_search_filtered(
-        g,
-        cluster,
-        comm,
-        opts.with_mode(Mode::MemOnly),
-        Some(&filter),
-    );
-    let t = r.frontier.min_mem().expect("ToFu found no strategy");
-    let (strategy, _) = r.strategy_of(t);
+/// devices whenever the operator admits it. Served through the unified
+/// planner engine with `Mode::MemOnly` + the no-replication filter.
+pub fn tofu(planner: &Planner, req: &PlanRequest) -> BaselinePoint {
+    let req = req
+        .clone()
+        .with_mode(Mode::MemOnly)
+        .with_filter(ConfigFilter::NoReplication);
+    let resp = planner.plan(&req).expect("ToFu plan");
+    let t = resp.result.frontier.min_mem().expect("ToFu found no strategy");
+    let (strategy, _) = resp.result.strategy_of(t);
+    let (g, cluster, comm) = eval_ctx(planner, &req);
     // ToFu keeps one copy of re-scheduled tensors (memory first).
-    let cost = eval_strategy(g, &strategy, cluster, comm, ReuseChoice::KeepOne);
+    let cost = eval_strategy(&g, &strategy, &cluster, &comm, ReuseChoice::KeepOne);
     BaselinePoint { name: "ToFu", strategy, cost }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cost::comm::GroundTruthComm;
     use crate::graph::models::tiny_mlp;
 
-    fn setup() -> (Graph, Cluster, GroundTruthComm) {
-        let c = Cluster::paper_testbed();
-        let comm = GroundTruthComm::new(c.clone());
-        (tiny_mlp(256), c, comm)
+    /// Planner + a request for tiny@256 at parallelism 4 on a 4-GPU
+    /// sub-cluster of the paper testbed.
+    fn setup() -> (Planner, PlanRequest) {
+        let planner = Planner::new().with_threads(2);
+        let fp = planner.register_cluster(&Cluster::paper_testbed());
+        (planner, PlanRequest::new("tiny", 256, &fp, 4))
     }
 
     #[test]
     fn optcnn_at_ft_min_time() {
-        let (g, c, comm) = setup();
-        let ft = frontier_search(&g, &c, &comm, FtOptions::new(4).sequential());
-        let o = optcnn(&g, &c, &comm, FtOptions::new(4).sequential());
+        let (planner, req) = setup();
+        let ft = planner.plan(&req).unwrap();
+        let o = optcnn(&planner, &req);
         // paper (Fig 6): "OptCNN always finds the point with the shortest
         // per-iteration time on TensorOpt's cost frontier".
-        let ft_best = ft.frontier.min_time().unwrap().time;
+        let ft_best = ft.frontier().min_time().unwrap().time;
         assert!((o.cost.time - ft_best) / ft_best < 0.05, "optcnn {} vs ft {}", o.cost.time, ft_best);
     }
 
     #[test]
     fn tofu_min_memory_among_baselines() {
-        let (g, c, comm) = setup();
-        let t = tofu(&g, &c, &comm, FtOptions::new(4).sequential());
-        let dp = data_parallel(&g, &c, &comm, 4);
-        let o = optcnn(&g, &c, &comm, FtOptions::new(4).sequential());
+        let (planner, req) = setup();
+        let t = tofu(&planner, &req);
+        let o = optcnn(&planner, &req);
+        let cluster = planner.sub_cluster_of(&req).unwrap();
+        let comm = CommModel::profile(&cluster);
+        let g = planner.graph_of(&req).unwrap();
+        let dp = data_parallel(&g, &cluster, &comm, 4);
         assert!(t.cost.memory <= dp.cost.memory);
         assert!(t.cost.memory <= o.cost.memory);
         // no replication anywhere
         for cfg in &t.strategy.configs {
             assert_eq!(cfg.replication(), 1);
         }
+        // the three baselines shared one planner: the ToFu search (MemOnly
+        // + filter) and the OptCNN search (TimeOnly) are distinct keys,
+        // but repeating either is a memo hit.
+        let before = planner.stats().searches();
+        let _ = optcnn(&planner, &req);
+        assert_eq!(planner.stats().searches(), before, "repeat baseline is warm");
     }
 
     #[test]
     fn dp_strategy_is_batch_split() {
-        let (g, c, comm) = setup();
+        let g = tiny_mlp(256);
+        let c = Cluster::paper_testbed();
+        let comm = CommModel::profile(&c);
         let dp = data_parallel(&g, &c, &comm, 8);
         for (op, cfg) in g.ops.iter().zip(&dp.strategy.configs) {
             if let Some(b) = op.batch_axis() {

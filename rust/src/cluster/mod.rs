@@ -400,6 +400,15 @@ impl Cluster {
         self.machines.iter().map(|m| m.device.memory).fold(f64::INFINITY, f64::min)
     }
 
+    /// Strategy memory budget with the paper's safety margin (§5.2: pick
+    /// ~`capacity / 1.1` so consistent underestimation cannot OOM), off
+    /// the smallest device in the set. The single source of this formula
+    /// for the session, the planner's consumers and the experiment
+    /// harnesses.
+    pub fn mem_budget(&self) -> f64 {
+        self.min_device_memory() / 1.1
+    }
+
     /// Narrowest machine in the set: a collective group wider than this
     /// must cross machines somewhere in the tiled machine-major layout.
     pub fn min_machine_gpus(&self) -> usize {
@@ -527,10 +536,12 @@ impl Cluster {
     }
 
     /// Compact deterministic identity of the device graph — generations
-    /// (plus raw FLOP/memory figures, so a derated spec under the same gen
-    /// tag still gets its own identity), per-machine widths, intra links
-    /// and the inter matrix. Frontier-cache keys include this so plans
-    /// computed for one topology are never served to another.
+    /// (plus raw FLOP/memory/bandwidth and $/GPU-hour figures, so a
+    /// derated or re-priced spec under the same gen tag still gets its
+    /// own identity), per-machine widths, intra links and the inter
+    /// matrix. Frontier-cache and planner keys include this so plans
+    /// computed for one topology (or price sheet — dollar stamps flow
+    /// into frontier objectives) are never served to another.
     pub fn fingerprint(&self) -> String {
         let mut s = String::new();
         for (i, m) in self.machines.iter().enumerate() {
@@ -538,12 +549,13 @@ impl Cluster {
                 s.push('|');
             }
             s.push_str(&format!(
-                "{}x{}[{:.3e},{:.3e},{:.3e}]@{}",
+                "{}x{}[{:.3e},{:.3e},{:.3e},{:.4}]@{}",
                 m.gpus,
                 m.device.gen,
                 m.device.flops,
                 m.device.memory,
                 m.device.mem_bw,
+                m.device.usd_hour,
                 m.intra.tag()
             ));
         }
@@ -684,6 +696,12 @@ mod tests {
         let mut derated = Cluster::paper_testbed();
         derated.machines[0].device.flops *= 0.5;
         assert_ne!(derated.fingerprint(), Cluster::paper_testbed().fingerprint());
+        // same topology, different price sheet -> different identity
+        // (dollar stamps flow into frontier objectives, so the planner
+        // must never serve one rate's plans for another).
+        let mut repriced = Cluster::paper_testbed();
+        repriced.machines[0].device.usd_hour = 1.50;
+        assert_ne!(repriced.fingerprint(), Cluster::paper_testbed().fingerprint());
     }
 
     #[test]

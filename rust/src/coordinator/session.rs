@@ -2,12 +2,14 @@
 //! three user-facing options — **mini-time**, **mini-parallelism** and
 //! **profiling** — on top of the FT algorithm.
 
+use std::sync::Arc;
+
 use crate::cluster::Cluster;
-use crate::cost::comm::CommModel;
 use crate::cost::pricing::{self, Billing};
-use crate::ft::{frontier_search, FtOptions, FtResult};
+use crate::ft::{FtOptions, FtResult};
 use crate::graph::Graph;
 use crate::parallel::Strategy;
+use crate::plan::{PlanRequest, Planner};
 use crate::util::par::par_map_indexed;
 
 /// The paper's strategy-search options (§4.1).
@@ -71,8 +73,10 @@ pub struct ProfiledPlan {
     pub plan: Option<Plan>,
 }
 
-/// A TensorOpt session: model graph + cluster, with cached FT results per
-/// parallelism.
+/// A TensorOpt session: model graph + cluster, with every FT search served
+/// through the unified planner engine ([`crate::plan`]) — memoized,
+/// deduplicated across concurrent callers, and (when the planner has a
+/// store attached) persisted across restarts.
 pub struct Session {
     /// The model being parallelized.
     pub graph: Graph,
@@ -84,13 +88,39 @@ pub struct Session {
     /// Billing model used to dollar-stamp every search (on-demand by
     /// default; see [`Session::with_billing`]).
     pub billing: Billing,
+    /// The planner engine serving this session's searches.
+    planner: Arc<Planner>,
+    /// Canonical graph id of `graph` in the planner.
+    graph_id: String,
+    /// Batch size key of `graph` in the planner.
+    batch: i64,
+    /// Fingerprint of `cluster` in the planner.
+    cluster_fp: String,
 }
 
 impl Session {
-    /// New session on `cluster` with default options (on-demand billing).
+    /// New session on `cluster` with default options (on-demand billing)
+    /// and a private planner.
     pub fn new(graph: Graph, cluster: Cluster) -> Self {
+        Self::with_planner(graph, cluster, Arc::new(Planner::new()))
+    }
+
+    /// New session sharing `planner` — sessions, the scheduler cache and
+    /// experiment harnesses on one planner reuse each other's searches.
+    pub fn with_planner(graph: Graph, cluster: Cluster, planner: Arc<Planner>) -> Self {
         let opts_proto = FtOptions::new(cluster.n_devices() as u32);
-        Self { graph, cluster, opts_proto, billing: Billing::OnDemand }
+        let (graph_id, batch) = planner.register_graph(graph.clone());
+        let cluster_fp = planner.register_cluster(&cluster);
+        Self {
+            graph,
+            cluster,
+            opts_proto,
+            billing: Billing::OnDemand,
+            planner,
+            graph_id,
+            batch,
+            cluster_fp,
+        }
     }
 
     /// Switch the billing model (spot vs on-demand) used to price plans.
@@ -99,21 +129,33 @@ impl Session {
         self
     }
 
-    fn ft_at(&self, d: u32) -> FtResult {
+    /// The planner serving this session.
+    pub fn planner(&self) -> &Arc<Planner> {
+        &self.planner
+    }
+
+    fn request_at(&self, d: u32) -> PlanRequest {
+        PlanRequest {
+            graph_id: self.graph_id.clone(),
+            batch: self.batch,
+            cluster_fp: self.cluster_fp.clone(),
+            parallelism: d,
+            mode: self.opts_proto.mode,
+            billing: Some(self.billing),
+            max_mesh_dims: self.opts_proto.max_mesh_dims,
+            filter: crate::plan::ConfigFilter::Full,
+        }
+    }
+
+    fn ft_at(&self, d: u32) -> Arc<FtResult> {
         self.ft_at_threads(d, self.opts_proto.threads)
     }
 
-    fn ft_at_threads(&self, d: u32, threads: usize) -> FtResult {
-        let cluster = self.cluster.sub_cluster(d as usize);
-        let comm = CommModel::profile(&cluster);
-        let mut opts = self.opts_proto.clone();
-        // sub_cluster clamps to the session cluster's size; keep the
-        // search's device count consistent with the topology it is costed
-        // on (never search meshes wider than the devices that exist).
-        opts.devices = cluster.n_devices() as u32;
-        opts.threads = threads;
-        opts.usd_hour = pricing::usd_hour(&cluster, self.billing);
-        frontier_search(&self.graph, &cluster, &comm, opts)
+    fn ft_at_threads(&self, d: u32, threads: usize) -> Arc<FtResult> {
+        self.planner
+            .plan_with_threads(&self.request_at(d), threads)
+            .expect("session graph and cluster are registered with the planner")
+            .result
     }
 
     /// The Profiling sweep (§4.1): best feasible time per parallelism.
@@ -173,7 +215,7 @@ impl Session {
     /// mixed-generation cluster the floor is the smallest device's memory:
     /// a strategy must fit on every device it touches.
     pub fn mem_budget(&self) -> f64 {
-        self.cluster.min_device_memory() / 1.1
+        self.cluster.mem_budget()
     }
 
     /// Run a search option.

@@ -18,7 +18,7 @@ use crate::cluster::Cluster;
 pub const SPOT_MULTIPLIER: f64 = 0.32;
 
 /// How rented capacity is billed.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Billing {
     /// On-demand list price.
     #[default]

@@ -7,20 +7,26 @@ use crate::baselines::{data_parallel, mesh_tensorflow_frontier, optcnn, tofu};
 use crate::cluster::Cluster;
 use crate::cost::comm::CommModel;
 use crate::cost::estimator::{eval_strategy, ReuseChoice};
-use crate::ft::{frontier_search, FtOptions};
-use crate::graph::models;
+use crate::plan::{PlanRequest, Planner};
 use crate::util::table::Table;
 
 use super::{turning_point, GB};
 
-/// Frontier + baselines for one model; returns (curve table, summary rows).
+/// Frontier + baselines for one model; returns (curve table, summary
+/// rows). All searches (FT + OptCNN + ToFu) run through one planner
+/// engine, so they share the model's search space.
 pub fn run(model: &str, devices: u32) -> (Table, Table) {
-    let g = models::by_name(model, 256).unwrap_or_else(|| panic!("unknown model {model}"));
+    let planner = Planner::new();
     let cluster = Cluster::with_gpus(devices as usize);
-    let comm = CommModel::profile(&cluster);
-    let opts = FtOptions::new(devices);
+    let fp = planner.register_cluster(&cluster);
+    let req = PlanRequest::new(model, 256, &fp, devices);
 
-    let ft = frontier_search(&g, &cluster, &comm, opts.clone());
+    let ft = planner
+        .plan(&req)
+        .unwrap_or_else(|e| panic!("unknown model {model}: {e}"))
+        .result;
+    let g = planner.graph_of(&req).unwrap();
+    let comm = CommModel::profile(&cluster);
 
     let mut curve = Table::new(
         &format!("Figure 6 [{model}]: TensorOpt cost frontier ({} points)", ft.frontier.len()),
@@ -54,9 +60,9 @@ pub fn run(model: &str, devices: u32) -> (Table, Table) {
     );
     let dp = data_parallel(&g, &cluster, &comm, devices);
     summary.row(&["DataParallel".into(), format!("{:.2}", dp.cost.memory / GB), format!("{:.4}", dp.cost.time)]);
-    let oc = optcnn(&g, &cluster, &comm, opts.clone());
+    let oc = optcnn(&planner, &req);
     summary.row(&["OptCNN".into(), format!("{:.2}", oc.cost.memory / GB), format!("{:.4}", oc.cost.time)]);
-    let tf = tofu(&g, &cluster, &comm, opts);
+    let tf = tofu(&planner, &req);
     summary.row(&["ToFu".into(), format!("{:.2}", tf.cost.memory / GB), format!("{:.4}", tf.cost.time)]);
     if let Some((m, t)) = turning_point(&ft.frontier, 0.05) {
         summary.row(&["TurningPoint".into(), format!("{:.2}", m / GB), format!("{:.4}", t)]);

@@ -2,18 +2,26 @@
 //! bandwidth, (c) intra-machine interconnect on the Transformer frontier.
 
 use crate::cluster::{Cluster, LinkKind};
-use crate::cost::comm::CommModel;
-use crate::ft::{frontier_search, FtOptions};
 use crate::graph::models::{transformer_lm, TransformerCfg};
+use crate::plan::{PlanRequest, Planner};
 use crate::util::table::Table;
 
 use super::{turning_point, GB};
 
-fn frontier_rows(t: &mut Table, label: &str, cluster: &Cluster, cfg: TransformerCfg) {
-    let g = transformer_lm(cfg);
-    let comm = CommModel::profile(cluster);
+fn frontier_rows(
+    planner: &Planner,
+    t: &mut Table,
+    label: &str,
+    cluster: &Cluster,
+    cfg: TransformerCfg,
+) {
+    let (graph_id, batch) = planner.register_graph(transformer_lm(cfg));
+    let fp = planner.register_cluster(cluster);
     let d = cluster.n_devices() as u32;
-    let r = frontier_search(&g, cluster, &comm, FtOptions::new(d));
+    let r = planner
+        .plan(&PlanRequest::new(&graph_id, batch, &fp, d))
+        .expect("registered graph and cluster")
+        .result;
     for tu in &r.frontier.tuples {
         t.row(&[label.into(), format!("{:.3}", tu.mem / GB), format!("{:.4}", tu.time)]);
     }
@@ -28,9 +36,11 @@ pub fn run_a() -> Table {
         "Figure 7(a): Transformer frontier vs model size (hidden)",
         &["series", "mem_gb", "time_s"],
     );
+    let planner = Planner::new();
     let cluster = Cluster::paper_testbed();
     for hidden in [2048, 3072, 4096] {
         frontier_rows(
+            &planner,
             &mut t,
             &format!("hidden={hidden}"),
             &cluster,
@@ -46,12 +56,13 @@ pub fn run_b() -> Table {
         "Figure 7(b): Transformer frontier vs cross-machine bandwidth",
         &["series", "mem_gb", "time_s"],
     );
+    let planner = Planner::new();
     for (label, kind) in [
         ("noRDMA", LinkKind::IbNoRdma),
         ("RDMA", LinkKind::IbRdma),
         ("4xRDMA", LinkKind::IbRdma4x),
     ] {
-        frontier_rows(&mut t, label, &Cluster::with_inter(kind), TransformerCfg::default());
+        frontier_rows(&planner, &mut t, label, &Cluster::with_inter(kind), TransformerCfg::default());
     }
     t
 }
@@ -62,8 +73,9 @@ pub fn run_c() -> Table {
         "Figure 7(c): Transformer frontier, 1 machine x 8 GPUs, NVLink vs PCIe",
         &["series", "mem_gb", "time_s"],
     );
+    let planner = Planner::new();
     for (label, kind) in [("NVLink", LinkKind::NvLink), ("PCIe", LinkKind::Pcie)] {
-        frontier_rows(&mut t, label, &Cluster::single_machine(kind), TransformerCfg::default());
+        frontier_rows(&planner, &mut t, label, &Cluster::single_machine(kind), TransformerCfg::default());
     }
     t
 }

@@ -8,9 +8,7 @@
 use crate::baselines::{data_parallel, optcnn, tofu};
 use crate::cluster::Cluster;
 use crate::cost::comm::CommModel;
-use crate::frontier::Mode;
-use crate::ft::{frontier_search, FtOptions};
-use crate::graph::models;
+use crate::plan::{PlanRequest, Planner};
 use crate::util::table::Table;
 
 use super::GB;
@@ -18,20 +16,27 @@ use super::GB;
 /// Feasibility = strategy's per-device memory within capacity/1.1 (§5.2
 /// safety margin).
 fn feasible(mem: f64, cluster: &Cluster) -> bool {
-    mem <= cluster.min_device_memory() / 1.1
+    mem <= cluster.mem_budget()
 }
 
-/// Run the Figure-8 sweep (frontier vs parallelism) for `model`.
+/// Run the Figure-8 sweep (frontier vs parallelism) for `model`. One
+/// planner engine serves the whole sweep; at each cluster size the FT,
+/// OptCNN and ToFu searches share the memoized model space (this sweep
+/// grows the *cluster* per step, so spaces are per-size — the planner's
+/// cross-parallelism sharing shows up in `search`/`sched` sweeps over one
+/// cluster).
 pub fn run(model: &str, parallelisms: &[u32]) -> Table {
-    let g = models::by_name(model, 256).unwrap_or_else(|| panic!("unknown model {model}"));
+    let planner = Planner::new();
     let mut t = Table::new(
         &format!("Figure 8 [{model}]: min per-iteration time vs parallelism (OOM = infeasible)"),
         &["gpus", "TensorOpt", "DataParallel", "OptCNN", "ToFu"],
     );
     for &d in parallelisms {
         let cluster = Cluster::with_gpus(d as usize);
+        let fp = planner.register_cluster(&cluster);
+        let req = PlanRequest::new(model, 256, &fp, d);
         let comm = CommModel::profile(&cluster);
-        let budget = cluster.min_device_memory() / 1.1;
+        let budget = cluster.mem_budget();
         let fmt = |time: f64, mem: f64| -> String {
             if feasible(mem, &cluster) {
                 format!("{time:.3}")
@@ -39,7 +44,10 @@ pub fn run(model: &str, parallelisms: &[u32]) -> Table {
                 format!("OOM({:.0}GB)", mem / GB)
             }
         };
-        let ft = frontier_search(&g, &cluster, &comm, FtOptions::new(d));
+        let ft = planner
+            .plan(&req)
+            .unwrap_or_else(|e| panic!("unknown model {model}: {e}"))
+            .result;
         let ours = match ft.frontier.min_time_within(budget) {
             Some(tu) => format!("{:.3}", tu.time),
             None => {
@@ -47,9 +55,10 @@ pub fn run(model: &str, parallelisms: &[u32]) -> Table {
                 format!("OOM({:.0}GB)", mm.mem / GB)
             }
         };
+        let g = planner.graph_of(&req).unwrap();
         let dp = data_parallel(&g, &cluster, &comm, d);
-        let oc = optcnn(&g, &cluster, &comm, FtOptions::new(d).with_mode(Mode::TimeOnly));
-        let tf = tofu(&g, &cluster, &comm, FtOptions::new(d));
+        let oc = optcnn(&planner, &req);
+        let tf = tofu(&planner, &req);
         t.row(&[
             d.to_string(),
             ours,

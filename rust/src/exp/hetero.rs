@@ -18,9 +18,8 @@
 //!    picks up the RDMA-less machine, the optimistic one does not.
 
 use crate::cluster::Cluster;
-use crate::cost::comm::CommModel;
-use crate::ft::{frontier_search, FtOptions};
 use crate::graph::models;
+use crate::plan::{PlanRequest, Planner};
 use crate::sched::{run_workload, FrontierCache, Policy, SchedConfig, Workload};
 use crate::sim::{simulate, SimConfig};
 use crate::util::table::Table;
@@ -82,14 +81,24 @@ pub struct PlanGap {
     pub budget: f64,
 }
 
-/// Search the best-feasible plan under `belief`'s cost model and budget,
-/// then execute it on `real`: (est_time, actual_time, actual_memory).
-fn plan_on(g: &crate::graph::Graph, belief: &Cluster, real: &Cluster) -> (f64, f64, f64) {
-    let comm = CommModel::profile(belief);
-    let r = frontier_search(g, belief, &comm, FtOptions::new(belief.n_devices() as u32));
+/// Search the best-feasible plan under `belief`'s cost model and budget
+/// through the planner engine, then execute it on `real`:
+/// (est_time, actual_time, actual_memory).
+fn plan_on(
+    planner: &Planner,
+    g: &crate::graph::Graph,
+    belief: &Cluster,
+    real: &Cluster,
+) -> (f64, f64, f64) {
+    let (graph_id, batch) = planner.register_graph(g.clone());
+    let fp = planner.register_cluster(belief);
+    let r = planner
+        .plan(&PlanRequest::new(&graph_id, batch, &fp, belief.n_devices() as u32))
+        .expect("registered graph and cluster")
+        .result;
     let t = r
         .frontier
-        .min_time_within(belief.min_device_memory() / 1.1)
+        .min_time_within(belief.mem_budget())
         .or_else(|| r.frontier.min_mem())
         .unwrap_or_else(|| panic!("empty frontier on {}", belief.name));
     let (s, _) = r.strategy_of(t);
@@ -101,11 +110,13 @@ fn plan_on(g: &crate::graph::Graph, belief: &Cluster, real: &Cluster) -> (f64, f
 pub fn plan_gap(cluster: &Cluster, model: &str, batch: i64) -> PlanGap {
     let g = models::by_name(model, batch)
         .unwrap_or_else(|| panic!("unknown model `{model}`"));
-    let budget = cluster.min_device_memory() / 1.1;
+    let planner = Planner::new();
+    let budget = cluster.mem_budget();
     // (a) plan on the homogenized belief (with its own optimistic budget),
     // (b) plan on the real topology — both executed on the real cluster.
-    let (est_homo, sim_homo, mem_homo) = plan_on(&g, &cluster.homogenized(), cluster);
-    let (est_aware, sim_aware, mem_aware) = plan_on(&g, cluster, cluster);
+    let (est_homo, sim_homo, mem_homo) =
+        plan_on(&planner, &g, &cluster.homogenized(), cluster);
+    let (est_aware, sim_aware, mem_aware) = plan_on(&planner, &g, cluster, cluster);
     PlanGap { est_homo, sim_homo, mem_homo, est_aware, sim_aware, mem_aware, budget }
 }
 

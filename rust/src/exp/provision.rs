@@ -20,11 +20,9 @@
 //! (on-demand or spot) from the cluster presets.
 
 use crate::cluster::Cluster;
-use crate::cost::comm::CommModel;
 use crate::cost::pricing::{self, Billing};
 use crate::frontier::pareto_indices;
-use crate::ft::{frontier_search, FtOptions};
-use crate::graph::models;
+use crate::plan::{PlanRequest, Planner};
 use crate::util::table::Table;
 
 use super::{hetero, GB};
@@ -100,20 +98,24 @@ pub fn size_ladder(cluster: &Cluster, cfg: &ProvisionCfg) -> Vec<usize> {
     sizes
 }
 
-/// Run the priced FT search at every candidate size of `cluster` and pool
-/// the feasible frontier points as whole-run [`Candidate`]s.
-pub fn candidates(cluster: &Cluster, cfg: &ProvisionCfg) -> Vec<Candidate> {
-    let g = models::by_name(&cfg.model, cfg.batch)
-        .unwrap_or_else(|| panic!("unknown model `{}`", cfg.model));
+/// Run the priced FT search at every candidate size of `cluster` (through
+/// the shared planner engine — the per-model space is built once and every
+/// size reuses the recorded elimination structure) and pool the feasible
+/// frontier points as whole-run [`Candidate`]s.
+pub fn candidates(planner: &Planner, cluster: &Cluster, cfg: &ProvisionCfg) -> Vec<Candidate> {
+    let fp = planner.register_cluster(cluster);
     let iters = cfg.iters as f64;
     let mut out = Vec::new();
     for n in size_ladder(cluster, cfg) {
         let sub = cluster.sub_cluster(n);
-        let comm = CommModel::profile(&sub);
         let rate = pricing::usd_hour(&sub, cfg.billing);
-        let opts = FtOptions::new(n as u32).with_pricing(rate);
-        let r = frontier_search(&g, &sub, &comm, opts);
-        let budget = sub.min_device_memory() / 1.1;
+        let req = PlanRequest::new(&cfg.model, cfg.batch, &fp, n as u32)
+            .with_billing(cfg.billing);
+        let r = planner
+            .plan(&req)
+            .unwrap_or_else(|e| panic!("unknown model `{}`: {e}", cfg.model))
+            .result;
+        let budget = sub.mem_budget();
         for t in r.frontier.tuples.iter().filter(|t| t.mem <= budget) {
             out.push(Candidate {
                 testbed: cluster.name.clone(),
@@ -205,8 +207,9 @@ pub fn run(cfg: &ProvisionCfg) -> (Table, Table) {
         ),
         &["testbed @ budget_usd", "gpus", "wall_h", "usd", "mem_gb", "cluster_usd_h"],
     );
+    let planner = Planner::new();
     for cluster in hetero::presets() {
-        let cands = candidates(&cluster, cfg);
+        let cands = candidates(&planner, &cluster, cfg);
         let par = pareto(&cands);
         println!(
             "[{}] {} candidate points, {} on the 3-D Pareto frontier",
@@ -273,7 +276,8 @@ mod tests {
     #[test]
     fn candidates_are_priced_and_feasible() {
         let c = small_mixed();
-        let cands = candidates(&c, &tiny_cfg());
+        let planner = Planner::new();
+        let cands = candidates(&planner, &c, &tiny_cfg());
         assert!(!cands.is_empty());
         for cand in &cands {
             assert!(cand.wall_s > 0.0 && cand.usd > 0.0 && cand.mem > 0.0);
@@ -287,11 +291,14 @@ mod tests {
                 expect
             );
             // fits under the smallest participating device's budget.
-            assert!(cand.mem <= c.sub_cluster(cand.gpus).min_device_memory() / 1.1 * 1.0001);
+            assert!(cand.mem <= c.sub_cluster(cand.gpus).mem_budget() * 1.0001);
         }
         // spot billing scales every dollar figure down uniformly.
         let spot_cfg = ProvisionCfg { billing: Billing::Spot, ..tiny_cfg() };
-        let spot = candidates(&c, &spot_cfg);
+        let spot = candidates(&planner, &c, &spot_cfg);
+        // the re-billed sweep reuses every leaf table (incremental path).
+        assert_eq!(planner.stats().space_builds, 1);
+        assert_eq!(planner.stats().leaf_builds, 3, "sizes 1,2,4 built once");
         assert_eq!(spot.len(), cands.len(), "pricing must not change the frontier");
         for (a, b) in cands.iter().zip(&spot) {
             assert!((b.usd - a.usd * pricing::SPOT_MULTIPLIER).abs() < a.usd * 1e-6);
@@ -301,7 +308,7 @@ mod tests {
     #[test]
     fn selections_are_pareto_optimal_and_deadline_monotone() {
         let c = small_mixed();
-        let cands = candidates(&c, &tiny_cfg());
+        let cands = candidates(&Planner::new(), &c, &tiny_cfg());
         let par = pareto(&cands);
         assert!(!par.is_empty());
         let objs: Vec<(f64, f64, f64)> = cands.iter().map(|x| x.objectives()).collect();
@@ -345,7 +352,7 @@ mod tests {
     fn selections_agree_with_frontier_selectors() {
         use crate::frontier::{Frontier, Trace, Tuple};
         let c = small_mixed();
-        let cands = candidates(&c, &tiny_cfg());
+        let cands = candidates(&Planner::new(), &c, &tiny_cfg());
         let f = Frontier {
             tuples: cands
                 .iter()
@@ -405,7 +412,7 @@ mod tests {
         // the cheapest candidate overall usually rents fewer GPUs and is
         // slower than the fastest one; both must be on the 3-D frontier.
         let c = small_mixed();
-        let cands = candidates(&c, &tiny_cfg());
+        let cands = candidates(&Planner::new(), &c, &tiny_cfg());
         let par = pareto(&cands);
         let fastest = par
             .iter()

@@ -24,6 +24,11 @@ pub struct Row {
 }
 
 /// Time the searches for one model.
+///
+/// Deliberately *not* routed through the planner engine: this table
+/// benchmarks the raw FT algorithm's cold running time (the paper's
+/// comparison), which planner memoization would mask. Warm/cold planner
+/// timings live in `benches/bench_plan.rs` instead.
 pub fn measure(model: &'static str, with_elimination: bool) -> Row {
     let g = models::by_name(model, 256).unwrap();
     let cluster = Cluster::paper_testbed();

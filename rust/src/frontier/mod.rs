@@ -36,7 +36,7 @@ pub use trace::Trace;
 /// Reduction mode: the full Pareto frontier (FT), or single-objective
 /// truncations that turn the same machinery into the OptCNN (time-only)
 /// and ToFu (memory-only) baselines.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Mode {
     /// Keep the full (memory, time, cost) Pareto frontier (FT).
     Pareto,

@@ -27,6 +27,31 @@ use crate::util::par::par_map_indexed;
 
 use super::space::SearchSpace;
 
+/// One step of an elimination schedule. Candidate discovery is purely
+/// *structural* — it reads the evolving graph shape (alive ops, edge
+/// multiplicities, spine marks), never the frontier contents — so the
+/// sequence of steps a [`WorkGraph::run`] performs depends only on the
+/// graph topology and the spine. Recording it once per model lets every
+/// later search of the same graph [`WorkGraph::replay`] the steps and
+/// skip re-discovery (the planner engine's incremental re-search).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElimStep {
+    /// An [`WorkGraph::edge_eliminate_all`] pass that performed merges.
+    Merge,
+    /// Node elimination (Eq. 4) of op `i`.
+    Node(usize),
+    /// Branch elimination (Eq. 6) of source op `i`.
+    Branch(usize),
+    /// Heuristic elimination (Eq. 7) of op `i`. The pinned configuration
+    /// k* is *not* part of the schedule — it depends on the leaf costs, so
+    /// replays re-score it (or reuse a per-(parallelism, mode) pin when
+    /// only the pricing changed; see `crate::plan`).
+    Heuristic(usize),
+}
+
+/// The recorded step sequence of one full elimination run.
+pub type ElimSchedule = Vec<ElimStep>;
+
 /// A live edge of the working graph with its (K_src x K_dst) frontier
 /// table.
 pub struct WorkEdge {
@@ -143,17 +168,32 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
         merges
     }
 
-    /// Eq. 4: eliminate one chain node (single pred, single succ,
-    /// unmarked). Returns true if a node was eliminated.
-    pub fn node_eliminate_one(&mut self) -> bool {
-        let mode = self.space.opts.mode;
-        let cand = (0..self.alive.len()).find(|&i| {
+    /// Structural candidate for node elimination: first live unmarked op
+    /// with exactly one in-edge and one out-edge.
+    fn find_chain_node(&self) -> Option<usize> {
+        (0..self.alive.len()).find(|&i| {
             self.alive[i]
                 && !self.marked[i]
                 && self.in_edge_ids(i).len() == 1
                 && self.out_edge_ids(i).len() == 1
-        });
-        let Some(i) = cand else { return false };
+        })
+    }
+
+    /// Eq. 4: eliminate one chain node (single pred, single succ,
+    /// unmarked). Returns true if a node was eliminated.
+    pub fn node_eliminate_one(&mut self) -> bool {
+        match self.find_chain_node() {
+            Some(i) => {
+                self.node_eliminate_at(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Apply node elimination (Eq. 4) at op `i` (must be a chain node).
+    pub fn node_eliminate_at(&mut self, i: usize) {
+        let mode = self.space.opts.mode;
         let e_in = self.in_edge_ids(i)[0];
         let e_out = self.out_edge_ids(i)[0];
         let h = self.edges[e_in].src;
@@ -185,21 +225,34 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
         self.edges.push(WorkEdge { src: h, dst: j, table });
         self.alive[i] = false;
         self.edge_eliminate_all();
-        true
+    }
+
+    /// Structural candidate for branch elimination: first live unmarked
+    /// source op (no in-edges) with exactly one out-edge.
+    fn find_branch_source(&self) -> Option<usize> {
+        (0..self.alive.len()).find(|&i| {
+            self.alive[i]
+                && !self.marked[i]
+                && self.in_edge_ids(i).is_empty()
+                && self.out_edge_ids(i).len() == 1
+        })
     }
 
     /// Eq. 6 (restricted exact form): eliminate one source node with no
     /// in-edges whose out-edges all go to a single consumer.
     pub fn branch_eliminate_one(&mut self) -> bool {
-        let mode = self.space.opts.mode;
-        let cand = (0..self.alive.len()).find(|&i| {
-            if !self.alive[i] || self.marked[i] || !self.in_edge_ids(i).is_empty() {
-                return false;
+        match self.find_branch_source() {
+            Some(i) => {
+                self.branch_eliminate_at(i);
+                true
             }
-            let outs = self.out_edge_ids(i);
-            outs.len() == 1
-        });
-        let Some(i) = cand else { return false };
+            None => false,
+        }
+    }
+
+    /// Apply branch elimination (Eq. 6) at source op `i`.
+    pub fn branch_eliminate_at(&mut self, i: usize) {
+        let mode = self.space.opts.mode;
         let e = self.out_edge_ids(i)[0];
         let j = self.edges[e].dst;
         let ki = self.space.k(i);
@@ -220,54 +273,78 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
         self.node_frontiers[j] = new_fj;
         self.edges.swap_remove(e);
         self.alive[i] = false;
-        true
+    }
+
+    /// Structural candidate for heuristic elimination: the highest-degree
+    /// live unmarked op (e.g. BERT's mask input), `None` when only marked
+    /// ops survive.
+    fn find_heuristic_candidate(&self) -> Option<usize> {
+        (0..self.alive.len())
+            .filter(|&i| self.alive[i] && !self.marked[i])
+            .max_by_key(|&i| self.in_edge_ids(i).len() + self.out_edge_ids(i).len())
     }
 
     /// Eq. 7: heuristically pin one remaining unmarked node to its best
     /// single configuration and fold its edges into the neighbours.
     /// Returns true if a node was eliminated.
     pub fn heuristic_eliminate_one(&mut self) -> bool {
+        match self.find_heuristic_candidate() {
+            Some(i) => {
+                self.heuristic_eliminate_at(i, None);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Apply heuristic elimination (Eq. 7) at op `i`. `pin` forces the
+    /// configuration k* instead of re-scoring it — valid only when the
+    /// (memory, time) leaf costs are unchanged since the pin was recorded
+    /// (the scoring reads memory and time, never dollars, so a pin from an
+    /// unpriced search is exact for any re-priced search of the same
+    /// leaves).
+    pub fn heuristic_eliminate_at(&mut self, i: usize, pin: Option<u32>) {
         let mode = self.space.opts.mode;
-        // prefer the highest-degree offender (e.g. BERT's mask input).
-        let cand = (0..self.alive.len())
-            .filter(|&i| self.alive[i] && !self.marked[i])
-            .max_by_key(|&i| self.in_edge_ids(i).len() + self.out_edge_ids(i).len());
-        let Some(i) = cand else { return false };
         let ki = self.space.k(i);
         let outs = self.out_edge_ids(i);
         let ins = self.in_edge_ids(i);
 
         // ---- choose k*: weighted combination of own cost and the average
         // best-case cost of the incident edges (normalized per term).
-        let dev_mem = self.space.cluster.min_device_memory();
-        let mut best = (f64::INFINITY, 0usize);
-        for k in 0..ki {
-            let own = &self.space.op_costs[i][k];
-            let mut edge_time = 0.0;
-            for &e in &outs {
-                let row = &self.edges[e].table[k];
-                let avg: f64 = row
-                    .iter()
-                    .map(|f| f.min_time().map_or(0.0, |t| t.time))
-                    .sum::<f64>()
-                    / row.len().max(1) as f64;
-                edge_time += avg;
+        let kstar = match pin {
+            Some(k) => k as usize,
+            None => {
+                let dev_mem = self.space.cluster.min_device_memory();
+                let mut best = (f64::INFINITY, 0usize);
+                for k in 0..ki {
+                    let own = &self.space.tables.op_costs[i][k];
+                    let mut edge_time = 0.0;
+                    for &e in &outs {
+                        let row = &self.edges[e].table[k];
+                        let avg: f64 = row
+                            .iter()
+                            .map(|f| f.min_time().map_or(0.0, |t| t.time))
+                            .sum::<f64>()
+                            / row.len().max(1) as f64;
+                        edge_time += avg;
+                    }
+                    for &e in &ins {
+                        let col_avg: f64 = self.edges[e]
+                            .table
+                            .iter()
+                            .map(|row| row[k].min_time().map_or(0.0, |t| t.time))
+                            .sum::<f64>()
+                            / self.edges[e].table.len().max(1) as f64;
+                        edge_time += col_avg;
+                    }
+                    let score = own.time() + edge_time + own.mem / dev_mem * 1e-2;
+                    if score < best.0 {
+                        best = (score, k);
+                    }
+                }
+                best.1
             }
-            for &e in &ins {
-                let col_avg: f64 = self.edges[e]
-                    .table
-                    .iter()
-                    .map(|row| row[k].min_time().map_or(0.0, |t| t.time))
-                    .sum::<f64>()
-                    / self.edges[e].table.len().max(1) as f64;
-                edge_time += col_avg;
-            }
-            let score = own.time() + edge_time + own.mem / dev_mem * 1e-2;
-            if score < best.0 {
-                best = (score, k);
-            }
-        }
-        let kstar = best.1;
+        };
 
         // ---- fold: own cost + out-edge costs into consumers, in-edge
         // costs into producers.
@@ -311,23 +388,37 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
         self.forced.insert(i as u32, kstar as u32);
         self.alive[i] = false;
         self.n_heuristic += 1;
-        true
     }
 
     /// Algorithm 2 lines 4-11: run exact eliminations to fixpoint, then a
     /// heuristic elimination, until only marked (spine) nodes survive.
     pub fn run(&mut self) {
+        let mut scratch = Vec::new();
+        self.run_recording(&mut scratch);
+    }
+
+    /// [`WorkGraph::run`], recording every applied step into `schedule`.
+    /// The recorded sequence is purely structural (see [`ElimStep`]), so
+    /// it can be [`WorkGraph::replay`]ed against any search space over the
+    /// same graph and spine — different device counts, batch stampings,
+    /// modes or prices — and produce bit-identical state to a fresh run.
+    pub fn run_recording(&mut self, schedule: &mut ElimSchedule) {
         loop {
             let mut progress = true;
             while progress {
                 progress = false;
                 if self.edge_eliminate_all() > 0 {
+                    schedule.push(ElimStep::Merge);
                     progress = true;
                 }
-                while self.node_eliminate_one() {
+                while let Some(i) = self.find_chain_node() {
+                    self.node_eliminate_at(i);
+                    schedule.push(ElimStep::Node(i));
                     progress = true;
                 }
-                while self.branch_eliminate_one() {
+                while let Some(i) = self.find_branch_source() {
+                    self.branch_eliminate_at(i);
+                    schedule.push(ElimStep::Branch(i));
                     progress = true;
                 }
             }
@@ -336,8 +427,32 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
             if !remaining {
                 break;
             }
-            if !self.heuristic_eliminate_one() {
-                break;
+            match self.find_heuristic_candidate() {
+                Some(i) => {
+                    self.heuristic_eliminate_at(i, None);
+                    schedule.push(ElimStep::Heuristic(i));
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Replay a recorded schedule, skipping candidate re-discovery. `pins`
+    /// optionally forces each heuristic node's k* (see
+    /// [`WorkGraph::heuristic_eliminate_at`] for when that is exact);
+    /// without a pin the k* is re-scored against the current leaf costs.
+    pub fn replay(&mut self, schedule: &ElimSchedule, pins: Option<&HashMap<u32, u32>>) {
+        for step in schedule {
+            match *step {
+                ElimStep::Merge => {
+                    self.edge_eliminate_all();
+                }
+                ElimStep::Node(i) => self.node_eliminate_at(i),
+                ElimStep::Branch(i) => self.branch_eliminate_at(i),
+                ElimStep::Heuristic(i) => {
+                    let pin = pins.and_then(|p| p.get(&(i as u32)).copied());
+                    self.heuristic_eliminate_at(i, pin);
+                }
             }
         }
     }
@@ -421,6 +536,44 @@ mod tests {
         assert_eq!(chain.len(), spine.len());
         assert_eq!(edges.len(), chain.len() - 1);
         assert_eq!(nh, 0, "residual branch should be exactly eliminable");
+    }
+
+    /// Replaying a recorded schedule must reproduce a fresh run exactly:
+    /// same chain, same frontiers (bitwise), same pins — with and without
+    /// pinned k*.
+    #[test]
+    fn replay_matches_fresh_run() {
+        for g in [tiny_resnet(16), bert_like_test(8)] {
+            let cluster = Cluster::paper_testbed();
+            let comm = GroundTruthComm::new(cluster.clone());
+            let space = space_for(&g, &cluster, &comm, 4);
+            let spine = g.mark_linear_spine();
+
+            let mut fresh = WorkGraph::init(&space, &spine);
+            let mut schedule = ElimSchedule::new();
+            fresh.run_recording(&mut schedule);
+            let (chain_a, nodes_a, edges_a, forced_a, nh_a) = fresh.into_chain();
+
+            for pins in [None, Some(&forced_a)] {
+                let mut re = WorkGraph::init(&space, &spine);
+                re.replay(&schedule, pins);
+                let (chain_b, nodes_b, edges_b, forced_b, nh_b) = re.into_chain();
+                assert_eq!(chain_a, chain_b);
+                assert_eq!(forced_a, forced_b);
+                assert_eq!(nh_a, nh_b);
+                assert_eq!(nodes_a.len(), nodes_b.len());
+                for (fa, fb) in nodes_a.iter().flatten().zip(nodes_b.iter().flatten()) {
+                    assert_eq!(fa.len(), fb.len());
+                    for (x, y) in fa.tuples.iter().zip(&fb.tuples) {
+                        assert_eq!(
+                            (x.mem.to_bits(), x.time.to_bits(), x.cost.to_bits()),
+                            (y.mem.to_bits(), y.time.to_bits(), y.cost.to_bits())
+                        );
+                    }
+                }
+                assert_eq!(edges_a.len(), edges_b.len());
+            }
+        }
     }
 
     #[test]

@@ -13,15 +13,17 @@ use crate::graph::Graph;
 use crate::parallel::resched::CollectiveCost;
 use crate::parallel::{ParallelConfig, Strategy};
 
-pub use space::{FtOptions, SearchSpace};
+pub use eliminate::{ElimSchedule, ElimStep};
+pub use space::{build_configs, FtOptions, SearchSpace, SpaceTables};
 
 /// Output of a frontier search: the cost frontier plus everything needed
 /// to reconstruct any strategy on it.
 pub struct FtResult {
     /// The final cost frontier.
     pub frontier: Frontier,
-    /// Per-op configuration lists (index space of the traces).
-    pub configs: Vec<Vec<ParallelConfig>>,
+    /// Per-op configuration lists (index space of the traces), shared
+    /// with the search space that produced them.
+    pub configs: std::sync::Arc<Vec<Vec<ParallelConfig>>>,
     /// Configurations pinned by heuristic elimination.
     pub forced: HashMap<u32, u32>,
     /// Heuristic eliminations performed.
@@ -91,7 +93,7 @@ pub fn frontier_search_filtered(
         ldp::ldp(&node_frontiers, &edge_tables, space.opts.mode, space.opts.threads);
     FtResult {
         frontier,
-        configs: space.configs.clone(),
+        configs: space.tables.configs.clone(),
         forced,
         n_heuristic,
         log2_space: space.log2_space_size(),
@@ -127,7 +129,7 @@ pub fn frontier_search_elimination(
     let frontier = reduce(acc, mode);
     FtResult {
         frontier,
-        configs: space.configs.clone(),
+        configs: space.tables.configs.clone(),
         forced,
         n_heuristic,
         log2_space: space.log2_space_size(),

@@ -2,13 +2,21 @@
 //! operator's valid parallelization configurations, pre-compute operator
 //! costs (Eq. 1), and build the per-edge (K_i x K_j) cost-frontier tables
 //! (Eq. 2 + the §4.2 reuse options) that the eliminations and LDP consume.
+//!
+//! The expensive, device-count-stamped data lives in [`SpaceTables`] — an
+//! owned, shareable value the planner engine (`crate::plan`) memoizes per
+//! (graph, cluster, parallelism) so repeated searches never rebuild it.
+//! [`SearchSpace`] is a thin per-search view: borrowed graph + cluster,
+//! the [`FtOptions`] for *this* search (mode / threads / pricing), and an
+//! `Arc` of the shared tables.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::cluster::Cluster;
 use crate::cost::op_cost::{edge_costs, op_cost, OpCost};
 use crate::frontier::{reduce, Frontier, Mode, Trace, Tuple};
-use crate::graph::Graph;
+use crate::graph::{Graph, Op, OpKind};
 use crate::parallel::resched::CollectiveCost;
 use crate::parallel::{enumerate_configs, ParallelConfig, Split};
 
@@ -65,16 +73,62 @@ impl FtOptions {
     }
 }
 
-/// Immutable, pre-computed search space.
-pub struct SearchSpace<'a> {
-    /// The computation graph being parallelized.
-    pub graph: &'a Graph,
-    /// The device graph the search is costed on.
-    pub cluster: &'a Cluster,
-    /// Search options (devices, mode, threads, pricing).
-    pub opts: FtOptions,
-    /// `configs[op][k]` — the valid configurations S_i.
-    pub configs: Vec<Vec<ParallelConfig>>,
+/// Enumeration signature of an operator: everything
+/// [`enumerate_configs`] actually depends on — the Input/Loss
+/// data-parallel restriction and the per-axis (extent, kind) list. Two
+/// ops with equal signatures have identical configuration tables, so the
+/// builder interns the enumeration per signature (a transformer's N
+/// identical blocks enumerate once).
+fn config_signature(op: &Op) -> String {
+    let io = matches!(op.kind, OpKind::Input | OpKind::Loss);
+    let mut s = String::with_capacity(16 + op.axes.len() * 8);
+    s.push(if io { 'i' } else { 'g' });
+    for a in &op.axes {
+        s.push_str(&format!("|{}:{:?}", a.size, a.kind));
+    }
+    s
+}
+
+/// Enumerate (and optionally filter) the per-op configuration tables
+/// `S_i`, interning the enumeration by [`config_signature`]. This is the
+/// exact configuration set a search at `devices` uses — the plan store
+/// re-derives configuration tables with this same function when serving a
+/// persisted plan, so trace indices stay valid.
+pub fn build_configs(
+    graph: &Graph,
+    devices: u32,
+    max_mesh_dims: usize,
+    config_filter: Option<&dyn Fn(&Op, &ParallelConfig) -> bool>,
+) -> Vec<Vec<ParallelConfig>> {
+    let mut intern: HashMap<String, Vec<ParallelConfig>> = HashMap::new();
+    let mut configs: Vec<Vec<ParallelConfig>> = Vec::with_capacity(graph.n_ops());
+    for op in &graph.ops {
+        let sig = config_signature(op);
+        let mut cs = intern
+            .entry(sig)
+            .or_insert_with(|| enumerate_configs(op, devices, max_mesh_dims))
+            .clone();
+        if let Some(f) = config_filter {
+            let kept: Vec<ParallelConfig> = cs.iter().filter(|c| f(op, c)).cloned().collect();
+            if !kept.is_empty() {
+                cs = kept;
+            }
+        }
+        configs.push(cs);
+    }
+    configs
+}
+
+/// The owned, device-count-stamped search-space data: per-op configuration
+/// tables, Eq. 1 operator costs, and Eq. 2 per-edge cost tables. Building
+/// this is the expensive part of a search; the planner engine memoizes one
+/// `SpaceTables` per (graph, cluster, parallelism) behind an `Arc`.
+#[derive(Clone)]
+pub struct SpaceTables {
+    /// `configs[op][k]` — the valid configurations S_i (shared: every
+    /// [`crate::ft::FtResult`] derived from these tables holds the same
+    /// `Arc` instead of a deep copy).
+    pub configs: Arc<Vec<Vec<ParallelConfig>>>,
     /// `op_costs[op][k]` — Eq. 1 costs.
     pub op_costs: Vec<Vec<OpCost>>,
     /// `edge_tables[edge][k][p]` — Eq. 2 cost options (mem, time) per
@@ -82,33 +136,35 @@ pub struct SearchSpace<'a> {
     pub edge_tables: Vec<Vec<Vec<Vec<(f64, f64)>>>>,
 }
 
-impl<'a> SearchSpace<'a> {
-    /// Build the space. `config_filter` lets baselines restrict S_i (e.g.
-    /// ToFu forbids replication); pass `None` for the full space.
+impl SpaceTables {
+    /// Build the tables for a `devices`-wide search of `graph` on
+    /// `cluster`. `config_filter` lets baselines restrict S_i (e.g. ToFu
+    /// forbids replication); pass `None` for the full space.
     pub fn build(
-        graph: &'a Graph,
-        cluster: &'a Cluster,
+        graph: &Graph,
+        cluster: &Cluster,
         comm: &dyn CollectiveCost,
-        opts: FtOptions,
-        config_filter: Option<&dyn Fn(&crate::graph::Op, &ParallelConfig) -> bool>,
+        devices: u32,
+        max_mesh_dims: usize,
+        config_filter: Option<&dyn Fn(&Op, &ParallelConfig) -> bool>,
     ) -> Self {
-        let d = opts.devices;
-        let mut configs: Vec<Vec<ParallelConfig>> = Vec::with_capacity(graph.n_ops());
-        for op in &graph.ops {
-            let mut cs = enumerate_configs(op, d, opts.max_mesh_dims);
-            if let Some(f) = config_filter {
-                let kept: Vec<ParallelConfig> =
-                    cs.iter().filter(|c| f(op, c)).cloned().collect();
-                if !kept.is_empty() {
-                    cs = kept;
-                }
-            }
-            configs.push(cs);
-        }
+        let configs = Arc::new(build_configs(graph, devices, max_mesh_dims, config_filter));
+        Self::build_from_configs(graph, cluster, comm, configs)
+    }
+
+    /// [`SpaceTables::build`] over an already-enumerated configuration
+    /// table (the planner shares one enumeration between the search path
+    /// and the plan store's re-derivation).
+    pub fn build_from_configs(
+        graph: &Graph,
+        cluster: &Cluster,
+        comm: &dyn CollectiveCost,
+        configs: Arc<Vec<Vec<ParallelConfig>>>,
+    ) -> Self {
         let op_costs: Vec<Vec<OpCost>> = graph
             .ops
             .iter()
-            .zip(&configs)
+            .zip(configs.iter())
             .map(|(op, cs)| cs.iter().map(|c| op_cost(op, c, cluster, comm)).collect())
             .collect();
 
@@ -141,12 +197,59 @@ impl<'a> SearchSpace<'a> {
             }
             edge_tables.push(table);
         }
-        Self { graph, cluster, opts, configs, op_costs, edge_tables }
+        Self { configs, op_costs, edge_tables }
+    }
+}
+
+/// Immutable, pre-computed search space: a per-search view over shared
+/// [`SpaceTables`].
+pub struct SearchSpace<'a> {
+    /// The computation graph being parallelized.
+    pub graph: &'a Graph,
+    /// The device graph the search is costed on.
+    pub cluster: &'a Cluster,
+    /// Search options (devices, mode, threads, pricing).
+    pub opts: FtOptions,
+    /// The shared per-op / per-edge tables.
+    pub tables: Arc<SpaceTables>,
+}
+
+impl<'a> SearchSpace<'a> {
+    /// Build the space from scratch (tables built here, unshared). This is
+    /// the cold path [`crate::ft::frontier_search`] uses; the planner
+    /// engine assembles the same space from memoized tables via
+    /// [`SearchSpace::from_parts`].
+    pub fn build(
+        graph: &'a Graph,
+        cluster: &'a Cluster,
+        comm: &dyn CollectiveCost,
+        opts: FtOptions,
+        config_filter: Option<&dyn Fn(&Op, &ParallelConfig) -> bool>,
+    ) -> Self {
+        let tables = Arc::new(SpaceTables::build(
+            graph,
+            cluster,
+            comm,
+            opts.devices,
+            opts.max_mesh_dims,
+            config_filter,
+        ));
+        Self { graph, cluster, opts, tables }
+    }
+
+    /// Assemble a space from already-built (typically memoized) tables.
+    pub fn from_parts(
+        graph: &'a Graph,
+        cluster: &'a Cluster,
+        opts: FtOptions,
+        tables: Arc<SpaceTables>,
+    ) -> Self {
+        Self { graph, cluster, opts, tables }
     }
 
     /// Number of valid configurations K_i for op `op`.
     pub fn k(&self, op: usize) -> usize {
-        self.configs[op].len()
+        self.tables.configs[op].len()
     }
 
     /// Dollars charged for `time_s` seconds of the priced cluster (0.0 on
@@ -159,7 +262,7 @@ impl<'a> SearchSpace<'a> {
     /// `F(o_i, s_i^k)` with an `OpChoice` trace (dollar-stamped when the
     /// search is priced).
     pub fn node_frontier(&self, i: usize, k: usize) -> Frontier {
-        let c = &self.op_costs[i][k];
+        let c = &self.tables.op_costs[i][k];
         let t = c.time();
         Frontier {
             tuples: vec![Tuple::with_cost(
@@ -175,7 +278,7 @@ impl<'a> SearchSpace<'a> {
     /// small frontier with `EdgeChoice` traces (dollar-stamped when the
     /// search is priced).
     pub fn edge_frontier(&self, edge: usize, k: usize, p: usize) -> Frontier {
-        let opts = &self.edge_tables[edge][k][p];
+        let opts = &self.tables.edge_tables[edge][k][p];
         let tuples: Vec<Tuple> = opts
             .iter()
             .enumerate()
@@ -189,7 +292,7 @@ impl<'a> SearchSpace<'a> {
     /// Total number of strategies in the raw space (log-scale), for
     /// reporting: sum over ops of log2(K_i).
     pub fn log2_space_size(&self) -> f64 {
-        self.configs.iter().map(|c| (c.len() as f64).log2()).sum()
+        self.tables.configs.iter().map(|c| (c.len() as f64).log2()).sum()
     }
 }
 
@@ -197,7 +300,7 @@ impl<'a> SearchSpace<'a> {
 mod tests {
     use super::*;
     use crate::cost::comm::GroundTruthComm;
-    use crate::graph::models::tiny_mlp;
+    use crate::graph::models::{tiny_mlp, tiny_resnet};
 
     #[test]
     fn build_space_tiny() {
@@ -206,8 +309,8 @@ mod tests {
         let comm = GroundTruthComm::new(cluster.clone());
         let space =
             SearchSpace::build(&g, &cluster, &comm, FtOptions::new(4), None);
-        assert_eq!(space.configs.len(), g.n_ops());
-        assert_eq!(space.edge_tables.len(), g.edges.len());
+        assert_eq!(space.tables.configs.len(), g.n_ops());
+        assert_eq!(space.tables.edge_tables.len(), g.edges.len());
         for (i, _) in g.ops.iter().enumerate() {
             assert!(space.k(i) >= 1, "op {i} has no configs");
             let f = space.node_frontier(i, 0);
@@ -240,7 +343,7 @@ mod tests {
         let g = tiny_mlp(256);
         let cluster = Cluster::paper_testbed();
         let comm = GroundTruthComm::new(cluster.clone());
-        let no_rep = |_op: &crate::graph::Op, c: &ParallelConfig| c.replication() == 1;
+        let no_rep = |_op: &Op, c: &ParallelConfig| c.replication() == 1;
         let space = SearchSpace::build(
             &g,
             &cluster,
@@ -248,12 +351,25 @@ mod tests {
             FtOptions::new(4),
             Some(&no_rep),
         );
-        for (i, cs) in space.configs.iter().enumerate() {
+        for (i, cs) in space.tables.configs.iter().enumerate() {
             // ops with a full-coverage option must have dropped replication
             for c in cs {
-                if space.configs[i].len() > 1 {
+                if space.tables.configs[i].len() > 1 {
                     assert_eq!(c.replication(), 1, "op {i} cfg {}", c.label(&g.ops[i]));
                 }
+            }
+        }
+    }
+
+    /// The interned enumeration must be indistinguishable from calling
+    /// `enumerate_configs` per op (bit-identical search spaces).
+    #[test]
+    fn interned_configs_match_direct_enumeration() {
+        for g in [tiny_mlp(256), tiny_resnet(16)] {
+            let built = build_configs(&g, 4, 2, None);
+            for (op, cs) in g.ops.iter().zip(&built) {
+                let direct = enumerate_configs(op, 4, 2);
+                assert_eq!(cs, &direct, "op {}", op.name);
             }
         }
     }

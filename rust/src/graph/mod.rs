@@ -103,6 +103,16 @@ impl Graph {
         order
     }
 
+    /// Global batch size of the model: the extent of the first batch axis
+    /// found (0 for graphs without one). Used by the planner engine as
+    /// part of a graph's identity.
+    pub fn batch_size(&self) -> i64 {
+        self.ops
+            .iter()
+            .find_map(|o| o.batch_axis().map(|b| o.axes[b].size))
+            .unwrap_or(0)
+    }
+
     /// Total parameter bytes of the model (the "Parameter (GB)" column of
     /// Table 1).
     pub fn total_param_bytes(&self) -> f64 {

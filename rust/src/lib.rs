@@ -13,6 +13,7 @@ pub mod frontier;
 pub mod ft;
 pub mod graph;
 pub mod parallel;
+pub mod plan;
 pub mod runtime;
 pub mod sched;
 pub mod sim;

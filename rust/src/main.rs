@@ -8,6 +8,8 @@
 //!   search   --model M --mode <mini_time|mini_parallelism|profiling> [--gpus N]
 //!   train    --strategy <dp|tp> --model <small|e2e> [--devices N] [--steps N] [--fused]
 //!   frontier --model M [--gpus N]                    print the raw cost frontier
+//!   plan     --model M --gpus N --parallelisms 1,2,4 planner-engine sweep (cold/warm
+//!            [--store FILE] [--inspect]              stats, persistent plan store)
 //!   sched    --jobs N --gpus N [--models A,B,C]      multi-job elastic scheduling
 //!
 //! Every experiment prints the paper-style table and writes CSV under
@@ -17,10 +19,9 @@ use tensoropt::cluster::Cluster;
 use tensoropt::coordinator::{
     train_dp, train_tp, FindResult, SearchOption, Session, TrainerCfg,
 };
-use tensoropt::cost::comm::CommModel;
 use tensoropt::exp;
-use tensoropt::ft::{frontier_search, FtOptions};
 use tensoropt::graph::models;
+use tensoropt::plan::{PlanRequest, PlanStore, Planner};
 use tensoropt::util::cli::Args;
 use tensoropt::util::table::Table;
 
@@ -239,11 +240,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 fn cmd_frontier(args: &Args) -> anyhow::Result<()> {
     let model = args.get_or("model", "rnn");
     let gpus = args.get_parse_or("gpus", 16u32);
-    let g = models::by_name(model, 256)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
     let cluster = Cluster::with_gpus(gpus as usize);
-    let comm = CommModel::profile(&cluster);
-    let r = frontier_search(&g, &cluster, &comm, FtOptions::new(gpus));
+    let planner = Planner::new();
+    let fp = planner.register_cluster(&cluster);
+    let r = planner.plan(&PlanRequest::new(model, 256, &fp, gpus))?.result;
     let mut t = Table::new(
         &format!("cost frontier: {model} @ {gpus} GPUs ({} strategies)", r.frontier.len()),
         &["mem_gb", "time_s"],
@@ -253,6 +253,126 @@ fn cmd_frontier(args: &Args) -> anyhow::Result<()> {
     }
     println!("{}", t.render());
     save(&t, &format!("frontier_{model}_{gpus}"));
+    Ok(())
+}
+
+/// `tensoropt plan` — exercise the unified planner engine directly: run a
+/// parallelism sweep (cold vs warm stats), optionally backed by a
+/// persistent plan store, or inspect a store file.
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    let store_path = args.get("store").map(std::path::PathBuf::from);
+    if args.flag("inspect") {
+        let path = store_path
+            .ok_or_else(|| anyhow::anyhow!("--inspect needs --store <file>"))?;
+        let store = PlanStore::load(&path)?;
+        let mut t = Table::new(
+            &format!("plan store {} ({} plans)", path.display(), store.len()),
+            &["graph", "batch", "gpus", "mode", "billing", "filter", "points", "heur"],
+        );
+        for e in &store.entries {
+            t.row(&[
+                e.graph_id.clone(),
+                e.batch.to_string(),
+                e.parallelism.to_string(),
+                e.mode.clone(),
+                e.billing.clone(),
+                e.filter.clone(),
+                e.tuples.len().to_string(),
+                e.n_heuristic.to_string(),
+            ]);
+        }
+        println!("{}", t.render());
+        return Ok(());
+    }
+
+    let model = args.get_or("model", "tiny");
+    let batch = args.get_parse_or("batch", 256i64);
+    let gpus = args.get_parse_or("gpus", 8u32);
+    anyhow::ensure!(gpus >= 1, "--gpus must be >= 1");
+    let parallelisms: Vec<u32> = args
+        .get_or("parallelisms", "1,2,4,8")
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("bad --parallelisms: {e}"))?;
+    anyhow::ensure!(!parallelisms.is_empty(), "--parallelisms must be non-empty");
+    // the engine clamps to the cluster anyway; clamp + dedup here too so
+    // the sweep table never shows two rows for what is one plan.
+    let mut seen = std::collections::HashSet::new();
+    let parallelisms: Vec<u32> = parallelisms
+        .into_iter()
+        .map(|d| d.clamp(1, gpus))
+        .filter(|d| seen.insert(*d))
+        .collect();
+    let billing = match args.get("billing") {
+        None => None,
+        Some(b) => Some(
+            tensoropt::cost::pricing::Billing::parse(b)
+                .ok_or_else(|| anyhow::anyhow!("unknown billing model `{b}`"))?,
+        ),
+    };
+
+    let planner = Planner::new();
+    if let Some(path) = &store_path {
+        let n = planner.attach_store(path)?;
+        println!("[store {} loaded: {n} plans]", path.display());
+    }
+    let fp = planner.register_cluster(&Cluster::with_gpus(gpus as usize));
+
+    let mut t = Table::new(
+        &format!("plan sweep: {model}@{batch} on {gpus} GPUs"),
+        &["gpus", "served", "points", "min_time_s", "min_mem_gb", "ms"],
+    );
+    let mut all_warm = true;
+    for &d in &parallelisms {
+        let mut req = PlanRequest::new(model, batch, &fp, d);
+        if let Some(b) = billing {
+            req = req.with_billing(b);
+        }
+        let t0 = std::time::Instant::now();
+        let resp = planner.plan(&req)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        all_warm &= resp.served.is_warm();
+        let f = resp.frontier();
+        t.row(&[
+            d.to_string(),
+            resp.served.name().into(),
+            f.len().to_string(),
+            f.min_time().map_or("-".into(), |x| format!("{:.4}", x.time)),
+            f.min_mem().map_or("-".into(), |x| format!("{:.3}", x.mem / exp::GB)),
+            format!("{ms:.1}"),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let s = planner.stats();
+    let mut st = Table::new(
+        "planner stats",
+        &["space_builds", "leaf_builds", "cold", "incremental", "memo", "store", "waits"],
+    );
+    st.row(&[
+        s.space_builds.to_string(),
+        s.leaf_builds.to_string(),
+        s.cold_searches.to_string(),
+        s.incremental_searches.to_string(),
+        s.memo_hits.to_string(),
+        s.store_serves.to_string(),
+        s.flight_waits.to_string(),
+    ]);
+    println!("{}", st.render());
+
+    if store_path.is_some() {
+        planner.flush_store()?;
+        println!("[store flushed]");
+    }
+    if args.flag("expect-warm") {
+        anyhow::ensure!(
+            all_warm,
+            "--expect-warm: at least one plan ran a search instead of being \
+             served from the store/memo"
+        );
+        println!("[expect-warm ok: every plan served warm]");
+    }
     Ok(())
 }
 
@@ -305,6 +425,10 @@ COMMANDS:
   search    --model M --mode <mini_time|mini_parallelism|profiling> --gpus N
   train     --strategy <dp|tp> --model <small|e2e> --devices N --steps N [--fused] [--pallas]
   frontier  --model M --gpus N
+  plan      --model M --batch B --gpus N --parallelisms 1,2,4,8 [--billing <ondemand|spot>]
+            [--store FILE] [--expect-warm]       planner-engine sweep with cold/warm stats;
+            --store persists plans so a rerun serves warm (--expect-warm asserts it)
+  plan      --inspect --store FILE               list the plans in a store file
   sched     --jobs N --gpus N --models A,B,C --seed S [--interarrival S] [--min-iters N] [--max-iters N]
   help
 
@@ -315,6 +439,7 @@ EXAMPLES:
   tensoropt exp fig6 --model transformer --gpus 16
   tensoropt exp fig8 --model transformer --parallelism 8,16,32
   tensoropt search --model transformer --mode profiling --gpus 32
+  tensoropt plan --model vgg16 --gpus 16 --parallelisms 2,4,8,16 --store plans.json
   tensoropt train --strategy tp --steps 100
   tensoropt sched --jobs 4 --gpus 16 --models vgg16,wideresnet,transformer
 ";
@@ -326,6 +451,7 @@ fn main() -> anyhow::Result<()> {
         Some("search") => cmd_search(&args),
         Some("train") => cmd_train(&args),
         Some("frontier") => cmd_frontier(&args),
+        Some("plan") => cmd_plan(&args),
         Some("sched") => cmd_sched(&args),
         Some("help") | None => {
             print!("{HELP}");

@@ -1,0 +1,693 @@
+//! The [`Planner`]: memoized, single-flight, store-backed execution of FT
+//! searches behind a [`PlanRequest`] -> [`PlanResponse`] API.
+//!
+//! ## What is shared, and at which level
+//!
+//! - **Per (graph, batch, cluster, mesh-rank, filter)** — a `ModelSpace`:
+//!   the resolved graph, its linear spine, and the recorded elimination
+//!   schedule (all device-count-independent). Counted by
+//!   [`PlannerStats::space_builds`]; a profile sweep over any number of
+//!   parallelisms builds exactly one.
+//! - **Per parallelism within a `ModelSpace`** — the leaf tables
+//!   ([`SpaceTables`]): interned config enumerations, Eq. 1 op costs and
+//!   Eq. 2 edge tables on `cluster.sub_cluster(d)`. Counted by
+//!   [`PlannerStats::leaf_builds`]; shared by every mode/billing variant
+//!   at that parallelism.
+//! - **Per full request** — the finished [`FtResult`], deduplicated by
+//!   single-flight so concurrent cold callers run one search.
+//!
+//! ## Incremental re-search
+//!
+//! The first search of a model records the elimination structure
+//! ([`crate::ft::ElimSchedule`]); every search starting after it
+//! completes — other parallelism, other batch stamping, other mode or
+//! billing — replays it, skipping candidate re-discovery. (Searches
+//! launched concurrently *before* the first finishes, e.g. a parallel
+//! `Session::profile` first wave, may each discover independently; the
+//! recorded schedules are identical — discovery is structural — so this
+//! costs repeated discovery work once, never correctness.) When only the
+//! *billing* changes at a fixed (parallelism, mode), the heuristic k*
+//! pins are reused too (pin scoring reads memory/time, never dollars),
+//! so only the frontier algebra over re-stamped leaves and LDP run. Both
+//! paths are bit-identical to a cold `frontier_search` — pinned by
+//! property tests.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::Cluster;
+use crate::cost::comm::CommModel;
+use crate::cost::pricing;
+use crate::frontier::Mode;
+use crate::ft::eliminate::WorkGraph;
+use crate::ft::ldp::ldp;
+use crate::ft::{build_configs, ElimSchedule, FtOptions, FtResult, SearchSpace, SpaceTables};
+use crate::graph::models;
+use crate::graph::{Graph, Op, OpId};
+use crate::parallel::ParallelConfig;
+
+use super::flight::{Obtained, SingleFlight};
+use super::store::{PlanStore, StoredPlan};
+use super::{ConfigFilter, PlanRequest, PlanResponse, Served};
+
+/// Planner counters: what was built vs served warm. Snapshot via
+/// [`Planner::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlannerStats {
+    /// `ModelSpace` creations — one per (graph, batch, cluster, mesh-rank,
+    /// filter). The acceptance bar: a whole profile sweep is one build.
+    pub space_builds: usize,
+    /// Per-parallelism leaf-table builds (config enumeration + op costs +
+    /// edge tables) — the expensive `SearchSpace` work.
+    pub leaf_builds: usize,
+    /// Full cold searches (elimination structure discovered + recorded).
+    pub cold_searches: usize,
+    /// Incremental searches (recorded schedule replayed).
+    pub incremental_searches: usize,
+    /// Requests served from the in-memory plan memo.
+    pub memo_hits: usize,
+    /// Requests that waited on another caller's identical in-flight search
+    /// (the deduplicated cold-key race).
+    pub flight_waits: usize,
+    /// Requests reconstructed from the persistent store.
+    pub store_serves: usize,
+}
+
+impl PlannerStats {
+    /// Total searches that actually ran (cold + incremental).
+    pub fn searches(&self) -> usize {
+        self.cold_searches + self.incremental_searches
+    }
+}
+
+struct PlanEntry {
+    result: Arc<FtResult>,
+    produced: Served,
+}
+
+/// Exact topology identity of a graph: (op count, edge list, spine) —
+/// precisely (and only) what elimination-candidate discovery reads. Used
+/// as the schedule-cache key, so two batch sizes of one architecture
+/// share a recorded schedule while any structural difference — however
+/// small — keys apart (no hashing, no collision risk).
+type TopoKey = (usize, Vec<(usize, usize)>, Vec<usize>);
+
+fn topology_key(g: &Graph, spine: &[OpId]) -> TopoKey {
+    (
+        g.n_ops(),
+        g.edges.iter().map(|e| (e.src.0, e.dst.0)).collect(),
+        spine.iter().map(|s| s.0).collect(),
+    )
+}
+
+/// Memoized per-(graph, batch, cluster, mesh-rank, filter) state.
+struct ModelSpace {
+    /// Linear spine (§3.2), device-count-independent.
+    spine: Vec<OpId>,
+    /// [`TopoKey`] into the planner-level schedule cache, shared across
+    /// *batch sizes* of the same architecture — elimination discovery
+    /// never reads tensor extents, so one recorded schedule serves them
+    /// all.
+    topo_key: TopoKey,
+    /// Heuristic k* pins per (parallelism, mode): exact to reuse when only
+    /// the pricing changes (scoring reads memory/time only).
+    pins: Mutex<HashMap<(u32, Mode), Arc<HashMap<u32, u32>>>>,
+    /// Per-parallelism leaf tables (single-flight: a parallel sweep never
+    /// builds the same leaf twice).
+    leaves: SingleFlight<u32, Arc<LeafTables>>,
+}
+
+/// Device-count-stamped leaf data for one parallelism.
+struct LeafTables {
+    /// `base.sub_cluster(parallelism)`.
+    cluster: Cluster,
+    /// Actual device count (== the clamped parallelism).
+    devices: u32,
+    tables: Arc<SpaceTables>,
+}
+
+/// The one place [`ConfigFilter`] is adapted onto [`build_configs`]'s
+/// closure parameter — the search path and the plan store's re-derivation
+/// both go through here, so their configuration tables can never diverge.
+fn filtered_configs(
+    graph: &Graph,
+    devices: u32,
+    mesh_dims: usize,
+    filter: ConfigFilter,
+) -> Vec<Vec<ParallelConfig>> {
+    let keep = move |op: &Op, c: &ParallelConfig| filter.keeps(op, c);
+    let fopt: Option<&dyn Fn(&Op, &ParallelConfig) -> bool> = match filter {
+        ConfigFilter::Full => None,
+        _ => Some(&keep),
+    };
+    build_configs(graph, devices, mesh_dims, fopt)
+}
+
+impl LeafTables {
+    fn build(graph: &Graph, base: &Cluster, d: u32, mesh_dims: usize, filter: ConfigFilter) -> Self {
+        let sub = base.sub_cluster(d as usize);
+        let comm = CommModel::profile(&sub);
+        let devices = sub.n_devices() as u32;
+        let configs = Arc::new(filtered_configs(graph, devices, mesh_dims, filter));
+        let tables = Arc::new(SpaceTables::build_from_configs(graph, &sub, &comm, configs));
+        Self { cluster: sub, devices, tables }
+    }
+}
+
+type SpaceKey = (String, i64, String, usize, ConfigFilter);
+
+/// (requested id, batch) -> (canonical id, graph).
+type GraphRegistry = HashMap<(String, i64), (String, Arc<Graph>)>;
+
+/// The unified planner engine. Thread-safe: share it behind an `Arc`
+/// across sessions, the scheduler cache and experiment harnesses so they
+/// all reuse each other's searches.
+pub struct Planner {
+    threads: usize,
+    /// The canonical id is a structural content hash, so zoo aliases
+    /// ("tiny" vs "tiny_mlp") and independently built identical graphs
+    /// share one space.
+    graphs: Mutex<GraphRegistry>,
+    clusters: Mutex<HashMap<String, Arc<Cluster>>>,
+    spaces: Mutex<HashMap<SpaceKey, Arc<ModelSpace>>>,
+    /// Recorded elimination structures keyed by exact topology — shared
+    /// across batch sizes, clusters, parallelisms, modes and billings of
+    /// one architecture (discovery is purely structural).
+    schedules: Mutex<HashMap<TopoKey, Arc<ElimSchedule>>>,
+    plans: SingleFlight<PlanRequest, Arc<PlanEntry>>,
+    store: Mutex<Option<PlanStore>>,
+    stats: Mutex<PlannerStats>,
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Planner {
+    /// A fresh planner (no store, default thread budget).
+    pub fn new() -> Self {
+        let threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+        Self {
+            threads,
+            graphs: Mutex::new(HashMap::new()),
+            clusters: Mutex::new(HashMap::new()),
+            spaces: Mutex::new(HashMap::new()),
+            schedules: Mutex::new(HashMap::new()),
+            plans: SingleFlight::new(),
+            store: Mutex::new(None),
+            stats: Mutex::new(PlannerStats::default()),
+        }
+    }
+
+    /// Override the default LDP/elimination thread budget.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Snapshot of the counters.
+    pub fn stats(&self) -> PlannerStats {
+        *self.stats.lock().unwrap()
+    }
+
+    fn bump(&self, f: impl FnOnce(&mut PlannerStats)) {
+        f(&mut self.stats.lock().unwrap());
+    }
+
+    // ------------------------------------------------------- registration
+
+    /// Register a cluster; returns the fingerprint to put in requests.
+    /// Registering the same topology twice is idempotent.
+    pub fn register_cluster(&self, cluster: &Cluster) -> String {
+        let fp = cluster.fingerprint();
+        self.clusters
+            .lock()
+            .unwrap()
+            .entry(fp.clone())
+            .or_insert_with(|| Arc::new(cluster.clone()));
+        fp
+    }
+
+    /// Register a graph; returns its canonical `(graph_id, batch)` request
+    /// key. Identical graphs (by structural content hash) registered twice
+    /// — or resolved from the model zoo under any alias — share one entry,
+    /// and therefore one memoized space. Registration is keyed by the
+    /// *canonical* id only: a custom graph whose builder name happens to
+    /// match a zoo name can never hijack zoo-name lookups (zoo ids always
+    /// resolve to the zoo-built graph).
+    pub fn register_graph(&self, graph: Graph) -> (String, i64) {
+        let batch = graph.batch_size();
+        let canon = graph_identity(&graph);
+        let mut reg = self.graphs.lock().unwrap();
+        reg.entry((canon.clone(), batch))
+            .or_insert_with(|| (canon.clone(), Arc::new(graph)));
+        drop(reg);
+        (canon, batch)
+    }
+
+    /// Resolve a request's graph id: exact registered ids (canonical ids
+    /// and previously resolved zoo aliases) first, then the model zoo
+    /// ([`models::by_name`]). A zoo id is aliased to the *zoo-built*
+    /// graph's canonical entry, so differently shaped models sharing a
+    /// builder name ("transformer" vs "transformer-s") cannot collide.
+    fn resolve_graph(&self, id: &str, batch: i64) -> anyhow::Result<(String, Arc<Graph>)> {
+        {
+            let reg = self.graphs.lock().unwrap();
+            if let Some((canon, g)) = reg.get(&(id.to_string(), batch)) {
+                return Ok((canon.clone(), g.clone()));
+            }
+        }
+        let built = models::by_name(id, batch).ok_or_else(|| {
+            anyhow::anyhow!("unknown graph `{id}`: not registered and not in the model zoo")
+        })?;
+        let canon = graph_identity(&built);
+        let mut reg = self.graphs.lock().unwrap();
+        let arc = match reg.get(&(canon.clone(), batch)) {
+            Some((_, g)) => g.clone(),
+            None => {
+                let g = Arc::new(built);
+                reg.insert((canon.clone(), batch), (canon.clone(), g.clone()));
+                g
+            }
+        };
+        reg.entry((id.to_string(), batch))
+            .or_insert_with(|| (canon.clone(), arc.clone()));
+        Ok((canon, arc))
+    }
+
+    /// The graph a request resolves to.
+    pub fn graph_of(&self, req: &PlanRequest) -> anyhow::Result<Arc<Graph>> {
+        self.graph(&req.graph_id, req.batch)
+    }
+
+    /// Resolve a graph id directly (registered graphs, then the model
+    /// zoo).
+    pub fn graph(&self, id: &str, batch: i64) -> anyhow::Result<Arc<Graph>> {
+        Ok(self.resolve_graph(id, batch)?.1)
+    }
+
+    /// The registered base cluster of a request.
+    pub fn base_cluster_of(&self, req: &PlanRequest) -> anyhow::Result<Arc<Cluster>> {
+        self.clusters.lock().unwrap().get(&req.cluster_fp).cloned().ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown cluster fingerprint `{}`: register the cluster first",
+                req.cluster_fp
+            )
+        })
+    }
+
+    /// The sub-cluster a request's search actually runs on
+    /// (`base.sub_cluster(parallelism)`).
+    pub fn sub_cluster_of(&self, req: &PlanRequest) -> anyhow::Result<Cluster> {
+        let base = self.base_cluster_of(req)?;
+        Ok(base.sub_cluster(req.parallelism as usize))
+    }
+
+    // -------------------------------------------------------------- store
+
+    /// Attach (and load) a persistent plan store; returns how many entries
+    /// it held. Subsequent plans are inserted into it; call
+    /// [`Planner::flush_store`] to write. A previously attached store is
+    /// flushed before being replaced, so its unsaved entries are never
+    /// silently discarded.
+    pub fn attach_store(&self, path: &Path) -> anyhow::Result<usize> {
+        let store = PlanStore::load(path)?;
+        let n = store.len();
+        let mut guard = self.store.lock().unwrap();
+        if let Some(old) = guard.as_mut() {
+            old.save()?;
+        }
+        *guard = Some(store);
+        Ok(n)
+    }
+
+    /// Write the attached store to disk (no-op without a store or without
+    /// changes).
+    pub fn flush_store(&self) -> anyhow::Result<()> {
+        if let Some(store) = self.store.lock().unwrap().as_mut() {
+            store.save()?;
+        }
+        Ok(())
+    }
+
+    /// Is a store attached?
+    pub fn has_store(&self) -> bool {
+        self.store.lock().unwrap().is_some()
+    }
+
+    // --------------------------------------------------------------- plan
+
+    /// Serve a plan request (memo -> store -> incremental -> cold, in that
+    /// order of preference) with the planner's default thread budget.
+    pub fn plan(&self, req: &PlanRequest) -> anyhow::Result<PlanResponse> {
+        self.plan_with_threads(req, self.threads)
+    }
+
+    /// [`Planner::plan`] with an explicit search thread budget (results
+    /// are thread-count-independent; this only bounds CPU use so callers
+    /// running their own outer parallel sweeps can split the budget).
+    pub fn plan_with_threads(
+        &self,
+        req: &PlanRequest,
+        threads: usize,
+    ) -> anyhow::Result<PlanResponse> {
+        // normalize to the canonical cache key: canonical graph id +
+        // clamped parallelism.
+        let (canon, graph) = self.resolve_graph(&req.graph_id, req.batch)?;
+        let base = self.base_cluster_of(req)?;
+        let mut key = req.clone();
+        key.graph_id = canon;
+        key.parallelism = req.parallelism.clamp(1, base.n_devices() as u32);
+
+        let (entry, how) = self
+            .plans
+            .get_or_try_compute(&key, || self.compute(&key, &graph, &base, threads))?;
+        let served = match how {
+            Obtained::Computed => entry.produced,
+            Obtained::Hit => {
+                self.bump(|s| s.memo_hits += 1);
+                Served::Memo
+            }
+            Obtained::Waited => {
+                self.bump(|s| {
+                    s.memo_hits += 1;
+                    s.flight_waits += 1;
+                });
+                Served::Memo
+            }
+        };
+        Ok(PlanResponse { result: entry.result.clone(), served })
+    }
+
+    fn compute(
+        &self,
+        key: &PlanRequest,
+        graph: &Arc<Graph>,
+        base: &Arc<Cluster>,
+        threads: usize,
+    ) -> anyhow::Result<Arc<PlanEntry>> {
+        // 1. persistent store: reconstruct without any table building.
+        if let Some(entry) = self.try_store(key, graph)? {
+            return Ok(entry);
+        }
+
+        // 2. the memoized model space (device-count-independent work).
+        let space = self.model_space(key, graph);
+
+        // 3. per-parallelism leaf tables.
+        let (leaf, got) = space.leaves.get_or_try_compute(&key.parallelism, || {
+            Ok::<_, anyhow::Error>(Arc::new(LeafTables::build(
+                graph,
+                base,
+                key.parallelism,
+                key.max_mesh_dims,
+                key.filter,
+            )))
+        })?;
+        if got == Obtained::Computed {
+            self.bump(|s| s.leaf_builds += 1);
+        }
+
+        // 4. the search: replay the recorded elimination structure when we
+        // have one (incremental), otherwise run cold and record it.
+        let usd = key
+            .billing
+            .map_or(0.0, |b| pricing::usd_hour(&leaf.cluster, b));
+        let opts = FtOptions {
+            devices: leaf.devices,
+            max_mesh_dims: key.max_mesh_dims,
+            mode: key.mode,
+            threads: threads.max(1),
+            usd_hour: usd,
+        };
+        let mode = opts.mode;
+        let eff_threads = opts.threads;
+        let sspace =
+            SearchSpace::from_parts(graph, &leaf.cluster, opts, Arc::clone(&leaf.tables));
+        let mut wg = WorkGraph::init(&sspace, &space.spine);
+        let recorded = self.schedules.lock().unwrap().get(&space.topo_key).cloned();
+        let produced = match recorded {
+            None => {
+                let mut steps = ElimSchedule::new();
+                wg.run_recording(&mut steps);
+                self.schedules
+                    .lock()
+                    .unwrap()
+                    .entry(space.topo_key.clone())
+                    .or_insert_with(|| Arc::new(steps));
+                self.bump(|s| s.cold_searches += 1);
+                Served::Cold
+            }
+            Some(steps) => {
+                let pins = space
+                    .pins
+                    .lock()
+                    .unwrap()
+                    .get(&(key.parallelism, key.mode))
+                    .cloned();
+                wg.replay(&steps, pins.as_deref());
+                self.bump(|s| s.incremental_searches += 1);
+                Served::Incremental
+            }
+        };
+        let (_chain, node_frontiers, edge_tables, forced, n_heuristic) = wg.into_chain();
+        space
+            .pins
+            .lock()
+            .unwrap()
+            .entry((key.parallelism, key.mode))
+            .or_insert_with(|| Arc::new(forced.clone()));
+        let frontier = ldp(&node_frontiers, &edge_tables, mode, eff_threads);
+        let result = Arc::new(FtResult {
+            frontier,
+            configs: sspace.tables.configs.clone(),
+            forced,
+            n_heuristic,
+            log2_space: sspace.log2_space_size(),
+        });
+
+        // 5. persist — serialize (trace unrolling) *before* taking the
+        // store lock, so concurrent computes only contend on the insert.
+        if self.has_store() {
+            let stored = StoredPlan::from_result(key, &result);
+            if let Some(store) = self.store.lock().unwrap().as_mut() {
+                store.insert(stored);
+            }
+        }
+        Ok(Arc::new(PlanEntry { result, produced }))
+    }
+
+    fn try_store(
+        &self,
+        key: &PlanRequest,
+        graph: &Arc<Graph>,
+    ) -> anyhow::Result<Option<Arc<PlanEntry>>> {
+        let stored = {
+            let guard = self.store.lock().unwrap();
+            let Some(store) = guard.as_ref() else { return Ok(None) };
+            let Some(sp) = store.find(key) else { return Ok(None) };
+            sp.clone()
+        };
+        // re-derive the configuration tables (cheap: enumeration only, no
+        // cost model) with the exact search-time enumeration.
+        let configs =
+            filtered_configs(graph, key.parallelism, key.max_mesh_dims, key.filter);
+        let result = stored.to_result(configs, graph.edges.len())?;
+        self.bump(|s| s.store_serves += 1);
+        Ok(Some(Arc::new(PlanEntry { result: Arc::new(result), produced: Served::Store })))
+    }
+
+    fn model_space(&self, key: &PlanRequest, graph: &Arc<Graph>) -> Arc<ModelSpace> {
+        let skey: SpaceKey = (
+            key.graph_id.clone(),
+            key.batch,
+            key.cluster_fp.clone(),
+            key.max_mesh_dims,
+            key.filter,
+        );
+        let mut map = self.spaces.lock().unwrap();
+        if let Some(s) = map.get(&skey) {
+            return s.clone();
+        }
+        let spine = graph.mark_linear_spine();
+        let topo_key = topology_key(graph, &spine);
+        let space = Arc::new(ModelSpace {
+            spine,
+            topo_key,
+            pins: Mutex::new(HashMap::new()),
+            leaves: SingleFlight::new(),
+        });
+        map.insert(skey, space.clone());
+        drop(map);
+        self.bump(|s| s.space_builds += 1);
+        space
+    }
+}
+
+/// Structural content identity of a graph: builder name + FNV-1a hash of
+/// every cost-relevant field (ops, axes, tensors, FLOPs, edges). Two
+/// independently built identical graphs hash equal; `transformer` and
+/// `transformer-s` (same builder name, different shape) hash apart.
+pub fn graph_identity(g: &Graph) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    eat(g.name.as_bytes());
+    for op in &g.ops {
+        eat(op.name.as_bytes());
+        eat(format!("{:?}", op.kind).as_bytes());
+        for a in &op.axes {
+            eat(a.name.as_bytes());
+            eat(&a.size.to_le_bytes());
+            eat(format!("{:?}", a.kind).as_bytes());
+        }
+        for d in &op.out.dims {
+            eat(d.name.as_bytes());
+            eat(&d.size.to_le_bytes());
+        }
+        eat(&op.out.bytes().to_bits().to_le_bytes());
+        eat(&op.param_bytes().to_bits().to_le_bytes());
+        eat(&op.flops_fwd.to_bits().to_le_bytes());
+        eat(&op.act_keep_factor.to_bits().to_le_bytes());
+    }
+    for e in &g.edges {
+        eat(&(e.src.0 as u64).to_le_bytes());
+        eat(&(e.dst.0 as u64).to_le_bytes());
+    }
+    format!("{}#{h:016x}", g.name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::pricing::Billing;
+    use crate::graph::models::{tiny_mlp, transformer_lm, TransformerCfg};
+
+    fn planner_with(cluster: &Cluster) -> (Planner, String) {
+        let p = Planner::new().with_threads(2);
+        let fp = p.register_cluster(cluster);
+        (p, fp)
+    }
+
+    #[test]
+    fn graph_identity_distinguishes_shapes_and_matches_rebuilds() {
+        let a = graph_identity(&tiny_mlp(256));
+        let b = graph_identity(&tiny_mlp(256));
+        let c = graph_identity(&tiny_mlp(128));
+        assert_eq!(a, b, "identical builds hash equal");
+        assert_ne!(a, c, "batch changes the identity");
+        let t1 = graph_identity(&transformer_lm(TransformerCfg::default()));
+        let t2 = graph_identity(&transformer_lm(TransformerCfg {
+            hidden: 2048,
+            layers: 18,
+            ..Default::default()
+        }));
+        assert_ne!(t1, t2, "same builder name, different shape");
+    }
+
+    #[test]
+    fn memoizes_by_key_and_shares_spaces() {
+        let cluster = Cluster::with_gpus(4);
+        let (p, fp) = planner_with(&cluster);
+        let req = PlanRequest::new("tiny", 256, &fp, 4);
+        let r1 = p.plan(&req).unwrap();
+        assert_eq!(r1.served, Served::Cold);
+        let r2 = p.plan(&req).unwrap();
+        assert_eq!(r2.served, Served::Memo);
+        assert!(Arc::ptr_eq(&r1.result, &r2.result));
+        // another parallelism: new leaf + incremental search, same space.
+        let r3 = p.plan(&PlanRequest::new("tiny", 256, &fp, 2)).unwrap();
+        assert_eq!(r3.served, Served::Incremental);
+        let s = p.stats();
+        assert_eq!(s.space_builds, 1);
+        assert_eq!(s.leaf_builds, 2);
+        assert_eq!(s.cold_searches, 1);
+        assert_eq!(s.incremental_searches, 1);
+        assert_eq!(s.memo_hits, 1);
+    }
+
+    #[test]
+    fn zoo_alias_and_registered_graph_share_one_space() {
+        let cluster = Cluster::with_gpus(4);
+        let (p, fp) = planner_with(&cluster);
+        let (id, batch) = p.register_graph(tiny_mlp(256));
+        p.plan(&PlanRequest::new(&id, batch, &fp, 4)).unwrap();
+        // zoo aliases resolve to the same canonical identity.
+        p.plan(&PlanRequest::new("tiny", 256, &fp, 4)).unwrap();
+        p.plan(&PlanRequest::new("tiny_mlp", 256, &fp, 4)).unwrap();
+        let s = p.stats();
+        assert_eq!(s.space_builds, 1);
+        assert_eq!(s.searches(), 1, "aliases are memo hits");
+        assert_eq!(s.memo_hits, 2);
+    }
+
+    #[test]
+    fn billing_rebill_reuses_leaves_and_pins() {
+        let cluster = Cluster::with_gpus(4);
+        let (p, fp) = planner_with(&cluster);
+        let base = PlanRequest::new("tiny", 256, &fp, 4);
+        let od = p.plan(&base.clone().with_billing(Billing::OnDemand)).unwrap();
+        let spot = p.plan(&base.clone().with_billing(Billing::Spot)).unwrap();
+        let s = p.stats();
+        assert_eq!(s.leaf_builds, 1, "rebilling must not rebuild leaf tables");
+        assert_eq!(s.searches(), 2);
+        // same staircase, rescaled dollars.
+        assert_eq!(od.frontier().len(), spot.frontier().len());
+        for (a, b) in od.frontier().tuples.iter().zip(&spot.frontier().tuples) {
+            assert_eq!(a.mem.to_bits(), b.mem.to_bits());
+            assert_eq!(a.time.to_bits(), b.time.to_bits());
+            assert!(b.cost < a.cost, "spot must be cheaper");
+        }
+    }
+
+    #[test]
+    fn batch_change_replays_schedule_bit_identically() {
+        let cluster = Cluster::with_gpus(4);
+        let (p, fp) = planner_with(&cluster);
+        let first = p.plan(&PlanRequest::new("tiny", 256, &fp, 4)).unwrap();
+        assert_eq!(first.served, Served::Cold);
+        // same architecture at another batch: a new space (batch is part
+        // of the space key) but the topology-keyed elimination structure
+        // is reused, so the search is incremental, not cold.
+        let warm = p.plan(&PlanRequest::new("tiny", 128, &fp, 4)).unwrap();
+        assert_eq!(warm.served, Served::Incremental);
+        assert_eq!(p.stats().space_builds, 2);
+        // …and bit-identical to a cold search on a fresh planner.
+        let (fresh, fp2) = planner_with(&cluster);
+        let cold = fresh.plan(&PlanRequest::new("tiny", 128, &fp2, 4)).unwrap();
+        assert_eq!(cold.served, Served::Cold);
+        assert_eq!(warm.frontier().len(), cold.frontier().len());
+        for (a, b) in warm.frontier().tuples.iter().zip(&cold.frontier().tuples) {
+            assert_eq!(
+                (a.mem.to_bits(), a.time.to_bits(), a.cost.to_bits()),
+                (b.mem.to_bits(), b.time.to_bits(), b.cost.to_bits())
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_ids_error() {
+        let cluster = Cluster::with_gpus(2);
+        let (p, fp) = planner_with(&cluster);
+        assert!(p.plan(&PlanRequest::new("no_such_model", 256, &fp, 2)).is_err());
+        assert!(p.plan(&PlanRequest::new("tiny", 256, "bogus_fp", 2)).is_err());
+        // errors don't wedge the single-flight: the good request still runs.
+        assert!(p.plan(&PlanRequest::new("tiny", 256, &fp, 2)).is_ok());
+    }
+
+    #[test]
+    fn parallelism_clamps_to_cluster() {
+        let cluster = Cluster::with_gpus(4);
+        let (p, fp) = planner_with(&cluster);
+        let a = p.plan(&PlanRequest::new("tiny", 256, &fp, 4)).unwrap();
+        let b = p.plan(&PlanRequest::new("tiny", 256, &fp, 64)).unwrap();
+        assert!(Arc::ptr_eq(&a.result, &b.result), "over-asking clamps to one key");
+    }
+}

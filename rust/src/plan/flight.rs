@@ -1,0 +1,178 @@
+//! Single-flight deduplication: concurrent callers asking for the same
+//! key share one computation instead of racing to do it N times.
+//!
+//! This is the fix for the (previously documented) cold-key race in the
+//! scheduler's frontier cache: two jobs profiling the same model at the
+//! same parallelism each used to run the full FT search. The planner
+//! engine routes every search through a [`SingleFlight`] keyed by the
+//! full plan request, so the second caller blocks on the first caller's
+//! search and receives the shared result.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Condvar, Mutex};
+
+/// How a [`SingleFlight::get_or_try_compute`] call obtained its value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Obtained {
+    /// This caller ran the computation.
+    Computed,
+    /// The value was already present.
+    Hit,
+    /// Another caller was computing it; this caller waited for the result.
+    Waited,
+}
+
+enum Flight<V> {
+    InFlight,
+    Ready(V),
+}
+
+/// A keyed map where at most one caller computes each key; later callers
+/// block until the value is ready and then share it. Values are cloned out
+/// (use `Arc` payloads).
+pub struct SingleFlight<K, V> {
+    state: Mutex<HashMap<K, Flight<V>>>,
+    cv: Condvar,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Default for SingleFlight<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> SingleFlight<K, V> {
+    /// Empty map.
+    pub fn new() -> Self {
+        Self { state: Mutex::new(HashMap::new()), cv: Condvar::new() }
+    }
+
+    /// Get `k`, computing it with `f` if absent. Exactly one concurrent
+    /// caller runs `f`; the others block and share the result. If `f`
+    /// fails (or panics), the in-flight marker is cleared so a later (or
+    /// waiting) caller can retry.
+    pub fn get_or_try_compute<E>(
+        &self,
+        k: &K,
+        f: impl FnOnce() -> Result<V, E>,
+    ) -> Result<(V, Obtained), E> {
+        let mut waited = false;
+        {
+            let mut map = self.state.lock().unwrap();
+            loop {
+                match map.get(k) {
+                    Some(Flight::Ready(v)) => {
+                        let how = if waited { Obtained::Waited } else { Obtained::Hit };
+                        return Ok((v.clone(), how));
+                    }
+                    Some(Flight::InFlight) => {
+                        waited = true;
+                        map = self.cv.wait(map).unwrap();
+                    }
+                    None => break,
+                }
+            }
+            map.insert(k.clone(), Flight::InFlight);
+        }
+        // Clear the marker on *any* non-success exit (error return or
+        // panic inside `f`), so waiters stop waiting and retry.
+        let mut guard = FlightGuard { flight: self, key: k.clone(), armed: true };
+        match f() {
+            Ok(v) => {
+                {
+                    let mut map = self.state.lock().unwrap();
+                    map.insert(k.clone(), Flight::Ready(v.clone()));
+                }
+                guard.armed = false;
+                self.cv.notify_all();
+                Ok((v, Obtained::Computed))
+            }
+            Err(e) => Err(e), // guard drop clears the marker + notifies
+        }
+    }
+}
+
+struct FlightGuard<'a, K: Eq + Hash + Clone, V: Clone> {
+    flight: &'a SingleFlight<K, V>,
+    key: K,
+    armed: bool,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Drop for FlightGuard<'_, K, V> {
+    fn drop(&mut self) {
+        if self.armed {
+            let mut map = self.flight.state.lock().unwrap();
+            if matches!(map.get(&self.key), Some(Flight::InFlight)) {
+                map.remove(&self.key);
+            }
+            drop(map);
+            self.flight.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn computes_once_and_hits_after() {
+        let sf: SingleFlight<u32, Arc<String>> = SingleFlight::new();
+        let calls = AtomicUsize::new(0);
+        let f = || -> Result<Arc<String>, ()> {
+            calls.fetch_add(1, Ordering::SeqCst);
+            Ok(Arc::new("v".to_string()))
+        };
+        let (v1, o1) = sf.get_or_try_compute(&7, f).unwrap();
+        assert_eq!(o1, Obtained::Computed);
+        let (v2, o2) = sf
+            .get_or_try_compute(&7, || -> Result<Arc<String>, ()> { unreachable!() })
+            .unwrap();
+        assert_eq!(o2, Obtained::Hit);
+        assert!(Arc::ptr_eq(&v1, &v2));
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn concurrent_callers_share_one_computation() {
+        let sf: Arc<SingleFlight<u32, Arc<u64>>> = Arc::new(SingleFlight::new());
+        let calls = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let sf = Arc::clone(&sf);
+            let calls = Arc::clone(&calls);
+            handles.push(std::thread::spawn(move || {
+                let (v, _) = sf
+                    .get_or_try_compute(&1, || -> Result<Arc<u64>, ()> {
+                        calls.fetch_add(1, Ordering::SeqCst);
+                        // widen the race window
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        Ok(Arc::new(42))
+                    })
+                    .unwrap();
+                *v
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 42);
+        }
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "exactly one computation");
+    }
+
+    #[test]
+    fn error_clears_the_marker_for_retry() {
+        let sf: SingleFlight<u32, Arc<u64>> = SingleFlight::new();
+        let r = sf.get_or_try_compute(&3, || -> Result<Arc<u64>, &str> { Err("boom") });
+        assert!(r.is_err());
+        // the key is free again: a retry computes.
+        let (v, o) = sf
+            .get_or_try_compute(&3, || -> Result<Arc<u64>, &str> { Ok(Arc::new(9)) })
+            .unwrap();
+        assert_eq!(*v, 9);
+        assert_eq!(o, Obtained::Computed);
+    }
+
+}

@@ -1,0 +1,270 @@
+//! The unified planner engine: one memoized, concurrency-safe,
+//! persistable entry point for every FT search in the system.
+//!
+//! Before this subsystem existed, every consumer of the FT algorithm —
+//! the Session's search options, the scheduler's frontier cache, the
+//! provisioning experiment, the figure/table harnesses and the baselines
+//! — independently rebuilt a `SearchSpace` and ran a cold search per
+//! (graph, cluster, parallelism, batch, mode, billing), recomputing
+//! identical per-op configuration enumerations and per-op/edge frontier
+//! tables dozens of times per sweep. The [`Planner`] turns that hottest
+//! path into shared infrastructure:
+//!
+//! - **Memoization** ([`engine`]): per-op `ParallelConfig` tables are
+//!   interned, the per-(model, batch, cluster) space (graph, spine,
+//!   elimination schedule) is built once, per-parallelism leaf tables are
+//!   built once, and whole plan responses are cached by request key.
+//! - **Incremental re-search**: when only the device count, batch size or
+//!   billing changes, the recorded heuristic-elimination structure of the
+//!   spine is replayed over re-stamped leaf frontiers and only the
+//!   frontier algebra + LDP re-run — bit-identical to a cold search.
+//! - **Single-flight** ([`flight`]): concurrent callers racing on a cold
+//!   key share one search (the scheduler cache's old documented race).
+//! - **Persistence** ([`store`]): plans round-trip through an on-disk
+//!   store (vendored JSON codec, exact f64 bit patterns), so restarts and
+//!   the multi-job scheduler serve from warm frontiers.
+
+pub mod engine;
+pub mod flight;
+pub mod store;
+
+use std::sync::Arc;
+
+use crate::cost::pricing::Billing;
+use crate::frontier::{Frontier, Mode};
+use crate::ft::FtResult;
+use crate::graph::Op;
+use crate::parallel::ParallelConfig;
+
+pub use engine::{Planner, PlannerStats};
+pub use flight::{Obtained, SingleFlight};
+pub use store::{PlanStore, StoredPlan};
+
+/// Restriction of the per-op configuration space (a hashable stand-in for
+/// the raw closure filter of `frontier_search_filtered`, so it can be part
+/// of plan keys and the persistent store).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ConfigFilter {
+    /// The full configuration space (FT / OptCNN).
+    #[default]
+    Full,
+    /// Replication forbidden (the ToFu baseline: all tensors split).
+    NoReplication,
+}
+
+impl ConfigFilter {
+    /// Does the filter keep configuration `c` for `op`?
+    pub fn keeps(self, _op: &Op, c: &ParallelConfig) -> bool {
+        match self {
+            ConfigFilter::Full => true,
+            ConfigFilter::NoReplication => c.replication() == 1,
+        }
+    }
+
+    /// Stable tag used in store files.
+    pub fn tag(self) -> &'static str {
+        match self {
+            ConfigFilter::Full => "full",
+            ConfigFilter::NoReplication => "norep",
+        }
+    }
+
+    /// Parse [`ConfigFilter::tag`].
+    pub fn from_tag(s: &str) -> Option<Self> {
+        match s {
+            "full" => Some(ConfigFilter::Full),
+            "norep" => Some(ConfigFilter::NoReplication),
+            _ => None,
+        }
+    }
+}
+
+/// Stable tag of a frontier mode (store files).
+pub fn mode_tag(m: Mode) -> &'static str {
+    match m {
+        Mode::Pareto => "pareto",
+        Mode::TimeOnly => "time",
+        Mode::MemOnly => "mem",
+    }
+}
+
+/// Parse [`mode_tag`].
+pub fn mode_from_tag(s: &str) -> Option<Mode> {
+    match s {
+        "pareto" => Some(Mode::Pareto),
+        "time" => Some(Mode::TimeOnly),
+        "mem" => Some(Mode::MemOnly),
+        _ => None,
+    }
+}
+
+/// Stable tag of an optional billing model (store files).
+pub fn billing_tag(b: Option<Billing>) -> &'static str {
+    match b {
+        None => "none",
+        Some(Billing::OnDemand) => "ondemand",
+        Some(Billing::Spot) => "spot",
+    }
+}
+
+/// Parse [`billing_tag`].
+pub fn billing_from_tag(s: &str) -> Option<Option<Billing>> {
+    match s {
+        "none" => Some(None),
+        "ondemand" => Some(Some(Billing::OnDemand)),
+        "spot" => Some(Some(Billing::Spot)),
+        _ => None,
+    }
+}
+
+/// A plan request — the planner's cache key. Everything a search depends
+/// on is in here (threads are deliberately *not*: FT results are
+/// thread-count-independent). The cluster is referenced by fingerprint
+/// (register it with [`Planner::register_cluster`] first); the search runs
+/// on `cluster.sub_cluster(parallelism)` exactly like the Session always
+/// did, with the rental rate of that sub-cluster under `billing` stamped
+/// onto leaf tuples (`billing: None` = the paper's unpriced search).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanRequest {
+    /// Graph identity: a registered graph's id, or a model-zoo name.
+    pub graph_id: String,
+    /// Global batch size (part of the graph's identity).
+    pub batch: i64,
+    /// Fingerprint of a registered base cluster.
+    pub cluster_fp: String,
+    /// Device count to search at (clamped to the cluster size).
+    pub parallelism: u32,
+    /// Frontier mode (Pareto / time-only / memory-only).
+    pub mode: Mode,
+    /// Billing model for dollar-stamping (None = unpriced).
+    pub billing: Option<Billing>,
+    /// Maximum device-mesh rank (2 = the paper's setting).
+    pub max_mesh_dims: usize,
+    /// Configuration-space restriction (ToFu's no-replication).
+    pub filter: ConfigFilter,
+}
+
+impl PlanRequest {
+    /// A default (Pareto, unpriced, rank-2, unfiltered) request.
+    pub fn new(graph_id: &str, batch: i64, cluster_fp: &str, parallelism: u32) -> Self {
+        Self {
+            graph_id: graph_id.to_string(),
+            batch,
+            cluster_fp: cluster_fp.to_string(),
+            parallelism,
+            mode: Mode::Pareto,
+            billing: None,
+            max_mesh_dims: 2,
+            filter: ConfigFilter::Full,
+        }
+    }
+
+    /// Set the frontier mode.
+    pub fn with_mode(mut self, mode: Mode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Set the billing model (dollar-stamped search).
+    pub fn with_billing(mut self, billing: Billing) -> Self {
+        self.billing = Some(billing);
+        self
+    }
+
+    /// Set the configuration filter.
+    pub fn with_filter(mut self, filter: ConfigFilter) -> Self {
+        self.filter = filter;
+        self
+    }
+
+    /// Set the maximum mesh rank.
+    pub fn with_mesh_dims(mut self, dims: usize) -> Self {
+        self.max_mesh_dims = dims;
+        self
+    }
+}
+
+/// How a [`PlanResponse`] was produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Served {
+    /// Full cold search (space built, elimination structure recorded).
+    Cold,
+    /// Incremental re-search: the recorded elimination schedule was
+    /// replayed over (re-stamped) leaf frontiers; only the frontier
+    /// algebra and LDP ran.
+    Incremental,
+    /// Served from the in-memory plan memo (no search at all).
+    Memo,
+    /// Reconstructed from the persistent plan store.
+    Store,
+}
+
+impl Served {
+    /// CLI label.
+    pub fn name(self) -> &'static str {
+        match self {
+            Served::Cold => "cold",
+            Served::Incremental => "incremental",
+            Served::Memo => "memo",
+            Served::Store => "store",
+        }
+    }
+
+    /// Was this response served without running a search?
+    pub fn is_warm(self) -> bool {
+        matches!(self, Served::Memo | Served::Store)
+    }
+}
+
+/// A plan response: the full search result (frontier + everything needed
+/// to unroll strategies) plus how it was served.
+#[derive(Clone)]
+pub struct PlanResponse {
+    /// The search result (shared: repeated requests return the same Arc).
+    pub result: Arc<FtResult>,
+    /// How this response was produced.
+    pub served: Served,
+}
+
+impl PlanResponse {
+    /// The cost frontier.
+    pub fn frontier(&self) -> &Frontier {
+        &self.result.frontier
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_roundtrip() {
+        for m in [Mode::Pareto, Mode::TimeOnly, Mode::MemOnly] {
+            assert_eq!(mode_from_tag(mode_tag(m)), Some(m));
+        }
+        for b in [None, Some(Billing::OnDemand), Some(Billing::Spot)] {
+            assert_eq!(billing_from_tag(billing_tag(b)), Some(b));
+        }
+        for f in [ConfigFilter::Full, ConfigFilter::NoReplication] {
+            assert_eq!(ConfigFilter::from_tag(f.tag()), Some(f));
+        }
+        assert_eq!(mode_from_tag("x"), None);
+        assert_eq!(billing_from_tag("x"), None);
+        assert_eq!(ConfigFilter::from_tag("x"), None);
+    }
+
+    #[test]
+    fn request_builders() {
+        let r = PlanRequest::new("tiny", 256, "fp", 4)
+            .with_mode(Mode::TimeOnly)
+            .with_billing(Billing::Spot)
+            .with_filter(ConfigFilter::NoReplication)
+            .with_mesh_dims(3);
+        assert_eq!(r.mode, Mode::TimeOnly);
+        assert_eq!(r.billing, Some(Billing::Spot));
+        assert_eq!(r.filter, ConfigFilter::NoReplication);
+        assert_eq!(r.max_mesh_dims, 3);
+        assert!(Served::Memo.is_warm() && Served::Store.is_warm());
+        assert!(!Served::Cold.is_warm() && !Served::Incremental.is_warm());
+    }
+}

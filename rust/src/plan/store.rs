@@ -1,0 +1,567 @@
+//! Persistent plan store: FT search results on disk, so restarts (and the
+//! multi-job scheduler) serve from warm frontiers instead of re-searching.
+//!
+//! The file format is JSON via the vendored [`crate::util::codec`] (the
+//! build is offline — no serde). Every frontier objective is stored as its
+//! IEEE-754 bit pattern in hex, so a store round-trip is **bit-identical**:
+//! the reconstructed frontier's (memory, time, dollars) values equal the
+//! searched ones down to the last ulp, which the planner's property tests
+//! pin. Traces are persisted in *unrolled* form (per-tuple operator-config
+//! and edge-reuse choices); serving rebuilds an equivalent trace tree, and
+//! configuration tables are re-derived from the graph with the exact
+//! enumeration the search used ([`crate::ft::build_configs`]), so trace
+//! indices stay valid without persisting the tables themselves.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::frontier::{trace, Frontier, Trace, Tuple};
+use crate::ft::FtResult;
+use crate::parallel::ParallelConfig;
+use crate::util::codec::{f64_from_hex, Json};
+
+use super::{billing_tag, mode_tag, PlanRequest};
+
+/// Store format version (files with another version are ignored, not
+/// misread).
+pub const STORE_VERSION: u64 = 1;
+
+/// Checked narrowing for indices read from store files: a hand-edited or
+/// corrupt file must error, not wrap into a different (valid-looking)
+/// index.
+fn u32_of(x: u64, what: &str) -> anyhow::Result<u32> {
+    u32::try_from(x).map_err(|_| anyhow::anyhow!("{what} {x} out of range"))
+}
+
+/// One persisted frontier tuple: bit-exact objectives + unrolled choices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredTuple {
+    /// Peak per-device memory, IEEE-754 bits.
+    pub mem_bits: u64,
+    /// Per-iteration time, IEEE-754 bits.
+    pub time_bits: u64,
+    /// Dollar cost, IEEE-754 bits.
+    pub cost_bits: u64,
+    /// (op, config-index) choices, ascending by op.
+    pub op_cfg: Vec<(u32, u32)>,
+    /// (edge, reuse-option) choices, ascending by edge.
+    pub edge_opt: Vec<(u32, u8)>,
+}
+
+/// One persisted plan: the request key plus the full search result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredPlan {
+    /// Canonical graph id the plan was searched for.
+    pub graph_id: String,
+    /// Global batch size.
+    pub batch: i64,
+    /// Base-cluster fingerprint.
+    pub cluster_fp: String,
+    /// Device count (already clamped to the cluster).
+    pub parallelism: u32,
+    /// Frontier-mode tag ([`mode_tag`]).
+    pub mode: String,
+    /// Billing tag ([`billing_tag`]).
+    pub billing: String,
+    /// Maximum mesh rank of the search.
+    pub max_mesh_dims: usize,
+    /// Configuration-filter tag.
+    pub filter: String,
+    /// Heuristic eliminations the search performed.
+    pub n_heuristic: usize,
+    /// log2 strategy-space size, IEEE-754 bits.
+    pub log2_space_bits: u64,
+    /// Heuristically pinned configurations, ascending by op.
+    pub forced: Vec<(u32, u32)>,
+    /// The frontier, in search order.
+    pub tuples: Vec<StoredTuple>,
+}
+
+impl StoredPlan {
+    /// The full plan key as one comparable tuple — the single source of
+    /// truth for entry identity, shared by [`StoredPlan::matches`] and
+    /// [`PlanStore::insert`] so the two can never silently diverge when
+    /// the key gains a field.
+    fn key(&self) -> (&str, i64, &str, u32, &str, &str, usize, &str) {
+        (
+            &self.graph_id,
+            self.batch,
+            &self.cluster_fp,
+            self.parallelism,
+            &self.mode,
+            &self.billing,
+            self.max_mesh_dims,
+            &self.filter,
+        )
+    }
+
+    /// Does this entry serve `req`? (`req.graph_id` must already be the
+    /// canonical id and `req.parallelism` already clamped — the engine
+    /// normalizes both before probing the store.)
+    pub fn matches(&self, req: &PlanRequest) -> bool {
+        self.key()
+            == (
+                req.graph_id.as_str(),
+                req.batch,
+                req.cluster_fp.as_str(),
+                req.parallelism,
+                mode_tag(req.mode),
+                billing_tag(req.billing),
+                req.max_mesh_dims,
+                req.filter.tag(),
+            )
+    }
+
+    /// Capture a search result under a (normalized) request key.
+    pub fn from_result(req: &PlanRequest, result: &FtResult) -> Self {
+        let tuples = result
+            .frontier
+            .tuples
+            .iter()
+            .map(|t| {
+                let ch = trace::unroll(&t.trace);
+                let mut op_cfg: Vec<(u32, u32)> = ch.op_cfg.into_iter().collect();
+                op_cfg.sort_unstable();
+                let mut edge_opt: Vec<(u32, u8)> = ch.edge_opt.into_iter().collect();
+                edge_opt.sort_unstable();
+                StoredTuple {
+                    mem_bits: t.mem.to_bits(),
+                    time_bits: t.time.to_bits(),
+                    cost_bits: t.cost.to_bits(),
+                    op_cfg,
+                    edge_opt,
+                }
+            })
+            .collect();
+        let mut forced: Vec<(u32, u32)> = result.forced.iter().map(|(&k, &v)| (k, v)).collect();
+        forced.sort_unstable();
+        Self {
+            graph_id: req.graph_id.clone(),
+            batch: req.batch,
+            cluster_fp: req.cluster_fp.clone(),
+            parallelism: req.parallelism,
+            mode: mode_tag(req.mode).to_string(),
+            billing: billing_tag(req.billing).to_string(),
+            max_mesh_dims: req.max_mesh_dims,
+            filter: req.filter.tag().to_string(),
+            n_heuristic: result.n_heuristic,
+            log2_space_bits: result.log2_space.to_bits(),
+            forced,
+            tuples,
+        }
+    }
+
+    /// Reconstruct the search result. `configs` must be the configuration
+    /// tables of the original search (re-derived deterministically from
+    /// the graph) and `n_edges` the graph's edge count; choice indices are
+    /// validated against both, so a store/graph mismatch errors instead of
+    /// silently unrolling a wrong strategy.
+    pub fn to_result(
+        &self,
+        configs: Vec<Vec<ParallelConfig>>,
+        n_edges: usize,
+    ) -> anyhow::Result<FtResult> {
+        let mut tuples = Vec::with_capacity(self.tuples.len());
+        for st in &self.tuples {
+            let mut tr: Arc<Trace> = Trace::empty();
+            for &(op, cfg) in &st.op_cfg {
+                let have = configs
+                    .get(op as usize)
+                    .map(|c| c.len())
+                    .unwrap_or(0);
+                anyhow::ensure!(
+                    (cfg as usize) < have,
+                    "stored plan references op {op} config {cfg}, but the graph \
+                     enumerates only {have} — store/graph mismatch"
+                );
+                tr = Trace::pair(&tr, &Trace::op_choice(op, cfg));
+            }
+            for &(e, o) in &st.edge_opt {
+                anyhow::ensure!(
+                    (e as usize) < n_edges,
+                    "stored plan references edge {e}, but the graph has only \
+                     {n_edges} edges — store/graph mismatch"
+                );
+                tr = Trace::pair(&tr, &Trace::edge_choice(e, o));
+            }
+            tuples.push(Tuple::with_cost(
+                f64::from_bits(st.mem_bits),
+                f64::from_bits(st.time_bits),
+                f64::from_bits(st.cost_bits),
+                tr,
+            ));
+        }
+        for &(op, cfg) in &self.forced {
+            let have = configs.get(op as usize).map(|c| c.len()).unwrap_or(0);
+            anyhow::ensure!(
+                (cfg as usize) < have,
+                "stored plan pins op {op} to config {cfg}, but the graph \
+                 enumerates only {have} — store/graph mismatch"
+            );
+        }
+        let forced: HashMap<u32, u32> = self.forced.iter().copied().collect();
+        Ok(FtResult {
+            frontier: Frontier { tuples },
+            configs: Arc::new(configs),
+            forced,
+            n_heuristic: self.n_heuristic,
+            log2_space: f64::from_bits(self.log2_space_bits),
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        let pairs_u32 = |v: &[(u32, u32)]| {
+            Json::Arr(
+                v.iter()
+                    .map(|&(a, b)| Json::Arr(vec![Json::Num(a as f64), Json::Num(b as f64)]))
+                    .collect(),
+            )
+        };
+        let tuples = Json::Arr(
+            self.tuples
+                .iter()
+                .map(|t| {
+                    Json::Obj(vec![
+                        ("m".into(), Json::Str(format!("{:016x}", t.mem_bits))),
+                        ("t".into(), Json::Str(format!("{:016x}", t.time_bits))),
+                        ("c".into(), Json::Str(format!("{:016x}", t.cost_bits))),
+                        ("ops".into(), pairs_u32(&t.op_cfg)),
+                        (
+                            "edges".into(),
+                            Json::Arr(
+                                t.edge_opt
+                                    .iter()
+                                    .map(|&(e, o)| {
+                                        Json::Arr(vec![
+                                            Json::Num(e as f64),
+                                            Json::Num(o as f64),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        Json::Obj(vec![
+            ("graph".into(), Json::Str(self.graph_id.clone())),
+            ("batch".into(), Json::Num(self.batch as f64)),
+            ("cluster".into(), Json::Str(self.cluster_fp.clone())),
+            ("parallelism".into(), Json::Num(self.parallelism as f64)),
+            ("mode".into(), Json::Str(self.mode.clone())),
+            ("billing".into(), Json::Str(self.billing.clone())),
+            ("mesh_dims".into(), Json::Num(self.max_mesh_dims as f64)),
+            ("filter".into(), Json::Str(self.filter.clone())),
+            ("n_heuristic".into(), Json::Num(self.n_heuristic as f64)),
+            ("log2_space".into(), Json::Str(format!("{:016x}", self.log2_space_bits))),
+            ("forced".into(), pairs_u32(&self.forced)),
+            ("tuples".into(), tuples),
+        ])
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<StoredPlan> {
+        let s = |k: &str| -> anyhow::Result<String> {
+            Ok(j.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("store entry missing `{k}`"))?
+                .to_string())
+        };
+        let n = |k: &str| -> anyhow::Result<u64> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("store entry missing `{k}`"))
+        };
+        let bits = |k: &str| -> anyhow::Result<u64> {
+            let h = s(k)?;
+            f64_from_hex(&h)
+                .map(f64::to_bits)
+                .ok_or_else(|| anyhow::anyhow!("bad hex float in `{k}`"))
+        };
+        let pairs = |v: Option<&Json>, k: &str| -> anyhow::Result<Vec<(u64, u64)>> {
+            let arr = v
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("store entry missing `{k}`"))?;
+            arr.iter()
+                .map(|p| {
+                    let pa = p.as_arr().filter(|a| a.len() == 2);
+                    let pa = pa.ok_or_else(|| anyhow::anyhow!("bad pair in `{k}`"))?;
+                    let a = pa[0].as_u64().ok_or_else(|| anyhow::anyhow!("bad pair"))?;
+                    let b = pa[1].as_u64().ok_or_else(|| anyhow::anyhow!("bad pair"))?;
+                    Ok((a, b))
+                })
+                .collect()
+        };
+        let mut tuples = Vec::new();
+        for tj in j
+            .get("tuples")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("store entry missing `tuples`"))?
+        {
+            let b = |k: &str| -> anyhow::Result<u64> {
+                let h = tj
+                    .get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("tuple missing `{k}`"))?;
+                f64_from_hex(h)
+                    .map(f64::to_bits)
+                    .ok_or_else(|| anyhow::anyhow!("bad hex float in tuple `{k}`"))
+            };
+            let ops = pairs(tj.get("ops"), "ops")?;
+            let edges = pairs(tj.get("edges"), "edges")?;
+            let op_cfg = ops
+                .into_iter()
+                .map(|(a, c)| Ok((u32_of(a, "op")?, u32_of(c, "config")?)))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let edge_opt = edges
+                .into_iter()
+                .map(|(a, c)| {
+                    let opt = u8::try_from(c)
+                        .map_err(|_| anyhow::anyhow!("edge option {c} out of range"))?;
+                    Ok((u32_of(a, "edge")?, opt))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            tuples.push(StoredTuple {
+                mem_bits: b("m")?,
+                time_bits: b("t")?,
+                cost_bits: b("c")?,
+                op_cfg,
+                edge_opt,
+            });
+        }
+        let batch = j
+            .get("batch")
+            .and_then(Json::as_f64)
+            .filter(|b| b.fract() == 0.0 && b.abs() <= 2f64.powi(53))
+            .ok_or_else(|| anyhow::anyhow!("store entry missing or non-integer `batch`"))?;
+        Ok(StoredPlan {
+            graph_id: s("graph")?,
+            batch: batch as i64,
+            cluster_fp: s("cluster")?,
+            parallelism: u32_of(n("parallelism")?, "parallelism")?,
+            mode: s("mode")?,
+            billing: s("billing")?,
+            max_mesh_dims: n("mesh_dims")? as usize,
+            filter: s("filter")?,
+            n_heuristic: n("n_heuristic")? as usize,
+            log2_space_bits: bits("log2_space")?,
+            forced: pairs(j.get("forced"), "forced")?
+                .into_iter()
+                .map(|(a, b)| Ok((u32_of(a, "op")?, u32_of(b, "config")?)))
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            tuples,
+        })
+    }
+}
+
+/// The on-disk plan store: a keyed set of [`StoredPlan`]s mirrored in
+/// memory. Loading a missing file yields an empty store; [`PlanStore::save`]
+/// writes atomically (temp file + rename).
+pub struct PlanStore {
+    path: PathBuf,
+    /// All entries, in insertion order.
+    pub entries: Vec<StoredPlan>,
+    dirty: bool,
+}
+
+impl PlanStore {
+    /// Open (or initialize) the store at `path`.
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let mut store =
+            Self { path: path.to_path_buf(), entries: Vec::new(), dirty: false };
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(store),
+            Err(e) => return Err(anyhow::anyhow!("reading {}: {e}", path.display())),
+        };
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let version = j.get("version").and_then(Json::as_u64);
+        if version != Some(STORE_VERSION) {
+            // refuse rather than silently treat the file as empty: a later
+            // save() would overwrite (and destroy) entries written by a
+            // different format version.
+            anyhow::bail!(
+                "{}: plan-store version {:?} (this build reads {STORE_VERSION}); \
+                 delete or migrate the file",
+                path.display(),
+                version
+            );
+        }
+        if let Some(entries) = j.get("entries").and_then(Json::as_arr) {
+            for e in entries {
+                store.entries.push(StoredPlan::from_json(e)?);
+            }
+        }
+        Ok(store)
+    }
+
+    /// Number of stored plans.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is the store empty?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The backing file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Any unsaved changes?
+    pub fn dirty(&self) -> bool {
+        self.dirty
+    }
+
+    /// The stored plan matching a normalized request, if any.
+    pub fn find(&self, req: &PlanRequest) -> Option<&StoredPlan> {
+        self.entries.iter().find(|e| e.matches(req))
+    }
+
+    /// Insert (or replace) a plan under its key.
+    pub fn insert(&mut self, plan: StoredPlan) {
+        if let Some(slot) = self.entries.iter_mut().find(|e| e.key() == plan.key()) {
+            if *slot != plan {
+                *slot = plan;
+                self.dirty = true;
+            }
+            return;
+        }
+        self.entries.push(plan);
+        self.dirty = true;
+    }
+
+    /// Write the store (atomic: temp file + rename). No-op when clean.
+    pub fn save(&mut self) -> anyhow::Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        let j = Json::Obj(vec![
+            ("version".into(), Json::Num(STORE_VERSION as f64)),
+            (
+                "entries".into(),
+                Json::Arr(self.entries.iter().map(StoredPlan::to_json).collect()),
+            ),
+        ]);
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = self.path.with_extension("json.tmp");
+        std::fs::write(&tmp, j.render())?;
+        std::fs::rename(&tmp, &self.path)?;
+        self.dirty = false;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::ConfigFilter;
+
+    fn sample_plan() -> StoredPlan {
+        StoredPlan {
+            graph_id: "tiny_mlp#0123456789abcdef".into(),
+            batch: 256,
+            cluster_fp: "4xV100".into(),
+            parallelism: 4,
+            mode: "pareto".into(),
+            billing: "ondemand".into(),
+            max_mesh_dims: 2,
+            filter: "full".into(),
+            n_heuristic: 1,
+            log2_space_bits: 13.75f64.to_bits(),
+            forced: vec![(3, 1)],
+            tuples: vec![StoredTuple {
+                mem_bits: 1.5e9f64.to_bits(),
+                time_bits: 0.001234f64.to_bits(),
+                cost_bits: (1.0f64 / 3.0).to_bits(),
+                op_cfg: vec![(0, 2), (1, 0)],
+                edge_opt: vec![(0, 1)],
+            }],
+        }
+    }
+
+    #[test]
+    fn file_roundtrip_is_exact() {
+        let dir = std::env::temp_dir().join("tensoropt_plan_store_test");
+        let path = dir.join("plans.json");
+        let _ = std::fs::remove_file(&path);
+        let mut store = PlanStore::load(&path).unwrap();
+        assert!(store.is_empty());
+        store.insert(sample_plan());
+        assert!(store.dirty());
+        store.save().unwrap();
+        assert!(!store.dirty());
+
+        let back = PlanStore::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back.entries[0], sample_plan());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn insert_replaces_same_key() {
+        let dir = std::env::temp_dir().join("tensoropt_plan_store_test2");
+        let mut store = PlanStore::load(&dir.join("p.json")).unwrap();
+        store.insert(sample_plan());
+        let mut p2 = sample_plan();
+        p2.n_heuristic = 9;
+        store.insert(p2.clone());
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.entries[0].n_heuristic, 9);
+        // a different key appends.
+        let mut p3 = sample_plan();
+        p3.parallelism = 8;
+        store.insert(p3);
+        assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn find_matches_normalized_requests() {
+        let mut req =
+            PlanRequest::new("tiny_mlp#0123456789abcdef", 256, "4xV100", 4)
+                .with_billing(crate::cost::pricing::Billing::OnDemand);
+        let mut store = PlanStore::load(&std::env::temp_dir().join("x.json")).unwrap();
+        store.dirty = false;
+        store.entries.push(sample_plan());
+        assert!(store.find(&req).is_some());
+        req.filter = ConfigFilter::NoReplication;
+        assert!(store.find(&req).is_none());
+    }
+
+    #[test]
+    fn unknown_version_refuses_to_load() {
+        let dir = std::env::temp_dir().join("tensoropt_plan_store_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v99.json");
+        std::fs::write(&path, "{\"version\":99,\"entries\":[{}]}").unwrap();
+        // refusing (instead of loading as empty) protects a newer-format
+        // file from being overwritten by an older binary's save().
+        let err = PlanStore::load(&path).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_indices_error_instead_of_wrapping() {
+        use crate::parallel::ParallelConfig;
+        // configs rich enough for sample_plan's tuples (ops (0,2) and
+        // (1,0)) and its forced pin (3,1).
+        let rich = || vec![vec![ParallelConfig::replicated(1); 3]; 4];
+        assert!(sample_plan().to_result(rich(), 1).is_ok());
+        // forced pin out of the graph's config range errors at serve time
+        // instead of panicking at unroll time.
+        let mut p = sample_plan();
+        p.forced = vec![(3, 99)];
+        assert!(p.to_result(rich(), 1).is_err());
+        // edge id beyond the graph's edge count errors too.
+        assert!(sample_plan().to_result(rich(), 0).is_err());
+    }
+}

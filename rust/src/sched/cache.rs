@@ -11,11 +11,11 @@
 //! split (§5.2).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::cluster::Cluster;
 use crate::coordinator::Session;
-use crate::graph::models;
+use crate::plan::Planner;
 use crate::sim::{simulate, SimConfig};
 
 /// One cached (model, parallelism) measurement.
@@ -122,11 +122,11 @@ pub struct CacheStats {
 
 /// The shared cache. Keyed by (`model@batch#cluster-fingerprint`,
 /// parallelism) — the fingerprint guards against plans computed for one
-/// topology ever being served to another. Thread-safe; note that
-/// concurrent callers racing on the same cold key may each run the search
-/// (the miss check and the insert are separate critical sections) —
-/// correctness is unaffected, and the scheduler's single event loop never
-/// races itself.
+/// topology ever being served to another. Thread-safe. All searches run
+/// through the unified [`Planner`] engine, whose single-flight
+/// deduplication fixes the old documented cold-key race: concurrent
+/// callers racing on the same cold key now share one FT search instead of
+/// each running it (pinned by `rust/tests/plan.rs`).
 pub struct FrontierCache {
     /// Ground-truth cluster the simulator runs on.
     cluster: Cluster,
@@ -135,6 +135,8 @@ pub struct FrontierCache {
     /// homogeneity-assuming planner against reality.
     est_cluster: Cluster,
     key_prefix: String,
+    /// The planner engine serving (and memoizing) every FT search.
+    planner: Arc<Planner>,
     entries: Mutex<HashMap<(String, u32), CurvePoint>>,
     stats: Mutex<CacheStats>,
 }
@@ -150,6 +152,13 @@ impl FrontierCache {
         Self::with_assumption(cluster, assumed)
     }
 
+    /// [`FrontierCache::new`] on a shared planner engine (e.g. one also
+    /// serving interactive sessions, so the scheduler starts warm).
+    pub fn new_shared(cluster: Cluster, planner: Arc<Planner>) -> Self {
+        let assumed = cluster.clone();
+        Self::with_assumption_shared(cluster, assumed, planner)
+    }
+
     /// Split the planner's belief from reality: `est_time`, feasibility
     /// floors, the chosen strategies — and the `usd_hour` rates the
     /// cost-aware allocator reads — come from FT searches on `assumed`;
@@ -157,19 +166,35 @@ impl FrontierCache {
     /// those strategies on `real`. With `assumed == real` this is exactly
     /// [`FrontierCache::new`].
     pub fn with_assumption(real: Cluster, assumed: Cluster) -> Self {
+        Self::with_assumption_shared(real, assumed, Arc::new(Planner::new()))
+    }
+
+    /// [`FrontierCache::with_assumption`] on a shared planner engine.
+    pub fn with_assumption_shared(
+        real: Cluster,
+        assumed: Cluster,
+        planner: Arc<Planner>,
+    ) -> Self {
         assert_eq!(
             real.n_devices(),
             assumed.n_devices(),
             "assumed cluster must match the real device count"
         );
         let key_prefix = format!("{}>{}", assumed.fingerprint(), real.fingerprint());
+        planner.register_cluster(&assumed);
         Self {
             cluster: real,
             est_cluster: assumed,
             key_prefix,
+            planner,
             entries: Mutex::new(HashMap::new()),
             stats: Mutex::new(CacheStats::default()),
         }
+    }
+
+    /// The planner engine serving this cache.
+    pub fn planner(&self) -> &Arc<Planner> {
+        &self.planner
     }
 
     /// Snapshot of the hit/miss counters.
@@ -178,9 +203,11 @@ impl FrontierCache {
     }
 
     /// Profile `model@batch` at every requested parallelism, serving from
-    /// the cache where possible. Misses run one parallel Profiling sweep
-    /// through the Session (satisfying them all at once) plus one
-    /// simulator run per feasible point for ground truth.
+    /// the cache where possible. Misses run one `Session::profile_plans`
+    /// sweep on the shared planner (so the thread-budget split, memory
+    /// budget and point selection are the Session's — one implementation,
+    /// not a copy) plus one simulator run per feasible point for ground
+    /// truth.
     pub fn curve(&self, model: &str, batch: i64, parallelisms: &[u32]) -> ProfileCurve {
         let key = format!("{model}@{batch}#{}", self.key_prefix);
         let mut ds: Vec<u32> = parallelisms.to_vec();
@@ -196,17 +223,22 @@ impl FrontierCache {
             }
         }
         if !missing.is_empty() {
-            let g = models::by_name(model, batch)
-                .unwrap_or_else(|| panic!("unknown model `{model}` in job spec"));
-            let session = Session::new(g, self.est_cluster.clone());
+            let g = self
+                .planner
+                .graph(model, batch)
+                .unwrap_or_else(|e| panic!("cannot resolve `{model}` in job spec: {e}"));
+            let session = Session::with_planner(
+                (*g).clone(),
+                self.est_cluster.clone(),
+                Arc::clone(&self.planner),
+            );
             let plans = session.profile_plans(&missing);
             let mut computed: Vec<CurvePoint> = Vec::with_capacity(plans.len());
             for pp in &plans {
                 let d = pp.point.parallelism;
                 let sim_time = pp.plan.as_ref().map(|plan| {
                     let sub = self.cluster.sub_cluster(d as usize);
-                    simulate(&session.graph, &plan.strategy, &sub, &SimConfig::default())
-                        .time
+                    simulate(&g, &plan.strategy, &sub, &SimConfig::default()).time
                 });
                 computed.push(CurvePoint {
                     parallelism: d,

@@ -5,10 +5,12 @@
 //! minimal replacements the rest of the crate needs: a deterministic RNG
 //! ([`rng::XorShift`]), a tiny CLI argument parser ([`cli::Args`]), ASCII
 //! table / CSV formatting ([`table::Table`]), a benchmark harness
-//! ([`benchkit`]) used by every `rust/benches/bench_*.rs`, and a
-//! property-testing harness ([`ptest`]).
+//! ([`benchkit`]) used by every `rust/benches/bench_*.rs`, a
+//! property-testing harness ([`ptest`]), and a vendored JSON codec
+//! ([`codec`]) used by the persistent plan store.
 
 pub mod benchkit;
+pub mod codec;
 pub mod par;
 pub mod cli;
 pub mod ptest;

@@ -1,0 +1,301 @@
+//! Planner-engine integration tests: the PR's acceptance criteria.
+//!
+//! - A `Session::profile` sweep and a `FrontierCache::curve` over 4
+//!   parallelisms perform exactly one model-space build per (model,
+//!   batch) and produce frontiers bit-identical to the pre-refactor
+//!   cold-search path (`frontier_search` on the sub-cluster).
+//! - Concurrent callers racing on one cold key share a single search
+//!   (single-flight; the old documented `sched/cache.rs` race).
+//! - Property: for random graphs/clusters/modes/billings, memoized,
+//!   incremental, and store-round-tripped planner results are
+//!   bit-identical to a from-scratch `frontier_search`.
+
+use std::sync::Arc;
+
+use tensoropt::cluster::{Cluster, DeviceSpec, LinkKind, Machine};
+use tensoropt::coordinator::Session;
+use tensoropt::cost::comm::CommModel;
+use tensoropt::cost::pricing::{self, Billing};
+use tensoropt::frontier::Mode;
+use tensoropt::ft::{frontier_search, frontier_search_filtered, FtOptions, FtResult};
+use tensoropt::graph::models::{self, tiny_mlp};
+use tensoropt::graph::Op;
+use tensoropt::parallel::ParallelConfig;
+use tensoropt::plan::{ConfigFilter, PlanRequest, Planner, Served};
+use tensoropt::prop_assert;
+use tensoropt::sched::FrontierCache;
+use tensoropt::util::ptest;
+
+/// The pre-refactor cold-search path, replicated exactly: profile-comm on
+/// the machine-major sub-cluster, priced (or not) at its rental rate.
+fn reference(
+    model: &str,
+    batch: i64,
+    base: &Cluster,
+    d: u32,
+    mode: Mode,
+    billing: Option<Billing>,
+    filter: ConfigFilter,
+) -> FtResult {
+    let g = models::by_name(model, batch).expect("zoo model");
+    let sub = base.sub_cluster(d as usize);
+    let comm = CommModel::profile(&sub);
+    let mut opts = FtOptions::new(sub.n_devices() as u32).sequential().with_mode(mode);
+    opts.usd_hour = billing.map_or(0.0, |b| pricing::usd_hour(&sub, b));
+    match filter {
+        ConfigFilter::Full => frontier_search(&g, &sub, &comm, opts),
+        ConfigFilter::NoReplication => {
+            let f = |_op: &Op, c: &ParallelConfig| c.replication() == 1;
+            frontier_search_filtered(&g, &sub, &comm, opts, Some(&f))
+        }
+    }
+}
+
+/// Bit-identity of two search results: frontier objectives down to the
+/// last ulp, pins, and every unrolled strategy.
+fn check_identical(a: &FtResult, b: &FtResult, what: &str) -> Result<(), String> {
+    prop_assert!(
+        a.frontier.len() == b.frontier.len(),
+        "{what}: frontier sizes {} vs {}",
+        a.frontier.len(),
+        b.frontier.len()
+    );
+    for (i, (x, y)) in a.frontier.tuples.iter().zip(&b.frontier.tuples).enumerate() {
+        prop_assert!(
+            x.mem.to_bits() == y.mem.to_bits()
+                && x.time.to_bits() == y.time.to_bits()
+                && x.cost.to_bits() == y.cost.to_bits(),
+            "{what}: tuple {i} differs: ({}, {}, {}) vs ({}, {}, {})",
+            x.mem,
+            x.time,
+            x.cost,
+            y.mem,
+            y.time,
+            y.cost
+        );
+        let (sa, _) = a.strategy_of(x);
+        let (sb, _) = b.strategy_of(y);
+        prop_assert!(sa.configs == sb.configs, "{what}: strategy {i} differs");
+    }
+    prop_assert!(a.forced == b.forced, "{what}: pins differ");
+    prop_assert!(a.n_heuristic == b.n_heuristic, "{what}: n_heuristic differs");
+    Ok(())
+}
+
+fn assert_identical(a: &FtResult, b: &FtResult, what: &str) {
+    if let Err(e) = check_identical(a, b, what) {
+        panic!("{e}");
+    }
+}
+
+/// Acceptance: `Session::profile` + `FrontierCache::curve` over 4
+/// parallelisms = one space build per (model, batch), 4 leaf builds, and
+/// frontiers bit-identical to the pre-refactor cold path.
+#[test]
+fn profile_sweep_and_curve_share_one_space_build() {
+    let cluster = Cluster::with_gpus(8);
+    let planner = Arc::new(Planner::new().with_threads(2));
+    let parallelisms = [1u32, 2, 4, 8];
+
+    let session =
+        Session::with_planner(tiny_mlp(256), cluster.clone(), Arc::clone(&planner));
+    let rows = session.profile(&parallelisms);
+    assert_eq!(rows.len(), 4);
+    let after_profile = planner.stats();
+    assert_eq!(after_profile.space_builds, 1, "one space build for the whole sweep");
+    assert_eq!(after_profile.leaf_builds, 4, "one leaf build per parallelism");
+    assert_eq!(after_profile.searches(), 4);
+
+    // the scheduler cache on the same planner reuses all four searches.
+    let cache = FrontierCache::new_shared(cluster.clone(), Arc::clone(&planner));
+    let curve = cache.curve("tiny", 256, &parallelisms);
+    let s = planner.stats();
+    assert_eq!(s.space_builds, 1, "curve reuses the session's space");
+    assert_eq!(s.leaf_builds, 4, "no new leaf builds");
+    assert_eq!(s.searches(), 4, "no new searches");
+    assert_eq!(s.memo_hits, 4, "all four curve points are memo hits");
+
+    // bit-identity against the pre-refactor cold path, plus row agreement.
+    let fp = planner.register_cluster(&cluster);
+    let budget = session.mem_budget();
+    for (row, &d) in rows.iter().zip(&parallelisms) {
+        let raw = reference(
+            "tiny",
+            256,
+            &cluster,
+            d,
+            Mode::Pareto,
+            Some(Billing::OnDemand),
+            ConfigFilter::Full,
+        );
+        let resp = planner
+            .plan(&PlanRequest::new("tiny", 256, &fp, d).with_billing(Billing::OnDemand))
+            .unwrap();
+        assert_eq!(resp.served, Served::Memo);
+        assert_identical(&resp.result, &raw, "sweep");
+        assert_eq!(row.best_time, raw.frontier.min_time_within(budget).map(|t| t.time));
+        assert_eq!(curve.est_time(d), row.best_time);
+    }
+
+    // a second (model, batch) gets its own (single) space build.
+    let session2 =
+        Session::with_planner(tiny_mlp(128), cluster.clone(), Arc::clone(&planner));
+    session2.profile(&parallelisms);
+    assert_eq!(planner.stats().space_builds, 2, "one more per (model, batch)");
+}
+
+/// The old documented cold-key race, pinned: concurrent `curve` callers
+/// on one cold key run exactly one FT search between them.
+#[test]
+fn concurrent_cold_curves_share_one_search() {
+    let cluster = Cluster::with_gpus(4);
+    let planner = Arc::new(Planner::new().with_threads(2));
+    let cache =
+        Arc::new(FrontierCache::new_shared(cluster.clone(), Arc::clone(&planner)));
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let cache = Arc::clone(&cache);
+        handles.push(std::thread::spawn(move || {
+            let curve = cache.curve("tiny", 256, &[2]);
+            curve.est_time(2).expect("tiny fits at 2 devices")
+        }));
+    }
+    let times: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for t in &times {
+        assert_eq!(t.to_bits(), times[0].to_bits(), "all callers share one result");
+    }
+    let s = planner.stats();
+    assert_eq!(s.searches(), 1, "single-flight: one search for 8 racing callers");
+    assert_eq!(s.space_builds, 1);
+    assert_eq!(s.leaf_builds, 1);
+}
+
+/// Restart warm-serving: plans persisted by one planner are served by a
+/// fresh planner from the store, bit-identically and without searching.
+#[test]
+fn store_roundtrip_serves_warm_after_restart() {
+    let dir = std::env::temp_dir().join("tensoropt_plan_restart_test");
+    let path = dir.join("plans.json");
+    let _ = std::fs::remove_file(&path);
+    let cluster = Cluster::with_gpus(4);
+
+    let first = Planner::new().with_threads(2);
+    first.attach_store(&path).unwrap();
+    let fp = first.register_cluster(&cluster);
+    let req2 = PlanRequest::new("tiny", 256, &fp, 2).with_billing(Billing::OnDemand);
+    let req4 = PlanRequest::new("tiny", 256, &fp, 4).with_billing(Billing::OnDemand);
+    let a2 = first.plan(&req2).unwrap();
+    let a4 = first.plan(&req4).unwrap();
+    assert!(!a2.served.is_warm() && !a4.served.is_warm());
+    first.flush_store().unwrap();
+
+    // "restart": a fresh planner over the same store file.
+    let second = Planner::new().with_threads(2);
+    assert_eq!(second.attach_store(&path).unwrap(), 2, "two persisted plans");
+    let fp2 = second.register_cluster(&cluster);
+    for (req, cold) in [(req2, a2), (req4, a4)] {
+        let req = PlanRequest { cluster_fp: fp2.clone(), ..req };
+        let warm = second.plan(&req).unwrap();
+        assert_eq!(warm.served, Served::Store);
+        assert_identical(&warm.result, &cold.result, "store restart");
+    }
+    assert_eq!(second.stats().searches(), 0, "restart ran no searches");
+    assert_eq!(second.stats().store_serves, 2);
+    let _ = std::fs::remove_file(&path);
+}
+
+fn testbed(which: u64) -> Cluster {
+    match which % 3 {
+        0 => Cluster::with_gpus(4),
+        1 => Cluster::with_gpus(6),
+        _ => Cluster::from_machines(
+            "2xA100+2xV100 prop",
+            vec![
+                Machine::new(DeviceSpec::a100(), 2, LinkKind::NvLink),
+                Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+            ],
+            LinkKind::IbRdma,
+        ),
+    }
+}
+
+/// Property: memoized, incremental (re-billed and re-sized), and
+/// store-round-tripped planner results are bit-identical to a
+/// from-scratch `frontier_search`.
+#[test]
+fn prop_planner_matches_from_scratch_search() {
+    let dir = std::env::temp_dir().join("tensoropt_plan_prop_test");
+    let _ = std::fs::create_dir_all(&dir);
+    let mut case = 0u64;
+    ptest::check(
+        "planner-vs-scratch",
+        ptest::Config { cases: 10, seed: 0x9E37 },
+        |rng| {
+            case += 1;
+            let batch = [64i64, 128, 256][rng.below(3)];
+            let cluster = testbed(rng.next_u64());
+            let n = cluster.n_devices();
+            let d = 1 + rng.below(n) as u32;
+            let mode = [Mode::Pareto, Mode::TimeOnly, Mode::MemOnly][rng.below(3)];
+            let billings = [None, Some(Billing::OnDemand), Some(Billing::Spot)];
+            let billing = billings[rng.below(3)];
+            let filter = if rng.below(4) == 0 {
+                ConfigFilter::NoReplication
+            } else {
+                ConfigFilter::Full
+            };
+
+            let store_path = dir.join(format!("case_{case}.json"));
+            let _ = std::fs::remove_file(&store_path);
+            let planner = Planner::new().with_threads(2);
+            planner.attach_store(&store_path).map_err(|e| e.to_string())?;
+            let fp = planner.register_cluster(&cluster);
+            let mut req = PlanRequest::new("tiny", batch, &fp, d)
+                .with_mode(mode)
+                .with_filter(filter);
+            req.billing = billing;
+
+            // cold == scratch
+            let cold = planner.plan(&req).map_err(|e| e.to_string())?;
+            let scratch = reference("tiny", batch, &cluster, d, mode, billing, filter);
+            check_identical(&cold.result, &scratch, "cold")?;
+
+            // memo: the identical request returns the shared result.
+            let memo = planner.plan(&req).map_err(|e| e.to_string())?;
+            prop_assert!(memo.served == Served::Memo, "expected memo hit");
+            prop_assert!(
+                Arc::ptr_eq(&memo.result, &cold.result),
+                "memo must share the result"
+            );
+
+            // incremental re-billing at the same parallelism.
+            let rebilled = billings[rng.below(3)];
+            let mut req_b = req.clone();
+            req_b.billing = rebilled;
+            let inc = planner.plan(&req_b).map_err(|e| e.to_string())?;
+            let scratch_b =
+                reference("tiny", batch, &cluster, d, mode, rebilled, filter);
+            check_identical(&inc.result, &scratch_b, "rebilled")?;
+
+            // incremental re-sizing (schedule replay at another d).
+            let d2 = 1 + rng.below(n) as u32;
+            let mut req_d = req.clone();
+            req_d.parallelism = d2;
+            let re = planner.plan(&req_d).map_err(|e| e.to_string())?;
+            let scratch_d = reference("tiny", batch, &cluster, d2, mode, billing, filter);
+            check_identical(&re.result, &scratch_d, "resized")?;
+
+            // store round-trip through a fresh planner.
+            planner.flush_store().map_err(|e| e.to_string())?;
+            let fresh = Planner::new().with_threads(2);
+            fresh.attach_store(&store_path).map_err(|e| e.to_string())?;
+            let fp2 = fresh.register_cluster(&cluster);
+            let req_s = PlanRequest { cluster_fp: fp2, ..req.clone() };
+            let stored = fresh.plan(&req_s).map_err(|e| e.to_string())?;
+            prop_assert!(stored.served == Served::Store, "expected a store serve");
+            check_identical(&stored.result, &scratch, "stored")?;
+            let _ = std::fs::remove_file(&store_path);
+            Ok(())
+        },
+    );
+}
