@@ -1,0 +1,53 @@
+//! Recorder-overhead benches: what tracing costs on the hottest planner
+//! path, and what a *disabled* recorder costs (the answer must be: one
+//! relaxed atomic load, i.e. nothing).
+//!
+//! Group `obs_overhead` (one JSON file for the CI regression gate):
+//! - `plan_cold_recorder_off` / `plan_cold_recorder_on` — the same cold
+//!   `tiny@d8` search untraced vs fully traced (spans, events, metrics).
+//!   The traced run must stay within a few percent of the untraced one.
+//! - `span_guard_disabled_x1000` — 1000 disabled `obs::span` calls; pins
+//!   the "recorder off" fast path at noise level.
+
+use tensoropt::cluster::Cluster;
+use tensoropt::obs;
+use tensoropt::plan::{PlanRequest, Planner};
+use tensoropt::util::benchkit::Bench;
+
+fn plan_cold(cluster: &Cluster) -> usize {
+    let p = Planner::new();
+    let fp = p.register_cluster(cluster);
+    p.plan(&PlanRequest::new("tiny", 256, &fp, 8)).unwrap().frontier().len()
+}
+
+fn main() {
+    let cluster = Cluster::with_gpus(8);
+    let mut b = Bench::new("obs_overhead");
+
+    obs::disable();
+    let off = b.run("plan_cold_recorder_off", || plan_cold(&cluster)).mean_s;
+
+    obs::enable();
+    let on = b.run("plan_cold_recorder_on", || plan_cold(&cluster)).mean_s;
+    // don't let the accumulated records leak into later measurements.
+    let drained = obs::global().drain();
+    obs::disable();
+
+    b.run("span_guard_disabled_x1000", || {
+        let mut n = 0usize;
+        for _ in 0..1000 {
+            let sp = obs::span("bench.noop");
+            if sp.active() {
+                n += 1;
+            }
+        }
+        n
+    });
+    b.finish();
+
+    println!(
+        "traced cold plan recorded {} records; overhead {:+.2}% vs untraced",
+        drained.len(),
+        100.0 * (on - off) / off
+    );
+}

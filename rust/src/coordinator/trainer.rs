@@ -166,7 +166,21 @@ pub fn train_dp(cfg: &TrainerCfg) -> Result<TrainReport> {
             / cfg.devices as f32;
         losses.push(mean_loss);
         if cfg.log_every > 0 && step % cfg.log_every == 0 {
-            eprintln!("[train_dp {}] step {step:4} loss {mean_loss:.4}", cfg.model);
+            if crate::obs::enabled() {
+                use crate::obs::Attr;
+                crate::obs::event(
+                    "train.step",
+                    &[
+                        ("mode", Attr::Str("dp".to_string())),
+                        ("model", Attr::Str(cfg.model.clone())),
+                        ("step", Attr::U64(step as u64)),
+                        ("loss", Attr::F64(mean_loss as f64)),
+                    ],
+                );
+            }
+            if !crate::obs::quiet() {
+                eprintln!("[train_dp {}] step {step:4} loss {mean_loss:.4}", cfg.model);
+            }
         }
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -280,7 +294,21 @@ pub fn train_tp(cfg: &TrainerCfg) -> Result<TrainReport> {
         let loss = ex.get(0, "loss").unwrap().as_f32()[0];
         losses.push(loss);
         if cfg.log_every > 0 && step % cfg.log_every == 0 {
-            eprintln!("[train_tp small] step {step:4} loss {loss:.4}");
+            if crate::obs::enabled() {
+                use crate::obs::Attr;
+                crate::obs::event(
+                    "train.step",
+                    &[
+                        ("mode", Attr::Str("tp".to_string())),
+                        ("model", Attr::Str("small".to_string())),
+                        ("step", Attr::U64(step as u64)),
+                        ("loss", Attr::F64(loss as f64)),
+                    ],
+                );
+            }
+            if !crate::obs::quiet() {
+                eprintln!("[train_tp small] step {step:4} loss {loss:.4}");
+            }
         }
     }
     let wall = t0.elapsed().as_secs_f64();

@@ -6,6 +6,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod hetero;
+pub mod obs;
 pub mod provision;
 pub mod sched;
 pub mod table1;

@@ -211,12 +211,25 @@ pub fn run(cfg: &ProvisionCfg) -> (Table, Table) {
     for cluster in hetero::presets() {
         let cands = candidates(&planner, &cluster, cfg);
         let par = pareto(&cands);
-        println!(
-            "[{}] {} candidate points, {} on the 3-D Pareto frontier",
-            cluster.name,
-            cands.len(),
-            par.len()
-        );
+        if crate::obs::enabled() {
+            use crate::obs::Attr;
+            crate::obs::event(
+                "provision.pareto",
+                &[
+                    ("cluster", Attr::Str(cluster.name.clone())),
+                    ("candidates", Attr::U64(cands.len() as u64)),
+                    ("pareto", Attr::U64(par.len() as u64)),
+                ],
+            );
+        }
+        if !crate::obs::quiet() {
+            println!(
+                "[{}] {} candidate points, {} on the 3-D Pareto frontier",
+                cluster.name,
+                cands.len(),
+                par.len()
+            );
+        }
         let min_wall = par.iter().map(|c| c.wall_s).fold(f64::INFINITY, f64::min);
         let min_usd = par.iter().map(|c| c.usd).fold(f64::INFINITY, f64::min);
         for f in DEADLINE_FACTORS {

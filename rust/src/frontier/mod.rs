@@ -30,8 +30,8 @@
 
 use std::sync::Arc;
 
-pub mod trace;
-pub use trace::Trace;
+pub use crate::obs::provenance as trace;
+pub use crate::obs::provenance::Trace;
 
 /// Reduction mode: the full Pareto frontier (FT), or single-objective
 /// truncations that turn the same machinery into the OptCNN (time-only)

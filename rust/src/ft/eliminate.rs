@@ -390,6 +390,42 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
         self.n_heuristic += 1;
     }
 
+    /// Emit a structured `ft.elim_step` trace event (no-op unless the
+    /// global recorder is enabled, so replay stays bit-identical *and*
+    /// cost-free when tracing is off): the step kind plus the live graph
+    /// shape and total surviving frontier tuples — a trace shows how
+    /// frontier sizes evolve through the elimination.
+    fn emit_step(&self, step: ElimStep) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        use crate::obs::Attr;
+        let (kind, op) = match step {
+            ElimStep::Merge => ("merge", None),
+            ElimStep::Node(i) => ("node", Some(i)),
+            ElimStep::Branch(i) => ("branch", Some(i)),
+            ElimStep::Heuristic(i) => ("heuristic", Some(i)),
+        };
+        let live_ops = self.alive.iter().filter(|a| **a).count();
+        let tuples: usize = self
+            .node_frontiers
+            .iter()
+            .zip(&self.alive)
+            .filter(|(_, alive)| **alive)
+            .map(|(fs, _)| fs.iter().map(|f| f.len()).sum::<usize>())
+            .sum();
+        let mut attrs = vec![
+            ("kind", Attr::Str(kind.to_string())),
+            ("live_ops", Attr::U64(live_ops as u64)),
+            ("live_edges", Attr::U64(self.edges.len() as u64)),
+            ("frontier_tuples", Attr::U64(tuples as u64)),
+        ];
+        if let Some(i) = op {
+            attrs.push(("op", Attr::U64(i as u64)));
+        }
+        crate::obs::event("ft.elim_step", &attrs);
+    }
+
     /// Algorithm 2 lines 4-11: run exact eliminations to fixpoint, then a
     /// heuristic elimination, until only marked (spine) nodes survive.
     pub fn run(&mut self) {
@@ -409,16 +445,19 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
                 progress = false;
                 if self.edge_eliminate_all() > 0 {
                     schedule.push(ElimStep::Merge);
+                    self.emit_step(ElimStep::Merge);
                     progress = true;
                 }
                 while let Some(i) = self.find_chain_node() {
                     self.node_eliminate_at(i);
                     schedule.push(ElimStep::Node(i));
+                    self.emit_step(ElimStep::Node(i));
                     progress = true;
                 }
                 while let Some(i) = self.find_branch_source() {
                     self.branch_eliminate_at(i);
                     schedule.push(ElimStep::Branch(i));
+                    self.emit_step(ElimStep::Branch(i));
                     progress = true;
                 }
             }
@@ -431,6 +470,7 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
                 Some(i) => {
                     self.heuristic_eliminate_at(i, None);
                     schedule.push(ElimStep::Heuristic(i));
+                    self.emit_step(ElimStep::Heuristic(i));
                 }
                 None => break,
             }
@@ -454,6 +494,7 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
                     self.heuristic_eliminate_at(i, pin);
                 }
             }
+            self.emit_step(*step);
         }
     }
 

@@ -12,6 +12,7 @@ pub mod exp;
 pub mod frontier;
 pub mod ft;
 pub mod graph;
+pub mod obs;
 pub mod parallel;
 pub mod plan;
 pub mod runtime;

@@ -1,10 +1,14 @@
 //! `tensoropt` — CLI for the TensorOpt reproduction.
 //!
 //! Subcommands:
-//!   exp <table1|table2|table3|table4|fig6|fig7|fig8|hetero|provision>
+//!   exp <table1|table2|table3|table4|fig6|fig7|fig8|hetero|provision|obs>
 //!            regenerate a paper table/figure
 //!            (hetero: homogeneous-assumption vs topology-aware on mixed testbeds;
-//!             provision: dollar-priced cheapest-under-deadline / fastest-under-budget)
+//!             provision: dollar-priced cheapest-under-deadline / fastest-under-budget;
+//!             obs: estimate-vs-simulated drift report)
+//!
+//! Global options: --trace FILE (JSONL span/event trace), --trace-chrome FILE
+//! (chrome://tracing format), --metrics (dump the metrics registry), --quiet.
 //!   search   --model M --mode <mini_time|mini_parallelism|profiling> [--gpus N]
 //!   train    --strategy <dp|tp> --model <small|e2e> [--devices N] [--steps N] [--fused]
 //!   frontier --model M [--gpus N]                    print the raw cost frontier
@@ -32,6 +36,39 @@ fn save(t: &Table, name: &str) {
     } else {
         println!("[saved {}]", path.display());
     }
+}
+
+/// Arm the observability layer from the global flags (`--trace`,
+/// `--trace-chrome`, `--metrics`, `--quiet`) before dispatching.
+fn setup_obs(args: &Args) {
+    if args.flag("quiet") {
+        tensoropt::obs::set_quiet(true);
+    }
+    if args.get("trace").is_some() || args.get("trace-chrome").is_some() || args.flag("metrics")
+    {
+        tensoropt::obs::enable();
+    }
+}
+
+/// Epilogue for the global observability flags: drain the recorder into
+/// the requested trace file(s) and dump the global metrics registry.
+fn finish_obs(args: &Args) -> anyhow::Result<()> {
+    if !tensoropt::obs::enabled() {
+        return Ok(());
+    }
+    let records = tensoropt::obs::global().drain();
+    if let Some(path) = args.get("trace") {
+        std::fs::write(path, tensoropt::obs::render_jsonl(&records))?;
+        eprintln!("[trace: {} records -> {path}]", records.len());
+    }
+    if let Some(path) = args.get("trace-chrome") {
+        std::fs::write(path, tensoropt::obs::render_chrome(&records))?;
+        eprintln!("[chrome trace: {} records -> {path}]", records.len());
+    }
+    if args.flag("metrics") {
+        println!("{}", tensoropt::obs::global_metrics().snapshot().render());
+    }
+    Ok(())
 }
 
 fn cmd_exp(args: &Args) -> anyhow::Result<()> {
@@ -129,6 +166,21 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             println!("{}", fast.render());
             save(&cheap, "provision_deadline");
             save(&fast, "provision_budget");
+        }
+        "obs" => {
+            let cfg = exp::obs::ObsCfg {
+                model: args.get_or("model", "vgg16").to_string(),
+                batch: args.get_parse_or("batch", 256i64),
+                ladder: args
+                    .get_or("ladder", "2,4,8")
+                    .split(',')
+                    .map(|s| s.trim().parse())
+                    .collect::<Result<_, _>>()
+                    .map_err(|e| anyhow::anyhow!("bad --ladder: {e}"))?,
+            };
+            let t = exp::obs::run(&cfg);
+            println!("{}", t.render());
+            save(&t, "obs_drift");
         }
         "fig8" => {
             let model = args.get_or("model", "transformer");
@@ -319,29 +371,33 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     }
     let fp = planner.register_cluster(&Cluster::with_gpus(gpus as usize));
 
+    let repeat = args.get_parse_or("repeat", 1usize);
+    anyhow::ensure!(repeat >= 1, "--repeat must be >= 1");
     let mut t = Table::new(
         &format!("plan sweep: {model}@{batch} on {gpus} GPUs"),
         &["gpus", "served", "points", "min_time_s", "min_mem_gb", "ms"],
     );
     let mut all_warm = true;
-    for &d in &parallelisms {
-        let mut req = PlanRequest::new(model, batch, &fp, d);
-        if let Some(b) = billing {
-            req = req.with_billing(b);
+    for _rep in 0..repeat {
+        for &d in &parallelisms {
+            let mut req = PlanRequest::new(model, batch, &fp, d);
+            if let Some(b) = billing {
+                req = req.with_billing(b);
+            }
+            let t0 = std::time::Instant::now();
+            let resp = planner.plan(&req)?;
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            all_warm &= resp.served.is_warm();
+            let f = resp.frontier();
+            t.row(&[
+                d.to_string(),
+                resp.served.name().into(),
+                f.len().to_string(),
+                f.min_time().map_or("-".into(), |x| format!("{:.4}", x.time)),
+                f.min_mem().map_or("-".into(), |x| format!("{:.3}", x.mem / exp::GB)),
+                format!("{ms:.1}"),
+            ]);
         }
-        let t0 = std::time::Instant::now();
-        let resp = planner.plan(&req)?;
-        let ms = t0.elapsed().as_secs_f64() * 1e3;
-        all_warm &= resp.served.is_warm();
-        let f = resp.frontier();
-        t.row(&[
-            d.to_string(),
-            resp.served.name().into(),
-            f.len().to_string(),
-            f.min_time().map_or("-".into(), |x| format!("{:.4}", x.time)),
-            f.min_mem().map_or("-".into(), |x| format!("{:.3}", x.mem / exp::GB)),
-            format!("{ms:.1}"),
-        ]);
     }
     println!("{}", t.render());
 
@@ -360,6 +416,12 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
         s.flight_waits.to_string(),
     ]);
     println!("{}", st.render());
+    if args.flag("metrics") {
+        // this planner instance's registry (counters + latency/size
+        // histograms); finish_obs additionally dumps the process-global
+        // registry.
+        println!("{}", planner.metrics().snapshot().render());
+    }
 
     if store_path.is_some() {
         planner.flush_store()?;
@@ -422,18 +484,31 @@ COMMANDS:
   exp provision [--model M --batch B --iters N --billing <ondemand|spot> --sizes 4,8,16]
                                                     dollar-priced provisioning on the mixed testbeds:
                                                     cheapest-under-deadline / fastest-under-budget
+  exp obs [--model M --batch B --ladder 2,4,8]      drift report: estimate-vs-simulated relative
+                                                    error per (testbed, belief, parallelism, metric)
   search    --model M --mode <mini_time|mini_parallelism|profiling> --gpus N
   train     --strategy <dp|tp> --model <small|e2e> --devices N --steps N [--fused] [--pallas]
   frontier  --model M --gpus N
   plan      --model M --batch B --gpus N --parallelisms 1,2,4,8 [--billing <ondemand|spot>]
             [--store FILE] [--expect-warm]       planner-engine sweep with cold/warm stats;
-            --store persists plans so a rerun serves warm (--expect-warm asserts it)
+            [--repeat N]                         --store persists plans so a rerun serves warm
+                                                 (--expect-warm asserts it); --repeat loops the
+                                                 sweep so later passes exercise the memo
   plan      --inspect --store FILE               list the plans in a store file
   sched     --jobs N --gpus N --models A,B,C --seed S [--interarrival S] [--min-iters N] [--max-iters N]
   help
 
+GLOBAL OPTIONS (every command):
+  --trace FILE         record structured spans/events, write JSON-lines to FILE
+  --trace-chrome FILE  same trace in chrome://tracing format (load via chrome://tracing
+                       or https://ui.perfetto.dev)
+  --metrics            enable the recorder and dump the metrics registry on exit
+  --quiet              suppress progress/log lines (structured events still recorded)
+
 EXAMPLES:
   tensoropt exp table1
+  tensoropt exp obs --model tiny --ladder 2,4
+  tensoropt plan --model vgg16 --gpus 8 --repeat 2 --trace trace.jsonl --metrics
   tensoropt exp hetero
   tensoropt exp provision --billing spot --iters 50000
   tensoropt exp fig6 --model transformer --gpus 16
@@ -446,7 +521,8 @@ EXAMPLES:
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    match args.subcommand.as_deref() {
+    setup_obs(&args);
+    let result = match args.subcommand.as_deref() {
         Some("exp") => cmd_exp(&args),
         Some("search") => cmd_search(&args),
         Some("train") => cmd_train(&args),
@@ -461,5 +537,9 @@ fn main() -> anyhow::Result<()> {
             eprintln!("unknown command `{other}`\n\n{HELP}");
             std::process::exit(2);
         }
-    }
+    };
+    // write the trace even when the command failed: a trace of the failing
+    // run is exactly what you want for the post-mortem.
+    finish_obs(&args)?;
+    result
 }

@@ -1,0 +1,308 @@
+//! Estimate-vs-ground-truth drift accounting.
+//!
+//! TensorOpt's accuracy claim ("provides accurate estimation of runtime
+//! costs") is only checkable if every place that holds both a cost-model
+//! *estimate* and a simulated *ground truth* for the same strategy
+//! reports the pair. [`DriftTracker`] collects those pairs as
+//! [`DriftSample`]s — `sched/cache.rs` records one per profiled plan
+//! (frontier `est_time` vs `sim::simulate` time, and estimated vs
+//! simulated peak memory) — and [`DriftTracker::summarize`] groups them
+//! per (model, batch, parallelism, cluster fingerprint, metric) into the
+//! error table behind `exp obs`.
+//!
+//! Recording is always on (it is a push onto a bounded, mutex-guarded
+//! vector on a path that just ran a full simulation); when the span
+//! recorder is enabled each sample is additionally emitted as a
+//! `drift.sample` event in the trace stream.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::recorder::Attr;
+use crate::util::codec::{f64_from_hex, f64_to_hex, Json};
+
+/// Keep at most this many samples (drop silently past it: long soak runs
+/// should not turn the tracker into a leak; the cap is far above any
+/// test/exp workload).
+const MAX_SAMPLES: usize = 1 << 20;
+
+/// One (estimate, ground-truth) pair for a planned strategy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftSample {
+    /// Model name the plan was for.
+    pub model: String,
+    /// Global batch size.
+    pub batch: i64,
+    /// Device count the strategy runs on.
+    pub parallelism: u32,
+    /// Cluster fingerprint scope; for belief-split caches this is the
+    /// `"assumed_fp>real_fp"` prefix, tying the sample to exactly the
+    /// (belief, reality) pair that produced it.
+    pub cluster_fp: String,
+    /// What was estimated: `iter_time` (seconds) or `peak_mem` (bytes).
+    pub metric: String,
+    /// The planner/cost-model estimate.
+    pub est: f64,
+    /// The simulated ground truth.
+    pub actual: f64,
+}
+
+impl DriftSample {
+    /// Signed relative error `(actual - est) / actual`; positive means
+    /// the model under-estimated. `None` when `actual` is zero or either
+    /// side is non-finite.
+    pub fn rel_err(&self) -> Option<f64> {
+        if self.actual == 0.0 || !self.actual.is_finite() || !self.est.is_finite() {
+            None
+        } else {
+            Some((self.actual - self.est) / self.actual)
+        }
+    }
+
+    /// Serialize (`est`/`actual` as IEEE-754 hex bit patterns).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("model".into(), Json::Str(self.model.clone())),
+            ("batch".into(), Json::Num(self.batch as f64)),
+            ("parallelism".into(), Json::Num(f64::from(self.parallelism))),
+            ("cluster_fp".into(), Json::Str(self.cluster_fp.clone())),
+            ("metric".into(), Json::Str(self.metric.clone())),
+            ("est".into(), Json::Str(f64_to_hex(self.est))),
+            ("actual".into(), Json::Str(f64_to_hex(self.actual))),
+        ])
+    }
+
+    /// Strictly deserialize [`DriftSample::to_json`].
+    pub fn from_json(j: &Json) -> Result<DriftSample, String> {
+        let s = |key: &str| -> Result<String, String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("drift sample field `{key}` must be a string"))
+        };
+        let hex = |key: &str| -> Result<f64, String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .and_then(f64_from_hex)
+                .ok_or_else(|| format!("drift sample field `{key}` must be an f64 hex string"))
+        };
+        let batch = j
+            .get("batch")
+            .and_then(Json::as_f64)
+            .filter(|b| b.fract() == 0.0)
+            .ok_or("drift sample field `batch` must be an integer")? as i64;
+        let parallelism = j
+            .get("parallelism")
+            .and_then(Json::as_u64)
+            .filter(|p| *p <= u64::from(u32::MAX))
+            .ok_or("drift sample field `parallelism` must be a u32")? as u32;
+        Ok(DriftSample {
+            model: s("model")?,
+            batch,
+            parallelism,
+            cluster_fp: s("cluster_fp")?,
+            metric: s("metric")?,
+            est: hex("est")?,
+            actual: hex("actual")?,
+        })
+    }
+}
+
+/// Aggregated drift for one (model, batch, parallelism, cluster_fp,
+/// metric) group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftGroup {
+    /// Model name.
+    pub model: String,
+    /// Global batch size.
+    pub batch: i64,
+    /// Device count.
+    pub parallelism: u32,
+    /// Cluster fingerprint scope.
+    pub cluster_fp: String,
+    /// Which estimate (`iter_time` / `peak_mem`).
+    pub metric: String,
+    /// Number of samples in the group.
+    pub n: usize,
+    /// Mean signed relative error (positive = under-estimated).
+    pub mean_rel_err: f64,
+    /// Mean absolute relative error.
+    pub mean_abs_rel_err: f64,
+    /// Worst absolute relative error.
+    pub max_abs_rel_err: f64,
+    /// Samples where the estimate was below ground truth.
+    pub underestimates: usize,
+}
+
+/// Thread-safe drift sample collector.
+#[derive(Debug, Default)]
+pub struct DriftTracker {
+    samples: Mutex<Vec<DriftSample>>,
+}
+
+impl DriftTracker {
+    /// New empty tracker.
+    pub fn new() -> Self {
+        DriftTracker::default()
+    }
+
+    /// Record one sample (dropped silently past the [`MAX_SAMPLES`] cap).
+    /// Also emitted as a `drift.sample` trace event when the recorder is
+    /// enabled.
+    pub fn record(&self, s: DriftSample) {
+        if super::enabled() {
+            super::event(
+                "drift.sample",
+                &[
+                    ("model", Attr::Str(s.model.clone())),
+                    ("batch", Attr::U64(s.batch.max(0) as u64)),
+                    ("parallelism", Attr::U64(u64::from(s.parallelism))),
+                    ("cluster_fp", Attr::Str(s.cluster_fp.clone())),
+                    ("metric", Attr::Str(s.metric.clone())),
+                    ("est", Attr::F64(s.est)),
+                    ("actual", Attr::F64(s.actual)),
+                ],
+            );
+        }
+        let mut v = self.samples.lock().unwrap();
+        if v.len() < MAX_SAMPLES {
+            v.push(s);
+        }
+    }
+
+    /// Number of samples held.
+    pub fn len(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    /// Whether no samples are held.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy of all samples.
+    pub fn samples(&self) -> Vec<DriftSample> {
+        self.samples.lock().unwrap().clone()
+    }
+
+    /// Drop all samples.
+    pub fn clear(&self) {
+        self.samples.lock().unwrap().clear();
+    }
+
+    /// Group samples and aggregate their relative errors. Samples with an
+    /// undefined relative error (zero/non-finite ground truth) are
+    /// counted in `n` but excluded from the error statistics. Groups come
+    /// back sorted by key.
+    pub fn summarize(&self) -> Vec<DriftGroup> {
+        let samples = self.samples.lock().unwrap();
+        let mut groups: BTreeMap<(String, i64, u32, String, String), Vec<&DriftSample>> =
+            BTreeMap::new();
+        for s in samples.iter() {
+            groups
+                .entry((
+                    s.model.clone(),
+                    s.batch,
+                    s.parallelism,
+                    s.cluster_fp.clone(),
+                    s.metric.clone(),
+                ))
+                .or_default()
+                .push(s);
+        }
+        groups
+            .into_iter()
+            .map(|((model, batch, parallelism, cluster_fp, metric), ss)| {
+                let errs: Vec<f64> = ss.iter().filter_map(|s| s.rel_err()).collect();
+                let k = errs.len().max(1) as f64;
+                DriftGroup {
+                    model,
+                    batch,
+                    parallelism,
+                    cluster_fp,
+                    metric,
+                    n: ss.len(),
+                    mean_rel_err: errs.iter().sum::<f64>() / k,
+                    mean_abs_rel_err: errs.iter().map(|e| e.abs()).sum::<f64>() / k,
+                    max_abs_rel_err: errs.iter().fold(0.0, |a, e| a.max(e.abs())),
+                    underestimates: errs.iter().filter(|e| **e > 0.0).count(),
+                }
+            })
+            .collect()
+    }
+}
+
+/// The process-wide drift tracker `sched/cache.rs` and the exp harnesses
+/// record into.
+pub fn global_drift() -> &'static DriftTracker {
+    static GLOBAL: std::sync::OnceLock<DriftTracker> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(DriftTracker::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(parallelism: u32, est: f64, actual: f64) -> DriftSample {
+        DriftSample {
+            model: "tiny".into(),
+            batch: 64,
+            parallelism,
+            cluster_fp: "fp".into(),
+            metric: "iter_time".into(),
+            est,
+            actual,
+        }
+    }
+
+    #[test]
+    fn rel_err_signs_and_degenerates() {
+        assert!(sample(1, 1.0, 2.0).rel_err().unwrap() > 0.0); // underestimate
+        assert!(sample(1, 2.0, 1.0).rel_err().unwrap() < 0.0); // overestimate
+        assert_eq!(sample(1, 1.0, 0.0).rel_err(), None);
+        assert_eq!(sample(1, f64::NAN, 1.0).rel_err(), None);
+    }
+
+    #[test]
+    fn summarize_groups_and_aggregates() {
+        let t = DriftTracker::new();
+        t.record(sample(2, 1.0, 2.0)); // +0.5
+        t.record(sample(2, 3.0, 2.0)); // -0.5
+        t.record(sample(4, 1.0, 4.0)); // +0.75
+        let groups = t.summarize();
+        assert_eq!(groups.len(), 2);
+        let g2 = &groups[0];
+        assert_eq!((g2.parallelism, g2.n, g2.underestimates), (2, 2, 1));
+        assert_eq!(g2.mean_rel_err, 0.0);
+        assert_eq!(g2.mean_abs_rel_err, 0.5);
+        assert_eq!(g2.max_abs_rel_err, 0.5);
+        let g4 = &groups[1];
+        assert_eq!((g4.parallelism, g4.n, g4.underestimates), (4, 1, 1));
+        assert_eq!(g4.mean_rel_err, 0.75);
+    }
+
+    #[test]
+    fn sample_json_roundtrips_bit_exact() {
+        for s in [
+            sample(8, 0.1, 0.3),
+            sample(1, f64::NAN, f64::INFINITY),
+            sample(2, -0.0, 1e-300),
+        ] {
+            let back = DriftSample::from_json(&s.to_json()).unwrap();
+            assert_eq!(back.model, s.model);
+            assert_eq!(back.est.to_bits(), s.est.to_bits());
+            assert_eq!(back.actual.to_bits(), s.actual.to_bits());
+        }
+        assert!(DriftSample::from_json(&Json::Obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn clear_and_len() {
+        let t = DriftTracker::new();
+        assert!(t.is_empty());
+        t.record(sample(1, 1.0, 2.0));
+        assert_eq!(t.len(), 1);
+        t.clear();
+        assert!(t.is_empty());
+    }
+}

@@ -1,0 +1,417 @@
+//! Named counters and fixed-bucket histograms.
+//!
+//! A [`Metrics`] registry is cheap enough to own per subsystem: the
+//! [`crate::plan::Planner`] carries one (superseding the old ad-hoc
+//! `PlannerStats` mutex — `Planner::stats()` is now a compatibility view
+//! over these counters), and a process-wide registry
+//! ([`global_metrics`]) collects scheduler/simulator counters for the
+//! CLI `--metrics` dump.
+//!
+//! Histograms are fixed-bucket: the first observation of a name pins its
+//! bucket bounds ([`LATENCY_BUCKETS_S`] for latencies, [`SIZE_BUCKETS`]
+//! for sizes/counts, or caller-supplied), and later observations with
+//! different bounds keep the original. Snapshots serialize through
+//! [`crate::util::codec`] with `sum`/`min`/`max` as IEEE-754 hex bit
+//! patterns, so empty-histogram sentinels (±Inf) survive exactly.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::codec::{f64_from_hex, f64_to_hex, Json};
+
+/// Default histogram bounds for latencies, in seconds (roughly 1-3-10 per
+/// decade from 100µs to 30s; the final implicit bucket is overflow).
+pub const LATENCY_BUCKETS_S: [f64; 12] =
+    [1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 0.1, 0.3, 1.0, 3.0, 10.0, 30.0];
+
+/// Default histogram bounds for sizes and counts (powers of two up to
+/// 1024; the final implicit bucket is overflow).
+pub const SIZE_BUCKETS: [f64; 11] =
+    [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0];
+
+#[derive(Debug, Clone)]
+struct Histo {
+    bounds: Vec<f64>,
+    counts: Vec<u64>, // bounds.len() + 1: last bucket is overflow
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histo {
+    fn new(bounds: &[f64]) -> Self {
+        Histo {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let idx = self.bounds.iter().position(|b| v <= *b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.n += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+}
+
+/// An immutable copy of one histogram's state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Histogram name.
+    pub name: String,
+    /// Inclusive bucket upper bounds; an implicit overflow bucket follows.
+    pub bounds: Vec<f64>,
+    /// Per-bucket observation counts (`bounds.len() + 1` entries).
+    pub counts: Vec<u64>,
+    /// Total observations.
+    pub n: u64,
+    /// Sum of observed values.
+    pub sum: f64,
+    /// Smallest observed value (`+Inf` when empty).
+    pub min: f64,
+    /// Largest observed value (`-Inf` when empty).
+    pub max: f64,
+}
+
+impl HistogramSnapshot {
+    /// Mean of observed values (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Estimated quantile `q` in [0, 1]: the upper bound of the bucket
+    /// containing the q-th observation (`max` for the overflow bucket,
+    /// 0.0 when empty). Coarse by construction — good enough for p50/p95
+    /// dashboards, not for asserting exact values.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return self.bounds.get(i).copied().unwrap_or(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Serialize (floats that must survive non-finite values — `sum`,
+    /// `min`, `max` — go as IEEE-754 hex bit patterns).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("bounds".into(), Json::Arr(self.bounds.iter().map(|b| Json::Num(*b)).collect())),
+            (
+                "counts".into(),
+                Json::Arr(self.counts.iter().map(|c| Json::Num(*c as f64)).collect()),
+            ),
+            ("n".into(), Json::Num(self.n as f64)),
+            ("sum".into(), Json::Str(f64_to_hex(self.sum))),
+            ("min".into(), Json::Str(f64_to_hex(self.min))),
+            ("max".into(), Json::Str(f64_to_hex(self.max))),
+        ])
+    }
+
+    /// Strictly deserialize [`HistogramSnapshot::to_json`].
+    pub fn from_json(j: &Json) -> Result<HistogramSnapshot, String> {
+        let hex = |key: &str| -> Result<f64, String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .and_then(f64_from_hex)
+                .ok_or_else(|| format!("histogram field `{key}` must be an f64 hex string"))
+        };
+        let nums = |key: &str| -> Result<Vec<f64>, String> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect::<Vec<_>>())
+                .ok_or_else(|| format!("histogram field `{key}` must be an array"))
+        };
+        let bounds = nums("bounds")?;
+        let counts: Vec<u64> = nums("counts")?.iter().map(|c| *c as u64).collect();
+        if counts.len() != bounds.len() + 1 {
+            return Err("histogram counts must have bounds.len() + 1 entries".into());
+        }
+        let out = HistogramSnapshot {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("histogram missing `name`")?
+                .to_string(),
+            bounds,
+            counts,
+            n: j.get("n").and_then(Json::as_u64).ok_or("histogram missing `n`")?,
+            sum: hex("sum")?,
+            min: hex("min")?,
+            max: hex("max")?,
+        };
+        if out.counts.iter().sum::<u64>() != out.n {
+            return Err("histogram bucket counts do not sum to n".into());
+        }
+        Ok(out)
+    }
+}
+
+/// An immutable copy of a whole registry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Counter name/value pairs, sorted by name.
+    pub counters: Vec<(String, u64)>,
+    /// Histogram snapshots, sorted by name.
+    pub histograms: Vec<HistogramSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Serialize the snapshot.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            (
+                "counters".into(),
+                Json::Obj(
+                    self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect(),
+                ),
+            ),
+            (
+                "histograms".into(),
+                Json::Arr(self.histograms.iter().map(HistogramSnapshot::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Strictly deserialize [`MetricsSnapshot::to_json`].
+    pub fn from_json(j: &Json) -> Result<MetricsSnapshot, String> {
+        let Some(Json::Obj(ckv)) = j.get("counters") else {
+            return Err("metrics snapshot missing `counters` object".into());
+        };
+        let counters = ckv
+            .iter()
+            .map(|(k, v)| {
+                v.as_u64()
+                    .map(|v| (k.clone(), v))
+                    .ok_or_else(|| format!("counter `{k}` must be a non-negative integer"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let histograms = j
+            .get("histograms")
+            .and_then(Json::as_arr)
+            .ok_or("metrics snapshot missing `histograms` array")?
+            .iter()
+            .map(HistogramSnapshot::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(MetricsSnapshot { counters, histograms })
+    }
+
+    /// Human-readable dump (one counter or histogram summary per line).
+    pub fn render(&self) -> String {
+        use crate::util::human_secs;
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k:<40} {v}\n"));
+        }
+        for h in &self.histograms {
+            let is_latency = h.name.contains("latency");
+            let show = |v: f64| {
+                if is_latency {
+                    human_secs(v)
+                } else {
+                    format!("{v:.1}")
+                }
+            };
+            out.push_str(&format!(
+                "{:<40} n={} mean={} p50={} p95={} max={}\n",
+                h.name,
+                h.n,
+                show(h.mean()),
+                show(h.quantile(0.5)),
+                show(h.quantile(0.95)),
+                show(if h.n == 0 { 0.0 } else { h.max }),
+            ));
+        }
+        if out.is_empty() {
+            out.push_str("(no metrics recorded)\n");
+        }
+        out
+    }
+}
+
+/// A registry of named counters and fixed-bucket histograms.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    histos: Mutex<BTreeMap<String, Histo>>,
+}
+
+impl Metrics {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Add 1 to a counter (creating it at 0), returning the new value.
+    pub fn inc(&self, name: &str) -> u64 {
+        self.add(name, 1)
+    }
+
+    /// Add `v` to a counter (creating it at 0), returning the new value.
+    pub fn add(&self, name: &str, v: u64) -> u64 {
+        let mut c = self.counters.lock().unwrap();
+        let e = c.entry(name.to_string()).or_insert(0);
+        *e += v;
+        *e
+    }
+
+    /// Current counter value (0 if never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Observe a latency in seconds ([`LATENCY_BUCKETS_S`] bounds).
+    pub fn observe_latency(&self, name: &str, secs: f64) {
+        self.observe_with(name, &LATENCY_BUCKETS_S, secs);
+    }
+
+    /// Observe a size/count ([`SIZE_BUCKETS`] bounds).
+    pub fn observe_size(&self, name: &str, v: f64) {
+        self.observe_with(name, &SIZE_BUCKETS, v);
+    }
+
+    /// Observe into a histogram with explicit bucket bounds; the first
+    /// observation of `name` pins its bounds.
+    pub fn observe_with(&self, name: &str, bounds: &[f64], v: f64) {
+        let mut h = self.histos.lock().unwrap();
+        h.entry(name.to_string()).or_insert_with(|| Histo::new(bounds)).observe(v);
+    }
+
+    /// Snapshot of one histogram, if it exists.
+    pub fn histogram(&self, name: &str) -> Option<HistogramSnapshot> {
+        self.histos.lock().unwrap().get(name).map(|h| HistogramSnapshot {
+            name: name.to_string(),
+            bounds: h.bounds.clone(),
+            counts: h.counts.clone(),
+            n: h.n,
+            sum: h.sum,
+            min: h.min,
+            max: h.max,
+        })
+    }
+
+    /// Immutable copy of the whole registry.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self.counters.lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)).collect();
+        let histograms = self
+            .histos
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| HistogramSnapshot {
+                name: k.clone(),
+                bounds: h.bounds.clone(),
+                counts: h.counts.clone(),
+                n: h.n,
+                sum: h.sum,
+                min: h.min,
+                max: h.max,
+            })
+            .collect();
+        MetricsSnapshot { counters, histograms }
+    }
+}
+
+/// The process-wide registry behind the CLI `--metrics` dump; scheduler
+/// and simulator counters land here (the planner keeps a per-instance
+/// registry so its exact-count tests stay isolated).
+pub fn global_metrics() -> &'static Metrics {
+    static GLOBAL: std::sync::OnceLock<Metrics> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(Metrics::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        assert_eq!(m.counter("a"), 0);
+        assert_eq!(m.inc("a"), 1);
+        assert_eq!(m.add("a", 4), 5);
+        assert_eq!(m.counter("a"), 5);
+        assert_eq!(m.counter("b"), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let m = Metrics::new();
+        for v in [0.5, 1.0, 2.0, 4.0, 100.0, 5000.0] {
+            m.observe_with("h", &[1.0, 10.0, 1000.0], v);
+        }
+        let h = m.histogram("h").unwrap();
+        assert_eq!(h.counts, vec![2, 2, 1, 1]); // <=1, <=10, <=1000, overflow
+        assert_eq!(h.n, 6);
+        assert_eq!(h.min, 0.5);
+        assert_eq!(h.max, 5000.0);
+        assert!((h.mean() - 5107.5 / 6.0).abs() < 1e-9);
+        assert_eq!(h.quantile(0.0), 1.0);
+        assert_eq!(h.quantile(0.5), 10.0);
+        assert_eq!(h.quantile(1.0), 5000.0); // overflow bucket -> max
+    }
+
+    #[test]
+    fn first_observation_pins_bounds() {
+        let m = Metrics::new();
+        m.observe_with("h", &[1.0], 0.5);
+        m.observe_with("h", &[99.0], 0.5); // different bounds: ignored
+        assert_eq!(m.histogram("h").unwrap().bounds, vec![1.0]);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_including_empty_histogram_sentinels() {
+        let m = Metrics::new();
+        m.inc("requests");
+        m.add("errors", 2);
+        m.observe_latency("plan.latency.cold", 0.02);
+        // A histogram with zero observations keeps ±Inf min/max sentinels,
+        // which must survive the hex-encoded round trip.
+        m.observe_with("empty", &[1.0], 0.5);
+        let mut snap = m.snapshot();
+        let idx = snap.histograms.iter().position(|h| h.name == "empty").unwrap();
+        snap.histograms[idx] = HistogramSnapshot {
+            name: "empty".into(),
+            bounds: vec![1.0],
+            counts: vec![0, 0],
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        };
+        let back = MetricsSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+        assert!(back.render().contains("requests"));
+    }
+
+    #[test]
+    fn snapshot_parse_rejects_malformed() {
+        let m = Metrics::new();
+        m.inc("a");
+        m.observe_size("s", 3.0);
+        let good = m.snapshot().to_json().render();
+        // Corrupt the bucket counts so they no longer sum to n.
+        let bad = good.replace("\"n\":1", "\"n\":7");
+        let doc = Json::parse(&bad).unwrap();
+        assert!(MetricsSnapshot::from_json(&doc).is_err());
+        assert!(MetricsSnapshot::from_json(&Json::Obj(vec![])).is_err());
+    }
+}

@@ -1,0 +1,54 @@
+//! Observability: structured tracing, metrics, and estimate-vs-reality
+//! drift accounting across the planner/scheduler stack.
+//!
+//! Dependency-free (vendored-style, like [`crate::util::codec`] — no
+//! serde/tracing crates), three pillars:
+//!
+//! 1. **Spans and events** ([`recorder`]): a thread-safe [`Recorder`]
+//!    with hierarchical RAII spans. The planner request path, the `ft`
+//!    elimination loop, the scheduler's discrete-event timeline, and
+//!    `sim` runs all instrument through the process-wide recorder, which
+//!    is off by default — the disabled fast path is one relaxed atomic
+//!    load ([`enabled`]), pinned at noise level by `bench_obs`. Traces
+//!    export as JSON-lines and chrome://tracing via the CLI's global
+//!    `--trace` / `--trace-chrome` flags.
+//! 2. **Metrics** ([`metrics`]): named counters and fixed-bucket
+//!    histograms. The [`crate::plan::Planner`] owns a registry that
+//!    supersedes the old `PlannerStats` mutex (`Planner::stats()` remains
+//!    as a compatibility view); scheduler/simulator counters land in
+//!    [`global_metrics`] and dump via the CLI `--metrics` flag.
+//! 3. **Drift** ([`drift`]): every (estimate, simulated) pair flowing
+//!    through `sched/cache.rs` is recorded as a [`DriftSample`] and
+//!    summarized per (model, batch, parallelism, cluster fingerprint) —
+//!    the table behind `exp obs`.
+//!
+//! [`provenance`] (strategy choice traces, formerly `frontier/trace.rs`)
+//! also lives here; the frontier layer re-exports it unchanged.
+
+pub mod drift;
+pub mod metrics;
+pub mod provenance;
+pub mod recorder;
+
+pub use drift::{global_drift, DriftGroup, DriftSample, DriftTracker};
+pub use metrics::{global_metrics, HistogramSnapshot, Metrics, MetricsSnapshot};
+pub use recorder::{
+    disable, enable, enabled, event, global, parse_jsonl, render_chrome, render_jsonl, span, Attr,
+    EventRecord, Record, Recorder, SpanGuard, SpanRecord,
+};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static QUIET: AtomicBool = AtomicBool::new(false);
+
+/// Whether human-oriented progress chatter (loss lines, provisioning
+/// status) is suppressed. Structured events are unaffected — they are
+/// gated by [`enabled`] instead. Set from the CLI `--quiet` flag.
+pub fn quiet() -> bool {
+    QUIET.load(Ordering::Relaxed)
+}
+
+/// Suppress (or restore) human-oriented progress chatter.
+pub fn set_quiet(q: bool) {
+    QUIET.store(q, Ordering::Relaxed);
+}

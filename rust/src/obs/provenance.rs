@@ -1,4 +1,5 @@
-//! Strategy provenance traces.
+//! Strategy provenance traces (moved here from `frontier/trace.rs` when
+//! the observability layer absorbed all tracing concerns).
 //!
 //! Every frontier tuple carries an `Arc<Trace>` recording the choices that
 //! produced its costs: which configuration each operator picked and which
@@ -6,9 +7,17 @@
 //! eliminations by back-pointers (§3.2); a persistent trace tree is the
 //! same information in a form that survives arbitrary interleavings of
 //! product/union/reduce and is safe to share across threads.
+//!
+//! The frontier layer re-exports this module as `frontier::trace`, so
+//! existing call sites (`frontier::Trace`, `frontier::trace::unroll`) are
+//! unchanged. When the global recorder is enabled, resolved choices can be
+//! emitted as structured events in the same JSONL schema as planner spans
+//! via [`emit_choice_events`].
 
 use std::collections::HashMap;
 use std::sync::Arc;
+
+use super::recorder::Attr;
 
 /// A provenance node.
 #[derive(Debug)]
@@ -16,9 +25,19 @@ pub enum Trace {
     /// No choices (identity element of `pair`).
     Empty,
     /// Operator `op` chose configuration index `cfg` (into its `S_i`).
-    OpChoice { op: u32, cfg: u32 },
+    OpChoice {
+        /// Operator id.
+        op: u32,
+        /// Chosen configuration index.
+        cfg: u32,
+    },
     /// Edge `edge` chose reuse/re-schedule option `opt`.
-    EdgeChoice { edge: u32, opt: u8 },
+    EdgeChoice {
+        /// Edge id.
+        edge: u32,
+        /// Chosen reuse option.
+        opt: u8,
+    },
     /// Combination of two sub-traces (from a frontier product).
     Pair(Arc<Trace>, Arc<Trace>),
 }
@@ -115,6 +134,36 @@ pub fn unroll(trace: &Arc<Trace>) -> Choices {
         }
     }
     out
+}
+
+/// Emit one `frontier.tuple` event per resolved provenance trace through
+/// the global recorder (no-op while recording is disabled), so frontier
+/// evolution lands in the same JSONL stream as planner spans. `attrs` are
+/// caller context (objective values, tuple index); the choice maps are
+/// rendered compactly as `"op:cfg,op:cfg"` / `"edge:opt,..."` strings.
+pub fn emit_choice_events(trace: &Arc<Trace>, attrs: &[(&str, Attr)]) {
+    if !super::enabled() {
+        return;
+    }
+    let ch = unroll(trace);
+    let mut ops: Vec<_> = ch.op_cfg.iter().collect();
+    ops.sort();
+    let mut edges: Vec<_> = ch.edge_opt.iter().collect();
+    edges.sort();
+    let fmt_ops = ops
+        .iter()
+        .map(|(k, v)| format!("{k}:{v}"))
+        .collect::<Vec<_>>()
+        .join(",");
+    let fmt_edges = edges
+        .iter()
+        .map(|(k, v)| format!("{k}:{v}"))
+        .collect::<Vec<_>>()
+        .join(",");
+    let mut all: Vec<(&str, Attr)> = attrs.to_vec();
+    all.push(("op_cfg", Attr::Str(fmt_ops)));
+    all.push(("edge_opt", Attr::Str(fmt_edges)));
+    super::event("frontier.tuple", &all);
 }
 
 #[cfg(test)]

@@ -1,0 +1,744 @@
+//! Structured span/event recorder.
+//!
+//! A [`Recorder`] collects [`Record`]s: hierarchical *spans* (a named,
+//! timed region of work opened by an RAII [`SpanGuard`]) and point-in-time
+//! *events*. Spans nest per thread: the guard pushes its id onto a
+//! thread-local stack on creation and pops it on drop, so a span's parent
+//! is whatever span was open on the same thread when it started (spans
+//! that cross threads record no parent).
+//!
+//! The process-wide recorder behind [`span`]/[`event`] is disabled by
+//! default; the fast path of every instrumentation site is a single
+//! relaxed atomic load ([`enabled`]), which `bench_obs` pins at noise
+//! level. Records serialize to JSON-lines (one [`Record`] per line) and to
+//! the chrome://tracing event format via [`crate::util::codec`]; parsing
+//! is strict and rejects malformed files with the 1-based line index.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::codec::{f64_from_hex, f64_to_hex, Json};
+
+/// A structured attribute value attached to a span or event.
+///
+/// Serialization: `U64` and finite `F64` render as JSON numbers (the codec
+/// round-trips finite `f64` exactly); non-finite `F64` renders as the
+/// string `"f64:<16 hex digits>"` carrying the IEEE-754 bit pattern, so
+/// NaN/±Inf survive bit-exactly. On parse, whole numbers in `u64` range
+/// come back as `U64` — a whole-valued `F64` attribute normalizes to `U64`
+/// across a round trip, which every consumer treats identically.
+#[derive(Debug, Clone)]
+pub enum Attr {
+    /// An unsigned integer (exact up to 2^53 across serialization).
+    U64(u64),
+    /// A float; non-finite values serialize as hex bit patterns.
+    F64(f64),
+    /// A string. Strings of the reserved form `f64:<16 hex digits>` are
+    /// not representable (they would parse back as `F64`).
+    Str(String),
+}
+
+impl PartialEq for Attr {
+    /// Bit-exact comparison: `F64` compares by IEEE-754 bit pattern so
+    /// NaN == NaN and 0.0 != -0.0, matching serialization semantics.
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Attr::U64(a), Attr::U64(b)) => a == b,
+            (Attr::F64(a), Attr::F64(b)) => a.to_bits() == b.to_bits(),
+            (Attr::Str(a), Attr::Str(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+
+impl Attr {
+    fn to_json(&self) -> Json {
+        match self {
+            Attr::U64(v) => Json::Num(*v as f64),
+            Attr::F64(v) if v.is_finite() => Json::Num(*v),
+            Attr::F64(v) => Json::Str(format!("f64:{}", f64_to_hex(*v))),
+            Attr::Str(s) => Json::Str(s.clone()),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Attr, String> {
+        match j {
+            Json::Num(_) => Ok(match j.as_u64() {
+                Some(v) => Attr::U64(v),
+                None => Attr::F64(j.as_f64().unwrap()),
+            }),
+            Json::Str(s) => match s.strip_prefix("f64:") {
+                Some(hex) if hex.len() == 16 => f64_from_hex(hex)
+                    .map(Attr::F64)
+                    .ok_or_else(|| format!("bad f64 hex attr `{s}`")),
+                _ => Ok(Attr::Str(s.clone())),
+            },
+            _ => Err("attr must be a number or string".into()),
+        }
+    }
+}
+
+/// A closed span: a named region of work with start time, duration, and
+/// (same-thread) parent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    /// Process-unique span id (never 0).
+    pub id: u64,
+    /// Enclosing span on the same thread, if any.
+    pub parent: Option<u64>,
+    /// Span name, e.g. `plan.leaf_build`.
+    pub name: String,
+    /// Start time in microseconds since the recorder's epoch.
+    pub t_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+    /// Recording thread's ordinal (stable within a process run).
+    pub thread: u64,
+    /// Structured attributes, in insertion order.
+    pub attrs: Vec<(String, Attr)>,
+}
+
+/// A point-in-time event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventRecord {
+    /// Span open on the emitting thread when the event fired, if any.
+    pub parent: Option<u64>,
+    /// Event name, e.g. `ft.elim_step`.
+    pub name: String,
+    /// Emission time in microseconds since the recorder's epoch.
+    pub t_us: u64,
+    /// Recording thread's ordinal.
+    pub thread: u64,
+    /// Structured attributes, in insertion order.
+    pub attrs: Vec<(String, Attr)>,
+}
+
+/// One trace record: a span or an event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    /// A closed span.
+    Span(SpanRecord),
+    /// A point event.
+    Event(EventRecord),
+}
+
+fn attrs_to_json(attrs: &[(String, Attr)]) -> Json {
+    Json::Obj(attrs.iter().map(|(k, v)| (k.clone(), v.to_json())).collect())
+}
+
+fn attrs_from_json(j: &Json) -> Result<Vec<(String, Attr)>, String> {
+    match j {
+        Json::Obj(kv) => kv
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), Attr::from_json(v)?)))
+            .collect(),
+        _ => Err("attrs must be an object".into()),
+    }
+}
+
+fn opt_id_to_json(id: Option<u64>) -> Json {
+    match id {
+        Some(v) => Json::Num(v as f64),
+        None => Json::Null,
+    }
+}
+
+fn field<'a>(kv: &'a [(String, Json)], key: &str) -> Result<&'a Json, String> {
+    kv.iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v)
+        .ok_or_else(|| format!("missing field `{key}`"))
+}
+
+fn field_u64(kv: &[(String, Json)], key: &str) -> Result<u64, String> {
+    field(kv, key)?
+        .as_u64()
+        .ok_or_else(|| format!("field `{key}` must be a non-negative integer"))
+}
+
+fn field_str(kv: &[(String, Json)], key: &str) -> Result<String, String> {
+    field(kv, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| format!("field `{key}` must be a string"))
+}
+
+fn field_opt_id(kv: &[(String, Json)], key: &str) -> Result<Option<u64>, String> {
+    match field(kv, key)? {
+        Json::Null => Ok(None),
+        j => j
+            .as_u64()
+            .map(Some)
+            .ok_or_else(|| format!("field `{key}` must be null or an integer")),
+    }
+}
+
+fn reject_unknown(kv: &[(String, Json)], allowed: &[&str]) -> Result<(), String> {
+    for (k, _) in kv {
+        if !allowed.contains(&k.as_str()) {
+            return Err(format!("unknown field `{k}`"));
+        }
+    }
+    Ok(())
+}
+
+impl Record {
+    /// The record's name.
+    pub fn name(&self) -> &str {
+        match self {
+            Record::Span(s) => &s.name,
+            Record::Event(e) => &e.name,
+        }
+    }
+
+    /// The record's attributes.
+    pub fn attrs(&self) -> &[(String, Attr)] {
+        match self {
+            Record::Span(s) => &s.attrs,
+            Record::Event(e) => &e.attrs,
+        }
+    }
+
+    /// Attribute lookup (first match).
+    pub fn attr(&self, key: &str) -> Option<&Attr> {
+        self.attrs().iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// Serialize to the single-line JSON object used by the JSONL export.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Record::Span(s) => Json::Obj(vec![
+                ("type".into(), Json::Str("span".into())),
+                ("id".into(), Json::Num(s.id as f64)),
+                ("parent".into(), opt_id_to_json(s.parent)),
+                ("name".into(), Json::Str(s.name.clone())),
+                ("t_us".into(), Json::Num(s.t_us as f64)),
+                ("dur_us".into(), Json::Num(s.dur_us as f64)),
+                ("thread".into(), Json::Num(s.thread as f64)),
+                ("attrs".into(), attrs_to_json(&s.attrs)),
+            ]),
+            Record::Event(e) => Json::Obj(vec![
+                ("type".into(), Json::Str("event".into())),
+                ("parent".into(), opt_id_to_json(e.parent)),
+                ("name".into(), Json::Str(e.name.clone())),
+                ("t_us".into(), Json::Num(e.t_us as f64)),
+                ("thread".into(), Json::Num(e.thread as f64)),
+                ("attrs".into(), attrs_to_json(&e.attrs)),
+            ]),
+        }
+    }
+
+    /// Strictly deserialize a record: unknown fields, missing fields, and
+    /// type mismatches are all errors (a trace file is evidence — a codec
+    /// that guesses would hide corruption).
+    pub fn from_json(j: &Json) -> Result<Record, String> {
+        let Json::Obj(kv) = j else {
+            return Err("record must be an object".into());
+        };
+        let name = field_str(kv, "name")?;
+        if name.is_empty() {
+            return Err("field `name` must be non-empty".into());
+        }
+        match field_str(kv, "type")?.as_str() {
+            "span" => {
+                reject_unknown(
+                    kv,
+                    &["type", "id", "parent", "name", "t_us", "dur_us", "thread", "attrs"],
+                )?;
+                let id = field_u64(kv, "id")?;
+                if id == 0 {
+                    return Err("span id must be non-zero".into());
+                }
+                Ok(Record::Span(SpanRecord {
+                    id,
+                    parent: field_opt_id(kv, "parent")?,
+                    name,
+                    t_us: field_u64(kv, "t_us")?,
+                    dur_us: field_u64(kv, "dur_us")?,
+                    thread: field_u64(kv, "thread")?,
+                    attrs: attrs_from_json(field(kv, "attrs")?)?,
+                }))
+            }
+            "event" => {
+                reject_unknown(kv, &["type", "parent", "name", "t_us", "thread", "attrs"])?;
+                Ok(Record::Event(EventRecord {
+                    parent: field_opt_id(kv, "parent")?,
+                    name,
+                    t_us: field_u64(kv, "t_us")?,
+                    thread: field_u64(kv, "thread")?,
+                    attrs: attrs_from_json(field(kv, "attrs")?)?,
+                }))
+            }
+            t => Err(format!("unknown record type `{t}`")),
+        }
+    }
+}
+
+/// Render records as JSON-lines (one record per line, trailing newline).
+pub fn render_jsonl(records: &[Record]) -> String {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&r.to_json().render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Strictly parse a JSONL trace file: every non-blank line must be a valid
+/// [`Record`]; the first malformed line fails the whole file with its
+/// 1-based index.
+pub fn parse_jsonl(text: &str) -> Result<Vec<Record>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        out.push(Record::from_json(&j).map_err(|e| format!("line {}: {e}", i + 1))?);
+    }
+    Ok(out)
+}
+
+/// Render records in chrome://tracing "trace event" format: spans become
+/// complete (`"ph":"X"`) events and point events become instants
+/// (`"ph":"i"`). Load the file via `chrome://tracing` or
+/// <https://ui.perfetto.dev>. Non-finite float attributes degrade to
+/// `null` here (the viewer format has no hex escape); the JSONL export is
+/// the lossless one.
+pub fn render_chrome(records: &[Record]) -> String {
+    let mut events = Vec::new();
+    for r in records {
+        let (common, extra): (&[(String, Attr)], Vec<(String, Json)>) = match r {
+            Record::Span(s) => (
+                &s.attrs,
+                vec![
+                    ("name".into(), Json::Str(s.name.clone())),
+                    ("ph".into(), Json::Str("X".into())),
+                    ("ts".into(), Json::Num(s.t_us as f64)),
+                    ("dur".into(), Json::Num(s.dur_us as f64)),
+                    ("pid".into(), Json::Num(1.0)),
+                    ("tid".into(), Json::Num(s.thread as f64)),
+                ],
+            ),
+            Record::Event(e) => (
+                &e.attrs,
+                vec![
+                    ("name".into(), Json::Str(e.name.clone())),
+                    ("ph".into(), Json::Str("i".into())),
+                    ("ts".into(), Json::Num(e.t_us as f64)),
+                    ("pid".into(), Json::Num(1.0)),
+                    ("tid".into(), Json::Num(e.thread as f64)),
+                    ("s".into(), Json::Str("t".into())),
+                ],
+            ),
+        };
+        let mut obj = extra;
+        let args = common
+            .iter()
+            .map(|(k, v)| {
+                let j = match v {
+                    Attr::F64(x) if !x.is_finite() => Json::Null,
+                    other => other.to_json(),
+                };
+                (k.clone(), j)
+            })
+            .collect();
+        obj.push(("args".into(), Json::Obj(args)));
+        events.push(Json::Obj(obj));
+    }
+    Json::Obj(vec![
+        ("traceEvents".into(), Json::Arr(events)),
+        ("displayTimeUnit".into(), Json::Str("ms".into())),
+    ])
+    .render()
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_THREAD: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static THREAD_ORD: u64 = NEXT_THREAD.fetch_add(1, Ordering::Relaxed);
+    static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+fn thread_ord() -> u64 {
+    THREAD_ORD.with(|v| *v)
+}
+
+/// Whether the process-wide recorder is currently recording. A single
+/// relaxed atomic load: this is the fast path every instrumentation site
+/// pays when tracing is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the process-wide recorder on.
+pub fn enable() {
+    global(); // materialize the recorder (and its epoch) first
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn the process-wide recorder off. Already-open spans still record
+/// when their guards drop; new [`span`]/[`event`] calls become no-ops.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// The process-wide recorder behind [`span`] and [`event`].
+pub fn global() -> &'static Recorder {
+    static GLOBAL: OnceLock<Recorder> = OnceLock::new();
+    GLOBAL.get_or_init(Recorder::new)
+}
+
+/// Open a span on the process-wide recorder; inert (records nothing,
+/// allocates nothing) while [`enabled`] is false.
+pub fn span(name: &str) -> SpanGuard<'static> {
+    if enabled() {
+        global().span(name)
+    } else {
+        SpanGuard::inert()
+    }
+}
+
+/// Emit an event on the process-wide recorder; no-op while [`enabled`] is
+/// false. Call sites that allocate to *build* `attrs` should guard with
+/// [`enabled`] themselves.
+pub fn event(name: &str, attrs: &[(&str, Attr)]) {
+    if enabled() {
+        global().event(name, attrs);
+    }
+}
+
+/// A thread-safe span/event collector.
+///
+/// Instance recorders (used directly in tests) always record; the
+/// process-wide instance is additionally gated by [`enabled`].
+#[derive(Debug)]
+pub struct Recorder {
+    epoch: Instant,
+    next_id: AtomicU64,
+    records: Mutex<Vec<Record>>,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Recorder {
+    /// New empty recorder; its epoch (t=0 for all timestamps) is now.
+    pub fn new() -> Self {
+        Recorder {
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            records: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Open a span: the returned RAII guard records a [`SpanRecord`] when
+    /// dropped. Nesting is tracked per thread.
+    pub fn span(&self, name: &str) -> SpanGuard<'_> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let parent = SPAN_STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            let parent = s.last().copied();
+            s.push(id);
+            parent
+        });
+        SpanGuard {
+            rec: Some(self),
+            id,
+            parent,
+            name: name.to_string(),
+            start_us: self.now_us(),
+            attrs: Vec::new(),
+        }
+    }
+
+    /// Record a point event, parented to the span currently open on this
+    /// thread (if any).
+    pub fn event(&self, name: &str, attrs: &[(&str, Attr)]) {
+        let rec = Record::Event(EventRecord {
+            parent: SPAN_STACK.with(|s| s.borrow().last().copied()),
+            name: name.to_string(),
+            t_us: self.now_us(),
+            thread: thread_ord(),
+            attrs: attrs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+        });
+        self.push(rec);
+    }
+
+    /// Append a finished record directly.
+    pub fn push(&self, r: Record) {
+        self.records.lock().unwrap().push(r);
+    }
+
+    /// Number of records collected so far.
+    pub fn len(&self) -> usize {
+        self.records.lock().unwrap().len()
+    }
+
+    /// Whether no records have been collected.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take all collected records, leaving the recorder empty.
+    pub fn drain(&self) -> Vec<Record> {
+        std::mem::take(&mut *self.records.lock().unwrap())
+    }
+}
+
+/// RAII guard for an open span (see [`Recorder::span`]). Dropping the
+/// guard closes the span and records it; attributes added via the
+/// `attr_*` methods land on the final record. Inert guards (from [`span`]
+/// while disabled) do nothing.
+#[derive(Debug)]
+pub struct SpanGuard<'r> {
+    rec: Option<&'r Recorder>,
+    id: u64,
+    parent: Option<u64>,
+    name: String,
+    start_us: u64,
+    attrs: Vec<(String, Attr)>,
+}
+
+impl SpanGuard<'_> {
+    fn inert() -> SpanGuard<'static> {
+        SpanGuard {
+            rec: None,
+            id: 0,
+            parent: None,
+            name: String::new(),
+            start_us: 0,
+            attrs: Vec::new(),
+        }
+    }
+
+    /// Whether this guard will record a span on drop.
+    pub fn active(&self) -> bool {
+        self.rec.is_some()
+    }
+
+    /// Attach an integer attribute.
+    pub fn attr_u64(&mut self, key: &str, v: u64) {
+        if self.rec.is_some() {
+            self.attrs.push((key.to_string(), Attr::U64(v)));
+        }
+    }
+
+    /// Attach a float attribute.
+    pub fn attr_f64(&mut self, key: &str, v: f64) {
+        if self.rec.is_some() {
+            self.attrs.push((key.to_string(), Attr::F64(v)));
+        }
+    }
+
+    /// Attach a string attribute.
+    pub fn attr_str(&mut self, key: &str, v: &str) {
+        if self.rec.is_some() {
+            self.attrs.push((key.to_string(), Attr::Str(v.to_string())));
+        }
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let Some(rec) = self.rec else {
+            return;
+        };
+        SPAN_STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            // RAII guarantees LIFO per thread; be defensive anyway.
+            if s.last() == Some(&self.id) {
+                s.pop();
+            } else {
+                s.retain(|&x| x != self.id);
+            }
+        });
+        let now = rec.now_us();
+        rec.push(Record::Span(SpanRecord {
+            id: self.id,
+            parent: self.parent,
+            name: std::mem::take(&mut self.name),
+            t_us: self.start_us,
+            dur_us: now.saturating_sub(self.start_us),
+            thread: thread_ord(),
+            attrs: std::mem::take(&mut self.attrs),
+        }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instance_spans_nest_and_record() {
+        let r = Recorder::new();
+        {
+            let mut outer = r.span("outer");
+            outer.attr_u64("n", 3);
+            {
+                let _inner = r.span("inner");
+                r.event("tick", &[("k", Attr::Str("v".into()))]);
+            }
+        }
+        let recs = r.drain();
+        assert_eq!(recs.len(), 3);
+        // Children close (and record) before parents.
+        let Record::Event(e) = &recs[0] else { panic!("event first") };
+        let Record::Span(inner) = &recs[1] else { panic!("inner second") };
+        let Record::Span(outer) = &recs[2] else { panic!("outer last") };
+        assert_eq!(outer.name, "outer");
+        assert_eq!(outer.parent, None);
+        assert_eq!(inner.parent, Some(outer.id));
+        assert_eq!(e.parent, Some(inner.id));
+        assert_eq!(outer.attrs, vec![("n".to_string(), Attr::U64(3))]);
+    }
+
+    #[test]
+    fn jsonl_roundtrip_exact() {
+        let recs = vec![
+            Record::Span(SpanRecord {
+                id: 1,
+                parent: None,
+                name: "a".into(),
+                t_us: 10,
+                dur_us: 5,
+                thread: 1,
+                attrs: vec![
+                    ("x".into(), Attr::U64(7)),
+                    ("y".into(), Attr::F64(0.25)),
+                    ("z".into(), Attr::Str("s".into())),
+                ],
+            }),
+            Record::Event(EventRecord {
+                parent: Some(1),
+                name: "b".into(),
+                t_us: 12,
+                thread: 2,
+                attrs: vec![],
+            }),
+        ];
+        let text = render_jsonl(&recs);
+        assert_eq!(parse_jsonl(&text).unwrap(), recs);
+    }
+
+    #[test]
+    fn nonfinite_attrs_roundtrip_bit_exact() {
+        let weird = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.0, 0.1];
+        let recs: Vec<Record> = weird
+            .iter()
+            .map(|&v| {
+                Record::Event(EventRecord {
+                    parent: None,
+                    name: "v".into(),
+                    t_us: 0,
+                    thread: 1,
+                    attrs: vec![("x".into(), Attr::F64(v))],
+                })
+            })
+            .collect();
+        let back = parse_jsonl(&render_jsonl(&recs)).unwrap();
+        for (r, &v) in back.iter().zip(weird.iter()) {
+            let Some(Attr::F64(got)) = r.attr("x") else {
+                panic!("expected F64 attr, got {:?}", r.attr("x"));
+            };
+            assert_eq!(got.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn whole_valued_floats_normalize_to_u64() {
+        let r = Record::Event(EventRecord {
+            parent: None,
+            name: "v".into(),
+            t_us: 0,
+            thread: 1,
+            attrs: vec![("x".into(), Attr::F64(3.0))],
+        });
+        let back = parse_jsonl(&render_jsonl(&[r])).unwrap();
+        assert_eq!(back[0].attr("x"), Some(&Attr::U64(3)));
+    }
+
+    #[test]
+    fn malformed_lines_rejected_with_index() {
+        let good = r#"{"type":"event","parent":null,"name":"a","t_us":0,"thread":1,"attrs":{}}"#;
+        let cases = [
+            ("not json at all", "line 2"),
+            (r#"{"type":"portal","name":"a"}"#, "line 2"),
+            (r#"{"type":"event","name":"a","t_us":0,"thread":1,"attrs":{}}"#, "line 2"),
+            (
+                r#"{"type":"event","parent":null,"name":"a","t_us":0,"thread":1,"attrs":{},"extra":1}"#,
+                "line 2",
+            ),
+            (
+                r#"{"type":"span","id":0,"parent":null,"name":"a","t_us":0,"dur_us":0,"thread":1,"attrs":{}}"#,
+                "line 2",
+            ),
+            (
+                r#"{"type":"event","parent":null,"name":"","t_us":0,"thread":1,"attrs":{}}"#,
+                "line 2",
+            ),
+            (
+                r#"{"type":"event","parent":null,"name":"a","t_us":-4,"thread":1,"attrs":{}}"#,
+                "line 2",
+            ),
+            (
+                r#"{"type":"event","parent":null,"name":"a","t_us":0,"thread":1,"attrs":{"k":[1]}}"#,
+                "line 2",
+            ),
+        ];
+        for (bad, want) in cases {
+            let text = format!("{good}\n{bad}\n");
+            let err = parse_jsonl(&text).unwrap_err();
+            assert!(err.contains(want), "{bad}: {err}");
+        }
+        // Blank lines are not an error.
+        assert_eq!(parse_jsonl(&format!("{good}\n\n{good}\n")).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_phases() {
+        let r = Recorder::new();
+        {
+            let _s = r.span("work");
+            r.event("mark", &[("bad", Attr::F64(f64::NAN))]);
+        }
+        let text = render_chrome(&r.drain());
+        let doc = Json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        let phases: Vec<_> =
+            events.iter().map(|e| e.get("ph").unwrap().as_str().unwrap()).collect();
+        assert!(phases.contains(&"X") && phases.contains(&"i"));
+        // Non-finite attr degraded to null rather than breaking the file.
+        let inst = events.iter().find(|e| e.get("ph").unwrap().as_str() == Some("i")).unwrap();
+        assert_eq!(inst.get("args").unwrap().get("bad"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn global_span_inert_when_disabled() {
+        // Do not enable the global recorder here: parallel unit tests
+        // share it. Disabled is the default state.
+        if !enabled() {
+            let before = global().len();
+            {
+                let mut g = span("noop");
+                assert!(!g.active());
+                g.attr_u64("k", 1);
+                event("noop", &[("k", Attr::U64(1))]);
+            }
+            assert_eq!(global().len(), before);
+        }
+    }
+}

@@ -35,11 +35,14 @@
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::cluster::Cluster;
 use crate::cost::comm::CommModel;
 use crate::cost::pricing;
 use crate::frontier::Mode;
+use crate::obs;
+use crate::obs::Metrics;
 use crate::ft::eliminate::WorkGraph;
 use crate::ft::ldp::ldp;
 use crate::ft::{build_configs, ElimSchedule, FtOptions, FtResult, SearchSpace, SpaceTables};
@@ -51,8 +54,21 @@ use super::flight::{Obtained, SingleFlight};
 use super::store::{PlanStore, StoredPlan};
 use super::{ConfigFilter, PlanRequest, PlanResponse, Served};
 
+// Per-planner metric names. The counters back the `PlannerStats`
+// compatibility view; the histograms feed the `--metrics` dump.
+const C_SPACE_BUILDS: &str = "plan.space_builds";
+const C_LEAF_BUILDS: &str = "plan.leaf_builds";
+const C_COLD: &str = "plan.cold_searches";
+const C_INCREMENTAL: &str = "plan.incremental_searches";
+const C_MEMO_HITS: &str = "plan.memo_hits";
+const C_FLIGHT_WAITS: &str = "plan.flight_waits";
+const C_STORE_SERVES: &str = "plan.store_serves";
+const C_MEMO_ENTRIES: &str = "plan.memo_entries";
+
 /// Planner counters: what was built vs served warm. Snapshot via
-/// [`Planner::stats`].
+/// [`Planner::stats`], which is a compatibility view over the planner's
+/// [`Metrics`] registry (the richer surface: `Planner::metrics()` also
+/// carries per-outcome plan-latency and frontier-size histograms).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PlannerStats {
     /// `ModelSpace` creations — one per (graph, batch, cluster, mesh-rank,
@@ -177,7 +193,7 @@ pub struct Planner {
     schedules: Mutex<HashMap<TopoKey, Arc<ElimSchedule>>>,
     plans: SingleFlight<PlanRequest, Arc<PlanEntry>>,
     store: Mutex<Option<PlanStore>>,
-    stats: Mutex<PlannerStats>,
+    metrics: Arc<Metrics>,
 }
 
 impl Default for Planner {
@@ -198,7 +214,7 @@ impl Planner {
             schedules: Mutex::new(HashMap::new()),
             plans: SingleFlight::new(),
             store: Mutex::new(None),
-            stats: Mutex::new(PlannerStats::default()),
+            metrics: Arc::new(Metrics::new()),
         }
     }
 
@@ -208,13 +224,27 @@ impl Planner {
         self
     }
 
-    /// Snapshot of the counters.
+    /// Snapshot of the counters (compatibility view over
+    /// [`Planner::metrics`]).
     pub fn stats(&self) -> PlannerStats {
-        *self.stats.lock().unwrap()
+        let c = |name: &str| self.metrics.counter(name) as usize;
+        PlannerStats {
+            space_builds: c(C_SPACE_BUILDS),
+            leaf_builds: c(C_LEAF_BUILDS),
+            cold_searches: c(C_COLD),
+            incremental_searches: c(C_INCREMENTAL),
+            memo_hits: c(C_MEMO_HITS),
+            flight_waits: c(C_FLIGHT_WAITS),
+            store_serves: c(C_STORE_SERVES),
+        }
     }
 
-    fn bump(&self, f: impl FnOnce(&mut PlannerStats)) {
-        f(&mut self.stats.lock().unwrap());
+    /// This planner's metrics registry: the [`PlannerStats`] counters plus
+    /// per-[`Served`]-outcome plan-latency histograms
+    /// (`plan.latency.<outcome>`), frontier-size observations
+    /// (`plan.frontier_points`) and memo occupancy (`plan.memo_entries`).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
     }
 
     // ------------------------------------------------------- registration
@@ -356,11 +386,19 @@ impl Planner {
     ) -> anyhow::Result<PlanResponse> {
         // normalize to the canonical cache key: canonical graph id +
         // clamped parallelism.
+        let t0 = Instant::now();
+        let mut sp = obs::span("plan.request");
         let (canon, graph) = self.resolve_graph(&req.graph_id, req.batch)?;
         let base = self.base_cluster_of(req)?;
         let mut key = req.clone();
         key.graph_id = canon;
         key.parallelism = req.parallelism.clamp(1, base.n_devices() as u32);
+        if sp.active() {
+            sp.attr_str("graph", &key.graph_id);
+            sp.attr_u64("batch", key.batch.max(0) as u64);
+            sp.attr_u64("parallelism", u64::from(key.parallelism));
+            sp.attr_str("mode", super::mode_tag(key.mode));
+        }
 
         let (entry, how) = self
             .plans
@@ -368,17 +406,19 @@ impl Planner {
         let served = match how {
             Obtained::Computed => entry.produced,
             Obtained::Hit => {
-                self.bump(|s| s.memo_hits += 1);
+                self.metrics.inc(C_MEMO_HITS);
                 Served::Memo
             }
             Obtained::Waited => {
-                self.bump(|s| {
-                    s.memo_hits += 1;
-                    s.flight_waits += 1;
-                });
+                self.metrics.inc(C_MEMO_HITS);
+                self.metrics.inc(C_FLIGHT_WAITS);
                 Served::Memo
             }
         };
+        sp.attr_str("served", served.name());
+        self.metrics
+            .observe_latency(&format!("plan.latency.{}", served.name()), t0.elapsed().as_secs_f64());
+        self.metrics.observe_size("plan.frontier_points", entry.result.frontier.len() as f64);
         Ok(PlanResponse { result: entry.result.clone(), served })
     }
 
@@ -399,6 +439,8 @@ impl Planner {
 
         // 3. per-parallelism leaf tables.
         let (leaf, got) = space.leaves.get_or_try_compute(&key.parallelism, || {
+            let mut sp = obs::span("plan.leaf_build");
+            sp.attr_u64("parallelism", u64::from(key.parallelism));
             Ok::<_, anyhow::Error>(Arc::new(LeafTables::build(
                 graph,
                 base,
@@ -408,7 +450,7 @@ impl Planner {
             )))
         })?;
         if got == Obtained::Computed {
-            self.bump(|s| s.leaf_builds += 1);
+            self.metrics.inc(C_LEAF_BUILDS);
         }
 
         // 4. the search: replay the recorded elimination structure when we
@@ -429,6 +471,7 @@ impl Planner {
             SearchSpace::from_parts(graph, &leaf.cluster, opts, Arc::clone(&leaf.tables));
         let mut wg = WorkGraph::init(&sspace, &space.spine);
         let recorded = self.schedules.lock().unwrap().get(&space.topo_key).cloned();
+        let mut sp_search = obs::span("plan.search");
         let produced = match recorded {
             None => {
                 let mut steps = ElimSchedule::new();
@@ -438,7 +481,7 @@ impl Planner {
                     .unwrap()
                     .entry(space.topo_key.clone())
                     .or_insert_with(|| Arc::new(steps));
-                self.bump(|s| s.cold_searches += 1);
+                self.metrics.inc(C_COLD);
                 Served::Cold
             }
             Some(steps) => {
@@ -449,10 +492,12 @@ impl Planner {
                     .get(&(key.parallelism, key.mode))
                     .cloned();
                 wg.replay(&steps, pins.as_deref());
-                self.bump(|s| s.incremental_searches += 1);
+                self.metrics.inc(C_INCREMENTAL);
                 Served::Incremental
             }
         };
+        sp_search.attr_str("kind", produced.name());
+        drop(sp_search);
         let (_chain, node_frontiers, edge_tables, forced, n_heuristic) = wg.into_chain();
         space
             .pins
@@ -460,7 +505,10 @@ impl Planner {
             .unwrap()
             .entry((key.parallelism, key.mode))
             .or_insert_with(|| Arc::new(forced.clone()));
+        let mut sp_ldp = obs::span("plan.ldp");
         let frontier = ldp(&node_frontiers, &edge_tables, mode, eff_threads);
+        sp_ldp.attr_u64("points", frontier.len() as u64);
+        drop(sp_ldp);
         let result = Arc::new(FtResult {
             frontier,
             configs: sspace.tables.configs.clone(),
@@ -477,6 +525,7 @@ impl Planner {
                 store.insert(stored);
             }
         }
+        self.metrics.inc(C_MEMO_ENTRIES);
         Ok(Arc::new(PlanEntry { result, produced }))
     }
 
@@ -493,10 +542,12 @@ impl Planner {
         };
         // re-derive the configuration tables (cheap: enumeration only, no
         // cost model) with the exact search-time enumeration.
+        let mut sp = obs::span("plan.store_serve");
+        sp.attr_u64("parallelism", u64::from(key.parallelism));
         let configs =
             filtered_configs(graph, key.parallelism, key.max_mesh_dims, key.filter);
         let result = stored.to_result(configs, graph.edges.len())?;
-        self.bump(|s| s.store_serves += 1);
+        self.metrics.inc(C_STORE_SERVES);
         Ok(Some(Arc::new(PlanEntry { result: Arc::new(result), produced: Served::Store })))
     }
 
@@ -512,6 +563,8 @@ impl Planner {
         if let Some(s) = map.get(&skey) {
             return s.clone();
         }
+        let mut sp = obs::span("plan.space_build");
+        sp.attr_str("graph", &key.graph_id);
         let spine = graph.mark_linear_spine();
         let topo_key = topology_key(graph, &spine);
         let space = Arc::new(ModelSpace {
@@ -522,7 +575,7 @@ impl Planner {
         });
         map.insert(skey, space.clone());
         drop(map);
-        self.bump(|s| s.space_builds += 1);
+        self.metrics.inc(C_SPACE_BUILDS);
         space
     }
 }

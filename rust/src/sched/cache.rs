@@ -14,9 +14,10 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::cluster::Cluster;
-use crate::coordinator::Session;
+use crate::coordinator::{Plan, Session};
+use crate::obs::{self, DriftSample};
 use crate::plan::Planner;
-use crate::sim::{simulate, SimConfig};
+use crate::sim::{simulate, SimConfig, SimResult};
 
 /// One cached (model, parallelism) measurement.
 #[derive(Debug, Clone)]
@@ -197,6 +198,39 @@ impl FrontierCache {
         &self.planner
     }
 
+    /// The `assumed>real` fingerprint pair scoping this cache's entries —
+    /// also the `cluster_fp` stamped on every drift sample it records, so
+    /// reports can group estimate-vs-simulated error per testbed belief.
+    pub fn drift_scope(&self) -> &str {
+        &self.key_prefix
+    }
+
+    /// Record the (estimate, simulated) pair for one freshly profiled
+    /// point into the global drift tracker — the paper's §5.2
+    /// estimate-vs-actual accounting, taken at the exact place both
+    /// numbers already coexist.
+    fn record_drift(&self, model: &str, batch: i64, d: u32, plan: &Plan, sim: &SimResult) {
+        let drift = obs::global_drift();
+        drift.record(DriftSample {
+            model: model.to_string(),
+            batch,
+            parallelism: d,
+            cluster_fp: self.key_prefix.clone(),
+            metric: "iter_time".to_string(),
+            est: plan.est_time,
+            actual: sim.time,
+        });
+        drift.record(DriftSample {
+            model: model.to_string(),
+            batch,
+            parallelism: d,
+            cluster_fp: self.key_prefix.clone(),
+            metric: "peak_mem".to_string(),
+            est: plan.est_memory,
+            actual: sim.memory,
+        });
+    }
+
     /// Snapshot of the hit/miss counters.
     pub fn stats(&self) -> CacheStats {
         *self.stats.lock().unwrap()
@@ -223,6 +257,12 @@ impl FrontierCache {
             }
         }
         if !missing.is_empty() {
+            let mut sp = obs::span("sched.curve");
+            if sp.active() {
+                sp.attr_str("model", model);
+                sp.attr_u64("batch", batch as u64);
+                sp.attr_u64("misses", missing.len() as u64);
+            }
             let g = self
                 .planner
                 .graph(model, batch)
@@ -238,7 +278,9 @@ impl FrontierCache {
                 let d = pp.point.parallelism;
                 let sim_time = pp.plan.as_ref().map(|plan| {
                     let sub = self.cluster.sub_cluster(d as usize);
-                    simulate(&g, &plan.strategy, &sub, &SimConfig::default()).time
+                    let sim = simulate(&g, &plan.strategy, &sub, &SimConfig::default());
+                    self.record_drift(model, batch, d, plan, &sim);
+                    sim.time
                 });
                 computed.push(CurvePoint {
                     parallelism: d,
@@ -378,6 +420,27 @@ mod tests {
         let usd = curve.point(2).unwrap().usd_for_iters(900.0).unwrap();
         assert!((usd - 900.0 * 4.0 * 6.0 / 3600.0).abs() < 1e-9);
         assert!(curve.point(1).unwrap().usd_for_iters(900.0).is_none());
+    }
+
+    #[test]
+    fn curve_records_underestimating_drift_samples() {
+        let c = cache();
+        c.curve("tiny", 192, &[2]);
+        let scope = c.drift_scope().to_string();
+        let samples = crate::obs::global_drift().samples();
+        let mine: Vec<_> = samples
+            .iter()
+            .filter(|s| s.cluster_fp == scope && s.model == "tiny" && s.batch == 192)
+            .collect();
+        assert!(!mine.is_empty(), "miss should record drift samples");
+        assert!(mine.iter().any(|s| s.metric == "iter_time"));
+        assert!(mine.iter().any(|s| s.metric == "peak_mem"));
+        for s in mine {
+            // §5.2: the estimator consistently underestimates both costs,
+            // so every relative error is positive.
+            let err = s.rel_err().unwrap();
+            assert!(err > 0.0, "{}: est {} vs actual {}", s.metric, s.est, s.actual);
+        }
     }
 
     #[test]

@@ -19,6 +19,7 @@
 
 use crate::cluster::Cluster;
 use crate::graph::models;
+use crate::obs::{self, Attr};
 
 use super::allocator::{admission_order, check_invariants, AllocRequest, JobConstraint};
 use super::cache::{FrontierCache, ProfileCurve};
@@ -193,6 +194,12 @@ pub fn run_workload(
     cfg: &SchedConfig,
 ) -> MultiJobReport {
     let n_devices = cluster.n_devices() as u32;
+    let mut sp = obs::span("sched.workload");
+    if sp.active() {
+        sp.attr_str("policy", policy.name());
+        sp.attr_u64("jobs", jobs.len() as u64);
+        sp.attr_u64("devices", n_devices as u64);
+    }
     let elastic = ElasticScheduler { n_devices, rescale: cfg.rescale.clone() };
     let static_share = (n_devices / jobs.len().max(1) as u32).max(1);
 
@@ -298,6 +305,18 @@ pub fn run_workload(
                 j.finish = t;
                 j.final_devices = j.devices;
                 j.devices = 0;
+                if obs::enabled() {
+                    obs::global_metrics().inc("sched.completions");
+                    obs::event(
+                        "sched.job_complete",
+                        &[
+                            ("job", Attr::U64(j.spec.id as u64)),
+                            ("t", Attr::F64(t)),
+                            ("devices", Attr::U64(j.final_devices as u64)),
+                            ("rescales", Attr::U64(j.rescales as u64)),
+                        ],
+                    );
+                }
             }
         }
         if st.iter().all(|j| j.done) {
@@ -404,6 +423,17 @@ pub fn run_workload(
 
         // ---- apply, charging rescale penalties on moved jobs.
         total_rescales += decision.n_rescaled;
+        if obs::enabled() {
+            obs::global_metrics().inc("sched.alloc_rounds");
+            obs::event(
+                "sched.alloc_round",
+                &[
+                    ("t", Attr::F64(t)),
+                    ("active", Attr::U64(active.len() as u64)),
+                    ("rescaled", Attr::U64(decision.n_rescaled as u64)),
+                ],
+            );
+        }
         for (k, &i) in active.iter().enumerate() {
             let old = current[k];
             let new = decision.alloc[k];
@@ -413,6 +443,19 @@ pub fn run_workload(
             st[i].penalty += decision.penalties[k];
             if old != 0 {
                 st[i].rescales += 1;
+                if obs::enabled() {
+                    obs::global_metrics().inc("sched.rescales");
+                    obs::event(
+                        "sched.rescale",
+                        &[
+                            ("job", Attr::U64(st[i].spec.id as u64)),
+                            ("t", Attr::F64(t)),
+                            ("from", Attr::U64(old as u64)),
+                            ("to", Attr::U64(new as u64)),
+                            ("penalty", Attr::F64(decision.penalties[k])),
+                        ],
+                    );
+                }
             }
             st[i].devices = new;
             if new > 0 && st[i].started.is_none() {
@@ -453,6 +496,10 @@ pub fn run_workload(
         0.0
     };
     let total_usd = outcomes.iter().map(|o| o.cost_usd).sum();
+    if sp.active() {
+        sp.attr_f64("makespan", makespan);
+        sp.attr_u64("rescales", total_rescales as u64);
+    }
     MultiJobReport {
         policy,
         outcomes,

@@ -76,6 +76,12 @@ pub fn simulate(
     cfg: &SimConfig,
 ) -> SimResult {
     let d = cluster.n_devices();
+    let mut sp = crate::obs::span("sim.run");
+    if sp.active() {
+        sp.attr_str("model", &g.name);
+        sp.attr_u64("devices", d as u64);
+        crate::obs::global_metrics().inc("sim.runs");
+    }
     let comm = GroundTruthComm::new(cluster.clone());
     let mut rng = XorShift::new(cfg.seed);
     let mut clocks = vec![0.0f64; d];
@@ -157,12 +163,18 @@ pub fn simulate(
         memory += 2.0 * param_shard + act * (1.0 + cfg.temp_mem_frac);
     }
 
-    SimResult {
+    let out = SimResult {
         time: clocks.iter().cloned().fold(0.0, f64::max),
         memory,
         comm_time: comm_total,
         compute_time: compute_total,
+    };
+    if sp.active() {
+        sp.attr_f64("time", out.time);
+        sp.attr_f64("memory", out.memory);
+        sp.attr_f64("comm_time", out.comm_time);
     }
+    out
 }
 
 #[cfg(test)]

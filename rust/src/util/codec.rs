@@ -407,6 +407,32 @@ mod tests {
     }
 
     #[test]
+    fn hex_bits_nonfinite_and_signed_zero() {
+        // The trace/metric codecs lean on the hex channel for exactly the
+        // values JSON numbers cannot carry: every bit pattern must survive.
+        for x in [f64::NAN, -f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.0] {
+            let hex = f64_to_hex(x);
+            assert_eq!(hex.len(), 16, "fixed-width encoding for {x}");
+            assert_eq!(f64_from_hex(&hex).unwrap().to_bits(), x.to_bits(), "{x} via {hex}");
+        }
+        // Signalling-vs-quiet NaN payloads are preserved too.
+        let payload_nan = f64::from_bits(0x7ff0_0000_dead_beef);
+        assert_eq!(
+            f64_from_hex(&f64_to_hex(payload_nan)).unwrap().to_bits(),
+            payload_nan.to_bits()
+        );
+        // -0.0 and +0.0 encode differently even though they compare equal.
+        assert_ne!(f64_to_hex(-0.0), f64_to_hex(0.0));
+    }
+
+    #[test]
+    fn hex_bits_rejects_malformed() {
+        for bad in ["", "0x1p3", "12345678901234567", "g000000000000000", "-1", " 0"] {
+            assert!(f64_from_hex(bad).is_none(), "{bad:?} must not decode");
+        }
+    }
+
+    #[test]
     fn unicode_strings_roundtrip() {
         let v = Json::Str("héllo → 🌍".into());
         assert_eq!(Json::parse(&v.render()).unwrap(), v);

@@ -1,0 +1,190 @@
+//! Integration tests for the observability layer: a traced planner sweep
+//! covering every `Served` variant, the sched timeline events, and the
+//! JSONL/chrome exports of real (not hand-built) traces.
+//!
+//! Tests that enable the process-wide recorder serialize on a lock — the
+//! recorder is process-global and the test harness runs threads in
+//! parallel.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use tensoropt::cluster::Cluster;
+use tensoropt::cost::pricing::Billing;
+use tensoropt::obs::{self, Attr, Record};
+use tensoropt::plan::{PlanRequest, Planner};
+use tensoropt::sched::{
+    run_workload, FrontierCache, JobSpec, Policy, RescaleModel, SchedConfig,
+};
+use tensoropt::util::codec::Json;
+
+/// Serialize tests that toggle the global recorder; recover from a
+/// poisoned lock (a failed test elsewhere must not cascade).
+fn global_recorder_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+fn served_attr(r: &Record) -> Option<&str> {
+    match (r.name(), r.attr("served")) {
+        ("plan.request", Some(Attr::Str(s))) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+#[test]
+fn traced_plan_sweep_covers_every_served_variant() {
+    let _guard = global_recorder_lock();
+    obs::enable();
+    obs::global().drain(); // discard leftovers from other tests
+
+    let cluster = Cluster::with_gpus(4);
+    let dir = std::env::temp_dir().join("tensoropt_obs_it_store");
+    let _ = std::fs::create_dir_all(&dir);
+    let store = dir.join("plans.json");
+    let _ = std::fs::remove_file(&store);
+
+    {
+        let p = Planner::new();
+        p.attach_store(&store).unwrap();
+        let fp = p.register_cluster(&cluster);
+        let req = PlanRequest::new("tiny", 256, &fp, 4);
+        assert_eq!(p.plan(&req).unwrap().served.name(), "cold");
+        assert_eq!(p.plan(&req).unwrap().served.name(), "memo");
+        // Same topology, new billing stamps: the incremental re-bill path.
+        let rebill = req.with_billing(Billing::Spot);
+        assert_eq!(p.plan(&rebill).unwrap().served.name(), "incremental");
+        p.flush_store().unwrap();
+    }
+    {
+        // Fresh planner + attached store = restart: served from the store.
+        let p = Planner::new();
+        p.attach_store(&store).unwrap();
+        let fp = p.register_cluster(&cluster);
+        assert_eq!(
+            p.plan(&PlanRequest::new("tiny", 256, &fp, 4)).unwrap().served.name(),
+            "store"
+        );
+    }
+
+    let records = obs::global().drain();
+    obs::disable();
+    let _ = std::fs::remove_file(&store);
+
+    // Every Served variant appears as a plan.request span's served attr.
+    let served: Vec<&str> = records.iter().filter_map(served_attr).collect();
+    for want in ["cold", "memo", "incremental", "store"] {
+        assert!(served.contains(&want), "no plan.request served={want} in {served:?}");
+    }
+
+    // The cold request carries the per-phase spans, parented under it.
+    let cold_id = records
+        .iter()
+        .find_map(|r| match r {
+            Record::Span(s) if served_attr(r) == Some("cold") => Some(s.id),
+            _ => None,
+        })
+        .unwrap();
+    for phase in ["plan.space_build", "plan.leaf_build", "plan.search", "plan.ldp"] {
+        assert!(
+            records.iter().any(|r| matches!(
+                r,
+                Record::Span(s) if s.name == phase && s.parent == Some(cold_id)
+            )),
+            "phase span {phase} missing under the cold plan.request"
+        );
+    }
+    // The search span says which kind of search ran, and the elimination
+    // loop emitted per-step events with frontier sizes.
+    assert!(records.iter().any(|r| matches!(
+        (r.name(), r.attr("kind")),
+        ("plan.search", Some(Attr::Str(_)))
+    )));
+    assert!(records
+        .iter()
+        .any(|r| r.name() == "ft.elim_step" && r.attr("frontier_tuples").is_some()));
+
+    // The whole trace round-trips through the JSONL codec exactly, and the
+    // chrome export is one valid JSON document with one entry per record.
+    let text = obs::render_jsonl(&records);
+    assert_eq!(obs::parse_jsonl(&text).unwrap(), records);
+    let chrome = Json::parse(&obs::render_chrome(&records)).unwrap();
+    let events = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), records.len());
+}
+
+#[test]
+fn planner_metrics_registry_supersedes_stats() {
+    // No recorder needed: the planner's per-instance registry always
+    // counts, and stats() is a view over it.
+    let p = Planner::new();
+    let fp = p.register_cluster(&Cluster::with_gpus(4));
+    let req = PlanRequest::new("tiny", 256, &fp, 4);
+    p.plan(&req).unwrap();
+    p.plan(&req).unwrap();
+    let m = p.metrics();
+    assert_eq!(m.counter("plan.cold_searches"), 1);
+    assert_eq!(m.counter("plan.memo_hits"), 1);
+    let s = p.stats();
+    assert_eq!(s.cold_searches, 1);
+    assert_eq!(s.memo_hits, 1);
+    let lat = m.histogram("plan.latency.cold").unwrap();
+    assert_eq!(lat.n, 1);
+    assert!(lat.mean() > 0.0);
+    assert!(m.histogram("plan.latency.memo").is_some());
+    let sizes = m.histogram("plan.frontier_points").unwrap();
+    assert_eq!(sizes.n, 2, "both responses observe the frontier size");
+}
+
+#[test]
+fn traced_workload_emits_sched_timeline() {
+    let _guard = global_recorder_lock();
+    obs::enable();
+    obs::global().drain();
+
+    let cluster = Cluster::with_gpus(4);
+    let cache = FrontierCache::new(cluster.clone());
+    let mut cfg = SchedConfig::for_cluster(&cluster);
+    cfg.rescale = RescaleModel { base_s: 1e-4, reshard_bw: 10e9 };
+    let jobs: Vec<JobSpec> = (0..2usize)
+        .map(|i| JobSpec {
+            id: i,
+            name: format!("j{i}"),
+            model: "tiny".into(),
+            batch: 256,
+            iterations: 2000,
+            priority: 1.0,
+            arrival: i as f64 * 0.001,
+            budget_usd: None,
+            deadline_s: None,
+        })
+        .collect();
+    let report = run_workload(&jobs, &cluster, Policy::ElasticFrontier, &cache, &cfg);
+    let records = obs::global().drain();
+    obs::disable();
+
+    let workload = records
+        .iter()
+        .find(|r| r.name() == "sched.workload")
+        .expect("sched.workload span");
+    assert_eq!(workload.attr("policy"), Some(&Attr::Str("elastic-frontier".into())));
+    assert!(workload.attr("makespan").is_some());
+    let completions = records.iter().filter(|r| r.name() == "sched.job_complete").count();
+    assert_eq!(completions, jobs.len());
+    assert!(
+        records.iter().any(|r| r.name() == "sched.alloc_round"),
+        "at least one allocation round"
+    );
+    // Profiling misses ran under sched.curve spans, and each feasible
+    // point's ground-truth execution shows up as a sim.run span.
+    assert!(records.iter().any(|r| r.name() == "sched.curve"));
+    let sims = records.iter().filter(|r| r.name() == "sim.run").count();
+    assert!(sims > 0, "simulator runs traced");
+    // Drift samples flow into the trace stream too when enabled.
+    assert!(
+        records.iter().any(|r| r.name() == "drift.sample"),
+        "drift samples emitted as events"
+    );
+    assert!(report.makespan > 0.0);
+}

@@ -1,0 +1,208 @@
+#!/usr/bin/env python3
+"""Validate a tensoropt --trace JSONL file outside the Rust codebase.
+
+CI runs traced plan sweeps and feeds the emitted trace through this
+script: it re-checks the schema that rust/src/obs/recorder.rs promises
+(strict keys, scalar attrs, unique span ids, resolvable parents) with an
+independent implementation, so a codec regression cannot certify itself.
+
+Schema, one record per line:
+  span:  {"type":"span","id":N,"parent":N|null,"name":S,"t_us":N,
+          "dur_us":N,"thread":N,"attrs":{...}}
+  event: {"type":"event","parent":N|null,"name":S,"t_us":N,"thread":N,
+          "attrs":{...}}
+Attr values are numbers or strings (non-finite floats travel as
+"f64:<16 hex digits>"). Span ids are unique and >= 1; parents reference
+a span id somewhere in the file (children are recorded when they *close*,
+so a child's line precedes its parent's). Blank lines are ignored.
+
+Usage:
+  trace_check.py trace.jsonl [--expect-served cold,memo,...] [--min-records N]
+  trace_check.py --self-test
+"""
+import argparse
+import json
+import re
+import sys
+
+SPAN_KEYS = {"type", "id", "parent", "name", "t_us", "dur_us", "thread", "attrs"}
+EVENT_KEYS = {"type", "parent", "name", "t_us", "thread", "attrs"}
+HEX_F64 = re.compile(r"^f64:[0-9a-f]{16}$")
+
+
+def is_count(v):
+    """A non-negative integer (bool is an int in Python; reject it)."""
+    return isinstance(v, int) and not isinstance(v, bool) and v >= 0
+
+
+def check_attrs(attrs, where, problems):
+    if not isinstance(attrs, dict):
+        problems.append(f"{where}: attrs is not an object")
+        return
+    for k, v in attrs.items():
+        if not isinstance(k, str) or not k:
+            problems.append(f"{where}: attr with empty or non-string key")
+        if isinstance(v, bool) or not isinstance(v, (int, float, str)):
+            problems.append(f"{where}: attr {k!r} is not a number or string")
+        elif isinstance(v, str) and v.startswith("f64:") and not HEX_F64.match(v):
+            problems.append(f"{where}: attr {k!r} is a malformed f64 hex literal")
+
+
+def check_record(rec, where, problems):
+    """Validate one parsed record; returns its span id (or None)."""
+    if not isinstance(rec, dict):
+        problems.append(f"{where}: not a JSON object")
+        return None
+    kind = rec.get("type")
+    if kind not in ("span", "event"):
+        problems.append(f"{where}: unknown record type {kind!r}")
+        return None
+    want = SPAN_KEYS if kind == "span" else EVENT_KEYS
+    missing = want - rec.keys()
+    extra = rec.keys() - want
+    if missing:
+        problems.append(f"{where}: missing keys {sorted(missing)}")
+    if extra:
+        problems.append(f"{where}: unknown keys {sorted(extra)}")
+    if missing or extra:
+        return None
+    name = rec["name"]
+    if not isinstance(name, str) or not name:
+        problems.append(f"{where}: empty or non-string name")
+    parent = rec["parent"]
+    if parent is not None and not (is_count(parent) and parent >= 1):
+        problems.append(f"{where}: parent must be null or a span id >= 1")
+    for k in ("t_us", "thread") + (("dur_us",) if kind == "span" else ()):
+        if not is_count(rec[k]):
+            problems.append(f"{where}: {k} is not a non-negative integer")
+    check_attrs(rec["attrs"], where, problems)
+    if kind == "span":
+        if not (is_count(rec["id"]) and rec["id"] >= 1):
+            problems.append(f"{where}: span id must be an integer >= 1")
+            return None
+        return rec["id"]
+    return None
+
+
+def validate(text):
+    """Return (records, problems); records is [] when anything failed."""
+    problems = []
+    records = []
+    span_ids = set()
+    for i, line in enumerate(text.splitlines(), start=1):
+        if not line.strip():
+            continue
+        where = f"line {i}"
+        try:
+            rec = json.loads(line)
+        except ValueError as e:
+            problems.append(f"{where}: not valid JSON ({e})")
+            continue
+        sid = check_record(rec, where, problems)
+        if sid is not None:
+            if sid in span_ids:
+                problems.append(f"{where}: duplicate span id {sid}")
+            span_ids.add(sid)
+        records.append((i, rec))
+    # Second pass: every parent must name a span that exists somewhere in
+    # the file (stream order is close-time, so forward references are fine).
+    for i, rec in records:
+        parent = rec.get("parent")
+        if parent is not None and parent not in span_ids:
+            problems.append(f"line {i}: parent {parent} names no span in the file")
+    if not records and not problems:
+        problems.append("trace is empty")
+    return ([r for _, r in records] if not problems else []), problems
+
+
+def served_values(records):
+    return {
+        r["attrs"]["served"]
+        for r in records
+        if r["type"] == "span"
+        and r["name"] == "plan.request"
+        and isinstance(r["attrs"].get("served"), str)
+    }
+
+
+def run(path, expect_served, min_records):
+    with open(path) as f:
+        text = f.read()
+    records, problems = validate(text)
+    if problems:
+        for p in problems:
+            print(f"{path}: {p}", file=sys.stderr)
+        sys.exit(1)
+    if len(records) < min_records:
+        print(f"{path}: only {len(records)} records (need >= {min_records})", file=sys.stderr)
+        sys.exit(1)
+    if expect_served:
+        want = {s.strip() for s in expect_served.split(",") if s.strip()}
+        got = served_values(records)
+        missing = want - got
+        if missing:
+            print(
+                f"{path}: plan.request spans cover served={sorted(got)}, "
+                f"missing {sorted(missing)}",
+                file=sys.stderr,
+            )
+            sys.exit(1)
+    spans = sum(1 for r in records if r["type"] == "span")
+    print(
+        f"{path}: ok — {len(records)} records ({spans} spans, "
+        f"{len(records) - spans} events), served={sorted(served_values(records))}"
+    )
+
+
+def self_test():
+    span = (
+        '{"type":"span","id":1,"parent":null,"name":"plan.request",'
+        '"t_us":0,"dur_us":5,"thread":1,"attrs":{"served":"cold","x":1.5}}'
+    )
+    child = (
+        '{"type":"span","id":2,"parent":1,"name":"plan.search",'
+        '"t_us":1,"dur_us":2,"thread":1,"attrs":{"nan":"f64:7ff8000000000000"}}'
+    )
+    event = '{"type":"event","parent":1,"name":"e","t_us":2,"thread":1,"attrs":{}}'
+    # Stream order is close-time: the child line precedes its parent's.
+    good = "\n".join([child, event, span]) + "\n"
+    records, problems = validate(good)
+    assert problems == [], problems
+    assert served_values(records) == {"cold"}
+
+    bad_cases = [
+        ("", "empty"),
+        ("not json\n", "line 1"),
+        ('{"type":"portal","name":"a"}\n', "line 1"),
+        (span + "\n" + span + "\n", "duplicate span id"),
+        (event + "\n", "names no span"),
+        (span.replace('"served":"cold",', "") + "\n" + event.replace('"t_us":2', '"t_us":-2'),
+         "non-negative"),
+        (span + "\n" + event.replace('"attrs":{}', '"attrs":{"k":[1]}'), "number or string"),
+        (span + "\n" + event.replace('"attrs":{}', '"attrs":{"k":"f64:xyz"}'), "hex"),
+        (span[:-1] + ',"extra":1}' + "\n", "unknown keys"),
+        (span.replace('"id":1', '"id":0') + "\n", "span id"),
+    ]
+    for text, want in bad_cases:
+        _, problems = validate(text)
+        assert any(want in p for p in problems), (text, want, problems)
+    print("trace_check self-test ok")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", nargs="?")
+    ap.add_argument("--expect-served", help="comma-separated served values that must appear")
+    ap.add_argument("--min-records", type=int, default=1)
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        self_test()
+        return
+    if not args.trace:
+        ap.error("trace file required (or --self-test)")
+    run(args.trace, args.expect_served, args.min_records)
+
+
+if __name__ == "__main__":
+    main()
