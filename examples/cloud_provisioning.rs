@@ -97,8 +97,9 @@ fn main() -> anyhow::Result<()> {
     for n in [4u32, 16] {
         // served warm: candidates() above already ran these exact priced
         // searches through the same planner.
-        let req =
-            PlanRequest::new("transformer", 256, &fp, n).with_billing(Billing::OnDemand);
+        let req = PlanRequest::builder("transformer", 256, &fp, n)
+            .billing(Billing::OnDemand)
+            .build()?;
         let r = planner.plan(&req)?.result;
         let budget = cluster.sub_cluster(n as usize).mem_budget();
         for t in r.frontier.tuples.iter().filter(|t| t.mem <= budget) {

@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 2. open a session on the cluster (tensoropt.init).
-    let session = Session::new(graph, Cluster::paper_testbed());
+    let session = Session::builder(graph, Cluster::paper_testbed()).build();
 
     // 3a. mini_time: fastest strategy that fits on 16 GPUs.
     if let FindResult::Plan(p) =

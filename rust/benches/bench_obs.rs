@@ -17,7 +17,7 @@ use tensoropt::util::benchkit::Bench;
 fn plan_cold(cluster: &Cluster) -> usize {
     let p = Planner::new();
     let fp = p.register_cluster(cluster);
-    p.plan(&PlanRequest::new("tiny", 256, &fp, 8)).unwrap().frontier().len()
+    p.plan(&PlanRequest::builder("tiny", 256, &fp, 8).build().unwrap()).unwrap().frontier().len()
 }
 
 fn main() {

@@ -28,12 +28,12 @@ fn main() {
     b.run("plan_cold_tiny_d8", || {
         let p = Planner::new();
         let fp = p.register_cluster(&cluster);
-        p.plan(&PlanRequest::new("tiny", 256, &fp, 8)).unwrap().frontier().len()
+        p.plan(&PlanRequest::builder("tiny", 256, &fp, 8).build().unwrap()).unwrap().frontier().len()
     });
 
     let warm = Planner::new();
     let warm_fp = warm.register_cluster(&cluster);
-    let warm_req = PlanRequest::new("tiny", 256, &warm_fp, 8);
+    let warm_req = PlanRequest::builder("tiny", 256, &warm_fp, 8).build().unwrap();
     warm.plan(&warm_req).unwrap();
     b.run("plan_warm_memo_hit", || warm.plan(&warm_req).unwrap().frontier().len());
 
@@ -46,7 +46,7 @@ fn main() {
         .map(|_| {
             let p = Planner::new();
             let fp = p.register_cluster(&cluster);
-            let req = PlanRequest::new("tiny", 256, &fp, 8);
+            let req = PlanRequest::builder("tiny", 256, &fp, 8).build().unwrap();
             p.plan(&req).unwrap();
             (p, req)
         })
@@ -58,7 +58,10 @@ fn main() {
     b_inc.warmup_iters = 0;
     b_inc.run("plan_incremental_rebill", || {
         let (p, req) = rebill_pool.pop().expect("pool sized past max_iters");
-        p.plan(&req.with_billing(Billing::Spot)).unwrap().frontier().len()
+        p.plan(&req.to_builder().billing(Billing::Spot).build().unwrap())
+            .unwrap()
+            .frontier()
+            .len()
     });
     b_inc.finish();
 
@@ -69,14 +72,14 @@ fn main() {
         let seed = Planner::new();
         seed.attach_store(&store_path).unwrap();
         let fp = seed.register_cluster(&cluster);
-        seed.plan(&PlanRequest::new("tiny", 256, &fp, 8)).unwrap();
+        seed.plan(&PlanRequest::builder("tiny", 256, &fp, 8).build().unwrap()).unwrap();
         seed.flush_store().unwrap();
     }
     b.run("plan_store_restart_serve", || {
         let p = Planner::new();
         p.attach_store(&store_path).unwrap();
         let fp = p.register_cluster(&cluster);
-        p.plan(&PlanRequest::new("tiny", 256, &fp, 8)).unwrap().frontier().len()
+        p.plan(&PlanRequest::builder("tiny", 256, &fp, 8).build().unwrap()).unwrap().frontier().len()
     });
     b.finish();
 
@@ -85,12 +88,15 @@ fn main() {
 
     b2.run("profile_sweep_4p_shared_space", || {
         let planner = Arc::new(Planner::new());
-        let session = Session::with_planner(tiny_mlp(256), cluster.clone(), planner);
+        let session =
+            Session::builder(tiny_mlp(256), cluster.clone()).planner(planner).build();
         session.profile(&parallelisms).len()
     });
 
     let shared = Arc::new(Planner::new());
-    let session = Session::with_planner(tiny_mlp(256), cluster.clone(), Arc::clone(&shared));
+    let session = Session::builder(tiny_mlp(256), cluster.clone())
+        .planner(Arc::clone(&shared))
+        .build();
     session.profile(&parallelisms);
     b2.run("curve_after_profile_all_warm", || {
         // the scheduler cache re-reads the session's searches: planner memo

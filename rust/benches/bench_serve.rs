@@ -1,0 +1,79 @@
+//! Serving-layer benches: tail latency and warm-hit health of the
+//! multi-tenant [`PlanService`] under the synthetic heavy-tailed workload.
+//!
+//! Group `serve_traffic` (one JSON file for the CI regression gate):
+//! - `serve_p50_latency` / `serve_p95_latency` / `serve_p99_latency` —
+//!   exact per-request latency quantiles of a seeded closed-loop drive,
+//!   recorded via `Bench::record` so the gate catches tail regressions.
+//! - `serve_miss_rate` — 1 − warm-hit-rate of the same drive. The gate
+//!   only flags increases, so a drop in warm hits (more misses) trips it.
+//! - `serve_store_hit` — the store-hit fast path (no planner involvement).
+//! - `serve_batch_coalesced_burst` — a fresh service absorbing a mixed
+//!   parallelism burst through one coalesced sweep (planner pre-warmed, so
+//!   this times the serving machinery, not the search).
+
+use std::sync::Arc;
+
+use tensoropt::cluster::Cluster;
+use tensoropt::plan::{PlanRequest, Planner};
+use tensoropt::serve::{
+    drive, generate, PlanService, ServeConfig, ServeRequest, TrafficCfg,
+};
+use tensoropt::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::new("serve_traffic");
+
+    let planner = Arc::new(Planner::new());
+    let fp = planner.register_cluster(&Cluster::with_gpus(8));
+    let service = Arc::new(PlanService::new(Arc::clone(&planner), ServeConfig::default()));
+
+    // ------------------------------------------ quantiles under the zoo
+    // Two (model, batch) keys keep the planner work bounded: the drive
+    // measures serving overhead + memoized plans, not cold search time.
+    let traffic = TrafficCfg {
+        requests: 200,
+        models: vec![("tiny".to_string(), 256), ("tiny".to_string(), 128)],
+        ..Default::default()
+    };
+    let arrivals = generate(&traffic, &fp);
+    let report = drive(&service, &arrivals, 4, 0.0);
+    b.record("serve_p50_latency", report.latency_quantile(0.50));
+    b.record("serve_p95_latency", report.latency_quantile(0.95));
+    b.record("serve_p99_latency", report.latency_quantile(0.99));
+    b.record("serve_miss_rate", 1.0 - report.warm_hit_rate());
+    println!(
+        "drive: {} requests, warm-hit {:.1}%, shed {}, wall {:.1} ms",
+        report.requests,
+        report.warm_hit_rate() * 100.0,
+        report.shed,
+        report.wall.as_secs_f64() * 1e3
+    );
+
+    // ------------------------------------------ store-hit fast path
+    let hot = PlanRequest::builder("tiny", 256, &fp, 4).build().unwrap();
+    service.warm(&hot).unwrap();
+    let hot_req = ServeRequest::new("bench", hot);
+    b.run("serve_store_hit", || {
+        service.serve(&hot_req).unwrap().served().expect("warmed key hits").result.clone()
+    });
+
+    // ------------------------------------------ coalesced burst
+    let burst: Vec<ServeRequest> = [1u32, 2, 4, 8, 2, 4, 8, 1]
+        .iter()
+        .map(|&d| {
+            ServeRequest::new(
+                "bench",
+                PlanRequest::builder("tiny", 128, &fp, d).build().unwrap(),
+            )
+        })
+        .collect();
+    b.run("serve_batch_coalesced_burst", || {
+        // fresh service (empty store) on the warm planner: every iteration
+        // re-runs admission + coalescing + store fill for the whole burst.
+        let svc = PlanService::new(Arc::clone(&planner), ServeConfig::default());
+        svc.serve_batch(&burst).len()
+    });
+
+    b.finish();
+}

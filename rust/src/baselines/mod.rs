@@ -67,7 +67,11 @@ fn eval_ctx(planner: &Planner, req: &PlanRequest) -> (std::sync::Arc<Graph>, Clu
 /// unified planner engine: the search is `req` in `Mode::TimeOnly`
 /// (memoized and shared like every other plan).
 pub fn optcnn(planner: &Planner, req: &PlanRequest) -> BaselinePoint {
-    let req = req.clone().with_mode(Mode::TimeOnly);
+    let req = req
+        .to_builder()
+        .mode(Mode::TimeOnly)
+        .build()
+        .expect("rekeying a valid request stays valid");
     let resp = planner.plan(&req).expect("OptCNN plan");
     let t = resp.result.frontier.min_time().expect("OptCNN found no strategy");
     let (strategy, _) = resp.result.strategy_of(t);
@@ -81,9 +85,11 @@ pub fn optcnn(planner: &Planner, req: &PlanRequest) -> BaselinePoint {
 /// planner engine with `Mode::MemOnly` + the no-replication filter.
 pub fn tofu(planner: &Planner, req: &PlanRequest) -> BaselinePoint {
     let req = req
-        .clone()
-        .with_mode(Mode::MemOnly)
-        .with_filter(ConfigFilter::NoReplication);
+        .to_builder()
+        .mode(Mode::MemOnly)
+        .filter(ConfigFilter::NoReplication)
+        .build()
+        .expect("rekeying a valid request stays valid");
     let resp = planner.plan(&req).expect("ToFu plan");
     let t = resp.result.frontier.min_mem().expect("ToFu found no strategy");
     let (strategy, _) = resp.result.strategy_of(t);
@@ -103,7 +109,7 @@ mod tests {
     fn setup() -> (Planner, PlanRequest) {
         let planner = Planner::new().with_threads(2);
         let fp = planner.register_cluster(&Cluster::paper_testbed());
-        (planner, PlanRequest::new("tiny", 256, &fp, 4))
+        (planner, PlanRequest::builder("tiny", 256, &fp, 4).build().unwrap())
     }
 
     #[test]

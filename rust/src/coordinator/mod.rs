@@ -7,5 +7,7 @@ pub mod session;
 pub mod trainer;
 
 pub use manifest::{Manifest, ModelMeta, ParamSpec};
-pub use session::{FindResult, Plan, ProfiledPlan, ProfilePoint, SearchOption, Session};
+pub use session::{
+    FindResult, Plan, ProfiledPlan, ProfilePoint, SearchOption, Session, SessionBuilder,
+};
 pub use trainer::{train_dp, train_tp, TrainReport, TrainerCfg};

@@ -86,7 +86,7 @@ pub struct Session {
     /// Prototype search options cloned per FT search.
     pub opts_proto: FtOptions,
     /// Billing model used to dollar-stamp every search (on-demand by
-    /// default; see [`Session::with_billing`]).
+    /// default; see [`SessionBuilder::billing`]).
     pub billing: Billing,
     /// The planner engine serving this session's searches.
     planner: Arc<Planner>,
@@ -98,32 +98,97 @@ pub struct Session {
     cluster_fp: String,
 }
 
-impl Session {
-    /// New session on `cluster` with default options (on-demand billing)
-    /// and a private planner.
-    pub fn new(graph: Graph, cluster: Cluster) -> Self {
-        Self::with_planner(graph, cluster, Arc::new(Planner::new()))
+/// Builder for [`Session`]: the one blessed construction path, collapsing
+/// the former `new` / `with_planner` / `with_billing` constructor trio.
+///
+/// ```no_run
+/// # use tensoropt::coordinator::Session;
+/// # use tensoropt::cluster::Cluster;
+/// # use tensoropt::cost::pricing::Billing;
+/// # use tensoropt::graph::models::tiny_mlp;
+/// let session = Session::builder(tiny_mlp(256), Cluster::paper_testbed())
+///     .billing(Billing::Spot)
+///     .build();
+/// ```
+pub struct SessionBuilder {
+    graph: Graph,
+    cluster: Cluster,
+    planner: Option<Arc<Planner>>,
+    billing: Billing,
+    threads: Option<usize>,
+}
+
+impl SessionBuilder {
+    /// Share a planner — sessions, the scheduler cache and experiment
+    /// harnesses on one planner reuse each other's searches. Default: a
+    /// private planner.
+    pub fn planner(mut self, planner: Arc<Planner>) -> Self {
+        self.planner = Some(planner);
+        self
     }
 
-    /// New session sharing `planner` — sessions, the scheduler cache and
-    /// experiment harnesses on one planner reuse each other's searches.
-    pub fn with_planner(graph: Graph, cluster: Cluster, planner: Arc<Planner>) -> Self {
-        let opts_proto = FtOptions::new(cluster.n_devices() as u32);
-        let (graph_id, batch) = planner.register_graph(graph.clone());
-        let cluster_fp = planner.register_cluster(&cluster);
-        Self {
-            graph,
-            cluster,
+    /// Billing model (spot vs on-demand) used to price plans. Default:
+    /// on-demand.
+    pub fn billing(mut self, billing: Billing) -> Self {
+        self.billing = billing;
+        self
+    }
+
+    /// Total search thread budget (outer sweep × inner LDP). Default:
+    /// [`FtOptions::new`]'s.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Register the graph and cluster with the planner and produce the
+    /// session. Infallible: every option is valid by construction.
+    pub fn build(self) -> Session {
+        let planner = self.planner.unwrap_or_else(|| Arc::new(Planner::new()));
+        let mut opts_proto = FtOptions::new(self.cluster.n_devices() as u32);
+        if let Some(t) = self.threads {
+            opts_proto.threads = t.max(1);
+        }
+        let (graph_id, batch) = planner.register_graph(self.graph.clone());
+        let cluster_fp = planner.register_cluster(&self.cluster);
+        Session {
+            graph: self.graph,
+            cluster: self.cluster,
             opts_proto,
-            billing: Billing::OnDemand,
+            billing: self.billing,
             planner,
             graph_id,
             batch,
             cluster_fp,
         }
     }
+}
+
+impl Session {
+    /// Start building a session on `cluster` (on-demand billing, private
+    /// planner, default thread budget).
+    pub fn builder(graph: Graph, cluster: Cluster) -> SessionBuilder {
+        SessionBuilder { graph, cluster, planner: None, billing: Billing::OnDemand, threads: None }
+    }
+
+    /// New session on `cluster` with default options (on-demand billing)
+    /// and a private planner.
+    #[deprecated(since = "0.2.0", note = "use Session::builder(graph, cluster).build()")]
+    pub fn new(graph: Graph, cluster: Cluster) -> Self {
+        Self::builder(graph, cluster).build()
+    }
+
+    /// New session sharing `planner`.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use Session::builder(graph, cluster).planner(p).build()"
+    )]
+    pub fn with_planner(graph: Graph, cluster: Cluster, planner: Arc<Planner>) -> Self {
+        Self::builder(graph, cluster).planner(planner).build()
+    }
 
     /// Switch the billing model (spot vs on-demand) used to price plans.
+    #[deprecated(since = "0.2.0", note = "use Session::builder(...).billing(b).build()")]
     pub fn with_billing(mut self, billing: Billing) -> Self {
         self.billing = billing;
         self
@@ -134,17 +199,16 @@ impl Session {
         &self.planner
     }
 
-    fn request_at(&self, d: u32) -> PlanRequest {
-        PlanRequest {
-            graph_id: self.graph_id.clone(),
-            batch: self.batch,
-            cluster_fp: self.cluster_fp.clone(),
-            parallelism: d,
-            mode: self.opts_proto.mode,
-            billing: Some(self.billing),
-            max_mesh_dims: self.opts_proto.max_mesh_dims,
-            filter: crate::plan::ConfigFilter::Full,
-        }
+    /// The validated plan request this session issues at parallelism `d`
+    /// (the serve layer builds its requests through this, so session and
+    /// service can never disagree on a key).
+    pub fn request_at(&self, d: u32) -> PlanRequest {
+        PlanRequest::builder(&self.graph_id, self.batch, &self.cluster_fp, d.max(1))
+            .mode(self.opts_proto.mode)
+            .billing(self.billing)
+            .mesh_dims(self.opts_proto.max_mesh_dims)
+            .build()
+            .expect("session fields always form a valid request")
     }
 
     fn ft_at(&self, d: u32) -> Arc<FtResult> {
@@ -152,8 +216,14 @@ impl Session {
     }
 
     fn ft_at_threads(&self, d: u32, threads: usize) -> Arc<FtResult> {
+        let req = self
+            .request_at(d)
+            .to_builder()
+            .threads(threads.max(1))
+            .build()
+            .expect("session fields always form a valid request");
         self.planner
-            .plan_with_threads(&self.request_at(d), threads)
+            .plan(&req)
             .expect("session graph and cluster are registered with the planner")
             .result
     }
@@ -182,32 +252,39 @@ impl Session {
         par_map_indexed(n, outer, |i| {
             let d = parallelisms[i];
             let r = self.ft_at_threads(d, inner);
-            let best = r.frontier.min_time_within(budget);
-            let plan = best.map(|t| {
-                let (strategy, _) = r.strategy_of(t);
-                Plan {
-                    parallelism: d,
-                    strategy,
-                    est_time: t.time,
-                    est_memory: t.mem,
-                    est_usd_iter: t.cost,
-                }
-            });
-            let min_memory =
-                r.frontier.min_mem().map(|t| t.mem).unwrap_or(f64::INFINITY);
-            let usd_hour =
-                pricing::usd_hour(&self.cluster.sub_cluster(d as usize), self.billing);
-            ProfiledPlan {
-                point: ProfilePoint {
-                    parallelism: d,
-                    best_time: best.map(|t| t.time),
-                    min_memory,
-                    usd_hour,
-                    best_usd_iter: best.map(|t| t.cost),
-                },
-                plan,
-            }
+            self.profiled_from(d, &r)
         })
+    }
+
+    /// Turn a finished FT result at parallelism `d` into the profiling
+    /// row + plan the sweep would produce. Shared by
+    /// [`Session::profile_plans`] and the serve-routed scheduler cache
+    /// path, so the two can never diverge on feasibility or pricing.
+    pub fn profiled_from(&self, d: u32, r: &FtResult) -> ProfiledPlan {
+        let budget = self.mem_budget();
+        let best = r.frontier.min_time_within(budget);
+        let plan = best.map(|t| {
+            let (strategy, _) = r.strategy_of(t);
+            Plan {
+                parallelism: d,
+                strategy,
+                est_time: t.time,
+                est_memory: t.mem,
+                est_usd_iter: t.cost,
+            }
+        });
+        let min_memory = r.frontier.min_mem().map(|t| t.mem).unwrap_or(f64::INFINITY);
+        let usd_hour = pricing::usd_hour(&self.cluster.sub_cluster(d as usize), self.billing);
+        ProfiledPlan {
+            point: ProfilePoint {
+                parallelism: d,
+                best_time: best.map(|t| t.time),
+                min_memory,
+                usd_hour,
+                best_usd_iter: best.map(|t| t.cost),
+            },
+            plan,
+        }
     }
 
     /// Device memory budget with the paper's safety margin (§5.2: pick
@@ -291,7 +368,7 @@ mod tests {
     use crate::graph::models::tiny_mlp;
 
     fn session() -> Session {
-        Session::new(tiny_mlp(256), Cluster::paper_testbed())
+        Session::builder(tiny_mlp(256), Cluster::paper_testbed()).build()
     }
 
     #[test]
@@ -362,8 +439,9 @@ mod tests {
             assert!(usd > 0.0);
         }
         // spot billing scales every price by the documented multiplier.
-        let spot = Session::new(tiny_mlp(256), Cluster::paper_testbed())
-            .with_billing(Billing::Spot);
+        let spot = Session::builder(tiny_mlp(256), Cluster::paper_testbed())
+            .billing(Billing::Spot)
+            .build();
         let (a, b) = (s.profile(&[2]), spot.profile(&[2]));
         let (od, sp) = (a[0].best_usd_iter.unwrap(), b[0].best_usd_iter.unwrap());
         assert!((sp - od * pricing::SPOT_MULTIPLIER).abs() < od * 1e-6, "{sp} vs {od}");

@@ -19,7 +19,9 @@ pub fn run(model: &str, devices: u32) -> (Table, Table) {
     let planner = Planner::new();
     let cluster = Cluster::with_gpus(devices as usize);
     let fp = planner.register_cluster(&cluster);
-    let req = PlanRequest::new(model, 256, &fp, devices);
+    let req = PlanRequest::builder(model, 256, &fp, devices)
+        .build()
+        .expect("figure 6 runs at positive device counts");
 
     let ft = planner
         .plan(&req)

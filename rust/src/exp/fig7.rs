@@ -19,7 +19,7 @@ fn frontier_rows(
     let fp = planner.register_cluster(cluster);
     let d = cluster.n_devices() as u32;
     let r = planner
-        .plan(&PlanRequest::new(&graph_id, batch, &fp, d))
+        .plan(&PlanRequest::builder(&graph_id, batch, &fp, d).build().expect("valid key"))
         .expect("registered graph and cluster")
         .result;
     for tu in &r.frontier.tuples {

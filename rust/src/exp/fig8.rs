@@ -34,7 +34,9 @@ pub fn run(model: &str, parallelisms: &[u32]) -> Table {
     for &d in parallelisms {
         let cluster = Cluster::with_gpus(d as usize);
         let fp = planner.register_cluster(&cluster);
-        let req = PlanRequest::new(model, 256, &fp, d);
+        let req = PlanRequest::builder(model, 256, &fp, d)
+            .build()
+            .expect("figure 8 sweeps positive parallelisms");
         let comm = CommModel::profile(&cluster);
         let budget = cluster.mem_budget();
         let fmt = |time: f64, mem: f64| -> String {

@@ -93,7 +93,11 @@ fn plan_on(
     let (graph_id, batch) = planner.register_graph(g.clone());
     let fp = planner.register_cluster(belief);
     let r = planner
-        .plan(&PlanRequest::new(&graph_id, batch, &fp, belief.n_devices() as u32))
+        .plan(
+            &PlanRequest::builder(&graph_id, batch, &fp, belief.n_devices() as u32)
+                .build()
+                .expect("valid key"),
+        )
         .expect("registered graph and cluster")
         .result;
     let t = r

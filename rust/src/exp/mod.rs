@@ -9,6 +9,7 @@ pub mod hetero;
 pub mod obs;
 pub mod provision;
 pub mod sched;
+pub mod serve;
 pub mod table1;
 pub mod table2;
 pub mod table3;

@@ -109,8 +109,10 @@ pub fn candidates(planner: &Planner, cluster: &Cluster, cfg: &ProvisionCfg) -> V
     for n in size_ladder(cluster, cfg) {
         let sub = cluster.sub_cluster(n);
         let rate = pricing::usd_hour(&sub, cfg.billing);
-        let req = PlanRequest::new(&cfg.model, cfg.batch, &fp, n as u32)
-            .with_billing(cfg.billing);
+        let req = PlanRequest::builder(&cfg.model, cfg.batch, &fp, n as u32)
+            .billing(cfg.billing)
+            .build()
+            .expect("provisioning ladder sizes are positive");
         let r = planner
             .plan(&req)
             .unwrap_or_else(|e| panic!("unknown model `{}`: {e}", cfg.model))

@@ -1,0 +1,126 @@
+//! `exp serve` — the plan service under one heavy-tailed workload, three
+//! configurations side by side:
+//!
+//! - **baseline**: the default [`ServeConfig`] — generous store budget,
+//!   deep queues; coalescing and the store absorb the Zipf head.
+//! - **tight_budget**: a few-KB shard budget, so the LRU evicts
+//!   constantly and the `evictions` column goes positive (every eviction
+//!   is mirrored into the planner memo).
+//! - **no_queue_warmed**: queue depth zero with the hottest model
+//!   pre-warmed at every parallelism — store hits still flow, everything
+//!   else sheds, demonstrating the admission policy's typed rejections.
+//!
+//! All three replay the same seeded schedule closed-loop, so columns are
+//! comparable; the table is the CLI/CI face of `rust/tests/serve.rs`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cluster::Cluster;
+use crate::plan::{PlanRequest, Planner};
+use crate::serve::{drive, generate, PlanService, ServeConfig, TrafficCfg};
+use crate::util::table::Table;
+
+/// Knobs for the scenario sweep.
+#[derive(Debug, Clone)]
+pub struct ServeExpCfg {
+    /// Cluster size every scenario serves against.
+    pub gpus: u32,
+    /// Requests in the shared schedule.
+    pub requests: usize,
+    /// Workload seed.
+    pub seed: u64,
+    /// Serving threads per scenario.
+    pub workers: usize,
+}
+
+impl Default for ServeExpCfg {
+    fn default() -> Self {
+        Self { gpus: 8, requests: 160, seed: 7, workers: 4 }
+    }
+}
+
+/// Run the three scenarios and return the comparison table.
+pub fn run(cfg: &ServeExpCfg) -> Table {
+    let traffic = TrafficCfg {
+        seed: cfg.seed,
+        requests: cfg.requests,
+        ..Default::default()
+    };
+    let scenarios: [(&str, ServeConfig, bool); 3] = [
+        ("baseline", ServeConfig::default(), false),
+        (
+            "tight_budget",
+            ServeConfig { shard_budget_bytes: 2 << 10, ..ServeConfig::default() },
+            false,
+        ),
+        (
+            "no_queue_warmed",
+            ServeConfig {
+                max_queue_depth: 0,
+                // windows only add latency once everything sheds.
+                coalesce_window: Duration::ZERO,
+                ..ServeConfig::default()
+            },
+            true,
+        ),
+    ];
+
+    let mut t = Table::new(
+        &format!(
+            "exp serve: {} requests @ seed {} on {} GPUs, {} workers per scenario",
+            cfg.requests, cfg.seed, cfg.gpus, cfg.workers
+        ),
+        &[
+            "scenario", "requests", "warm_hit_pct", "shed_pct", "groups", "riders",
+            "evictions", "p50_ms", "p95_ms", "p99_ms",
+        ],
+    );
+    for (name, serve_cfg, warm_hot) in scenarios {
+        let planner = Arc::new(Planner::new());
+        let fp = planner.register_cluster(&Cluster::with_gpus(cfg.gpus as usize));
+        let service = Arc::new(PlanService::new(Arc::clone(&planner), serve_cfg));
+        if warm_hot {
+            // pre-warm the Zipf head (rank-0 model) at every parallelism
+            // the workload samples, so hits survive a zero-depth queue.
+            let (model, batch) = traffic.models[0].clone();
+            for &d in &traffic.parallelisms {
+                let req = PlanRequest::builder(&model, batch, &fp, d)
+                    .build()
+                    .expect("warm request is valid");
+                service.warm(&req).expect("warming a zoo model");
+            }
+        }
+        let arrivals = generate(&traffic, &fp);
+        let report = drive(&service, &arrivals, cfg.workers, 0.0);
+        let stats = service.stats();
+        let ms = |q: f64| format!("{:.2}", report.latency_quantile(q) * 1e3);
+        t.row(&[
+            name.to_string(),
+            report.requests.to_string(),
+            format!("{:.1}", report.warm_hit_rate() * 100.0),
+            format!("{:.1}", stats.shed_rate() * 100.0),
+            stats.groups.to_string(),
+            stats.riders.to_string(),
+            stats.evictions.to_string(),
+            ms(0.50),
+            ms(0.95),
+            ms(0.99),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_table_has_all_three_rows() {
+        let t = run(&ServeExpCfg { requests: 30, workers: 2, ..Default::default() });
+        let csv = t.to_csv();
+        for name in ["baseline", "tight_budget", "no_queue_warmed"] {
+            assert!(csv.contains(name), "missing scenario `{name}` in:\n{csv}");
+        }
+    }
+}

@@ -17,5 +17,6 @@ pub mod parallel;
 pub mod plan;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod util;

@@ -14,6 +14,8 @@
 //!   frontier --model M [--gpus N]                    print the raw cost frontier
 //!   plan     --model M --gpus N --parallelisms 1,2,4 planner-engine sweep (cold/warm
 //!            [--store FILE] [--inspect]              stats, persistent plan store)
+//!   serve    --requests N --gpus N [--models ...]    multi-tenant plan service under
+//!                                                    synthetic heavy-tailed traffic
 //!   sched    --jobs N --gpus N [--models A,B,C]      multi-job elastic scheduling
 //!
 //! Every experiment prints the paper-style table and writes CSV under
@@ -26,6 +28,7 @@ use tensoropt::coordinator::{
 use tensoropt::exp;
 use tensoropt::graph::models;
 use tensoropt::plan::{PlanRequest, PlanStore, Planner};
+use tensoropt::serve::{PlanService, ServeConfig, TrafficCfg};
 use tensoropt::util::cli::Args;
 use tensoropt::util::table::Table;
 
@@ -182,6 +185,17 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             println!("{}", t.render());
             save(&t, "obs_drift");
         }
+        "serve" => {
+            let cfg = exp::serve::ServeExpCfg {
+                gpus: args.get_parse_or("gpus", 8u32),
+                requests: args.get_parse_or("requests", 160usize),
+                seed: args.get_parse_or("seed", 7u64),
+                workers: args.get_parse_or("workers", 4usize),
+            };
+            let t = exp::serve::run(&cfg);
+            println!("{}", t.render());
+            save(&t, "serve_scenarios");
+        }
         "fig8" => {
             let model = args.get_or("model", "transformer");
             let para: Vec<u32> = args
@@ -203,7 +217,7 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
     let gpus = args.get_parse_or("gpus", 16u32);
     let g = models::by_name(model, args.get_parse_or("batch", 256i64))
         .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
-    let session = Session::new(g, Cluster::with_gpus(gpus as usize));
+    let session = Session::builder(g, Cluster::with_gpus(gpus as usize)).build();
     let mode = args.get_or("mode", "mini_time");
     let opt = match mode {
         "mini_time" => SearchOption::MiniTime { parallelism: gpus },
@@ -295,7 +309,7 @@ fn cmd_frontier(args: &Args) -> anyhow::Result<()> {
     let cluster = Cluster::with_gpus(gpus as usize);
     let planner = Planner::new();
     let fp = planner.register_cluster(&cluster);
-    let r = planner.plan(&PlanRequest::new(model, 256, &fp, gpus))?.result;
+    let r = planner.plan(&PlanRequest::builder(model, 256, &fp, gpus).build()?)?.result;
     let mut t = Table::new(
         &format!("cost frontier: {model} @ {gpus} GPUs ({} strategies)", r.frontier.len()),
         &["mem_gb", "time_s"],
@@ -380,10 +394,9 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     let mut all_warm = true;
     for _rep in 0..repeat {
         for &d in &parallelisms {
-            let mut req = PlanRequest::new(model, batch, &fp, d);
-            if let Some(b) = billing {
-                req = req.with_billing(b);
-            }
+            let req = PlanRequest::builder(model, batch, &fp, d)
+                .billing_opt(billing)
+                .build()?;
             let t0 = std::time::Instant::now();
             let resp = planner.plan(&req)?;
             let ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -438,6 +451,132 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `tensoropt serve` — run the multi-tenant plan service under a
+/// synthetic heavy-tailed workload (Zipf popularity, bursty arrivals) and
+/// report hit/shed/coalescing counts plus exact latency quantiles.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let gpus = args.get_parse_or("gpus", 8u32);
+    anyhow::ensure!(gpus >= 1, "--gpus must be >= 1");
+    let batch = args.get_parse_or("batch", 256i64);
+    let models: Vec<(String, i64)> = args
+        .get_or("models", "tiny,tiny@128,vgg16,transformer-s")
+        .split(',')
+        .map(|spec| {
+            let spec = spec.trim();
+            let (name, b) = match spec.split_once('@') {
+                Some((name, b)) => (
+                    name,
+                    b.parse::<i64>()
+                        .map_err(|e| anyhow::anyhow!("bad model spec `{spec}`: {e}"))?,
+                ),
+                None => (spec, batch),
+            };
+            anyhow::ensure!(models::by_name(name, b).is_some(), "unknown model `{name}`");
+            Ok((name.to_string(), b))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let parallelisms: Vec<u32> = args
+        .get_or("parallelisms", "1,2,4,8")
+        .split(',')
+        .map(|s| s.trim().parse())
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("bad --parallelisms: {e}"))?;
+    anyhow::ensure!(
+        parallelisms.iter().all(|&d| d >= 1) && !parallelisms.is_empty(),
+        "--parallelisms must be a non-empty list of positive counts"
+    );
+
+    let cfg = ServeConfig {
+        shards: args.get_parse_or("shards", 4usize),
+        shard_budget_bytes: (args.get_parse_or("budget-mb", 8.0f64) * (1 << 20) as f64)
+            as usize,
+        max_queue_depth: args.get_parse_or("queue-depth", 64usize),
+        coalesce_window: std::time::Duration::from_secs_f64(
+            args.get_parse_or("window-ms", 2.0f64).max(0.0) / 1e3,
+        ),
+        max_coalesce_group: args.get_parse_or("max-group", 32usize),
+    };
+    let traffic = TrafficCfg {
+        seed: args.get_parse_or("seed", 7u64),
+        requests: args.get_parse_or("requests", 200usize),
+        tenants: args.get_parse_or("tenants", 8usize),
+        models,
+        zipf_s: args.get_parse_or("zipf", 1.1f64),
+        parallelisms,
+        mean_gap_ms: args.get_parse_or("gap-ms", 2.0f64),
+        burst_every: args.get_parse_or("burst-every", 10usize),
+        burst_len: args.get_parse_or("burst-len", 4usize),
+        deadline_ms: args
+            .get("deadline-ms")
+            .map(|s| s.parse())
+            .transpose()
+            .map_err(|e| anyhow::anyhow!("bad --deadline-ms: {e}"))?,
+    };
+    let workers = args.get_parse_or("workers", 4usize).max(1);
+    let time_scale = args.get_parse_or("time-scale", 0.0f64);
+
+    let planner = std::sync::Arc::new(Planner::new());
+    let fp = planner.register_cluster(&Cluster::with_gpus(gpus as usize));
+    let service = std::sync::Arc::new(PlanService::new(std::sync::Arc::clone(&planner), cfg));
+    let arrivals = tensoropt::serve::generate(&traffic, &fp);
+    let report = tensoropt::serve::drive(&service, &arrivals, workers, time_scale);
+
+    let ms = |s: f64| format!("{:.2}", s * 1e3);
+    let mut t = Table::new(
+        &format!(
+            "serve: {} requests, {} models, {gpus} GPUs, {workers} workers",
+            report.requests,
+            traffic.models.len()
+        ),
+        &[
+            "requests", "hits", "misses", "shed", "errors", "riders", "warm_hit_pct",
+            "p50_ms", "p95_ms", "p99_ms", "wall_ms",
+        ],
+    );
+    t.row(&[
+        report.requests.to_string(),
+        report.hits.to_string(),
+        report.misses.to_string(),
+        report.shed.to_string(),
+        report.errors.to_string(),
+        report.riders.to_string(),
+        format!("{:.1}", report.warm_hit_rate() * 100.0),
+        ms(report.latency_quantile(0.50)),
+        ms(report.latency_quantile(0.95)),
+        ms(report.latency_quantile(0.99)),
+        ms(report.wall.as_secs_f64()),
+    ]);
+    println!("{}", t.render());
+    save(&t, "serve");
+
+    let s = service.stats();
+    let store = service.store_stats();
+    let ps = planner.stats();
+    let mut st = Table::new(
+        "service internals",
+        &[
+            "groups", "riders", "evictions", "store_entries", "store_kb", "space_builds",
+            "leaf_builds", "searches",
+        ],
+    );
+    st.row(&[
+        s.groups.to_string(),
+        s.riders.to_string(),
+        s.evictions.to_string(),
+        store.entries.to_string(),
+        (store.bytes / 1024).to_string(),
+        ps.space_builds.to_string(),
+        ps.leaf_builds.to_string(),
+        ps.searches().to_string(),
+    ]);
+    println!("{}", st.render());
+    if args.flag("metrics") {
+        println!("{}", service.metrics().snapshot().render());
+    }
+    anyhow::ensure!(report.errors == 0, "{} requests failed hard", report.errors);
+    Ok(())
+}
+
 fn cmd_sched(args: &Args) -> anyhow::Result<()> {
     let batch = args.get_parse_or("batch", 256i64);
     let models: Vec<(String, i64)> = args
@@ -486,6 +625,9 @@ COMMANDS:
                                                     cheapest-under-deadline / fastest-under-budget
   exp obs [--model M --batch B --ladder 2,4,8]      drift report: estimate-vs-simulated relative
                                                     error per (testbed, belief, parallelism, metric)
+  exp serve [--requests N --gpus N --seed S]        serving scenarios side by side: default config,
+                                                    tight store budget (evictions), zero queue
+                                                    depth with a pre-warmed hot set (sheds)
   search    --model M --mode <mini_time|mini_parallelism|profiling> --gpus N
   train     --strategy <dp|tp> --model <small|e2e> --devices N --steps N [--fused] [--pallas]
   frontier  --model M --gpus N
@@ -495,6 +637,14 @@ COMMANDS:
                                                  (--expect-warm asserts it); --repeat loops the
                                                  sweep so later passes exercise the memo
   plan      --inspect --store FILE               list the plans in a store file
+  serve     --requests N --gpus N [--models tiny,vgg16@128,...] [--parallelisms 1,2,4]
+            [--seed S] [--workers N] [--shards N] [--budget-mb MB] [--queue-depth N]
+            [--window-ms MS] [--max-group N] [--zipf S] [--gap-ms MS] [--burst-every N]
+            [--burst-len N] [--deadline-ms MS] [--time-scale X]
+                                                 multi-tenant plan service under synthetic
+                                                 heavy-tailed traffic: Zipf model popularity,
+                                                 bursty arrivals; reports hit/shed/coalesce
+                                                 counts and p50/p95/p99 serve latency
   sched     --jobs N --gpus N --models A,B,C --seed S [--interarrival S] [--min-iters N] [--max-iters N]
   help
 
@@ -517,6 +667,8 @@ EXAMPLES:
   tensoropt plan --model vgg16 --gpus 16 --parallelisms 2,4,8,16 --store plans.json
   tensoropt train --strategy tp --steps 100
   tensoropt sched --jobs 4 --gpus 16 --models vgg16,wideresnet,transformer
+  tensoropt serve --requests 200 --gpus 8 --models tiny,tiny@128,vgg16 --trace trace.jsonl
+  tensoropt exp serve --requests 120
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -528,6 +680,7 @@ fn main() -> anyhow::Result<()> {
         Some("train") => cmd_train(&args),
         Some("frontier") => cmd_frontier(&args),
         Some("plan") => cmd_plan(&args),
+        Some("serve") => cmd_serve(&args),
         Some("sched") => cmd_sched(&args),
         Some("help") | None => {
             print!("{HELP}");

@@ -64,6 +64,7 @@ const C_MEMO_HITS: &str = "plan.memo_hits";
 const C_FLIGHT_WAITS: &str = "plan.flight_waits";
 const C_STORE_SERVES: &str = "plan.store_serves";
 const C_MEMO_ENTRIES: &str = "plan.memo_entries";
+const C_EVICTIONS: &str = "plan.evictions";
 
 /// Planner counters: what was built vs served warm. Snapshot via
 /// [`Planner::stats`], which is a compatibility view over the planner's
@@ -371,28 +372,68 @@ impl Planner {
     // --------------------------------------------------------------- plan
 
     /// Serve a plan request (memo -> store -> incremental -> cold, in that
-    /// order of preference) with the planner's default thread budget.
+    /// order of preference). The search thread budget is the request's
+    /// [`PlanRequest::threads`] option when set, else the planner's
+    /// default (results are thread-count-independent; the budget only
+    /// bounds CPU use, so callers running their own outer parallel sweeps
+    /// set it to split the budget).
     pub fn plan(&self, req: &PlanRequest) -> anyhow::Result<PlanResponse> {
-        self.plan_with_threads(req, self.threads)
+        self.plan_inner(req, req.threads.unwrap_or(self.threads))
     }
 
-    /// [`Planner::plan`] with an explicit search thread budget (results
-    /// are thread-count-independent; this only bounds CPU use so callers
-    /// running their own outer parallel sweeps can split the budget).
+    /// [`Planner::plan`] with an explicit search thread budget.
+    #[deprecated(
+        since = "0.2.0",
+        note = "set threads on the request: PlanRequest::builder(...).threads(n)"
+    )]
     pub fn plan_with_threads(
         &self,
         req: &PlanRequest,
         threads: usize,
     ) -> anyhow::Result<PlanResponse> {
-        // normalize to the canonical cache key: canonical graph id +
-        // clamped parallelism.
-        let t0 = Instant::now();
-        let mut sp = obs::span("plan.request");
+        self.plan_inner(req, threads)
+    }
+
+    /// The canonical cache key a request normalizes to: canonical graph
+    /// id, parallelism clamped to the registered cluster, thread override
+    /// stripped. Two requests with equal canonical keys share one
+    /// memoized result; the serve layer shards its store by this key.
+    pub fn canonical_request(&self, req: &PlanRequest) -> anyhow::Result<PlanRequest> {
+        Ok(self.canonicalize(req)?.0)
+    }
+
+    /// Drop a plan from the in-memory memo (the serve layer calls this
+    /// when its sharded store evicts an entry, so the two caches cannot
+    /// diverge in what they hold). Returns whether an entry was removed;
+    /// in-flight computations are never removed.
+    pub fn evict(&self, req: &PlanRequest) -> bool {
+        let Ok((key, _, _)) = self.canonicalize(req) else { return false };
+        let removed = self.plans.remove(&key);
+        if removed {
+            self.metrics.inc(C_EVICTIONS);
+        }
+        removed
+    }
+
+    fn canonicalize(
+        &self,
+        req: &PlanRequest,
+    ) -> anyhow::Result<(PlanRequest, Arc<Graph>, Arc<Cluster>)> {
         let (canon, graph) = self.resolve_graph(&req.graph_id, req.batch)?;
         let base = self.base_cluster_of(req)?;
         let mut key = req.clone();
         key.graph_id = canon;
         key.parallelism = req.parallelism.clamp(1, base.n_devices() as u32);
+        key.threads = None;
+        Ok((key, graph, base))
+    }
+
+    fn plan_inner(&self, req: &PlanRequest, threads: usize) -> anyhow::Result<PlanResponse> {
+        // normalize to the canonical cache key: canonical graph id +
+        // clamped parallelism.
+        let t0 = Instant::now();
+        let mut sp = obs::span("plan.request");
+        let (key, graph, base) = self.canonicalize(req)?;
         if sp.active() {
             sp.attr_str("graph", &key.graph_id);
             sp.attr_u64("batch", key.batch.max(0) as u64);
@@ -629,6 +670,10 @@ mod tests {
         (p, fp)
     }
 
+    fn req(id: &str, batch: i64, fp: &str, d: u32) -> PlanRequest {
+        PlanRequest::builder(id, batch, fp, d).build().unwrap()
+    }
+
     #[test]
     fn graph_identity_distinguishes_shapes_and_matches_rebuilds() {
         let a = graph_identity(&tiny_mlp(256));
@@ -649,14 +694,14 @@ mod tests {
     fn memoizes_by_key_and_shares_spaces() {
         let cluster = Cluster::with_gpus(4);
         let (p, fp) = planner_with(&cluster);
-        let req = PlanRequest::new("tiny", 256, &fp, 4);
+        let req = req("tiny", 256, &fp, 4);
         let r1 = p.plan(&req).unwrap();
         assert_eq!(r1.served, Served::Cold);
         let r2 = p.plan(&req).unwrap();
         assert_eq!(r2.served, Served::Memo);
         assert!(Arc::ptr_eq(&r1.result, &r2.result));
         // another parallelism: new leaf + incremental search, same space.
-        let r3 = p.plan(&PlanRequest::new("tiny", 256, &fp, 2)).unwrap();
+        let r3 = p.plan(&req("tiny", 256, &fp, 2)).unwrap();
         assert_eq!(r3.served, Served::Incremental);
         let s = p.stats();
         assert_eq!(s.space_builds, 1);
@@ -671,10 +716,10 @@ mod tests {
         let cluster = Cluster::with_gpus(4);
         let (p, fp) = planner_with(&cluster);
         let (id, batch) = p.register_graph(tiny_mlp(256));
-        p.plan(&PlanRequest::new(&id, batch, &fp, 4)).unwrap();
+        p.plan(&req(&id, batch, &fp, 4)).unwrap();
         // zoo aliases resolve to the same canonical identity.
-        p.plan(&PlanRequest::new("tiny", 256, &fp, 4)).unwrap();
-        p.plan(&PlanRequest::new("tiny_mlp", 256, &fp, 4)).unwrap();
+        p.plan(&req("tiny", 256, &fp, 4)).unwrap();
+        p.plan(&req("tiny_mlp", 256, &fp, 4)).unwrap();
         let s = p.stats();
         assert_eq!(s.space_builds, 1);
         assert_eq!(s.searches(), 1, "aliases are memo hits");
@@ -685,9 +730,11 @@ mod tests {
     fn billing_rebill_reuses_leaves_and_pins() {
         let cluster = Cluster::with_gpus(4);
         let (p, fp) = planner_with(&cluster);
-        let base = PlanRequest::new("tiny", 256, &fp, 4);
-        let od = p.plan(&base.clone().with_billing(Billing::OnDemand)).unwrap();
-        let spot = p.plan(&base.clone().with_billing(Billing::Spot)).unwrap();
+        let base = req("tiny", 256, &fp, 4);
+        let od =
+            p.plan(&base.to_builder().billing(Billing::OnDemand).build().unwrap()).unwrap();
+        let spot =
+            p.plan(&base.to_builder().billing(Billing::Spot).build().unwrap()).unwrap();
         let s = p.stats();
         assert_eq!(s.leaf_builds, 1, "rebilling must not rebuild leaf tables");
         assert_eq!(s.searches(), 2);
@@ -704,17 +751,17 @@ mod tests {
     fn batch_change_replays_schedule_bit_identically() {
         let cluster = Cluster::with_gpus(4);
         let (p, fp) = planner_with(&cluster);
-        let first = p.plan(&PlanRequest::new("tiny", 256, &fp, 4)).unwrap();
+        let first = p.plan(&req("tiny", 256, &fp, 4)).unwrap();
         assert_eq!(first.served, Served::Cold);
         // same architecture at another batch: a new space (batch is part
         // of the space key) but the topology-keyed elimination structure
         // is reused, so the search is incremental, not cold.
-        let warm = p.plan(&PlanRequest::new("tiny", 128, &fp, 4)).unwrap();
+        let warm = p.plan(&req("tiny", 128, &fp, 4)).unwrap();
         assert_eq!(warm.served, Served::Incremental);
         assert_eq!(p.stats().space_builds, 2);
         // …and bit-identical to a cold search on a fresh planner.
         let (fresh, fp2) = planner_with(&cluster);
-        let cold = fresh.plan(&PlanRequest::new("tiny", 128, &fp2, 4)).unwrap();
+        let cold = fresh.plan(&req("tiny", 128, &fp2, 4)).unwrap();
         assert_eq!(cold.served, Served::Cold);
         assert_eq!(warm.frontier().len(), cold.frontier().len());
         for (a, b) in warm.frontier().tuples.iter().zip(&cold.frontier().tuples) {
@@ -729,18 +776,18 @@ mod tests {
     fn unknown_ids_error() {
         let cluster = Cluster::with_gpus(2);
         let (p, fp) = planner_with(&cluster);
-        assert!(p.plan(&PlanRequest::new("no_such_model", 256, &fp, 2)).is_err());
-        assert!(p.plan(&PlanRequest::new("tiny", 256, "bogus_fp", 2)).is_err());
+        assert!(p.plan(&req("no_such_model", 256, &fp, 2)).is_err());
+        assert!(p.plan(&req("tiny", 256, "bogus_fp", 2)).is_err());
         // errors don't wedge the single-flight: the good request still runs.
-        assert!(p.plan(&PlanRequest::new("tiny", 256, &fp, 2)).is_ok());
+        assert!(p.plan(&req("tiny", 256, &fp, 2)).is_ok());
     }
 
     #[test]
     fn parallelism_clamps_to_cluster() {
         let cluster = Cluster::with_gpus(4);
         let (p, fp) = planner_with(&cluster);
-        let a = p.plan(&PlanRequest::new("tiny", 256, &fp, 4)).unwrap();
-        let b = p.plan(&PlanRequest::new("tiny", 256, &fp, 64)).unwrap();
+        let a = p.plan(&req("tiny", 256, &fp, 4)).unwrap();
+        let b = p.plan(&req("tiny", 256, &fp, 64)).unwrap();
         assert!(Arc::ptr_eq(&a.result, &b.result), "over-asking clamps to one key");
     }
 }

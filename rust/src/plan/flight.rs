@@ -91,6 +91,21 @@ impl<K: Eq + Hash + Clone, V: Clone> SingleFlight<K, V> {
             Err(e) => Err(e), // guard drop clears the marker + notifies
         }
     }
+
+    /// Drop a *ready* value for `k` so the next caller recomputes it
+    /// (cache eviction). An in-flight computation is left alone — waiters
+    /// are blocked on it and must receive its result. Returns whether a
+    /// ready value was removed.
+    pub fn remove(&self, k: &K) -> bool {
+        let mut map = self.state.lock().unwrap();
+        match map.get(k) {
+            Some(Flight::Ready(_)) => {
+                map.remove(k);
+                true
+            }
+            _ => false,
+        }
+    }
 }
 
 struct FlightGuard<'a, K: Eq + Hash + Clone, V: Clone> {
@@ -175,4 +190,20 @@ mod tests {
         assert_eq!(o, Obtained::Computed);
     }
 
+    #[test]
+    fn remove_evicts_ready_values_only() {
+        let sf: SingleFlight<u32, Arc<u64>> = SingleFlight::new();
+        assert!(!sf.remove(&5), "absent key removes nothing");
+        let (_, o) = sf
+            .get_or_try_compute(&5, || -> Result<Arc<u64>, ()> { Ok(Arc::new(1)) })
+            .unwrap();
+        assert_eq!(o, Obtained::Computed);
+        assert!(sf.remove(&5));
+        // evicted: the next get recomputes instead of hitting.
+        let (v, o) = sf
+            .get_or_try_compute(&5, || -> Result<Arc<u64>, ()> { Ok(Arc::new(2)) })
+            .unwrap();
+        assert_eq!(*v, 2);
+        assert_eq!(o, Obtained::Computed);
+    }
 }

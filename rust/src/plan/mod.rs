@@ -118,13 +118,20 @@ pub fn billing_from_tag(s: &str) -> Option<Option<Billing>> {
 }
 
 /// A plan request — the planner's cache key. Everything a search depends
-/// on is in here (threads are deliberately *not*: FT results are
-/// thread-count-independent). The cluster is referenced by fingerprint
-/// (register it with [`Planner::register_cluster`] first); the search runs
-/// on `cluster.sub_cluster(parallelism)` exactly like the Session always
+/// on is in [`Eq`]/[`Hash`] (`threads` is deliberately *not*: FT results
+/// are thread-count-independent, so it only bounds CPU use). The cluster
+/// is referenced by fingerprint (register it with
+/// [`Planner::register_cluster`] first); the search runs on
+/// `cluster.sub_cluster(parallelism)` exactly like the Session always
 /// did, with the rental rate of that sub-cluster under `billing` stamped
 /// onto leaf tuples (`billing: None` = the paper's unpriced search).
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+///
+/// Construct through [`PlanRequest::builder`], which validates the
+/// combination up front ([`PlanRequestError`]) instead of panicking deep
+/// in the search. The fields stay public so pre-builder struct literals
+/// keep compiling for one release, but every in-repo call site uses the
+/// builder.
+#[derive(Debug, Clone)]
 pub struct PlanRequest {
     /// Graph identity: a registered graph's id, or a model-zoo name.
     pub graph_id: String,
@@ -142,42 +149,234 @@ pub struct PlanRequest {
     pub max_mesh_dims: usize,
     /// Configuration-space restriction (ToFu's no-replication).
     pub filter: ConfigFilter,
+    /// Search thread budget override (None = the planner's default).
+    /// Excluded from the cache key: identical requests at different
+    /// thread budgets share one result.
+    pub threads: Option<usize>,
+}
+
+// `threads` is a tuning knob, not part of the plan's identity — exclude it
+// from equality and hashing so memoization and single-flight treat
+// differently-threaded requests for the same plan as one key.
+impl PartialEq for PlanRequest {
+    fn eq(&self, other: &Self) -> bool {
+        self.graph_id == other.graph_id
+            && self.batch == other.batch
+            && self.cluster_fp == other.cluster_fp
+            && self.parallelism == other.parallelism
+            && self.mode == other.mode
+            && self.billing == other.billing
+            && self.max_mesh_dims == other.max_mesh_dims
+            && self.filter == other.filter
+    }
+}
+
+impl Eq for PlanRequest {}
+
+impl std::hash::Hash for PlanRequest {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.graph_id.hash(state);
+        self.batch.hash(state);
+        self.cluster_fp.hash(state);
+        self.parallelism.hash(state);
+        self.mode.hash(state);
+        self.billing.hash(state);
+        self.max_mesh_dims.hash(state);
+        self.filter.hash(state);
+    }
+}
+
+/// Typed validation error from [`PlanRequestBuilder::build`]: the bad
+/// field is rejected when the request is built, not deep inside a search.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanRequestError {
+    /// The graph id is empty.
+    EmptyGraphId,
+    /// The cluster fingerprint is empty.
+    EmptyClusterFp,
+    /// The batch size is not positive.
+    BadBatch {
+        /// The rejected batch size.
+        batch: i64,
+    },
+    /// The parallelism is zero (a search needs at least one device).
+    BadParallelism,
+    /// The mesh rank is outside `1..=MAX_MESH_DIMS`.
+    BadMeshDims {
+        /// The rejected mesh rank.
+        dims: usize,
+    },
+    /// The thread budget override is zero.
+    BadThreads,
+}
+
+/// Largest accepted device-mesh rank (the paper uses 2; 3-D meshes are
+/// exercised by tests).
+pub const MAX_MESH_DIMS: usize = 4;
+
+impl std::fmt::Display for PlanRequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanRequestError::EmptyGraphId => write!(f, "graph id must be non-empty"),
+            PlanRequestError::EmptyClusterFp => {
+                write!(f, "cluster fingerprint must be non-empty")
+            }
+            PlanRequestError::BadBatch { batch } => {
+                write!(f, "batch size must be >= 1 (got {batch})")
+            }
+            PlanRequestError::BadParallelism => write!(f, "parallelism must be >= 1"),
+            PlanRequestError::BadMeshDims { dims } => {
+                write!(f, "mesh rank must be in 1..={MAX_MESH_DIMS} (got {dims})")
+            }
+            PlanRequestError::BadThreads => write!(f, "thread budget must be >= 1"),
+        }
+    }
+}
+
+impl std::error::Error for PlanRequestError {}
+
+/// Builder for [`PlanRequest`]: the one blessed construction path.
+/// [`PlanRequestBuilder::build`] validates the combination and returns a
+/// typed [`PlanRequestError`] for bad batch/parallelism/mesh values.
+#[derive(Debug, Clone)]
+pub struct PlanRequestBuilder {
+    req: PlanRequest,
+}
+
+impl PlanRequestBuilder {
+    /// Set the frontier mode (default: Pareto).
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.req.mode = mode;
+        self
+    }
+
+    /// Set the billing model (default: unpriced).
+    pub fn billing(mut self, billing: Billing) -> Self {
+        self.req.billing = Some(billing);
+        self
+    }
+
+    /// Set (or clear) the billing model from an option.
+    pub fn billing_opt(mut self, billing: Option<Billing>) -> Self {
+        self.req.billing = billing;
+        self
+    }
+
+    /// Set the configuration filter (default: full space).
+    pub fn filter(mut self, filter: ConfigFilter) -> Self {
+        self.req.filter = filter;
+        self
+    }
+
+    /// Set the maximum mesh rank (default: 2, the paper's setting).
+    pub fn mesh_dims(mut self, dims: usize) -> Self {
+        self.req.max_mesh_dims = dims;
+        self
+    }
+
+    /// Override the search thread budget (default: the planner's).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.req.threads = Some(threads);
+        self
+    }
+
+    /// Re-target the request at another registered cluster.
+    pub fn cluster(mut self, cluster_fp: &str) -> Self {
+        self.req.cluster_fp = cluster_fp.to_string();
+        self
+    }
+
+    /// Re-target the request at another parallelism.
+    pub fn parallelism(mut self, parallelism: u32) -> Self {
+        self.req.parallelism = parallelism;
+        self
+    }
+
+    /// Validate and produce the request.
+    pub fn build(self) -> Result<PlanRequest, PlanRequestError> {
+        let r = &self.req;
+        if r.graph_id.is_empty() {
+            return Err(PlanRequestError::EmptyGraphId);
+        }
+        if r.cluster_fp.is_empty() {
+            return Err(PlanRequestError::EmptyClusterFp);
+        }
+        if r.batch < 1 {
+            return Err(PlanRequestError::BadBatch { batch: r.batch });
+        }
+        if r.parallelism == 0 {
+            return Err(PlanRequestError::BadParallelism);
+        }
+        if r.max_mesh_dims == 0 || r.max_mesh_dims > MAX_MESH_DIMS {
+            return Err(PlanRequestError::BadMeshDims { dims: r.max_mesh_dims });
+        }
+        if r.threads == Some(0) {
+            return Err(PlanRequestError::BadThreads);
+        }
+        Ok(self.req)
+    }
 }
 
 impl PlanRequest {
-    /// A default (Pareto, unpriced, rank-2, unfiltered) request.
-    pub fn new(graph_id: &str, batch: i64, cluster_fp: &str, parallelism: u32) -> Self {
-        Self {
-            graph_id: graph_id.to_string(),
-            batch,
-            cluster_fp: cluster_fp.to_string(),
-            parallelism,
-            mode: Mode::Pareto,
-            billing: None,
-            max_mesh_dims: 2,
-            filter: ConfigFilter::Full,
+    /// Start building a (Pareto, unpriced, rank-2, unfiltered) request.
+    pub fn builder(
+        graph_id: &str,
+        batch: i64,
+        cluster_fp: &str,
+        parallelism: u32,
+    ) -> PlanRequestBuilder {
+        PlanRequestBuilder {
+            req: PlanRequest {
+                graph_id: graph_id.to_string(),
+                batch,
+                cluster_fp: cluster_fp.to_string(),
+                parallelism,
+                mode: Mode::Pareto,
+                billing: None,
+                max_mesh_dims: 2,
+                filter: ConfigFilter::Full,
+                threads: None,
+            },
         }
     }
 
+    /// A builder seeded from this request (re-target a cluster or
+    /// parallelism without a struct literal).
+    pub fn to_builder(&self) -> PlanRequestBuilder {
+        PlanRequestBuilder { req: self.clone() }
+    }
+
+    /// A default (Pareto, unpriced, rank-2, unfiltered) request.
+    #[deprecated(since = "0.2.0", note = "use PlanRequest::builder(...).build()")]
+    pub fn new(graph_id: &str, batch: i64, cluster_fp: &str, parallelism: u32) -> Self {
+        Self::builder(graph_id, batch, cluster_fp, parallelism.max(1))
+            .build()
+            .expect("builder defaults are valid")
+    }
+
     /// Set the frontier mode.
+    #[deprecated(since = "0.2.0", note = "use PlanRequest::builder(...).mode(...)")]
     pub fn with_mode(mut self, mode: Mode) -> Self {
         self.mode = mode;
         self
     }
 
     /// Set the billing model (dollar-stamped search).
+    #[deprecated(since = "0.2.0", note = "use PlanRequest::builder(...).billing(...)")]
     pub fn with_billing(mut self, billing: Billing) -> Self {
         self.billing = Some(billing);
         self
     }
 
     /// Set the configuration filter.
+    #[deprecated(since = "0.2.0", note = "use PlanRequest::builder(...).filter(...)")]
     pub fn with_filter(mut self, filter: ConfigFilter) -> Self {
         self.filter = filter;
         self
     }
 
     /// Set the maximum mesh rank.
+    #[deprecated(since = "0.2.0", note = "use PlanRequest::builder(...).mesh_dims(...)")]
     pub fn with_mesh_dims(mut self, dims: usize) -> Self {
         self.max_mesh_dims = dims;
         self
@@ -254,17 +453,95 @@ mod tests {
     }
 
     #[test]
-    fn request_builders() {
-        let r = PlanRequest::new("tiny", 256, "fp", 4)
-            .with_mode(Mode::TimeOnly)
-            .with_billing(Billing::Spot)
-            .with_filter(ConfigFilter::NoReplication)
-            .with_mesh_dims(3);
+    fn request_builder_sets_every_option() {
+        let r = PlanRequest::builder("tiny", 256, "fp", 4)
+            .mode(Mode::TimeOnly)
+            .billing(Billing::Spot)
+            .filter(ConfigFilter::NoReplication)
+            .mesh_dims(3)
+            .threads(2)
+            .build()
+            .unwrap();
         assert_eq!(r.mode, Mode::TimeOnly);
         assert_eq!(r.billing, Some(Billing::Spot));
         assert_eq!(r.filter, ConfigFilter::NoReplication);
         assert_eq!(r.max_mesh_dims, 3);
+        assert_eq!(r.threads, Some(2));
         assert!(Served::Memo.is_warm() && Served::Store.is_warm());
         assert!(!Served::Cold.is_warm() && !Served::Incremental.is_warm());
+    }
+
+    #[test]
+    fn request_builder_rejects_bad_combinations() {
+        let b = |g: &str, batch, fp: &str, d| PlanRequest::builder(g, batch, fp, d).build();
+        assert_eq!(b("", 256, "fp", 4), Err(PlanRequestError::EmptyGraphId));
+        assert_eq!(b("tiny", 256, "", 4), Err(PlanRequestError::EmptyClusterFp));
+        assert_eq!(b("tiny", 0, "fp", 4), Err(PlanRequestError::BadBatch { batch: 0 }));
+        assert_eq!(b("tiny", -8, "fp", 4), Err(PlanRequestError::BadBatch { batch: -8 }));
+        assert_eq!(b("tiny", 256, "fp", 0), Err(PlanRequestError::BadParallelism));
+        assert_eq!(
+            PlanRequest::builder("tiny", 256, "fp", 4).mesh_dims(0).build(),
+            Err(PlanRequestError::BadMeshDims { dims: 0 })
+        );
+        assert_eq!(
+            PlanRequest::builder("tiny", 256, "fp", 4).mesh_dims(MAX_MESH_DIMS + 1).build(),
+            Err(PlanRequestError::BadMeshDims { dims: MAX_MESH_DIMS + 1 })
+        );
+        assert_eq!(
+            PlanRequest::builder("tiny", 256, "fp", 4).threads(0).build(),
+            Err(PlanRequestError::BadThreads)
+        );
+        // errors render as readable text for CLI surfaces.
+        assert!(PlanRequestError::BadBatch { batch: 0 }.to_string().contains("batch"));
+    }
+
+    #[test]
+    fn threads_are_not_part_of_the_cache_key() {
+        let a = PlanRequest::builder("tiny", 256, "fp", 4).build().unwrap();
+        let b = PlanRequest::builder("tiny", 256, "fp", 4).threads(8).build().unwrap();
+        assert_eq!(a, b, "threads is a tuning knob, not identity");
+        let hash = |r: &PlanRequest| {
+            use std::hash::{Hash, Hasher};
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            r.hash(&mut h);
+            h.finish()
+        };
+        assert_eq!(hash(&a), hash(&b));
+        let c = PlanRequest::builder("tiny", 256, "fp", 2).build().unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn to_builder_rekeys_without_struct_literals() {
+        let r = PlanRequest::builder("tiny", 256, "fp", 4)
+            .billing(Billing::Spot)
+            .build()
+            .unwrap();
+        let moved = r.to_builder().cluster("fp2").parallelism(2).build().unwrap();
+        assert_eq!(moved.cluster_fp, "fp2");
+        assert_eq!(moved.parallelism, 2);
+        assert_eq!(moved.billing, Some(Billing::Spot), "other fields carry over");
+        let unpriced = r.to_builder().billing_opt(None).build().unwrap();
+        assert_eq!(unpriced.billing, None);
+    }
+
+    // The one place the deprecated pre-builder construction path is still
+    // exercised: it must stay equivalent to the builder for one release.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructor_shim_matches_builder() {
+        let legacy = PlanRequest::new("tiny", 256, "fp", 4)
+            .with_mode(Mode::TimeOnly)
+            .with_billing(Billing::Spot)
+            .with_filter(ConfigFilter::NoReplication)
+            .with_mesh_dims(3);
+        let built = PlanRequest::builder("tiny", 256, "fp", 4)
+            .mode(Mode::TimeOnly)
+            .billing(Billing::Spot)
+            .filter(ConfigFilter::NoReplication)
+            .mesh_dims(3)
+            .build()
+            .unwrap();
+        assert_eq!(legacy, built);
     }
 }

@@ -525,9 +525,10 @@ mod tests {
 
     #[test]
     fn find_matches_normalized_requests() {
-        let mut req =
-            PlanRequest::new("tiny_mlp#0123456789abcdef", 256, "4xV100", 4)
-                .with_billing(crate::cost::pricing::Billing::OnDemand);
+        let mut req = PlanRequest::builder("tiny_mlp#0123456789abcdef", 256, "4xV100", 4)
+            .billing(crate::cost::pricing::Billing::OnDemand)
+            .build()
+            .unwrap();
         let mut store = PlanStore::load(&std::env::temp_dir().join("x.json")).unwrap();
         store.dirty = false;
         store.entries.push(sample_plan());

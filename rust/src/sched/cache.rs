@@ -14,9 +14,10 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::cluster::Cluster;
-use crate::coordinator::{Plan, Session};
+use crate::coordinator::{Plan, ProfiledPlan, Session};
 use crate::obs::{self, DriftSample};
 use crate::plan::Planner;
+use crate::serve::{PlanService, ServeOutcome, ServeRequest};
 use crate::sim::{simulate, SimConfig, SimResult};
 
 /// One cached (model, parallelism) measurement.
@@ -138,6 +139,10 @@ pub struct FrontierCache {
     key_prefix: String,
     /// The planner engine serving (and memoizing) every FT search.
     planner: Arc<Planner>,
+    /// Optional serve-layer front end: when attached, curve misses route
+    /// through it (admission control, sharded store, coalescing) instead
+    /// of calling the planner library directly.
+    service: Option<Arc<PlanService>>,
     entries: Mutex<HashMap<(String, u32), CurvePoint>>,
     stats: Mutex<CacheStats>,
 }
@@ -188,9 +193,26 @@ impl FrontierCache {
             est_cluster: assumed,
             key_prefix,
             planner,
+            service: None,
             entries: Mutex::new(HashMap::new()),
             stats: Mutex::new(CacheStats::default()),
         }
+    }
+
+    /// Route this cache's curve misses through a serve-layer front end,
+    /// so scheduler re-plans share the service's admission control,
+    /// sharded store, and hit/shed metrics with every other tenant. The
+    /// service must wrap the same planner this cache searches on
+    /// (otherwise its store and the cache's sessions would disagree on
+    /// keys); sheds fall back to the direct planner path, so allocation
+    /// always completes.
+    pub fn with_service(mut self, service: Arc<PlanService>) -> Self {
+        assert!(
+            Arc::ptr_eq(service.planner(), &self.planner),
+            "serve layer must wrap this cache's planner"
+        );
+        self.service = Some(service);
+        self
     }
 
     /// The planner engine serving this cache.
@@ -236,6 +258,38 @@ impl FrontierCache {
         *self.stats.lock().unwrap()
     }
 
+    /// Profile `missing` parallelisms through the attached serve layer
+    /// when one exists (so scheduler re-plans share its admission control
+    /// and hit/shed accounting), falling back to the direct
+    /// [`Session::profile_plans`] path for sheds — the scheduler must
+    /// always get its curve, even when the service is saturated.
+    fn profiled_plans(&self, session: &Session, missing: &[u32]) -> Vec<ProfiledPlan> {
+        let Some(service) = &self.service else {
+            return session.profile_plans(missing);
+        };
+        let requests: Vec<ServeRequest> = missing
+            .iter()
+            .map(|&d| ServeRequest::new("sched", session.request_at(d)))
+            .collect();
+        let mut by_d: HashMap<u32, ProfiledPlan> = HashMap::new();
+        let mut shed: Vec<u32> = Vec::new();
+        for (&d, outcome) in missing.iter().zip(service.serve_batch(&requests)) {
+            match outcome {
+                Ok(ServeOutcome::Served(resp)) => {
+                    by_d.insert(d, session.profiled_from(d, &resp.result));
+                }
+                Ok(ServeOutcome::Rejected(_)) | Err(_) => shed.push(d),
+            }
+        }
+        for pp in session.profile_plans(&shed) {
+            by_d.insert(pp.point.parallelism, pp);
+        }
+        missing
+            .iter()
+            .map(|d| by_d.remove(d).expect("every miss served or profiled directly"))
+            .collect()
+    }
+
     /// Profile `model@batch` at every requested parallelism, serving from
     /// the cache where possible. Misses run one `Session::profile_plans`
     /// sweep on the shared planner (so the thread-budget split, memory
@@ -267,12 +321,10 @@ impl FrontierCache {
                 .planner
                 .graph(model, batch)
                 .unwrap_or_else(|e| panic!("cannot resolve `{model}` in job spec: {e}"));
-            let session = Session::with_planner(
-                (*g).clone(),
-                self.est_cluster.clone(),
-                Arc::clone(&self.planner),
-            );
-            let plans = session.profile_plans(&missing);
+            let session = Session::builder((*g).clone(), self.est_cluster.clone())
+                .planner(Arc::clone(&self.planner))
+                .build();
+            let plans = self.profiled_plans(&session, &missing);
             let mut computed: Vec<CurvePoint> = Vec::with_capacity(plans.len());
             for pp in &plans {
                 let d = pp.point.parallelism;

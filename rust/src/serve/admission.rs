@@ -1,0 +1,197 @@
+//! Admission control: bounded per-shard queues with a deadline /
+//! queue-depth shed policy.
+//!
+//! Overload produces a typed [`Rejected`] response instead of an
+//! unbounded queue: a request is shed when its shard already holds
+//! `max_queue_depth` admitted requests ([`RejectReason::QueueFull`]), or
+//! when the caller's deadline is provably unmeetable given the queue
+//! ahead of it and the shard's moving-average service time
+//! ([`RejectReason::Deadline`]). Admission is pure accounting — no
+//! clocks, no sleeping — so shed decisions are deterministic for a given
+//! sequence of admissions and releases (pinned by `tests/serve.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Why a request was shed (see module docs for the policy).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RejectReason {
+    /// The shard's admission queue is full.
+    QueueFull {
+        /// Admitted requests ahead at shed time.
+        depth: usize,
+        /// The shard's configured depth limit.
+        limit: usize,
+    },
+    /// The caller's deadline cannot be met: the estimated wait behind the
+    /// queue already exceeds it.
+    Deadline {
+        /// Estimated wait given queue depth × average service time.
+        est_wait: Duration,
+        /// The caller's deadline.
+        deadline: Duration,
+    },
+}
+
+impl RejectReason {
+    /// Stable label for metrics/trace attributes.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull { .. } => "queue_full",
+            RejectReason::Deadline { .. } => "deadline",
+        }
+    }
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull { depth, limit } => {
+                write!(f, "queue full ({depth}/{limit} admitted)")
+            }
+            RejectReason::Deadline { est_wait, deadline } => write!(
+                f,
+                "deadline unmeetable (est wait {:.1} ms > deadline {:.1} ms)",
+                est_wait.as_secs_f64() * 1e3,
+                deadline.as_secs_f64() * 1e3
+            ),
+        }
+    }
+}
+
+/// A typed shed response: which shard refused the request and why.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rejected {
+    /// Why the request was shed.
+    pub reason: RejectReason,
+    /// The shard that shed it.
+    pub shard: usize,
+}
+
+/// Per-shard admission state: an atomic depth gauge plus an exponential
+/// moving average of observed service times (fed by [`Permit`] drops)
+/// used for the deadline estimate.
+pub struct Admission {
+    limit: usize,
+    depth: AtomicUsize,
+    ema_secs: Mutex<f64>,
+}
+
+/// EMA smoothing factor for observed service times.
+const EMA_ALPHA: f64 = 0.2;
+
+impl Admission {
+    /// Admission control allowing at most `limit` concurrent admitted
+    /// requests (0 = shed everything that misses the store).
+    pub fn new(limit: usize) -> Self {
+        Self { limit, depth: AtomicUsize::new(0), ema_secs: Mutex::new(0.0) }
+    }
+
+    /// Currently admitted requests.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// The moving-average service time the deadline policy works from.
+    pub fn est_service_time(&self) -> Duration {
+        Duration::from_secs_f64(*self.ema_secs.lock().unwrap())
+    }
+
+    /// Fold one observed service time into the moving average. Called by
+    /// [`Permit`] drops; public so traffic drivers and tests can seed the
+    /// estimate deterministically.
+    pub fn note_service_time(&self, took: Duration) {
+        let mut ema = self.ema_secs.lock().unwrap();
+        let secs = took.as_secs_f64();
+        *ema = if *ema == 0.0 { secs } else { *ema + EMA_ALPHA * (secs - *ema) };
+    }
+
+    /// Try to admit a request. On success the returned [`Permit`] holds a
+    /// queue slot until dropped (recording its service time); on
+    /// overload, a typed [`RejectReason`] says exactly why.
+    pub fn try_admit(&self, deadline: Option<Duration>) -> Result<Permit<'_>, RejectReason> {
+        let depth = self.depth.fetch_add(1, Ordering::AcqRel);
+        if depth >= self.limit {
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+            return Err(RejectReason::QueueFull { depth, limit: self.limit });
+        }
+        if let Some(deadline) = deadline {
+            // `depth` requests are ahead of us; each costs ~one average
+            // service time before our turn.
+            let est_wait =
+                Duration::from_secs_f64(*self.ema_secs.lock().unwrap() * depth as f64);
+            if est_wait > deadline {
+                self.depth.fetch_sub(1, Ordering::AcqRel);
+                return Err(RejectReason::Deadline { est_wait, deadline });
+            }
+        }
+        Ok(Permit { admission: self, started: Instant::now() })
+    }
+}
+
+/// RAII admission slot: dropping it releases the queue slot and feeds the
+/// observed service time back into the shard's moving average.
+pub struct Permit<'a> {
+    admission: &'a Admission,
+    started: Instant,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.admission.note_service_time(self.started.elapsed());
+        self.admission.depth.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_limit_sheds_deterministically() {
+        let adm = Admission::new(2);
+        let p1 = adm.try_admit(None).unwrap();
+        let p2 = adm.try_admit(None).unwrap();
+        let shed = adm.try_admit(None).unwrap_err();
+        assert_eq!(shed, RejectReason::QueueFull { depth: 2, limit: 2 });
+        drop(p1);
+        assert!(adm.try_admit(None).is_ok(), "released slot re-admits");
+        drop(p2);
+    }
+
+    #[test]
+    fn zero_limit_sheds_everything() {
+        let adm = Admission::new(0);
+        for _ in 0..3 {
+            assert_eq!(adm.try_admit(None).unwrap_err().name(), "queue_full");
+        }
+        assert_eq!(adm.depth(), 0, "failed admissions leak no depth");
+    }
+
+    #[test]
+    fn deadline_sheds_when_queue_ahead_is_too_slow() {
+        let adm = Admission::new(8);
+        adm.note_service_time(Duration::from_millis(100));
+        // empty queue: even a tiny deadline admits (nothing ahead).
+        drop(adm.try_admit(Some(Duration::from_micros(1))).unwrap());
+        let _held = adm.try_admit(None).unwrap();
+        // one request ahead at ~100ms each > 1ms deadline: shed.
+        let shed = adm.try_admit(Some(Duration::from_millis(1))).unwrap_err();
+        assert_eq!(shed.name(), "deadline");
+        assert!(shed.to_string().contains("deadline"), "{shed}");
+        // a generous deadline still admits.
+        drop(adm.try_admit(Some(Duration::from_secs(5))).unwrap());
+    }
+
+    #[test]
+    fn permits_feed_the_service_time_ema() {
+        let adm = Admission::new(4);
+        assert_eq!(adm.est_service_time(), Duration::ZERO);
+        adm.note_service_time(Duration::from_millis(50));
+        assert_eq!(adm.est_service_time(), Duration::from_millis(50));
+        adm.note_service_time(Duration::from_millis(150));
+        let ema = adm.est_service_time().as_secs_f64();
+        assert!(ema > 0.05 && ema < 0.15, "EMA moves toward new samples: {ema}");
+    }
+}

@@ -1,0 +1,275 @@
+//! Request coalescing beyond single-flight: same-(graph, batch, cluster)
+//! requests arriving within a window are batched into **one shared-space
+//! sweep** across the union of their parallelisms.
+//!
+//! Single-flight (PR 4) dedups *identical* requests. PaSE-style workloads
+//! (PAPERS.md) are dominated by *almost*-identical ones — the same model
+//! probed at many device counts, where all the expensive work (graph
+//! resolution, spine, elimination schedule, and after the first leaf the
+//! recorded-schedule replay) is shared. The coalescer makes that sharing
+//! explicit: the first arrival for a [`CoalesceKey`] becomes the group
+//! *leader*, waits out a short window while later arrivals (*riders*)
+//! register their parallelisms, then runs one sweep over the sorted
+//! union; every member gets exactly the slice it asked for.
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::ft::FtResult;
+use crate::plan::PlanRequest;
+
+/// The coalescing identity of a request: everything in the plan key
+/// *except* parallelism (and threads, which is never identity). Requests
+/// agreeing on this can share one sweep.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CoalesceKey {
+    graph_id: String,
+    batch: i64,
+    cluster_fp: String,
+    mode_tag: &'static str,
+    billing_tag: &'static str,
+    filter_tag: &'static str,
+    max_mesh_dims: usize,
+}
+
+impl CoalesceKey {
+    /// The coalescing identity of a (canonicalized) request.
+    pub fn of(req: &PlanRequest) -> Self {
+        Self {
+            graph_id: req.graph_id.clone(),
+            batch: req.batch,
+            cluster_fp: req.cluster_fp.clone(),
+            mode_tag: crate::plan::mode_tag(req.mode),
+            billing_tag: crate::plan::billing_tag(req.billing),
+            filter_tag: req.filter.tag(),
+            max_mesh_dims: req.max_mesh_dims,
+        }
+    }
+}
+
+/// What a [`Coalescer::join`] call can report about its group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupOutcome {
+    /// Did this caller lead the sweep (false = rider)?
+    pub led: bool,
+    /// Total members that shared the sweep (1 = nobody coalesced).
+    pub members: usize,
+    /// Distinct parallelisms in the swept union.
+    pub union: usize,
+}
+
+struct GroupState {
+    /// Accepting riders? Closed by the leader when the window elapses (or
+    /// early, when the group hits `max_group` members).
+    open: bool,
+    wanted: BTreeSet<u32>,
+    members: usize,
+    /// The sweep's outcome (error as text: `anyhow::Error` isn't Clone).
+    done: Option<Result<HashMap<u32, Arc<FtResult>>, String>>,
+}
+
+struct Group {
+    state: Mutex<GroupState>,
+    cv: Condvar,
+}
+
+/// The coalescing front: one open group per [`CoalesceKey`] at a time.
+pub struct Coalescer {
+    window: Duration,
+    max_group: usize,
+    groups: Mutex<HashMap<CoalesceKey, Arc<Group>>>,
+}
+
+impl Coalescer {
+    /// Coalesce arrivals within `window` of a group's leader, capping
+    /// groups at `max_group` members (a full group closes early).
+    pub fn new(window: Duration, max_group: usize) -> Self {
+        Self { window, max_group: max_group.max(1), groups: Mutex::new(HashMap::new()) }
+    }
+
+    /// Join (or lead) the group for `key`, asking for `parallelism`.
+    ///
+    /// The leader blocks for the window, runs `sweep` over the sorted
+    /// union of the group's parallelisms, and publishes the results;
+    /// riders block until the leader publishes and take their slice.
+    /// `sweep` runs on exactly one thread per group.
+    pub fn join(
+        &self,
+        key: &CoalesceKey,
+        parallelism: u32,
+        sweep: impl FnOnce(&[u32]) -> anyhow::Result<HashMap<u32, Arc<FtResult>>>,
+    ) -> anyhow::Result<(Arc<FtResult>, GroupOutcome)> {
+        // Ride an open group when one exists; otherwise found a new one.
+        let group = {
+            let mut groups = self.groups.lock().unwrap();
+            if let Some(g) = groups.get(key).cloned() {
+                let mut st = g.state.lock().unwrap();
+                if st.open {
+                    st.wanted.insert(parallelism);
+                    st.members += 1;
+                    let full = st.members >= self.max_group;
+                    if full {
+                        // full: stop accepting riders so the leader sweeps
+                        // as soon as its window elapses.
+                        st.open = false;
+                        drop(st);
+                        groups.remove(key);
+                    }
+                    return self.ride(&g, parallelism);
+                }
+                // closed but not yet unlinked: replace it with our group.
+            }
+            let g = Arc::new(Group {
+                state: Mutex::new(GroupState {
+                    open: true,
+                    wanted: BTreeSet::from([parallelism]),
+                    members: 1,
+                    done: None,
+                }),
+                cv: Condvar::new(),
+            });
+            groups.insert(key.clone(), g.clone());
+            g
+        };
+
+        // Leader: wait out the window (no locks held), then close.
+        if !self.window.is_zero() {
+            std::thread::sleep(self.window);
+        }
+        {
+            let mut groups = self.groups.lock().unwrap();
+            if groups.get(key).is_some_and(|g| Arc::ptr_eq(g, &group)) {
+                groups.remove(key);
+            }
+        }
+        let (union, members) = {
+            let mut st = group.state.lock().unwrap();
+            st.open = false;
+            (st.wanted.iter().copied().collect::<Vec<u32>>(), st.members)
+        };
+
+        let result = sweep(&union);
+        let published = match &result {
+            Ok(map) => Ok(map.clone()),
+            Err(e) => Err(format!("{e:#}")),
+        };
+        {
+            let mut st = group.state.lock().unwrap();
+            st.done = Some(published);
+        }
+        group.cv.notify_all();
+
+        let outcome = GroupOutcome { led: true, members, union: union.len() };
+        let map = result?;
+        let mine = map.get(&parallelism).cloned().ok_or_else(|| {
+            anyhow::anyhow!("coalesced sweep missing parallelism {parallelism}")
+        })?;
+        Ok((mine, outcome))
+    }
+
+    fn ride(
+        &self,
+        group: &Arc<Group>,
+        parallelism: u32,
+    ) -> anyhow::Result<(Arc<FtResult>, GroupOutcome)> {
+        let mut st = group.state.lock().unwrap();
+        while st.done.is_none() {
+            st = group.cv.wait(st).unwrap();
+        }
+        let outcome =
+            GroupOutcome { led: false, members: st.members, union: st.wanted.len() };
+        match st.done.as_ref().unwrap() {
+            Ok(map) => map
+                .get(&parallelism)
+                .cloned()
+                .ok_or_else(|| {
+                    anyhow::anyhow!("coalesced sweep missing parallelism {parallelism}")
+                })
+                .map(|r| (r, outcome)),
+            Err(msg) => Err(anyhow::anyhow!("coalesced sweep failed: {msg}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn key(graph: &str) -> CoalesceKey {
+        let req = PlanRequest::builder(graph, 256, "fp", 1).build().unwrap();
+        CoalesceKey::of(&req)
+    }
+
+    fn fake_result() -> Arc<FtResult> {
+        Arc::new(FtResult {
+            frontier: crate::frontier::Frontier::default(),
+            configs: Arc::new(Vec::new()),
+            forced: HashMap::new(),
+            n_heuristic: 0,
+            log2_space: 0.0,
+        })
+    }
+
+    #[test]
+    fn coalesce_key_ignores_parallelism_and_threads() {
+        let a = PlanRequest::builder("tiny", 256, "fp", 2).build().unwrap();
+        let b = PlanRequest::builder("tiny", 256, "fp", 8).threads(3).build().unwrap();
+        assert_eq!(CoalesceKey::of(&a), CoalesceKey::of(&b));
+        let c = PlanRequest::builder("tiny", 128, "fp", 2).build().unwrap();
+        assert_ne!(CoalesceKey::of(&a), CoalesceKey::of(&c));
+    }
+
+    #[test]
+    fn concurrent_joiners_share_one_sweep() {
+        let co = Arc::new(Coalescer::new(Duration::from_millis(120), 32));
+        let sweeps = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for d in [1u32, 2, 4, 8, 2, 4] {
+            let co = Arc::clone(&co);
+            let sweeps = Arc::clone(&sweeps);
+            handles.push(std::thread::spawn(move || {
+                co.join(&key("tiny"), d, |union| {
+                    sweeps.fetch_add(1, Ordering::SeqCst);
+                    Ok(union.iter().map(|&d| (d, fake_result())).collect())
+                })
+                .unwrap()
+            }));
+        }
+        let outcomes: Vec<GroupOutcome> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap().1)
+            .collect();
+        assert_eq!(sweeps.load(Ordering::SeqCst), 1, "one sweep for the burst");
+        assert_eq!(outcomes.iter().filter(|o| o.led).count(), 1, "one leader");
+        let lead = outcomes.iter().find(|o| o.led).unwrap();
+        assert_eq!(lead.members, 6);
+        assert_eq!(lead.union, 4, "union of {{1,2,4,8}}");
+    }
+
+    #[test]
+    fn full_group_closes_early_and_next_arrival_leads() {
+        let co = Coalescer::new(Duration::ZERO, 2);
+        // window zero: every join leads its own (singleton) group.
+        let (_, o) = co
+            .join(&key("tiny"), 4, |u| Ok(u.iter().map(|&d| (d, fake_result())).collect()))
+            .unwrap();
+        assert!(o.led);
+        assert_eq!(o.members, 1);
+    }
+
+    #[test]
+    fn sweep_errors_propagate_to_the_leader() {
+        let co = Coalescer::new(Duration::ZERO, 8);
+        let err = co
+            .join(&key("tiny"), 4, |_| anyhow::bail!("table flip"))
+            .unwrap_err();
+        assert!(err.to_string().contains("table flip"));
+        // the group unlinks on error: a retry sweeps fresh.
+        let ok = co.join(&key("tiny"), 4, |u| {
+            Ok(u.iter().map(|&d| (d, fake_result())).collect())
+        });
+        assert!(ok.is_ok());
+    }
+}

@@ -1,0 +1,556 @@
+//! Planner-as-a-service: a long-running, concurrent, multi-tenant front
+//! end over the shared [`Planner`].
+//!
+//! The memoized planner (PR 4) is a library: nothing bounds its memory,
+//! sheds load under overload, or batches the almost-identical requests
+//! that dominate real auto-parallelism workloads. [`PlanService`] adds
+//! the serving discipline, one concern per submodule:
+//!
+//! - [`shard`] — a **sharded plan store**, hash-partitioned by
+//!   graph-content key, each shard an LRU under a byte budget with
+//!   in-flight pinning; evictions are mirrored into the planner memo
+//!   ([`Planner::evict`]) and the `serve.evictions` counter.
+//! - [`admission`] — **admission control / load-shedding**: bounded
+//!   per-shard queues with a deadline/queue-depth policy returning a
+//!   typed [`Rejected`] instead of blocking.
+//! - [`coalesce`] — **request coalescing beyond single-flight**:
+//!   same-(graph, batch, cluster) arrivals within a window batch into one
+//!   shared-space sweep across the union of their parallelisms.
+//! - [`traffic`] — a **synthetic heavy-tailed workload**: Zipf over the
+//!   model zoo with bursty arrivals, driving the `serve` CLI subcommand,
+//!   `exp serve`, and `bench_serve`.
+//!
+//! Everything observable lands in the service's [`Metrics`] registry and
+//! in `serve.request` / `serve.coalesce` spans + `serve.shed` events, so
+//! `--trace` and `--metrics` cover the serving path end to end.
+
+pub mod admission;
+pub mod coalesce;
+pub mod shard;
+pub mod traffic;
+
+pub use admission::{Admission, Permit, RejectReason, Rejected};
+pub use coalesce::{CoalesceKey, Coalescer, GroupOutcome};
+pub use shard::{approx_result_bytes, PinGuard, ShardedStore, StoreStats};
+pub use traffic::{drive, generate, Arrival, DriveReport, TrafficCfg};
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::ft::FtResult;
+use crate::obs::{self, Attr, Metrics};
+use crate::plan::{PlanRequest, Planner, Served};
+
+// Service metric names (in the service's own registry, like the planner).
+const C_REQUESTS: &str = "serve.requests";
+const C_HITS: &str = "serve.hits";
+const C_MISSES: &str = "serve.misses";
+const C_SHED: &str = "serve.shed";
+const C_GROUPS: &str = "serve.coalesce.groups";
+const C_RIDERS: &str = "serve.coalesce.riders";
+const C_EVICTIONS: &str = "serve.evictions";
+const H_LATENCY: &str = "serve.latency";
+const H_UNION: &str = "serve.coalesce.union";
+
+/// Serve-layer configuration (see module docs for what each knob gates).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Plan-store shards (hash-partitioned by graph-content key).
+    pub shards: usize,
+    /// Per-shard LRU byte budget ([`approx_result_bytes`] estimates).
+    pub shard_budget_bytes: usize,
+    /// Per-shard admission limit (0 = shed every store miss).
+    pub max_queue_depth: usize,
+    /// Coalescing window a group leader waits for riders.
+    pub coalesce_window: Duration,
+    /// Maximum members per coalesced group (a full group closes early).
+    pub max_coalesce_group: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            shards: 4,
+            shard_budget_bytes: 8 << 20,
+            max_queue_depth: 64,
+            coalesce_window: Duration::from_millis(2),
+            max_coalesce_group: 32,
+        }
+    }
+}
+
+/// One tenant's plan request plus serving options.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    /// Who is asking (metrics/trace label only — no authz semantics).
+    pub tenant: String,
+    /// The plan being requested.
+    pub plan: PlanRequest,
+    /// Client deadline for the admission policy (None = patient).
+    pub deadline: Option<Duration>,
+}
+
+impl ServeRequest {
+    /// A patient request from `tenant`.
+    pub fn new(tenant: &str, plan: PlanRequest) -> Self {
+        Self { tenant: tenant.to_string(), plan, deadline: None }
+    }
+
+    /// Set the client deadline.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Where a served response came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeSource {
+    /// Straight from the sharded plan store (no planner involvement).
+    Store,
+    /// This caller led a coalesced sweep; the planner outcome for its own
+    /// slice is attached.
+    Swept(Served),
+    /// This caller rode another member's sweep and took its slice.
+    Coalesced,
+}
+
+impl ServeSource {
+    /// Stable label for metrics/trace attributes.
+    pub fn name(self) -> &'static str {
+        match self {
+            ServeSource::Store => "store_hit",
+            ServeSource::Swept(_) => "swept",
+            ServeSource::Coalesced => "coalesced",
+        }
+    }
+
+    /// Did this response avoid running a cold/incremental search in this
+    /// caller (store hit, planner warm hit, or a ride on someone else's
+    /// sweep)?
+    pub fn is_warm(self) -> bool {
+        match self {
+            ServeSource::Store | ServeSource::Coalesced => true,
+            ServeSource::Swept(s) => s.is_warm(),
+        }
+    }
+}
+
+/// A successfully served plan.
+#[derive(Clone)]
+pub struct ServeResponse {
+    /// The search result (shared across callers).
+    pub result: Arc<FtResult>,
+    /// Where it came from.
+    pub source: ServeSource,
+    /// The shard that served it.
+    pub shard: usize,
+    /// Coalescing outcome (None for store hits).
+    pub group: Option<GroupOutcome>,
+    /// End-to-end serve latency.
+    pub latency: Duration,
+}
+
+/// What a [`PlanService::serve`] call produced: a plan, or a typed shed.
+#[derive(Clone)]
+pub enum ServeOutcome {
+    /// The request was served.
+    Served(ServeResponse),
+    /// The request was shed by admission control.
+    Rejected(Rejected),
+}
+
+impl ServeOutcome {
+    /// The response, if served.
+    pub fn served(&self) -> Option<&ServeResponse> {
+        match self {
+            ServeOutcome::Served(r) => Some(r),
+            ServeOutcome::Rejected(_) => None,
+        }
+    }
+
+    /// The shed, if rejected.
+    pub fn rejected(&self) -> Option<&Rejected> {
+        match self {
+            ServeOutcome::Served(_) => None,
+            ServeOutcome::Rejected(r) => Some(r),
+        }
+    }
+}
+
+/// Counter snapshot of a service (compatibility view over
+/// [`PlanService::metrics`], mirroring [`crate::plan::PlannerStats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Requests that reached [`PlanService::serve`]/`serve_batch`.
+    pub requests: usize,
+    /// Served from the sharded store without touching the planner.
+    pub hits: usize,
+    /// Served by running (or riding) a sweep.
+    pub misses: usize,
+    /// Shed by admission control.
+    pub shed: usize,
+    /// Coalesced groups swept.
+    pub groups: usize,
+    /// Members that rode another caller's sweep.
+    pub riders: usize,
+    /// Store entries evicted (mirrored into the planner memo).
+    pub evictions: usize,
+}
+
+impl ServeStats {
+    /// Fraction of non-shed requests served warm from the store.
+    pub fn warm_hit_rate(&self) -> f64 {
+        let served = self.hits + self.misses;
+        if served == 0 {
+            0.0
+        } else {
+            self.hits as f64 / served as f64
+        }
+    }
+
+    /// Fraction of all requests shed.
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.requests as f64
+        }
+    }
+}
+
+/// The multi-tenant plan service (see module docs). All methods take
+/// `&self`; share it behind an `Arc` across serving threads.
+pub struct PlanService {
+    planner: Arc<Planner>,
+    cfg: ServeConfig,
+    store: ShardedStore,
+    admissions: Vec<Admission>,
+    coalescer: Coalescer,
+    metrics: Arc<Metrics>,
+}
+
+impl PlanService {
+    /// A service front end over `planner`.
+    pub fn new(planner: Arc<Planner>, cfg: ServeConfig) -> Self {
+        let store = ShardedStore::new(cfg.shards, cfg.shard_budget_bytes);
+        let admissions =
+            (0..store.n_shards()).map(|_| Admission::new(cfg.max_queue_depth)).collect();
+        let coalescer = Coalescer::new(cfg.coalesce_window, cfg.max_coalesce_group);
+        Self { planner, cfg, store, admissions, coalescer, metrics: Arc::new(Metrics::new()) }
+    }
+
+    /// The planner behind this service.
+    pub fn planner(&self) -> &Arc<Planner> {
+        &self.planner
+    }
+
+    /// The service configuration.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// This service's metrics registry: the [`ServeStats`] counters plus
+    /// `serve.latency` (hit/miss variants) and coalesced-union-size
+    /// histograms.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> ServeStats {
+        let c = |name: &str| self.metrics.counter(name) as usize;
+        ServeStats {
+            requests: c(C_REQUESTS),
+            hits: c(C_HITS),
+            misses: c(C_MISSES),
+            shed: c(C_SHED),
+            groups: c(C_GROUPS),
+            riders: c(C_RIDERS),
+            evictions: c(C_EVICTIONS),
+        }
+    }
+
+    /// Occupancy of the sharded store.
+    pub fn store_stats(&self) -> StoreStats {
+        self.store.stats()
+    }
+
+    /// Serve one request: store lookup, then admission, then a coalesced
+    /// sweep. Blocking (the coalescing window + the search); returns a
+    /// typed [`Rejected`] instead of queueing unboundedly. Errors are
+    /// reserved for malformed requests (unknown graph/cluster), never for
+    /// overload.
+    pub fn serve(&self, req: &ServeRequest) -> anyhow::Result<ServeOutcome> {
+        let t0 = Instant::now();
+        let mut sp = obs::span("serve.request");
+        self.metrics.inc(C_REQUESTS);
+        let key = self.planner.canonical_request(&req.plan)?;
+        let shard = self.store.shard_of(&key);
+        if sp.active() {
+            sp.attr_str("tenant", &req.tenant);
+            sp.attr_str("graph", &key.graph_id);
+            sp.attr_u64("parallelism", u64::from(key.parallelism));
+            sp.attr_u64("shard", shard as u64);
+        }
+
+        if let Some(result) = self.store.get(&key) {
+            let latency = t0.elapsed();
+            self.metrics.inc(C_HITS);
+            self.metrics.observe_latency(H_LATENCY, latency.as_secs_f64());
+            self.metrics.observe_latency("serve.latency.hit", latency.as_secs_f64());
+            sp.attr_str("served", "hit");
+            return Ok(ServeOutcome::Served(ServeResponse {
+                result,
+                source: ServeSource::Store,
+                shard,
+                group: None,
+                latency,
+            }));
+        }
+
+        let permit = match self.admissions[shard].try_admit(req.deadline) {
+            Ok(p) => p,
+            Err(reason) => {
+                self.metrics.inc(C_SHED);
+                self.metrics.inc(&format!("serve.shed.{}", reason.name()));
+                sp.attr_str("served", "shed");
+                sp.attr_str("reason", reason.name());
+                obs::event(
+                    "serve.shed",
+                    &[
+                        ("tenant", Attr::Str(req.tenant.clone())),
+                        ("graph", Attr::Str(key.graph_id.clone())),
+                        ("shard", Attr::U64(shard as u64)),
+                        ("reason", Attr::Str(reason.name().to_string())),
+                    ],
+                );
+                return Ok(ServeOutcome::Rejected(Rejected { reason, shard }));
+            }
+        };
+
+        // Coalesce: lead (or ride) one sweep for this model's group. The
+        // leader's own slice outcome is smuggled out via `my_served`.
+        let ckey = CoalesceKey::of(&key);
+        let my_served = Cell::new(None);
+        let joined = self.coalescer.join(&ckey, key.parallelism, |union| {
+            let swept = self.sweep_union(&key, union)?;
+            my_served.set(swept.get(&key.parallelism).map(|(_, s)| *s));
+            Ok(swept.into_iter().map(|(d, (r, _))| (d, r)).collect())
+        });
+        drop(permit);
+        let (result, group) = joined?;
+
+        let source = match my_served.get() {
+            Some(s) => ServeSource::Swept(s),
+            None => ServeSource::Coalesced,
+        };
+        if group.led {
+            self.metrics.inc(C_GROUPS);
+            self.metrics.add(C_RIDERS, (group.members - 1) as u64);
+            self.metrics.observe_size(H_UNION, group.union as f64);
+        }
+        let latency = t0.elapsed();
+        self.metrics.inc(C_MISSES);
+        self.metrics.observe_latency(H_LATENCY, latency.as_secs_f64());
+        self.metrics.observe_latency("serve.latency.miss", latency.as_secs_f64());
+        if sp.active() {
+            sp.attr_str("served", "miss");
+            sp.attr_str("source", source.name());
+            sp.attr_u64("group_members", group.members as u64);
+        }
+        Ok(ServeOutcome::Served(ServeResponse {
+            result,
+            source,
+            shard,
+            group: Some(group),
+            latency,
+        }))
+    }
+
+    /// Serve a whole burst deterministically: store lookups and admission
+    /// in arrival order, then the admitted misses grouped by
+    /// [`CoalesceKey`] and swept once per group — no windows, no threads,
+    /// so the outcome sequence is a pure function of the request sequence
+    /// (pinned by `tests/serve.rs`). The scheduler cache routes its curve
+    /// misses through this.
+    pub fn serve_batch(&self, reqs: &[ServeRequest]) -> Vec<anyhow::Result<ServeOutcome>> {
+        let t0 = Instant::now();
+        let mut out: Vec<Option<anyhow::Result<ServeOutcome>>> =
+            reqs.iter().map(|_| None).collect();
+        // (key, member indices) per group, in first-arrival order.
+        let mut groups: Vec<(CoalesceKey, PlanRequest, Vec<(usize, PlanRequest)>)> = Vec::new();
+        let mut permits = Vec::new();
+        for (i, req) in reqs.iter().enumerate() {
+            let mut sp = obs::span("serve.request");
+            self.metrics.inc(C_REQUESTS);
+            let key = match self.planner.canonical_request(&req.plan) {
+                Ok(k) => k,
+                Err(e) => {
+                    out[i] = Some(Err(e));
+                    continue;
+                }
+            };
+            let shard = self.store.shard_of(&key);
+            if sp.active() {
+                sp.attr_str("tenant", &req.tenant);
+                sp.attr_str("graph", &key.graph_id);
+                sp.attr_u64("parallelism", u64::from(key.parallelism));
+                sp.attr_u64("shard", shard as u64);
+            }
+            if let Some(result) = self.store.get(&key) {
+                self.metrics.inc(C_HITS);
+                let latency = t0.elapsed();
+                self.metrics.observe_latency(H_LATENCY, latency.as_secs_f64());
+                self.metrics.observe_latency("serve.latency.hit", latency.as_secs_f64());
+                sp.attr_str("served", "hit");
+                out[i] = Some(Ok(ServeOutcome::Served(ServeResponse {
+                    result,
+                    source: ServeSource::Store,
+                    shard,
+                    group: None,
+                    latency,
+                })));
+                continue;
+            }
+            match self.admissions[shard].try_admit(req.deadline) {
+                Ok(p) => permits.push(p),
+                Err(reason) => {
+                    self.metrics.inc(C_SHED);
+                    self.metrics.inc(&format!("serve.shed.{}", reason.name()));
+                    sp.attr_str("served", "shed");
+                    sp.attr_str("reason", reason.name());
+                    obs::event(
+                        "serve.shed",
+                        &[
+                            ("tenant", Attr::Str(req.tenant.clone())),
+                            ("shard", Attr::U64(shard as u64)),
+                            ("reason", Attr::Str(reason.name().to_string())),
+                        ],
+                    );
+                    out[i] = Some(Ok(ServeOutcome::Rejected(Rejected { reason, shard })));
+                    continue;
+                }
+            }
+            sp.attr_str("served", "miss");
+            let ckey = CoalesceKey::of(&key);
+            match groups.iter_mut().find(|(k, _, _)| *k == ckey) {
+                Some((_, _, members)) => members.push((i, key)),
+                None => groups.push((ckey, key.clone(), vec![(i, key)])),
+            }
+        }
+
+        for (_, proto, members) in groups {
+            let mut union: Vec<u32> = members.iter().map(|(_, k)| k.parallelism).collect();
+            union.sort_unstable();
+            union.dedup();
+            let swept = self.sweep_union(&proto, &union);
+            let outcome = GroupOutcome {
+                led: false,
+                members: members.len(),
+                union: union.len(),
+            };
+            self.metrics.inc(C_GROUPS);
+            self.metrics.add(C_RIDERS, (members.len() - 1) as u64);
+            self.metrics.observe_size(H_UNION, union.len() as f64);
+            for (slot, (i, key)) in members.iter().enumerate() {
+                out[*i] = Some(match &swept {
+                    Ok(map) => {
+                        let (result, served) = map[&key.parallelism].clone();
+                        let shard = self.store.shard_of(key);
+                        let latency = t0.elapsed();
+                        self.metrics.inc(C_MISSES);
+                        self.metrics.observe_latency(H_LATENCY, latency.as_secs_f64());
+                        self.metrics
+                            .observe_latency("serve.latency.miss", latency.as_secs_f64());
+                        let source = if slot == 0 {
+                            ServeSource::Swept(served)
+                        } else {
+                            ServeSource::Coalesced
+                        };
+                        Ok(ServeOutcome::Served(ServeResponse {
+                            result,
+                            source,
+                            shard,
+                            group: Some(GroupOutcome { led: slot == 0, ..outcome }),
+                            latency,
+                        }))
+                    }
+                    Err(e) => Err(anyhow::anyhow!("coalesced sweep failed: {e:#}")),
+                });
+            }
+        }
+        drop(permits);
+        out.into_iter()
+            .map(|o| o.expect("every request produced an outcome"))
+            .collect()
+    }
+
+    /// Pre-warm the store with `req`'s plan, bypassing admission control
+    /// (operational cache warming; also how tests make hits reachable
+    /// under a zero-depth queue). Returns how the planner produced it.
+    pub fn warm(&self, req: &PlanRequest) -> anyhow::Result<Served> {
+        let key = self.planner.canonical_request(req)?;
+        let pin = self.store.pin(&key);
+        let resp = self.planner.plan(&key)?;
+        self.insert_and_evict(&key, resp.result);
+        drop(pin);
+        self.settle_budget();
+        Ok(resp.served)
+    }
+
+    /// One shared-space sweep over `union` parallelisms of `proto`'s
+    /// model. Every swept slice is pinned, planned, and inserted into the
+    /// sharded store; evictions are mirrored into the planner memo.
+    fn sweep_union(
+        &self,
+        proto: &PlanRequest,
+        union: &[u32],
+    ) -> anyhow::Result<HashMap<u32, (Arc<FtResult>, Served)>> {
+        let mut sp = obs::span("serve.coalesce");
+        if sp.active() {
+            sp.attr_str("graph", &proto.graph_id);
+            sp.attr_u64("union", union.len() as u64);
+        }
+        let mut swept = HashMap::with_capacity(union.len());
+        // Pins live until every member has taken its slice (we return
+        // Arcs, so eviction after that is harmless).
+        let mut pins = Vec::with_capacity(union.len());
+        for &d in union {
+            let req = proto
+                .to_builder()
+                .parallelism(d)
+                .build()
+                .map_err(|e| anyhow::anyhow!("invalid sweep slice: {e}"))?;
+            pins.push(self.store.pin(&req));
+            let resp = self.planner.plan(&req)?;
+            self.insert_and_evict(&req, resp.result.clone());
+            swept.insert(d, (resp.result, resp.served));
+        }
+        // every member gets its slice from the returned Arcs, so once the
+        // pins drop the sweep's entries are ordinary LRU citizens — settle
+        // any overshoot the pinned working set was allowed.
+        drop(pins);
+        self.settle_budget();
+        Ok(swept)
+    }
+
+    fn insert_and_evict(&self, key: &PlanRequest, result: Arc<FtResult>) {
+        for victim in self.store.insert(key, result) {
+            self.planner.evict(&victim);
+            self.metrics.inc(C_EVICTIONS);
+        }
+    }
+
+    /// Re-enforce shard budgets after a pinned working set overshot
+    /// (see [`ShardedStore::trim`]), mirroring victims into the planner
+    /// memo and the eviction counter.
+    fn settle_budget(&self) {
+        for victim in self.store.trim() {
+            self.planner.evict(&victim);
+            self.metrics.inc(C_EVICTIONS);
+        }
+    }
+}

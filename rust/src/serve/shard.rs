@@ -1,0 +1,207 @@
+//! The sharded plan store: hash-partitioned by graph-content key, each
+//! shard an LRU map under a byte budget.
+//!
+//! Partitioning by *graph content* (the canonical graph id is a
+//! structural content hash, see [`crate::plan::engine::graph_identity`])
+//! keeps every parallelism/mode/billing variant of one model in one
+//! shard, so a coalesced sweep touches exactly one shard's lock and one
+//! model's working set evicts against itself before it evicts others.
+//!
+//! Entries being computed by a coalesced group are **pinned**
+//! ([`ShardedStore::pin`]); eviction skips pinned keys, so an in-flight
+//! plan can never be evicted between its insert and the moment every
+//! rider of its group has taken its slice. Evicted keys are returned to
+//! the caller (the [`super::PlanService`]) which mirrors the eviction
+//! into the planner memo and the `serve.evictions` counter.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::ft::FtResult;
+use crate::plan::PlanRequest;
+
+/// Coarse per-entry footprint model: a frontier tuple is three `f64`s
+/// plus an amortized share of its provenance-trace chain. Exactness is
+/// not the point — proportionality is, so a byte budget translates into
+/// a stable entry budget per shard.
+pub fn approx_result_bytes(r: &FtResult) -> usize {
+    128 + 256 * r.frontier.len()
+}
+
+struct Entry {
+    result: Arc<FtResult>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Shard {
+    entries: HashMap<PlanRequest, Entry>,
+    /// Pin counts: keys with a live [`PinGuard`] are never evicted.
+    pinned: HashMap<PlanRequest, usize>,
+    bytes: usize,
+    clock: u64,
+}
+
+impl Shard {
+    fn touch(&mut self, key: &PlanRequest) -> Option<Arc<FtResult>> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.entries.get_mut(key).map(|e| {
+            e.last_used = clock;
+            e.result.clone()
+        })
+    }
+
+    /// Evict least-recently-used *unpinned* entries until residency is
+    /// back under `budget` (or only pinned entries remain).
+    fn evict_over(&mut self, budget: usize) -> Vec<PlanRequest> {
+        let mut evicted = Vec::new();
+        while self.bytes > budget {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(k, _)| !self.pinned.contains_key(*k))
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else { break };
+            if let Some(e) = self.entries.remove(&victim) {
+                self.bytes -= e.bytes;
+            }
+            evicted.push(victim);
+        }
+        evicted
+    }
+}
+
+/// Occupancy snapshot of one shard (or the whole store, summed).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Resident entries.
+    pub entries: usize,
+    /// Estimated resident bytes ([`approx_result_bytes`]).
+    pub bytes: usize,
+    /// Currently pinned (in-flight) keys.
+    pub pinned: usize,
+}
+
+/// N-shard LRU plan store. All methods take `&self`; each shard is an
+/// independent mutex, so traffic for different models never contends.
+pub struct ShardedStore {
+    shards: Vec<Mutex<Shard>>,
+    budget_bytes: usize,
+}
+
+impl ShardedStore {
+    /// A store with `shards` partitions, each allowed `budget_bytes` of
+    /// estimated residency.
+    pub fn new(shards: usize, budget_bytes: usize) -> Self {
+        let shards = (0..shards.max(1))
+            .map(|_| {
+                Mutex::new(Shard {
+                    entries: HashMap::new(),
+                    pinned: HashMap::new(),
+                    bytes: 0,
+                    clock: 0,
+                })
+            })
+            .collect();
+        Self { shards, budget_bytes }
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard a key hash-partitions to: FNV-1a over the graph-content
+    /// id and batch. Deliberately *not* over parallelism/mode/billing —
+    /// all variants of one model land together (see module docs).
+    pub fn shard_of(&self, key: &PlanRequest) -> usize {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &b in key.graph_id.as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        for &b in key.batch.to_le_bytes().iter() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        (h % self.shards.len() as u64) as usize
+    }
+
+    /// Look up a key, refreshing its recency on hit.
+    pub fn get(&self, key: &PlanRequest) -> Option<Arc<FtResult>> {
+        self.shards[self.shard_of(key)].lock().unwrap().touch(key)
+    }
+
+    /// Pin `key` against eviction while a coalesced group computes or
+    /// distributes it. Re-entrant (pins count); the guard unpins on drop.
+    pub fn pin(&self, key: &PlanRequest) -> PinGuard<'_> {
+        let shard = self.shard_of(key);
+        *self.shards[shard].lock().unwrap().pinned.entry(key.clone()).or_insert(0) += 1;
+        PinGuard { store: self, key: key.clone(), shard }
+    }
+
+    /// Insert (or replace) an entry, then evict least-recently-used
+    /// *unpinned* entries until the shard is back under its byte budget.
+    /// Returns the evicted keys so the caller can mirror the eviction
+    /// into the planner memo and its metrics. A pinned working set larger
+    /// than the budget is allowed to overshoot — correctness over quota.
+    pub fn insert(&self, key: &PlanRequest, result: Arc<FtResult>) -> Vec<PlanRequest> {
+        let bytes = approx_result_bytes(&result);
+        let mut shard = self.shards[self.shard_of(key)].lock().unwrap();
+        shard.clock += 1;
+        let clock = shard.clock;
+        if let Some(old) = shard
+            .entries
+            .insert(key.clone(), Entry { result, bytes, last_used: clock })
+        {
+            shard.bytes -= old.bytes;
+        }
+        shard.bytes += bytes;
+        shard.evict_over(self.budget_bytes)
+    }
+
+    /// Re-enforce every shard's budget (LRU order), returning the
+    /// victims. Complements [`ShardedStore::insert`]: a pinned working
+    /// set may overshoot the budget during a coalesced sweep, and nothing
+    /// else would bring residency back down once the pins drop.
+    pub fn trim(&self) -> Vec<PlanRequest> {
+        let mut evicted = Vec::new();
+        for shard in &self.shards {
+            evicted.extend(shard.lock().unwrap().evict_over(self.budget_bytes));
+        }
+        evicted
+    }
+
+    /// Occupancy summed over all shards.
+    pub fn stats(&self) -> StoreStats {
+        let mut s = StoreStats::default();
+        for shard in &self.shards {
+            let g = shard.lock().unwrap();
+            s.entries += g.entries.len();
+            s.bytes += g.bytes;
+            s.pinned += g.pinned.len();
+        }
+        s
+    }
+}
+
+/// RAII pin on one key (see [`ShardedStore::pin`]).
+pub struct PinGuard<'a> {
+    store: &'a ShardedStore,
+    key: PlanRequest,
+    shard: usize,
+}
+
+impl Drop for PinGuard<'_> {
+    fn drop(&mut self) {
+        let mut shard = self.store.shards[self.shard].lock().unwrap();
+        if let Some(n) = shard.pinned.get_mut(&self.key) {
+            *n -= 1;
+            if *n == 0 {
+                shard.pinned.remove(&self.key);
+            }
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Synthetic heavy-tailed plan traffic: Zipf popularity over a model
+//! zoo, bursty arrivals, many tenants — all deterministic from a seed
+//! via [`crate::util::rng::XorShift`].
+//!
+//! [`generate`] produces a timestamped arrival schedule; [`drive`] plays
+//! it against a [`PlanService`] from a pool of worker threads (open-loop
+//! at a time scale, or closed-loop back-to-back) and reports exact
+//! latency quantiles plus hit/shed accounting. The same schedule feeds
+//! the `serve` CLI subcommand, `exp serve`, and `bench_serve`, so the
+//! three always describe the same workload shape.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::rng::XorShift;
+
+use super::{PlanService, ServeOutcome, ServeRequest};
+use crate::plan::PlanRequest;
+
+/// Workload shape for [`generate`].
+#[derive(Debug, Clone)]
+pub struct TrafficCfg {
+    /// RNG seed (workloads are pure functions of the config).
+    pub seed: u64,
+    /// Total requests to generate.
+    pub requests: usize,
+    /// Distinct tenants (labels only; popularity is uniform).
+    pub tenants: usize,
+    /// The model zoo: (zoo name or registered id, batch), Zipf-ranked in
+    /// order — index 0 is the hottest model.
+    pub models: Vec<(String, i64)>,
+    /// Zipf skew `s` (weights 1/(rank+1)^s; 0 = uniform, ~1 = web-like).
+    pub zipf_s: f64,
+    /// Parallelisms sampled uniformly per request.
+    pub parallelisms: Vec<u32>,
+    /// Mean exponential inter-arrival gap in milliseconds.
+    pub mean_gap_ms: f64,
+    /// Every `burst_every`-th arrival opens a burst…
+    pub burst_every: usize,
+    /// …of this many back-to-back (zero-gap) requests.
+    pub burst_len: usize,
+    /// Client deadline stamped on every request (None = patient).
+    pub deadline_ms: Option<f64>,
+}
+
+impl Default for TrafficCfg {
+    fn default() -> Self {
+        Self {
+            seed: 7,
+            requests: 100,
+            tenants: 8,
+            models: vec![
+                ("tiny".to_string(), 256),
+                ("tiny".to_string(), 128),
+                ("vgg16".to_string(), 256),
+                ("transformer-s".to_string(), 256),
+            ],
+            zipf_s: 1.1,
+            parallelisms: vec![1, 2, 4, 8],
+            mean_gap_ms: 2.0,
+            burst_every: 10,
+            burst_len: 4,
+            deadline_ms: None,
+        }
+    }
+}
+
+/// One scheduled request.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    /// Offset from workload start.
+    pub at: Duration,
+    /// The request to issue.
+    pub request: ServeRequest,
+}
+
+/// Generate the arrival schedule for `cfg` against a registered cluster
+/// fingerprint. Deterministic: same config + fingerprint, same schedule.
+pub fn generate(cfg: &TrafficCfg, cluster_fp: &str) -> Vec<Arrival> {
+    assert!(!cfg.models.is_empty(), "traffic needs at least one model");
+    assert!(!cfg.parallelisms.is_empty(), "traffic needs at least one parallelism");
+    let mut rng = XorShift::new(cfg.seed);
+    // Zipf CDF over model ranks.
+    let weights: Vec<f64> =
+        (0..cfg.models.len()).map(|r| 1.0 / ((r + 1) as f64).powf(cfg.zipf_s)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut arrivals = Vec::with_capacity(cfg.requests);
+    let mut t_ms = 0.0f64;
+    let mut burst_left = 0usize;
+    for i in 0..cfg.requests {
+        if cfg.burst_every > 0 && i > 0 && i % cfg.burst_every == 0 {
+            burst_left = cfg.burst_len;
+        }
+        if burst_left > 0 {
+            burst_left -= 1; // zero-gap arrival inside a burst
+        } else {
+            t_ms += -cfg.mean_gap_ms * (1.0 - rng.f64()).max(1e-12).ln();
+        }
+        let mut pick = rng.f64() * total;
+        let mut model = cfg.models.len() - 1;
+        for (r, w) in weights.iter().enumerate() {
+            if pick < *w {
+                model = r;
+                break;
+            }
+            pick -= w;
+        }
+        let (name, batch) = &cfg.models[model];
+        let d = *rng.choose(&cfg.parallelisms);
+        let tenant = format!("tenant-{}", rng.below(cfg.tenants.max(1)));
+        let plan = PlanRequest::builder(name, *batch, cluster_fp, d)
+            .build()
+            .expect("traffic configs build valid requests");
+        let mut request = ServeRequest::new(&tenant, plan);
+        if let Some(ms) = cfg.deadline_ms {
+            request = request.with_deadline(Duration::from_secs_f64(ms / 1e3));
+        }
+        arrivals.push(Arrival { at: Duration::from_secs_f64(t_ms / 1e3), request });
+    }
+    arrivals
+}
+
+/// What [`drive`] measured.
+#[derive(Debug, Clone, Default)]
+pub struct DriveReport {
+    /// Requests issued.
+    pub requests: usize,
+    /// Served from the sharded store.
+    pub hits: usize,
+    /// Served by a sweep (led or ridden).
+    pub misses: usize,
+    /// Shed by admission control.
+    pub shed: usize,
+    /// Hard errors (malformed requests).
+    pub errors: usize,
+    /// Members that rode another caller's sweep.
+    pub riders: usize,
+    /// Per-served-request latencies in seconds (unordered).
+    pub latencies: Vec<f64>,
+    /// Wall-clock for the whole drive.
+    pub wall: Duration,
+}
+
+impl DriveReport {
+    /// Exact latency quantile `q` in [0, 1] over served requests (0.0
+    /// when nothing was served).
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.latencies.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (q.clamp(0.0, 1.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+        sorted[rank - 1]
+    }
+
+    /// Fraction of non-shed requests served from the store.
+    pub fn warm_hit_rate(&self) -> f64 {
+        let served = self.hits + self.misses;
+        if served == 0 {
+            0.0
+        } else {
+            self.hits as f64 / served as f64
+        }
+    }
+}
+
+/// Play `arrivals` against `service` from `workers` threads.
+///
+/// `time_scale` stretches the schedule: 1.0 replays recorded timing,
+/// 0.0 is closed-loop (workers issue back-to-back as fast as the service
+/// answers — the saturation mode benches and tests use).
+pub fn drive(
+    service: &Arc<PlanService>,
+    arrivals: &[Arrival],
+    workers: usize,
+    time_scale: f64,
+) -> DriveReport {
+    let t0 = Instant::now();
+    let next = AtomicUsize::new(0);
+    let tally = Mutex::new(DriveReport::default());
+    std::thread::scope(|scope| {
+        for _ in 0..workers.max(1) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some(arrival) = arrivals.get(i) else { break };
+                if time_scale > 0.0 {
+                    let due = arrival.at.mul_f64(time_scale);
+                    let now = t0.elapsed();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                }
+                let outcome = service.serve(&arrival.request);
+                let mut t = tally.lock().unwrap();
+                t.requests += 1;
+                match outcome {
+                    Ok(ServeOutcome::Served(resp)) => {
+                        match resp.source {
+                            super::ServeSource::Store => t.hits += 1,
+                            super::ServeSource::Swept(_) => t.misses += 1,
+                            super::ServeSource::Coalesced => {
+                                t.misses += 1;
+                                t.riders += 1;
+                            }
+                        }
+                        t.latencies.push(resp.latency.as_secs_f64());
+                    }
+                    Ok(ServeOutcome::Rejected(_)) => t.shed += 1,
+                    Err(_) => t.errors += 1,
+                }
+            });
+        }
+    });
+    let mut report = tally.into_inner().unwrap();
+    report.wall = t0.elapsed();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_deterministic_and_heavy_tailed() {
+        let cfg = TrafficCfg { requests: 400, ..Default::default() };
+        let a = generate(&cfg, "fp");
+        let b = generate(&cfg, "fp");
+        assert_eq!(a.len(), 400);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.request.plan, y.request.plan);
+            assert_eq!(x.request.tenant, y.request.tenant);
+        }
+        // Zipf skew: the hottest model dominates.
+        let hot = a
+            .iter()
+            .filter(|ar| ar.request.plan.graph_id == "tiny" && ar.request.plan.batch == 256)
+            .count();
+        assert!(hot > 400 / 4, "rank-0 model above uniform share: {hot}/400");
+        // bursts exist: some consecutive arrivals share a timestamp.
+        let bursty = a.windows(2).filter(|w| w[0].at == w[1].at).count();
+        assert!(bursty > 0, "bursty arrivals present");
+        // time moves forward.
+        for w in a.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+    }
+
+    #[test]
+    fn deadlines_stamp_through() {
+        let cfg =
+            TrafficCfg { requests: 5, deadline_ms: Some(12.5), ..Default::default() };
+        for ar in generate(&cfg, "fp") {
+            assert_eq!(ar.request.deadline, Some(Duration::from_micros(12_500)));
+        }
+    }
+}

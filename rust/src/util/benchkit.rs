@@ -124,6 +124,25 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// Record a pre-measured scalar (in seconds, or any smaller-is-better
+    /// unit) as a single-sample stat. This is how derived numbers — tail
+    /// latency quantiles, miss rates — enter a group's JSON next to the
+    /// timed benches, under the same CI regression gate (which only flags
+    /// `mean_s` increases).
+    pub fn record(&mut self, name: &str, value_s: f64) -> &BenchStats {
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: value_s,
+            min_s: value_s,
+            max_s: value_s,
+            stddev_s: 0.0,
+        };
+        println!("bench [{}] {}", self.group, stats.line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
     /// All recorded stats.
     pub fn results(&self) -> &[BenchStats] {
         &self.results
@@ -200,6 +219,18 @@ mod tests {
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
         assert!(!s.contains(",\n  ]"));
+    }
+
+    #[test]
+    fn record_stores_a_single_sample() {
+        let mut b = Bench::new("t");
+        let s = b.record("derived_p99", 0.125).clone();
+        assert_eq!(s.iters, 1);
+        assert_eq!(s.mean_s, 0.125);
+        assert_eq!(s.min_s, 0.125);
+        assert_eq!(s.max_s, 0.125);
+        assert_eq!(s.stddev_s, 0.0);
+        assert_eq!(b.results().len(), 1);
     }
 
     #[test]

@@ -58,7 +58,11 @@ fn turning_point_exists_for_large_models() {
 /// Session mini-time on the transformer fits the 16 GB V100 budget.
 #[test]
 fn session_mini_time_respects_memory() {
-    let session = Session::new(models::by_name("transformer", 256).unwrap(), Cluster::paper_testbed());
+    let session = Session::builder(
+        models::by_name("transformer", 256).unwrap(),
+        Cluster::paper_testbed(),
+    )
+    .build();
     let FindResult::Plan(p) =
         session.find_strategy(&SearchOption::MiniTime { parallelism: 16 }).unwrap()
     else {

@@ -49,11 +49,11 @@ fn traced_plan_sweep_covers_every_served_variant() {
         let p = Planner::new();
         p.attach_store(&store).unwrap();
         let fp = p.register_cluster(&cluster);
-        let req = PlanRequest::new("tiny", 256, &fp, 4);
+        let req = PlanRequest::builder("tiny", 256, &fp, 4).build().unwrap();
         assert_eq!(p.plan(&req).unwrap().served.name(), "cold");
         assert_eq!(p.plan(&req).unwrap().served.name(), "memo");
         // Same topology, new billing stamps: the incremental re-bill path.
-        let rebill = req.with_billing(Billing::Spot);
+        let rebill = req.to_builder().billing(Billing::Spot).build().unwrap();
         assert_eq!(p.plan(&rebill).unwrap().served.name(), "incremental");
         p.flush_store().unwrap();
     }
@@ -63,7 +63,10 @@ fn traced_plan_sweep_covers_every_served_variant() {
         p.attach_store(&store).unwrap();
         let fp = p.register_cluster(&cluster);
         assert_eq!(
-            p.plan(&PlanRequest::new("tiny", 256, &fp, 4)).unwrap().served.name(),
+            p.plan(&PlanRequest::builder("tiny", 256, &fp, 4).build().unwrap())
+                .unwrap()
+                .served
+                .name(),
             "store"
         );
     }
@@ -120,7 +123,7 @@ fn planner_metrics_registry_supersedes_stats() {
     // counts, and stats() is a view over it.
     let p = Planner::new();
     let fp = p.register_cluster(&Cluster::with_gpus(4));
-    let req = PlanRequest::new("tiny", 256, &fp, 4);
+    let req = PlanRequest::builder("tiny", 256, &fp, 4).build().unwrap();
     p.plan(&req).unwrap();
     p.plan(&req).unwrap();
     let m = p.metrics();

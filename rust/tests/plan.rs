@@ -97,8 +97,9 @@ fn profile_sweep_and_curve_share_one_space_build() {
     let planner = Arc::new(Planner::new().with_threads(2));
     let parallelisms = [1u32, 2, 4, 8];
 
-    let session =
-        Session::with_planner(tiny_mlp(256), cluster.clone(), Arc::clone(&planner));
+    let session = Session::builder(tiny_mlp(256), cluster.clone())
+        .planner(Arc::clone(&planner))
+        .build();
     let rows = session.profile(&parallelisms);
     assert_eq!(rows.len(), 4);
     let after_profile = planner.stats();
@@ -129,7 +130,12 @@ fn profile_sweep_and_curve_share_one_space_build() {
             ConfigFilter::Full,
         );
         let resp = planner
-            .plan(&PlanRequest::new("tiny", 256, &fp, d).with_billing(Billing::OnDemand))
+            .plan(
+                &PlanRequest::builder("tiny", 256, &fp, d)
+                    .billing(Billing::OnDemand)
+                    .build()
+                    .unwrap(),
+            )
             .unwrap();
         assert_eq!(resp.served, Served::Memo);
         assert_identical(&resp.result, &raw, "sweep");
@@ -138,8 +144,9 @@ fn profile_sweep_and_curve_share_one_space_build() {
     }
 
     // a second (model, batch) gets its own (single) space build.
-    let session2 =
-        Session::with_planner(tiny_mlp(128), cluster.clone(), Arc::clone(&planner));
+    let session2 = Session::builder(tiny_mlp(128), cluster.clone())
+        .planner(Arc::clone(&planner))
+        .build();
     session2.profile(&parallelisms);
     assert_eq!(planner.stats().space_builds, 2, "one more per (model, batch)");
 }
@@ -182,8 +189,14 @@ fn store_roundtrip_serves_warm_after_restart() {
     let first = Planner::new().with_threads(2);
     first.attach_store(&path).unwrap();
     let fp = first.register_cluster(&cluster);
-    let req2 = PlanRequest::new("tiny", 256, &fp, 2).with_billing(Billing::OnDemand);
-    let req4 = PlanRequest::new("tiny", 256, &fp, 4).with_billing(Billing::OnDemand);
+    let req2 = PlanRequest::builder("tiny", 256, &fp, 2)
+        .billing(Billing::OnDemand)
+        .build()
+        .unwrap();
+    let req4 = PlanRequest::builder("tiny", 256, &fp, 4)
+        .billing(Billing::OnDemand)
+        .build()
+        .unwrap();
     let a2 = first.plan(&req2).unwrap();
     let a4 = first.plan(&req4).unwrap();
     assert!(!a2.served.is_warm() && !a4.served.is_warm());
@@ -194,7 +207,7 @@ fn store_roundtrip_serves_warm_after_restart() {
     assert_eq!(second.attach_store(&path).unwrap(), 2, "two persisted plans");
     let fp2 = second.register_cluster(&cluster);
     for (req, cold) in [(req2, a2), (req4, a4)] {
-        let req = PlanRequest { cluster_fp: fp2.clone(), ..req };
+        let req = req.to_builder().cluster(&fp2).build().unwrap();
         let warm = second.plan(&req).unwrap();
         assert_eq!(warm.served, Served::Store);
         assert_identical(&warm.result, &cold.result, "store restart");
@@ -250,10 +263,12 @@ fn prop_planner_matches_from_scratch_search() {
             let planner = Planner::new().with_threads(2);
             planner.attach_store(&store_path).map_err(|e| e.to_string())?;
             let fp = planner.register_cluster(&cluster);
-            let mut req = PlanRequest::new("tiny", batch, &fp, d)
-                .with_mode(mode)
-                .with_filter(filter);
-            req.billing = billing;
+            let req = PlanRequest::builder("tiny", batch, &fp, d)
+                .mode(mode)
+                .filter(filter)
+                .billing_opt(billing)
+                .build()
+                .map_err(|e| e.to_string())?;
 
             // cold == scratch
             let cold = planner.plan(&req).map_err(|e| e.to_string())?;
@@ -270,8 +285,11 @@ fn prop_planner_matches_from_scratch_search() {
 
             // incremental re-billing at the same parallelism.
             let rebilled = billings[rng.below(3)];
-            let mut req_b = req.clone();
-            req_b.billing = rebilled;
+            let req_b = req
+                .to_builder()
+                .billing_opt(rebilled)
+                .build()
+                .map_err(|e| e.to_string())?;
             let inc = planner.plan(&req_b).map_err(|e| e.to_string())?;
             let scratch_b =
                 reference("tiny", batch, &cluster, d, mode, rebilled, filter);
@@ -279,8 +297,8 @@ fn prop_planner_matches_from_scratch_search() {
 
             // incremental re-sizing (schedule replay at another d).
             let d2 = 1 + rng.below(n) as u32;
-            let mut req_d = req.clone();
-            req_d.parallelism = d2;
+            let req_d =
+                req.to_builder().parallelism(d2).build().map_err(|e| e.to_string())?;
             let re = planner.plan(&req_d).map_err(|e| e.to_string())?;
             let scratch_d = reference("tiny", batch, &cluster, d2, mode, billing, filter);
             check_identical(&re.result, &scratch_d, "resized")?;
@@ -290,7 +308,7 @@ fn prop_planner_matches_from_scratch_search() {
             let fresh = Planner::new().with_threads(2);
             fresh.attach_store(&store_path).map_err(|e| e.to_string())?;
             let fp2 = fresh.register_cluster(&cluster);
-            let req_s = PlanRequest { cluster_fp: fp2, ..req.clone() };
+            let req_s = req.to_builder().cluster(&fp2).build().map_err(|e| e.to_string())?;
             let stored = fresh.plan(&req_s).map_err(|e| e.to_string())?;
             prop_assert!(stored.served == Served::Store, "expected a store serve");
             check_identical(&stored.result, &scratch, "stored")?;

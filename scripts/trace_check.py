@@ -115,12 +115,19 @@ def validate(text):
     return ([r for _, r in records] if not problems else []), problems
 
 
+# Spans whose `served` attr certifies how a request was answered: the
+# planner library path and the multi-tenant serving path. plan.request
+# carries cold/memo/incremental/store; serve.request carries
+# hit/miss/shed (with detail in its `source`/`reason` attrs).
+SERVED_SPANS = ("plan.request", "serve.request")
+
+
 def served_values(records):
     return {
         r["attrs"]["served"]
         for r in records
         if r["type"] == "span"
-        and r["name"] == "plan.request"
+        and r["name"] in SERVED_SPANS
         and isinstance(r["attrs"].get("served"), str)
     }
 
@@ -165,10 +172,19 @@ def self_test():
     )
     event = '{"type":"event","parent":1,"name":"e","t_us":2,"thread":1,"attrs":{}}'
     # Stream order is close-time: the child line precedes its parent's.
-    good = "\n".join([child, event, span]) + "\n"
+    serve_span = (
+        '{"type":"span","id":3,"parent":null,"name":"serve.request",'
+        '"t_us":6,"dur_us":4,"thread":2,"attrs":{"served":"hit","shard":0}}'
+    )
+    other_span = (
+        '{"type":"span","id":4,"parent":null,"name":"sched.curve",'
+        '"t_us":11,"dur_us":1,"thread":2,"attrs":{"served":"nope"}}'
+    )
+    good = "\n".join([child, event, span, serve_span, other_span]) + "\n"
     records, problems = validate(good)
     assert problems == [], problems
-    assert served_values(records) == {"cold"}
+    # both request-shaped spans contribute; other spans' attrs never do.
+    assert served_values(records) == {"cold", "hit"}
 
     bad_cases = [
         ("", "empty"),
