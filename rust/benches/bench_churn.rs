@@ -1,0 +1,79 @@
+//! Churn-engine benches: re-plan latency and degradation health under a
+//! seeded fault trace.
+//!
+//! Group `churn_replan` (one JSON file for the CI regression gate):
+//! - `churn_replan_p50` / `churn_replan_p99` — quantiles of the
+//!   `churn.replan_latency` histogram after a seeded elastic replay with
+//!   a shallow admission queue (so the path includes store fills, sheds
+//!   and retries, not just memo hits).
+//! - `churn_fallback_rate` — shed re-plans over total re-plans of that
+//!   replay. The gate only flags increases: more of the timeline spent
+//!   on degraded stale plans is a regression even if latency holds.
+//! - `churn_replay_small` — wall time of a minimal end-to-end replay
+//!   (trace generation + both policies), the whole-engine cost anchor.
+
+use tensoropt::cluster::{Cluster, DeviceSpec, LinkKind, Machine};
+use tensoropt::obs;
+use tensoropt::sched::{run_churn, ChurnCfg, ChurnPolicy, ChurnTrace, Workload};
+use tensoropt::util::benchkit::Bench;
+
+fn cluster() -> Cluster {
+    Cluster::from_machines(
+        "bench-churn-2x2",
+        vec![
+            Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+            Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+        ],
+        LinkKind::IbRdma,
+    )
+}
+
+fn main() {
+    let mut b = Bench::new("churn_replan");
+
+    let base = cluster();
+    let cfg = ChurnCfg {
+        n_events: 5,
+        horizon_s: 30.0,
+        tick_s: 0.5,
+        queue_depth: 1,
+        ..ChurnCfg::default()
+    };
+    let jobs = Workload::synthetic(3, &[("tiny", 128), ("tiny", 64)], 1.0, (400, 1200), 7);
+    let trace = ChurnTrace::generate(&cfg, base.n_machines());
+    let report = run_churn(&jobs, &base, &trace, ChurnPolicy::Elastic, &cfg);
+    println!(
+        "elastic replay: {}/{} done, {} replans ({} degraded), {} events",
+        report.completed,
+        report.n_jobs,
+        report.replans,
+        report.fallback_replans,
+        report.events_applied
+    );
+    let h = obs::global_metrics()
+        .histogram("churn.replan_latency")
+        .expect("the replay observed re-plan latencies");
+    b.record("churn_replan_p50", h.quantile(0.50));
+    b.record("churn_replan_p99", h.quantile(0.99));
+    b.record(
+        "churn_fallback_rate",
+        report.fallback_replans as f64 / report.replans.max(1) as f64,
+    );
+
+    // Whole-engine anchor: a minimal replay end to end, both policies.
+    let small_cfg = ChurnCfg {
+        n_events: 2,
+        horizon_s: 10.0,
+        tick_s: 0.5,
+        ..ChurnCfg::default()
+    };
+    let small_jobs = Workload::synthetic(2, &[("tiny", 64)], 1.0, (200, 400), 7);
+    b.run("churn_replay_small", || {
+        let trace = ChurnTrace::generate(&small_cfg, base.n_machines());
+        let e = run_churn(&small_jobs, &base, &trace, ChurnPolicy::Elastic, &small_cfg);
+        let s = run_churn(&small_jobs, &base, &trace, ChurnPolicy::Static, &small_cfg);
+        e.completed + s.completed
+    });
+
+    b.finish();
+}

@@ -351,6 +351,48 @@ impl Cluster {
         Self { name: format!("{which:?} of {}", self.name), machines, inter }
     }
 
+    // ----------------------------------------------------------- churn deltas
+
+    /// Remove machine `i` (a spot preemption or hardware failure in the
+    /// churn engine), restricting the inter-link matrix to the survivors.
+    /// Returns the removed machine so a recovery can re-add it. Panics if
+    /// it would empty the cluster — a cluster with zero machines has no
+    /// meaning anywhere in the stack, so the caller must park work
+    /// instead of removing the last machine.
+    pub fn remove_machine(&mut self, i: usize) -> Machine {
+        assert!(self.machines.len() > 1, "cannot remove the last machine of a cluster");
+        let removed = self.machines.remove(i);
+        self.inter.remove(i);
+        for row in &mut self.inter {
+            row.remove(i);
+        }
+        removed
+    }
+
+    /// Append `machine` (a node arrival or recovery), linking it to every
+    /// existing machine over `inter`. Returns the new machine's index.
+    /// Per-pair asymmetries to the newcomer can be layered on afterwards
+    /// with [`Cluster::set_inter`]; churn recoveries that must restore an
+    /// exact prior topology rebuild via [`Cluster::select_machines`] on
+    /// the base cluster instead.
+    pub fn add_machine(&mut self, machine: Machine, inter: LinkKind) -> usize {
+        let n = self.machines.len();
+        self.machines.push(machine);
+        for row in &mut self.inter {
+            row.push(inter);
+        }
+        self.inter.push(vec![inter; n + 1]);
+        n
+    }
+
+    /// Re-price machine `i`'s devices at `usd_hour` $/GPU-hour (a spot
+    /// market move). The fingerprint includes rates, so a repriced
+    /// cluster gets a fresh planner identity and stale-priced plans are
+    /// never served for it.
+    pub fn reprice(&mut self, i: usize, usd_hour: f64) {
+        self.machines[i].device.usd_hour = usd_hour;
+    }
+
     // -------------------------------------------------------------- accessors
 
     /// Number of machines in the cluster.
@@ -724,6 +766,64 @@ mod tests {
         // sub-allocations pay only for the devices they keep.
         assert!((bl.sub_cluster(9).usd_hour() - (8.0 * 4.10 + 3.06)).abs() < 1e-9);
         assert!(bl.usd_hour() > c.sub_cluster(10).usd_hour());
+    }
+
+    #[test]
+    fn remove_machine_restricts_links_and_identity() {
+        let mut c = Cluster::straggler_link(); // 3 machines; (0,2),(1,2) slow
+        let before = c.fingerprint();
+        let removed = c.remove_machine(2);
+        assert_eq!(removed.gpus, 8);
+        assert_eq!(c.n_machines(), 2);
+        assert_eq!(c.n_devices(), 16);
+        // the surviving pair keeps its fast link; the slow pairs left with
+        // machine 2, so the ring bottleneck is now 4x RDMA.
+        assert_eq!(c.inter_between(0, 1).bandwidth, LinkKind::IbRdma4x.link().bandwidth);
+        assert_eq!(c.inter_link().bandwidth, LinkKind::IbRdma4x.link().bandwidth);
+        assert_ne!(c.fingerprint(), before, "capacity loss is a new planner identity");
+        // removing the middle machine keeps the matrix symmetric too.
+        let mut m = Cluster::straggler_link();
+        m.remove_machine(1);
+        assert_eq!(m.inter_between(0, 1).bandwidth, LinkKind::IbNoRdma.link().bandwidth);
+    }
+
+    #[test]
+    #[should_panic(expected = "last machine")]
+    fn remove_last_machine_panics() {
+        let mut c = Cluster::single_machine(LinkKind::NvLink);
+        c.remove_machine(0);
+    }
+
+    #[test]
+    fn add_machine_links_to_everyone() {
+        let mut c = Cluster::paper_testbed();
+        let before = c.fingerprint();
+        let dgx = Machine::new(DeviceSpec::a100(), 8, LinkKind::NvLink);
+        let i = c.add_machine(dgx, LinkKind::IbNoRdma);
+        assert_eq!(i, 2);
+        assert_eq!(c.n_devices(), 24);
+        assert_eq!(c.inter_between(0, 2).bandwidth, LinkKind::IbNoRdma.link().bandwidth);
+        assert_eq!(c.inter_between(2, 1).bandwidth, LinkKind::IbNoRdma.link().bandwidth);
+        assert_eq!(c.inter_between(0, 1).bandwidth, LinkKind::IbRdma.link().bandwidth);
+        assert!(c.is_heterogeneous());
+        assert_ne!(c.fingerprint(), before);
+        // remove + re-add round-trips the uniform-link case exactly.
+        let mut r = Cluster::paper_testbed();
+        let fp = r.fingerprint();
+        let m = r.remove_machine(1);
+        r.add_machine(m, LinkKind::IbRdma);
+        assert_eq!(r.fingerprint(), fp);
+    }
+
+    #[test]
+    fn reprice_changes_identity_only() {
+        let mut c = Cluster::paper_testbed();
+        let before = c.fingerprint();
+        let rate_before = c.usd_hour();
+        c.reprice(0, 1.02);
+        assert_ne!(c.fingerprint(), before, "price moves invalidate cached plans");
+        assert!((c.usd_hour() - (rate_before - 8.0 * 3.06 + 8.0 * 1.02)).abs() < 1e-9);
+        assert_eq!(c.n_devices(), 16, "repricing never changes the topology");
     }
 
     #[test]

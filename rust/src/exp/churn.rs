@@ -1,0 +1,180 @@
+//! `exp churn` — elastic vs static re-planning under the same injected
+//! fault trace, on the three mixed testbeds of `exp hetero`.
+//!
+//! Per testbed, one seeded [`ChurnTrace`] (spot preemptions, machine
+//! failures, recoveries, spot-price moves) is replayed twice over the
+//! same synthetic workload: once under [`ChurnPolicy::Elastic`] (re-plan
+//! through the warm plan service on every cluster change, degrade onto
+//! restricted stale curves while re-plans are shed) and once under
+//! [`ChurnPolicy::Static`] (plan once per job at arrival for the full
+//! live cluster, run FIFO at that fixed width, park when it no longer
+//! fits). Identical traces and identical billing make the deltas pure
+//! scheduling: job completion time, dollar spend, SLO violations and
+//! parked seconds all come from how each policy absorbs the same churn.
+
+use crate::cluster::Cluster;
+use crate::sched::churn::{run_churn, ChurnCfg, ChurnPolicy, ChurnReport, ChurnTrace};
+use crate::sched::job::{JobSpec, Workload};
+use crate::util::table::Table;
+
+use super::hetero;
+
+/// Knobs for the churn comparison.
+#[derive(Debug, Clone)]
+pub struct ChurnExpCfg {
+    /// Jobs in the synthetic workload (cycling tiny@256/128/64).
+    pub n_jobs: usize,
+    /// Mean exponential inter-arrival gap, seconds.
+    pub mean_interarrival_s: f64,
+    /// Per-job iteration counts, uniform in `[lo, hi)`.
+    pub iters: (u64, u64),
+    /// Workload seed (the trace seed lives in `churn`).
+    pub seed: u64,
+    /// Trace generation and timeline knobs.
+    pub churn: ChurnCfg,
+}
+
+impl Default for ChurnExpCfg {
+    fn default() -> Self {
+        Self {
+            n_jobs: 6,
+            mean_interarrival_s: 5.0,
+            iters: (800, 1600),
+            seed: 11,
+            churn: ChurnCfg { n_events: 6, horizon_s: 90.0, ..ChurnCfg::default() },
+        }
+    }
+}
+
+/// The workload every testbed replays (three plan keys).
+pub fn workload(cfg: &ChurnExpCfg) -> Vec<JobSpec> {
+    Workload::synthetic(
+        cfg.n_jobs,
+        &[("tiny", 256), ("tiny", 128), ("tiny", 64)],
+        cfg.mean_interarrival_s,
+        cfg.iters,
+        cfg.seed,
+    )
+}
+
+/// Replay one testbed under both policies on the same generated trace.
+pub fn run_one(cluster: &Cluster, cfg: &ChurnExpCfg) -> (ChurnReport, ChurnReport) {
+    let jobs = workload(cfg);
+    let trace = ChurnTrace::generate(&cfg.churn, cluster.n_machines());
+    let elastic = run_churn(&jobs, cluster, &trace, ChurnPolicy::Elastic, &cfg.churn);
+    let stat = run_churn(&jobs, cluster, &trace, ChurnPolicy::Static, &cfg.churn);
+    (elastic, stat)
+}
+
+/// Run the comparison over the three mixed testbeds; returns the table.
+pub fn run(cfg: &ChurnExpCfg) -> Table {
+    run_on(&hetero::presets(), cfg)
+}
+
+/// [`run`] on an explicit testbed list (tests use a small one).
+pub fn run_on(clusters: &[Cluster], cfg: &ChurnExpCfg) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "exp churn: {} jobs, {} events over {:.0}s @ seed {} (elastic vs static)",
+            cfg.n_jobs, cfg.churn.n_events, cfg.churn.horizon_s, cfg.churn.seed
+        ),
+        &[
+            "testbed",
+            "policy",
+            "done",
+            "mean_jct_s",
+            "makespan_s",
+            "spent_usd",
+            "slo_viol",
+            "parked_s",
+            "replans",
+            "fallbacks",
+            "parks",
+        ],
+    );
+    for cluster in clusters {
+        let (elastic, stat) = run_one(cluster, cfg);
+        for r in [&elastic, &stat] {
+            t.row(&[
+                cluster.name.clone(),
+                r.policy.clone(),
+                format!("{}/{}", r.completed, r.n_jobs),
+                format!("{:.1}", r.mean_jct),
+                format!("{:.1}", r.makespan),
+                format!("{:.3}", r.spent_usd),
+                r.slo_violations.to_string(),
+                format!("{:.1}", r.parked_s),
+                r.replans.to_string(),
+                r.fallback_replans.to_string(),
+                r.parks.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{DeviceSpec, LinkKind, Machine};
+
+    fn small() -> Cluster {
+        Cluster::from_machines(
+            "churn-exp-2x2",
+            vec![
+                Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+                Machine::new(DeviceSpec::v100(), 2, LinkKind::NvLink),
+            ],
+            LinkKind::IbRdma,
+        )
+    }
+
+    fn small_cfg() -> ChurnExpCfg {
+        ChurnExpCfg {
+            n_jobs: 3,
+            mean_interarrival_s: 0.5,
+            iters: (3000, 3001),
+            churn: ChurnCfg {
+                n_events: 3,
+                horizon_s: 20.0,
+                tick_s: 0.5,
+                ..ChurnCfg::default()
+            },
+            ..ChurnExpCfg::default()
+        }
+    }
+
+    #[test]
+    fn elastic_beats_static_on_jct_and_slo_at_no_extra_spend() {
+        let (elastic, stat) = run_one(&small(), &small_cfg());
+        assert_eq!(elastic.completed, elastic.n_jobs, "elastic finishes: {elastic:?}");
+        assert!(stat.parked_s > 0.0, "full-width FIFO static must queue: {stat:?}");
+        assert!(
+            elastic.mean_jct <= stat.mean_jct * 1.05,
+            "elastic JCT {} vs static {}",
+            elastic.mean_jct,
+            stat.mean_jct
+        );
+        assert!(
+            elastic.slo_violations <= stat.slo_violations,
+            "elastic {} vs static {} violations",
+            elastic.slo_violations,
+            stat.slo_violations
+        );
+        assert!(
+            elastic.spent_usd <= stat.spent_usd * 1.10,
+            "elastic ${} vs static ${}",
+            elastic.spent_usd,
+            stat.spent_usd
+        );
+    }
+
+    #[test]
+    fn table_carries_both_policies_per_testbed() {
+        let t = run_on(&[small()], &small_cfg());
+        let csv = t.to_csv();
+        assert!(csv.contains("elastic"), "missing elastic row:\n{csv}");
+        assert!(csv.contains("static"), "missing static row:\n{csv}");
+        assert!(csv.contains("churn-exp-2x2"), "missing testbed name:\n{csv}");
+    }
+}

@@ -2,6 +2,7 @@
 //! evaluation (§5). Every entry point prints the paper-style table and
 //! writes machine-readable CSV under `results/`.
 
+pub mod churn;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;

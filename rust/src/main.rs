@@ -1,11 +1,12 @@
 //! `tensoropt` — CLI for the TensorOpt reproduction.
 //!
 //! Subcommands:
-//!   exp <table1|table2|table3|table4|fig6|fig7|fig8|hetero|provision|obs>
+//!   exp <table1|table2|table3|table4|fig6|fig7|fig8|hetero|provision|obs|churn>
 //!            regenerate a paper table/figure
 //!            (hetero: homogeneous-assumption vs topology-aware on mixed testbeds;
 //!             provision: dollar-priced cheapest-under-deadline / fastest-under-budget;
-//!             obs: estimate-vs-simulated drift report)
+//!             obs: estimate-vs-simulated drift report;
+//!             churn: elastic vs static re-planning under injected faults)
 //!
 //! Global options: --trace FILE (JSONL span/event trace), --trace-chrome FILE
 //! (chrome://tracing format), --metrics (dump the metrics registry), --quiet.
@@ -17,6 +18,8 @@
 //!   serve    --requests N --gpus N [--models ...]    multi-tenant plan service under
 //!                                                    synthetic heavy-tailed traffic
 //!   sched    --jobs N --gpus N [--models A,B,C]      multi-job elastic scheduling
+//!   churn    --machines N --events N [--policy both]  seeded fault injection with live
+//!                                                    re-planning and graceful degradation
 //!
 //! Every experiment prints the paper-style table and writes CSV under
 //! `results/`.
@@ -195,6 +198,28 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             let t = exp::serve::run(&cfg);
             println!("{}", t.render());
             save(&t, "serve_scenarios");
+        }
+        "churn" => {
+            let cfg = exp::churn::ChurnExpCfg {
+                n_jobs: args.get_parse_or("jobs", 6usize),
+                mean_interarrival_s: args.get_parse_or("interarrival", 5.0f64),
+                iters: (
+                    args.get_parse_or("min-iters", 800u64),
+                    args.get_parse_or("max-iters", 1600u64),
+                ),
+                seed: args.get_parse_or("seed", 11u64),
+                churn: tensoropt::sched::ChurnCfg {
+                    seed: args.get_parse_or("trace-seed", 42u64),
+                    n_events: args.get_parse_or("events", 6usize),
+                    horizon_s: args.get_parse_or("horizon", 90.0f64),
+                    tick_s: args.get_parse_or("tick", 1.0f64),
+                    queue_depth: args.get_parse_or("queue-depth", 2usize),
+                    ..Default::default()
+                },
+            };
+            let t = exp::churn::run(&cfg);
+            println!("{}", t.render());
+            save(&t, "churn_testbeds");
         }
         "fig8" => {
             let model = args.get_or("model", "transformer");
@@ -611,6 +636,142 @@ fn cmd_sched(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `tensoropt churn` — replay a seeded fault trace (spot preemptions,
+/// machine failures, recoveries, price moves) against a live workload,
+/// re-planning through the warm plan service, and report how each policy
+/// absorbs it. `--expect-fallback` makes the run fail unless at least one
+/// re-plan was shed and served degraded (the CI smoke uses this).
+fn cmd_churn(args: &Args) -> anyhow::Result<()> {
+    use tensoropt::sched::{run_churn, ChurnCfg, ChurnPolicy, ChurnTrace, Workload};
+
+    let base = match args.get("testbed") {
+        Some("mixed_generation") => Cluster::mixed_generation(),
+        Some("straggler_link") => Cluster::straggler_link(),
+        Some("big_little") => Cluster::big_little(),
+        Some(other) => anyhow::bail!("unknown testbed `{other}`"),
+        None => {
+            let machines = args.get_parse_or("machines", 3usize);
+            let gpus_per = args.get_parse_or("gpus-per", 2usize);
+            anyhow::ensure!(machines >= 2, "--machines must be >= 2 (churn needs survivors)");
+            anyhow::ensure!(gpus_per >= 1, "--gpus-per must be >= 1");
+            Cluster::from_machines(
+                &format!("{machines}x{gpus_per}xV100 churn"),
+                (0..machines)
+                    .map(|_| {
+                        tensoropt::cluster::Machine::new(
+                            tensoropt::cluster::DeviceSpec::v100(),
+                            gpus_per,
+                            tensoropt::cluster::LinkKind::NvLink,
+                        )
+                    })
+                    .collect(),
+                tensoropt::cluster::LinkKind::IbRdma,
+            )
+        }
+    };
+    let batch = args.get_parse_or("batch", 128i64);
+    let model_list: Vec<(String, i64)> = args
+        .get_or("models", "tiny,tiny@64")
+        .split(',')
+        .map(|spec| {
+            let spec = spec.trim();
+            let (name, b) = match spec.split_once('@') {
+                Some((name, b)) => (
+                    name,
+                    b.parse::<i64>()
+                        .map_err(|e| anyhow::anyhow!("bad model spec `{spec}`: {e}"))?,
+                ),
+                None => (spec, batch),
+            };
+            anyhow::ensure!(models::by_name(name, b).is_some(), "unknown model `{name}`");
+            Ok((name.to_string(), b))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let model_refs: Vec<(&str, i64)> =
+        model_list.iter().map(|(m, b)| (m.as_str(), *b)).collect();
+    let jobs = Workload::synthetic(
+        args.get_parse_or("jobs", 4usize),
+        &model_refs,
+        args.get_parse_or("interarrival", 2.0f64),
+        (
+            args.get_parse_or("min-iters", 500u64),
+            args.get_parse_or("max-iters", 1500u64),
+        ),
+        args.get_parse_or("seed", 7u64),
+    );
+    let cfg = ChurnCfg {
+        seed: args.get_parse_or("trace-seed", 42u64),
+        horizon_s: args.get_parse_or("horizon", 30.0f64),
+        tick_s: args.get_parse_or("tick", 0.5f64),
+        n_events: args.get_parse_or("events", 5usize),
+        slo_ticks: args.get_parse_or("slo-ticks", 8u64),
+        max_backoff_ticks: args.get_parse_or("max-backoff", 8u64),
+        queue_depth: args.get_parse_or("queue-depth", 1usize),
+        price_amplitude: args.get_parse_or("amplitude", 0.4f64),
+        ..Default::default()
+    };
+    anyhow::ensure!(cfg.tick_s > 0.0, "--tick must be positive");
+    anyhow::ensure!(cfg.queue_depth >= 1, "--queue-depth must be >= 1");
+    let trace = ChurnTrace::generate(&cfg, base.n_machines());
+    println!(
+        "churn: {} events over {:.0}s on {} ({} machines), {} jobs",
+        trace.events.len(),
+        cfg.horizon_s,
+        base.name,
+        base.n_machines(),
+        jobs.len()
+    );
+
+    let policies: Vec<ChurnPolicy> = match args.get_or("policy", "both") {
+        "both" => vec![ChurnPolicy::Elastic, ChurnPolicy::Static],
+        "elastic" => vec![ChurnPolicy::Elastic],
+        "static" => vec![ChurnPolicy::Static],
+        other => anyhow::bail!("unknown policy `{other}` (both|elastic|static)"),
+    };
+    let mut t = Table::new(
+        &format!("churn: {} on {}", trace.events.len(), base.name),
+        &[
+            "policy", "done", "mean_jct_s", "makespan_s", "spent_usd", "slo_viol",
+            "parked_s", "replans", "fallbacks", "parks", "events",
+        ],
+    );
+    let mut total_fallbacks = 0usize;
+    let mut all_completed = true;
+    for policy in policies {
+        let r = run_churn(&jobs, &base, &trace, policy, &cfg);
+        total_fallbacks += r.fallback_replans;
+        all_completed &= r.completed == r.n_jobs;
+        t.row(&[
+            r.policy.clone(),
+            format!("{}/{}", r.completed, r.n_jobs),
+            format!("{:.1}", r.mean_jct),
+            format!("{:.1}", r.makespan),
+            format!("{:.3}", r.spent_usd),
+            r.slo_violations.to_string(),
+            format!("{:.1}", r.parked_s),
+            r.replans.to_string(),
+            r.fallback_replans.to_string(),
+            r.parks.to_string(),
+            r.events_applied.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    save(&t, "churn");
+    if args.flag("expect-fallback") {
+        anyhow::ensure!(
+            total_fallbacks >= 1,
+            "--expect-fallback: no re-plan was shed into the degraded path \
+             (raise --events or lower --queue-depth)"
+        );
+        anyhow::ensure!(
+            all_completed,
+            "--expect-fallback: a job failed to finish despite recovery events"
+        );
+        println!("[expect-fallback ok: {total_fallbacks} degraded re-plans, all jobs done]");
+    }
+    Ok(())
+}
+
 const HELP: &str = "\
 tensoropt — TensorOpt (Cai et al. 2020) reproduction
 
@@ -646,6 +807,19 @@ COMMANDS:
                                                  bursty arrivals; reports hit/shed/coalesce
                                                  counts and p50/p95/p99 serve latency
   sched     --jobs N --gpus N --models A,B,C --seed S [--interarrival S] [--min-iters N] [--max-iters N]
+  exp churn [--jobs N --events N --horizon S --tick S --seed S --trace-seed S --queue-depth N]
+                                                 elastic vs static re-planning under the same
+                                                 injected fault trace on the three mixed testbeds
+  churn     [--machines N --gpus-per M | --testbed <mixed_generation|straggler_link|big_little>]
+            [--jobs N --models tiny,tiny@64] [--events N --horizon S --tick S]
+            [--trace-seed S --queue-depth N --slo-ticks N --max-backoff N --amplitude X]
+            [--policy <both|elastic|static>] [--expect-fallback]
+                                                 seeded trace-driven fault injection (spot
+                                                 preemption, machine failure, recovery, price
+                                                 moves) with live re-planning through the warm
+                                                 plan service; sheds degrade onto restricted
+                                                 stale plans with capped tick backoff, jobs
+                                                 park and resume instead of erroring
   help
 
 GLOBAL OPTIONS (every command):
@@ -669,6 +843,8 @@ EXAMPLES:
   tensoropt sched --jobs 4 --gpus 16 --models vgg16,wideresnet,transformer
   tensoropt serve --requests 200 --gpus 8 --models tiny,tiny@128,vgg16 --trace trace.jsonl
   tensoropt exp serve --requests 120
+  tensoropt churn --machines 3 --gpus-per 2 --events 5 --expect-fallback --trace churn.jsonl
+  tensoropt exp churn --jobs 6 --events 6
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -682,6 +858,7 @@ fn main() -> anyhow::Result<()> {
         Some("plan") => cmd_plan(&args),
         Some("serve") => cmd_serve(&args),
         Some("sched") => cmd_sched(&args),
+        Some("churn") => cmd_churn(&args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())

@@ -42,7 +42,7 @@ use crate::cost::comm::CommModel;
 use crate::cost::pricing;
 use crate::frontier::Mode;
 use crate::obs;
-use crate::obs::Metrics;
+use crate::obs::{Attr, Metrics};
 use crate::ft::eliminate::WorkGraph;
 use crate::ft::ldp::ldp;
 use crate::ft::{build_configs, ElimSchedule, FtOptions, FtResult, SearchSpace, SpaceTables};
@@ -587,7 +587,25 @@ impl Planner {
         sp.attr_u64("parallelism", u64::from(key.parallelism));
         let configs =
             filtered_configs(graph, key.parallelism, key.max_mesh_dims, key.filter);
-        let result = stored.to_result(configs, graph.edges.len())?;
+        // a corrupt entry (indices that no longer fit the graph) falls
+        // back to the search instead of erroring the request; the fresh
+        // result re-inserts under the same key, healing the store.
+        let result = match stored.to_result(configs, graph.edges.len()) {
+            Ok(r) => r,
+            Err(e) => {
+                sp.attr_str("served", "corrupt");
+                obs::event(
+                    "plan.store_corrupt",
+                    &[
+                        ("kind", Attr::Str("entry".to_string())),
+                        ("graph", Attr::Str(key.graph_id.clone())),
+                        ("detail", Attr::Str(format!("{e:#}"))),
+                    ],
+                );
+                self.metrics.inc("plan.store_corrupt");
+                return Ok(None);
+            }
+        };
         self.metrics.inc(C_STORE_SERVES);
         Ok(Some(Arc::new(PlanEntry { result: Arc::new(result), produced: Served::Store })))
     }
@@ -789,5 +807,43 @@ mod tests {
         let a = p.plan(&req("tiny", 256, &fp, 4)).unwrap();
         let b = p.plan(&req("tiny", 256, &fp, 64)).unwrap();
         assert!(Arc::ptr_eq(&a.result, &b.result), "over-asking clamps to one key");
+    }
+
+    #[test]
+    fn corrupt_store_entry_falls_back_to_cold_search() {
+        let dir = std::env::temp_dir().join("tensoropt_engine_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        let _ = std::fs::remove_file(&path);
+
+        let cluster = Cluster::with_gpus(2);
+        let (p, fp) = planner_with(&cluster);
+        p.attach_store(&path).unwrap();
+        assert_eq!(p.plan(&req("tiny", 128, &fp, 2)).unwrap().served, Served::Cold);
+        p.flush_store().unwrap();
+
+        // tamper: pin an op to a config index no graph enumerates, so
+        // serving the entry fails validation at reconstruction time.
+        let mut tampered = PlanStore::load(&path).unwrap();
+        let mut bad = tampered.entries[0].clone();
+        bad.forced = vec![(0, 9999)];
+        tampered.insert(bad);
+        tampered.save().unwrap();
+
+        let (fresh, fp2) = planner_with(&cluster);
+        assert_eq!(fresh.attach_store(&path).unwrap(), 1);
+        let again = fresh.plan(&req("tiny", 128, &fp2, 2)).unwrap();
+        assert_eq!(again.served, Served::Cold, "corrupt entry re-searches, never errors");
+        assert_eq!(fresh.stats().store_serves, 0);
+        assert_eq!(fresh.metrics().counter("plan.store_corrupt"), 1);
+
+        // the recompute replaced the bad entry: a third planner serves
+        // warm from the healed store.
+        fresh.flush_store().unwrap();
+        let (healed, fp3) = planner_with(&cluster);
+        healed.attach_store(&path).unwrap();
+        let served = healed.plan(&req("tiny", 128, &fp3, 2)).unwrap();
+        assert_eq!(served.served, Served::Store, "store heals after the fallback");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -18,6 +18,7 @@ use std::sync::Arc;
 
 use crate::frontier::{trace, Frontier, Trace, Tuple};
 use crate::ft::FtResult;
+use crate::obs::{self, Attr};
 use crate::parallel::ParallelConfig;
 use crate::util::codec::{f64_from_hex, Json};
 
@@ -26,6 +27,24 @@ use super::{billing_tag, mode_tag, PlanRequest};
 /// Store format version (files with another version are ignored, not
 /// misread).
 pub const STORE_VERSION: u64 = 1;
+
+/// Record one store-corruption observation: a structured
+/// `plan.store_corrupt` event (when tracing is on) plus the
+/// `plan.store_corrupt` counter in [`obs::global_metrics`]. Corruption is
+/// tolerated, never fatal — the damaged part is dropped and the affected
+/// requests fall back to a cold search, which re-inserts a good entry
+/// under the same key (the store self-heals on the next save).
+fn note_corrupt(path: &Path, kind: &str, detail: &str) {
+    obs::event(
+        "plan.store_corrupt",
+        &[
+            ("path", Attr::Str(path.display().to_string())),
+            ("kind", Attr::Str(kind.to_string())),
+            ("detail", Attr::Str(detail.to_string())),
+        ],
+    );
+    obs::global_metrics().inc("plan.store_corrupt");
+}
 
 /// Checked narrowing for indices read from store files: a hand-edited or
 /// corrupt file must error, not wrap into a different (valid-looking)
@@ -367,6 +386,15 @@ pub struct PlanStore {
 
 impl PlanStore {
     /// Open (or initialize) the store at `path`.
+    ///
+    /// Corruption is tolerated, not fatal: a file that fails to parse
+    /// (truncation, garbage) loads as an *empty* store, a malformed entry
+    /// is skipped, and duplicate keys keep the last occurrence (matching
+    /// [`PlanStore::insert`]'s later-write-wins). Every tolerance fires a
+    /// `plan.store_corrupt` event and marks the store dirty, so the next
+    /// save writes a repaired file. The one hard refusal is a *version
+    /// mismatch*: those entries were written by a different format and
+    /// must not be destroyed by this build's save.
     pub fn load(path: &Path) -> anyhow::Result<Self> {
         let mut store =
             Self { path: path.to_path_buf(), entries: Vec::new(), dirty: false };
@@ -375,8 +403,15 @@ impl PlanStore {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(store),
             Err(e) => return Err(anyhow::anyhow!("reading {}: {e}", path.display())),
         };
-        let j = Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let j = match Json::parse(&text) {
+            Ok(j) => j,
+            Err(e) => {
+                // truncated or garbage document: nothing recoverable, so
+                // serve cold and let the next save overwrite the wreck.
+                note_corrupt(path, "parse", &e);
+                return Ok(store);
+            }
+        };
         let version = j.get("version").and_then(Json::as_u64);
         if version != Some(STORE_VERSION) {
             // refuse rather than silently treat the file as empty: a later
@@ -391,7 +426,26 @@ impl PlanStore {
         }
         if let Some(entries) = j.get("entries").and_then(Json::as_arr) {
             for e in entries {
-                store.entries.push(StoredPlan::from_json(e)?);
+                let plan = match StoredPlan::from_json(e) {
+                    Ok(p) => p,
+                    Err(err) => {
+                        note_corrupt(path, "entry", &format!("{err:#}"));
+                        store.dirty = true;
+                        continue;
+                    }
+                };
+                match store.entries.iter_mut().find(|x| x.key() == plan.key()) {
+                    Some(slot) => {
+                        let detail = format!(
+                            "duplicate key {}@{} d={}",
+                            plan.graph_id, plan.batch, plan.parallelism
+                        );
+                        note_corrupt(path, "duplicate", &detail);
+                        *slot = plan;
+                        store.dirty = true;
+                    }
+                    None => store.entries.push(plan),
+                }
             }
         }
         Ok(store)
@@ -547,6 +601,57 @@ mod tests {
         // file from being overwritten by an older binary's save().
         let err = PlanStore::load(&path).unwrap_err().to_string();
         assert!(err.contains("version"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn garbage_and_truncation_load_as_empty_not_error() {
+        let dir = std::env::temp_dir().join("tensoropt_plan_store_corrupt1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let garbage = dir.join("garbage.json");
+        std::fs::write(&garbage, "not json at all {{{").unwrap();
+        let store = PlanStore::load(&garbage).unwrap();
+        assert!(store.is_empty(), "garbage document tolerated as empty");
+        // truncated: render a valid store, then chop it mid-document (the
+        // file is pure ASCII, so a byte split is a char split).
+        let path = dir.join("trunc.json");
+        let mut s = PlanStore::load(&path).unwrap();
+        s.insert(sample_plan());
+        s.save().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        let store = PlanStore::load(&path).unwrap();
+        assert!(store.is_empty(), "truncated document tolerated as empty");
+        let _ = std::fs::remove_file(&garbage);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_entries_skip_and_duplicates_keep_last() {
+        let dir = std::env::temp_dir().join("tensoropt_plan_store_corrupt2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mixed.json");
+        // one malformed entry between two sharing a key: the bad one is
+        // skipped, the later duplicate wins (insert's later-write-wins),
+        // and the store comes back dirty so the next save repairs it.
+        let mut dup = sample_plan();
+        dup.n_heuristic = 7;
+        let doc = Json::Obj(vec![
+            ("version".into(), Json::Num(STORE_VERSION as f64)),
+            (
+                "entries".into(),
+                Json::Arr(vec![sample_plan().to_json(), Json::Obj(vec![]), dup.to_json()]),
+            ),
+        ]);
+        std::fs::write(&path, doc.render()).unwrap();
+        let mut store = PlanStore::load(&path).unwrap();
+        assert_eq!(store.len(), 1, "bad entry skipped, duplicate coalesced");
+        assert_eq!(store.entries[0].n_heuristic, 7, "later duplicate wins");
+        assert!(store.dirty(), "tolerated corruption marks the store dirty");
+        store.save().unwrap();
+        let repaired = PlanStore::load(&path).unwrap();
+        assert_eq!(repaired.len(), 1);
+        assert!(!repaired.dirty(), "repaired file loads clean");
         let _ = std::fs::remove_file(&path);
     }
 

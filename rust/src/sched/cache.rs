@@ -278,7 +278,17 @@ impl FrontierCache {
                 Ok(ServeOutcome::Served(resp)) => {
                     by_d.insert(d, session.profiled_from(d, &resp.result));
                 }
-                Ok(ServeOutcome::Rejected(_)) | Err(_) => shed.push(d),
+                Ok(ServeOutcome::Rejected(rej)) => {
+                    // allocation cannot wait, so sheds profile directly —
+                    // but the service's deterministic backoff hint is
+                    // surfaced so saturation is visible (the churn replan
+                    // path *does* honor the same hint by deferring).
+                    let hint = rej.reason.retry_after();
+                    obs::global_metrics()
+                        .observe_latency("sched.curve_shed_backoff", hint.as_secs_f64());
+                    shed.push(d);
+                }
+                Err(_) => shed.push(d),
             }
         }
         for pp in session.profile_plans(&shed) {

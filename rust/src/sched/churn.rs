@@ -1,0 +1,1097 @@
+//! Churn engine: trace-driven fault injection with live re-planning and
+//! graceful degradation.
+//!
+//! A seeded [`ChurnTrace`] injects spot preemptions, whole-machine
+//! failures, recoveries and spot-price moves into a discrete-event
+//! timeline. Every capacity or price event rebuilds the *live* cluster
+//! (via [`Cluster::select_machines`] + [`Cluster::reprice`]) and
+//! re-registers it with the planner, so the cluster fingerprint changes
+//! and every cached plan for the old fingerprint is naturally stale.
+//! Re-plans then flow through the warm [`PlanService`] exactly like
+//! tenant traffic — store hits, coalesced sweeps, admission control —
+//! and the engine measures how long each key stays degraded against a
+//! tick-denominated SLO.
+//!
+//! Degradation is graceful by construction, never a panic or an error:
+//!
+//! * a shed (or still-searching) re-plan falls back to the **stale**
+//!   curve restricted to what survives ([`degrade_curve`]: points wider
+//!   than the live device count or over [`Cluster::mem_budget`] drop);
+//! * shed re-plans retry under deterministic capped exponential backoff
+//!   counted in ticks, widened by the service's [`RejectReason`]
+//!   `retry_after` hint (quantized to whole ticks so wall-clock noise
+//!   cannot leak into the report);
+//! * jobs that cannot fit after a capacity loss **park** (devices = 0,
+//!   parked seconds accrue) and resume on recovery instead of erroring.
+//!
+//! Two policies replay the same trace for the elastic-vs-static story:
+//! [`ChurnPolicy::Elastic`] water-fills the frontier curves at every
+//! tick and re-plans on every fingerprint change, while
+//! [`ChurnPolicy::Static`] plans each job **once** at arrival for the
+//! full live cluster (the single-job TensorOpt usage: you rent the
+//! cluster, you plan for all of it) and can only run jobs FIFO at that
+//! fixed width — when capacity drops below the planned width the job
+//! parks until recovery, because without a re-search the strategy is
+//! tied to its device set.
+//!
+//! Everything report-affecting is deterministic: the trace is seeded,
+//! ticks are the only clock, admission order inside a batch is arrival
+//! order, and [`ChurnReport::fingerprint`] hashes the float fields
+//! bit-for-bit so tests can assert run-twice identity. Wall-clock only
+//! feeds the `churn.replan_latency` histogram and the `retry_after`
+//! hint, which is quantized as above.
+//!
+//! [`RejectReason`]: crate::serve::RejectReason
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::cluster::Cluster;
+use crate::coordinator::Session;
+use crate::graph::models;
+use crate::obs::{self, Attr};
+use crate::plan::Planner;
+use crate::serve::{PlanService, ServeConfig, ServeOutcome, ServeRequest};
+use crate::util::rng::XorShift;
+
+use super::allocator::{allocate, AllocRequest};
+use super::cache::{CurvePoint, ProfileCurve};
+use super::elastic::{price_moves, RescaleModel};
+use super::job::JobSpec;
+
+/// Knobs for trace generation and the churn timeline.
+#[derive(Debug, Clone)]
+pub struct ChurnCfg {
+    /// Trace seed: same seed, same cluster size, same event sequence.
+    pub seed: u64,
+    /// Horizon (seconds) events are injected within. Recoveries may land
+    /// beyond it; the runner keeps ticking until jobs finish.
+    pub horizon_s: f64,
+    /// Timeline tick in seconds (the only clock the report sees).
+    pub tick_s: f64,
+    /// Number of injection attempts drawn over the horizon.
+    pub n_events: usize,
+    /// Replan SLO: a key still degraded more than this many ticks after
+    /// an invalidating event counts one violation.
+    pub slo_ticks: u64,
+    /// Cap on the shed-replan retry backoff, in ticks.
+    pub max_backoff_ticks: u64,
+    /// Admission depth of the plan service ([`ServeConfig`]
+    /// `max_queue_depth`); small values force sheds and exercise the
+    /// fallback path. Must be at least 1.
+    pub queue_depth: usize,
+    /// Spot-price events scale a machine's rate by `1 ± amplitude`.
+    pub price_amplitude: f64,
+    /// Hard stop for the tick loop (guards pathological configs; jobs
+    /// still unfinished at the cap are reported as incomplete).
+    pub max_ticks: u64,
+}
+
+impl Default for ChurnCfg {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            horizon_s: 120.0,
+            tick_s: 1.0,
+            n_events: 8,
+            slo_ticks: 8,
+            max_backoff_ticks: 8,
+            queue_depth: 2,
+            price_amplitude: 0.4,
+            max_ticks: 100_000,
+        }
+    }
+}
+
+/// One injected fault or recovery.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChurnEventKind {
+    /// Spot preemption: the machine leaves, returns fairly quickly.
+    Preempt {
+        /// Index into the base cluster's machines.
+        machine: usize,
+    },
+    /// Hardware failure: the machine leaves, replacement takes longer.
+    Fail {
+        /// Index into the base cluster's machines.
+        machine: usize,
+    },
+    /// The machine (or its replacement) is back.
+    Recover {
+        /// Index into the base cluster's machines.
+        machine: usize,
+    },
+    /// Spot-price move on one machine.
+    Reprice {
+        /// Index into the base cluster's machines.
+        machine: usize,
+        /// Multiplier on the machine's base rental rate.
+        factor: f64,
+    },
+}
+
+impl ChurnEventKind {
+    fn name(&self) -> &'static str {
+        match self {
+            ChurnEventKind::Preempt { .. } => "preempt",
+            ChurnEventKind::Fail { .. } => "fail",
+            ChurnEventKind::Recover { .. } => "recover",
+            ChurnEventKind::Reprice { .. } => "reprice",
+        }
+    }
+}
+
+/// One timestamped event of a [`ChurnTrace`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnEvent {
+    /// Injection time in seconds from run start.
+    pub t: f64,
+    /// Generation order, the tiebreak for equal times.
+    pub seq: usize,
+    /// What happens.
+    pub kind: ChurnEventKind,
+}
+
+/// A seeded, replayable fault schedule over one cluster.
+#[derive(Debug, Clone, Default)]
+pub struct ChurnTrace {
+    /// Events sorted by `(t, seq)`.
+    pub events: Vec<ChurnEvent>,
+}
+
+impl ChurnTrace {
+    /// Generate a schedule for a cluster of `n_machines`. Deterministic
+    /// in `(cfg.seed, n_machines)`. Capacity events never target the
+    /// last surviving machine (the cluster cannot go empty), and every
+    /// departure schedules its recovery — possibly beyond the horizon —
+    /// so lost capacity always comes back: preempted spot nodes return
+    /// quickly, failed machines wait out a longer repair gap.
+    pub fn generate(cfg: &ChurnCfg, n_machines: usize) -> ChurnTrace {
+        let mut rng = XorShift::new(cfg.seed);
+        let mut down_until: Vec<Option<f64>> = vec![None; n_machines];
+        let mean_gap = cfg.horizon_s / (cfg.n_events.max(1) as f64 + 1.0);
+        let mut events = Vec::new();
+        let mut seq = 0usize;
+        let mut t = 0.0f64;
+        for _ in 0..cfg.n_events {
+            t += -mean_gap * (1.0 - rng.f64()).max(1e-12).ln();
+            if t >= cfg.horizon_s {
+                break;
+            }
+            for d in down_until.iter_mut() {
+                if d.is_some_and(|back| back <= t) {
+                    *d = None;
+                }
+            }
+            let alive: Vec<usize> =
+                (0..n_machines).filter(|&i| down_until[i].is_none()).collect();
+            if rng.below(3) < 2 && alive.len() > 1 {
+                let machine = alive[rng.below(alive.len())];
+                let spot = rng.below(2) == 0;
+                let kind = if spot {
+                    ChurnEventKind::Preempt { machine }
+                } else {
+                    ChurnEventKind::Fail { machine }
+                };
+                events.push(ChurnEvent { t, seq, kind });
+                seq += 1;
+                let gap = mean_gap * if spot { 0.5 + rng.f64() } else { 1.5 + rng.f64() };
+                let back = t + gap;
+                down_until[machine] = Some(back);
+                events.push(ChurnEvent {
+                    t: back,
+                    seq,
+                    kind: ChurnEventKind::Recover { machine },
+                });
+                seq += 1;
+            } else {
+                let machine = rng.below(n_machines);
+                let factor = 1.0 + cfg.price_amplitude * (2.0 * rng.f64() - 1.0);
+                events.push(ChurnEvent {
+                    t,
+                    seq,
+                    kind: ChurnEventKind::Reprice { machine, factor },
+                });
+                seq += 1;
+            }
+        }
+        events.sort_by(|a, b| {
+            a.t.partial_cmp(&b.t).expect("event times are finite").then(a.seq.cmp(&b.seq))
+        });
+        ChurnTrace { events }
+    }
+
+    /// Bit-exact digest of the event sequence (times and price factors
+    /// rendered from their raw bits), for determinism assertions.
+    pub fn fingerprint(&self) -> String {
+        let parts: Vec<String> = self
+            .events
+            .iter()
+            .map(|e| {
+                let (tag, machine, bits) = match e.kind {
+                    ChurnEventKind::Preempt { machine } => ("P", machine, 0u64),
+                    ChurnEventKind::Fail { machine } => ("F", machine, 0),
+                    ChurnEventKind::Recover { machine } => ("R", machine, 0),
+                    ChurnEventKind::Reprice { machine, factor } => {
+                        ("$", machine, factor.to_bits())
+                    }
+                };
+                format!("{:016x}:{tag}{machine}:{bits:016x}", e.t.to_bits())
+            })
+            .collect();
+        parts.join("|")
+    }
+}
+
+/// How the runner reacts to churn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnPolicy {
+    /// Re-plan on every cluster change, water-fill devices every tick,
+    /// degrade onto restricted stale curves while re-plans are shed.
+    Elastic,
+    /// Plan once per job at arrival for the full live cluster, then run
+    /// FIFO at that fixed width; park whenever it no longer fits.
+    Static,
+}
+
+impl ChurnPolicy {
+    /// Stable lowercase label for tables and traces.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChurnPolicy::Elastic => "elastic",
+            ChurnPolicy::Static => "static",
+        }
+    }
+}
+
+/// Deterministic outcome summary of one churn run.
+#[derive(Debug, Clone)]
+pub struct ChurnReport {
+    /// Policy label ([`ChurnPolicy::name`]).
+    pub policy: String,
+    /// Jobs submitted.
+    pub n_jobs: usize,
+    /// Jobs that finished before the tick cap.
+    pub completed: usize,
+    /// Mean completion time minus arrival, over completed jobs (s).
+    pub mean_jct: f64,
+    /// Last completion time, or the final timeline instant if jobs
+    /// remain (s).
+    pub makespan: f64,
+    /// Total dollars billed across all jobs.
+    pub spent_usd: f64,
+    /// Total seconds jobs spent parked (no devices) while unfinished.
+    pub parked_s: f64,
+    /// Replan-SLO misses plus forced parks of running jobs.
+    pub slo_violations: usize,
+    /// Re-plan sweeps attempted through the plan service.
+    pub replans: usize,
+    /// Re-plan sweeps that came back (partly) shed and fell back.
+    pub fallback_replans: usize,
+    /// Running jobs forced to devices = 0.
+    pub parks: usize,
+    /// Trace events actually applied before the run ended.
+    pub events_applied: usize,
+    /// Ticks the timeline ran.
+    pub ticks: u64,
+}
+
+impl ChurnReport {
+    /// Bit-exact digest (floats rendered from raw bits) for run-twice
+    /// determinism assertions.
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "{}|{}|{}|{:016x}|{:016x}|{:016x}|{:016x}|{}|{}|{}|{}|{}|{}",
+            self.policy,
+            self.n_jobs,
+            self.completed,
+            self.mean_jct.to_bits(),
+            self.makespan.to_bits(),
+            self.spent_usd.to_bits(),
+            self.parked_s.to_bits(),
+            self.slo_violations,
+            self.replans,
+            self.fallback_replans,
+            self.parks,
+            self.events_applied,
+            self.ticks,
+        )
+    }
+}
+
+/// Restrict a stale curve to what survives on `live`: points wider than
+/// the live device count or whose min-memory strategy overflows
+/// [`Cluster::mem_budget`] are dropped. This is the graceful-degradation
+/// fallback — while a re-plan is shed or backing off, allocation keeps
+/// running on the restricted stale curve instead of erroring, and a job
+/// whose whole curve is dropped parks until a fresh plan (or recovery)
+/// arrives.
+pub fn degrade_curve(curve: &ProfileCurve, live: &Cluster) -> ProfileCurve {
+    let cap = live.n_devices() as u32;
+    let budget = live.mem_budget();
+    ProfileCurve {
+        points: curve
+            .points
+            .iter()
+            .filter(|p| p.parallelism <= cap && p.min_memory <= budget)
+            .cloned()
+            .collect(),
+    }
+}
+
+/// Sweep candidates for a live capacity of `cap` devices: powers of two
+/// below `cap`, plus `cap` itself.
+fn candidates(cap: u32) -> Vec<u32> {
+    let mut ds = Vec::new();
+    let mut d = 1u32;
+    while d < cap {
+        ds.push(d);
+        d *= 2;
+    }
+    ds.push(cap.max(1));
+    ds
+}
+
+/// Per-plan-key re-planning state shared by jobs of the same
+/// `model@batch` key.
+struct CurveState {
+    model: String,
+    batch: i64,
+    /// Last fully-swept curve (None until the first sweep lands).
+    curve: Option<ProfileCurve>,
+    /// Live-cluster fingerprint the curve was swept on; a mismatch with
+    /// the current fingerprint means the curve is stale.
+    fresh_for: String,
+    /// Consecutive shed sweeps (drives the exponential backoff).
+    fails: u32,
+    /// Earliest tick the next sweep may run.
+    next_retry: u64,
+    /// Tick of the oldest invalidation not yet answered by a fresh
+    /// sweep (drives the replan SLO).
+    pending_since: Option<u64>,
+}
+
+/// Per-job timeline state.
+struct JobRun {
+    spec: JobSpec,
+    param_bytes: f64,
+    arrived: bool,
+    remaining: f64,
+    devices: u32,
+    penalty: f64,
+    spent: f64,
+    parked_s: f64,
+    parked_now: bool,
+    done_t: Option<f64>,
+    /// Static policy only: width fixed at arrival (0 = not yet planned).
+    static_d: u32,
+    static_time: f64,
+    static_minmem: f64,
+}
+
+struct Runner<'a> {
+    cfg: &'a ChurnCfg,
+    base: &'a Cluster,
+    policy: ChurnPolicy,
+    planner: Arc<Planner>,
+    service: PlanService,
+    rescale: RescaleModel,
+    alive: Vec<bool>,
+    price: Vec<f64>,
+    live: Cluster,
+    live_fp: String,
+    sessions: HashMap<(String, String), Session>,
+    curves: HashMap<String, CurveState>,
+    jobs: Vec<JobRun>,
+    replans: usize,
+    fallbacks: usize,
+    parks: usize,
+    slo_violations: usize,
+    events_applied: usize,
+}
+
+impl<'a> Runner<'a> {
+    fn new(jobs: &[JobSpec], base: &'a Cluster, policy: ChurnPolicy, cfg: &'a ChurnCfg) -> Self {
+        let planner = Arc::new(Planner::new());
+        let serve_cfg =
+            ServeConfig { max_queue_depth: cfg.queue_depth.max(1), ..ServeConfig::default() };
+        let service = PlanService::new(Arc::clone(&planner), serve_cfg);
+        let jobs = jobs
+            .iter()
+            .map(|spec| JobRun {
+                param_bytes: models::by_name(&spec.model, spec.batch)
+                    .map(|g| g.total_param_bytes())
+                    .unwrap_or(0.0),
+                spec: spec.clone(),
+                arrived: false,
+                remaining: spec.iterations as f64,
+                devices: 0,
+                penalty: 0.0,
+                spent: 0.0,
+                parked_s: 0.0,
+                parked_now: false,
+                done_t: None,
+                static_d: 0,
+                static_time: 0.0,
+                static_minmem: 0.0,
+            })
+            .collect();
+        let mut r = Runner {
+            cfg,
+            base,
+            policy,
+            planner,
+            service,
+            rescale: RescaleModel::from_cluster(base),
+            alive: vec![true; base.n_machines()],
+            price: vec![1.0; base.n_machines()],
+            live: base.clone(),
+            live_fp: String::new(),
+            sessions: HashMap::new(),
+            curves: HashMap::new(),
+            jobs,
+            replans: 0,
+            fallbacks: 0,
+            parks: 0,
+            slo_violations: 0,
+            events_applied: 0,
+        };
+        r.rebuild_live();
+        r
+    }
+
+    /// Rebuild the live cluster from the alive set and price factors and
+    /// re-register it, refreshing the fingerprint every cached plan is
+    /// keyed under. `select_machines` (not incremental `add_machine`) is
+    /// used on recovery so asymmetric per-pair inter-links of the base
+    /// testbed are restored exactly.
+    fn rebuild_live(&mut self) {
+        let idx: Vec<usize> = (0..self.alive.len()).filter(|&i| self.alive[i]).collect();
+        let mut live = self.base.select_machines(&idx);
+        for (pos, &i) in idx.iter().enumerate() {
+            let rate = self.base.machines[i].device.usd_hour * self.price[i];
+            live.reprice(pos, rate);
+        }
+        self.live_fp = self.planner.register_cluster(&live);
+        self.live = live;
+    }
+
+    fn apply_event(&mut self, ev: &ChurnEvent, tick: u64) {
+        let n_alive = self.alive.iter().filter(|a| **a).count();
+        let changed = match ev.kind {
+            ChurnEventKind::Preempt { machine } | ChurnEventKind::Fail { machine } => {
+                if self.alive[machine] && n_alive > 1 {
+                    self.alive[machine] = false;
+                    true
+                } else {
+                    false
+                }
+            }
+            ChurnEventKind::Recover { machine } => {
+                if !self.alive[machine] {
+                    self.alive[machine] = true;
+                    true
+                } else {
+                    false
+                }
+            }
+            ChurnEventKind::Reprice { machine, factor } => {
+                self.price[machine] = factor;
+                true
+            }
+        };
+        if !changed {
+            return;
+        }
+        self.events_applied += 1;
+        obs::global_metrics().inc("churn.events");
+        if obs::enabled() {
+            let machine = match ev.kind {
+                ChurnEventKind::Preempt { machine }
+                | ChurnEventKind::Fail { machine }
+                | ChurnEventKind::Recover { machine }
+                | ChurnEventKind::Reprice { machine, .. } => machine,
+            };
+            obs::event(
+                "churn.event",
+                &[
+                    ("kind", Attr::Str(ev.kind.name().to_string())),
+                    ("machine", Attr::U64(machine as u64)),
+                    ("t", Attr::F64(ev.t)),
+                ],
+            );
+        }
+        self.rebuild_live();
+        for st in self.curves.values_mut() {
+            if st.fresh_for == self.live_fp {
+                // The event restored a fingerprint this curve was swept
+                // on (e.g. recovery undid a preemption): the plan is
+                // valid again, the outage is over for this key.
+                st.pending_since = None;
+                st.fails = 0;
+            } else {
+                st.pending_since.get_or_insert(tick);
+                if st.fails == 0 {
+                    // Was fresh until now: allow an immediate re-plan.
+                    st.next_retry = tick;
+                }
+            }
+        }
+    }
+
+    fn admit_arrivals(&mut self, now: f64, tick: u64) {
+        for j in self.jobs.iter_mut() {
+            if j.arrived || j.spec.arrival > now {
+                continue;
+            }
+            j.arrived = true;
+            let key = j.spec.model_key();
+            let (model, batch) = (j.spec.model.clone(), j.spec.batch);
+            self.curves.entry(key).or_insert_with(|| CurveState {
+                model,
+                batch,
+                curve: None,
+                fresh_for: String::new(),
+                fails: 0,
+                next_retry: tick,
+                pending_since: Some(tick),
+            });
+        }
+    }
+
+    /// Keys that need a sweep this tick, in job-submission order (the
+    /// only ordered walk; HashMap iteration never decides anything
+    /// report-visible).
+    fn needed_keys(&self) -> Vec<String> {
+        let mut keys: Vec<String> = Vec::new();
+        for j in &self.jobs {
+            if !j.arrived || j.done_t.is_some() {
+                continue;
+            }
+            let key = j.spec.model_key();
+            if keys.contains(&key) {
+                continue;
+            }
+            let stale = match self.curves.get(&key) {
+                None => true,
+                Some(st) => st.fresh_for != self.live_fp,
+            };
+            let need = match self.policy {
+                ChurnPolicy::Elastic => stale,
+                ChurnPolicy::Static => j.static_d == 0 && stale,
+            };
+            if need {
+                keys.push(key);
+            }
+        }
+        keys
+    }
+
+    fn refresh_pass(&mut self, tick: u64) {
+        for key in self.needed_keys() {
+            let due = match self.curves.get(&key) {
+                Some(st) => st.next_retry <= tick,
+                None => false,
+            };
+            if due {
+                self.attempt_refresh(&key, tick);
+            }
+        }
+    }
+
+    /// One re-plan sweep for `key` through the plan service. A fully
+    /// served sweep replaces the curve and clears the degraded state; a
+    /// (partly) shed sweep leaves the stale curve in place and arms the
+    /// capped tick backoff, widened by the service's `retry_after` hint.
+    fn attempt_refresh(&mut self, key: &str, tick: u64) {
+        let (model, batch) = match self.curves.get(key) {
+            Some(st) => (st.model.clone(), st.batch),
+            None => return,
+        };
+        let skey = (key.to_string(), self.live_fp.clone());
+        if !self.sessions.contains_key(&skey) {
+            let Some(graph) = models::by_name(&model, batch) else {
+                // Unknown model: the job can never plan; it stays parked.
+                return;
+            };
+            let session = Session::builder(graph, self.live.clone())
+                .planner(Arc::clone(&self.planner))
+                .build();
+            self.sessions.insert(skey.clone(), session);
+        }
+        let session = self.sessions.get(&skey).expect("just inserted");
+        let cands = candidates(self.live.n_devices() as u32);
+        let mut sp = obs::span("churn.replan");
+        if sp.active() {
+            sp.attr_str("key", key);
+            sp.attr_u64("tick", tick);
+            sp.attr_u64("cands", cands.len() as u64);
+        }
+        let reqs: Vec<ServeRequest> =
+            cands.iter().map(|&d| ServeRequest::new("churn", session.request_at(d))).collect();
+        let t0 = Instant::now();
+        let outcomes = self.service.serve_batch(&reqs);
+        obs::global_metrics().observe_latency("churn.replan_latency", t0.elapsed().as_secs_f64());
+        obs::global_metrics().inc("churn.replans");
+        self.replans += 1;
+        let mut points = Vec::with_capacity(cands.len());
+        let mut shed = false;
+        let mut hint = Duration::ZERO;
+        for (&d, out) in cands.iter().zip(outcomes) {
+            match out {
+                Ok(ServeOutcome::Served(resp)) => {
+                    let p = session.profiled_from(d, &resp.result).point;
+                    points.push(CurvePoint {
+                        parallelism: p.parallelism,
+                        est_time: p.best_time,
+                        sim_time: None,
+                        min_memory: p.min_memory,
+                        usd_hour: p.usd_hour,
+                    });
+                }
+                Ok(ServeOutcome::Rejected(rej)) => {
+                    shed = true;
+                    hint = hint.max(rej.reason.retry_after());
+                }
+                Err(_) => shed = true,
+            }
+        }
+        let fp = self.live_fp.clone();
+        let st = self.curves.get_mut(key).expect("state exists for needed key");
+        if shed {
+            st.fails += 1;
+            let expo = 1u64 << u64::from((st.fails - 1).min(16));
+            let hint_ticks = (hint.as_secs_f64() / self.cfg.tick_s).ceil() as u64;
+            let wait = expo.max(hint_ticks).clamp(1, self.cfg.max_backoff_ticks.max(1));
+            st.next_retry = tick + wait;
+            self.fallbacks += 1;
+            sp.attr_str("outcome", "fallback");
+            obs::global_metrics().inc("churn.fallbacks");
+            if obs::enabled() {
+                obs::event(
+                    "churn.fallback",
+                    &[
+                        ("key", Attr::Str(key.to_string())),
+                        ("retry_tick", Attr::U64(st.next_retry)),
+                    ],
+                );
+            }
+        } else {
+            points.sort_by_key(|p| p.parallelism);
+            st.curve = Some(ProfileCurve { points });
+            st.fresh_for = fp;
+            st.fails = 0;
+            sp.attr_str("outcome", "fresh");
+            if let Some(since) = st.pending_since.take() {
+                if tick.saturating_sub(since) > self.cfg.slo_ticks {
+                    self.slo_violations += 1;
+                    obs::global_metrics().inc("churn.slo_violations");
+                }
+            }
+        }
+    }
+
+    /// Fix the once-per-job static plan for jobs whose key swept fresh:
+    /// full live width when feasible, else the fastest feasible width.
+    fn fix_static_plans(&mut self) {
+        if self.policy != ChurnPolicy::Static {
+            return;
+        }
+        let cap = self.live.n_devices() as u32;
+        let budget = self.live.mem_budget();
+        for j in self.jobs.iter_mut() {
+            if !j.arrived || j.done_t.is_some() || j.static_d != 0 {
+                continue;
+            }
+            let key = j.spec.model_key();
+            let Some(st) = self.curves.get(&key) else { continue };
+            if st.fresh_for != self.live_fp {
+                continue;
+            }
+            let Some(curve) = &st.curve else { continue };
+            let full = curve.point(cap).filter(|p| p.feasible() && p.min_memory <= budget);
+            let pick = full.or_else(|| curve.fastest_within(cap));
+            if let Some(p) = pick {
+                if let Some(t) = p.est_time {
+                    j.static_d = p.parallelism;
+                    j.static_time = t;
+                    j.static_minmem = p.min_memory;
+                }
+            }
+        }
+    }
+
+    /// Decide this tick's device counts, price the moves, and account
+    /// park/resume transitions.
+    fn allocate_tick(&mut self) {
+        let cap = self.live.n_devices() as u32;
+        let mut new_alloc = vec![0u32; self.jobs.len()];
+        match self.policy {
+            ChurnPolicy::Elastic => {
+                let mut reqs = Vec::new();
+                let mut req_idx = Vec::new();
+                for (i, j) in self.jobs.iter().enumerate() {
+                    if !j.arrived || j.done_t.is_some() {
+                        continue;
+                    }
+                    let Some(st) = self.curves.get(&j.spec.model_key()) else { continue };
+                    let Some(curve) = &st.curve else { continue };
+                    let eff = if st.fresh_for == self.live_fp {
+                        curve.clone()
+                    } else {
+                        degrade_curve(curve, &self.live)
+                    };
+                    if eff.floor().is_none() {
+                        continue;
+                    }
+                    reqs.push(AllocRequest {
+                        job_id: j.spec.id,
+                        priority: j.spec.priority,
+                        curve: eff,
+                        constraint: None,
+                    });
+                    req_idx.push(i);
+                }
+                let alloc = allocate(cap, &reqs);
+                for (k, &i) in req_idx.iter().enumerate() {
+                    new_alloc[i] = alloc[k];
+                }
+            }
+            ChurnPolicy::Static => {
+                let budget = self.live.mem_budget();
+                let mut order: Vec<usize> = (0..self.jobs.len())
+                    .filter(|&i| {
+                        let j = &self.jobs[i];
+                        j.arrived && j.done_t.is_none() && j.static_d > 0
+                    })
+                    .collect();
+                order.sort_by(|&a, &b| {
+                    let (ja, jb) = (&self.jobs[a], &self.jobs[b]);
+                    ja.spec
+                        .arrival
+                        .partial_cmp(&jb.spec.arrival)
+                        .expect("arrivals are finite")
+                        .then(ja.spec.id.cmp(&jb.spec.id))
+                });
+                let mut left = cap;
+                for i in order {
+                    let j = &self.jobs[i];
+                    if j.static_minmem > budget || j.static_d > left {
+                        continue;
+                    }
+                    new_alloc[i] = j.static_d;
+                    left -= j.static_d;
+                }
+            }
+        }
+        let current: Vec<u32> = self.jobs.iter().map(|j| j.devices).collect();
+        let pbytes: Vec<f64> = self.jobs.iter().map(|j| j.param_bytes).collect();
+        let dec = price_moves(&self.rescale, new_alloc, &current, &pbytes);
+        for (i, j) in self.jobs.iter_mut().enumerate() {
+            if !j.arrived || j.done_t.is_some() {
+                continue;
+            }
+            let (old, new) = (current[i], dec.alloc[i]);
+            if old > 0 && new == 0 {
+                j.parked_now = true;
+                self.parks += 1;
+                // A forced park is a violated availability SLO under
+                // either policy.
+                self.slo_violations += 1;
+                obs::global_metrics().inc("churn.parks");
+                obs::global_metrics().inc("churn.slo_violations");
+                if obs::enabled() {
+                    obs::event("churn.park", &[("job", Attr::U64(j.spec.id as u64))]);
+                }
+            }
+            if old == 0 && new > 0 && j.parked_now {
+                j.parked_now = false;
+                if obs::enabled() {
+                    obs::event("churn.resume", &[("job", Attr::U64(j.spec.id as u64))]);
+                }
+            }
+            j.penalty += dec.penalties[i];
+            j.devices = new;
+        }
+    }
+
+    /// Advance one tick: pay rescale penalties first, then progress.
+    /// Billing is the cluster-average device rate times held devices —
+    /// price events move it, and unlike the per-point `usd_hour` it is
+    /// identical for both policies, so spend deltas isolate scheduling.
+    fn advance(&mut self, now: f64) {
+        let dt = self.cfg.tick_s;
+        let rate_dev = self.live.usd_hour() / self.live.n_devices().max(1) as f64;
+        for j in self.jobs.iter_mut() {
+            if !j.arrived || j.done_t.is_some() {
+                continue;
+            }
+            if j.devices == 0 {
+                j.parked_s += dt;
+                continue;
+            }
+            let rate = rate_dev * j.devices as f64;
+            let mut left = dt;
+            if j.penalty > 0.0 {
+                let pay = j.penalty.min(left);
+                j.penalty -= pay;
+                left -= pay;
+                j.spent += pay * rate / 3600.0;
+            }
+            if left <= 0.0 {
+                continue;
+            }
+            let iter_s = match self.policy {
+                ChurnPolicy::Static => Some(j.static_time),
+                ChurnPolicy::Elastic => self
+                    .curves
+                    .get(&j.spec.model_key())
+                    .and_then(|st| st.curve.as_ref())
+                    .and_then(|c| c.est_time(j.devices)),
+            };
+            // Defensive: an allocation whose point vanished mid-tick
+            // idles (and bills nothing) instead of panicking.
+            let Some(iter_s) = iter_s.filter(|t| *t > 0.0) else {
+                j.parked_s += left;
+                continue;
+            };
+            let need = j.remaining * iter_s;
+            if need <= left {
+                j.spent += need * rate / 3600.0;
+                j.remaining = 0.0;
+                j.done_t = Some(now + (dt - left) + need);
+                j.devices = 0;
+            } else {
+                j.spent += left * rate / 3600.0;
+                j.remaining -= left / iter_s;
+            }
+        }
+    }
+
+    fn report(self, ticks: u64, now: f64) -> ChurnReport {
+        let mut slo = self.slo_violations;
+        for st in self.curves.values() {
+            if let Some(since) = st.pending_since {
+                if ticks.saturating_sub(since) > self.cfg.slo_ticks {
+                    slo += 1;
+                }
+            }
+        }
+        let done: Vec<&JobRun> = self.jobs.iter().filter(|j| j.done_t.is_some()).collect();
+        let completed = done.len();
+        let jct_sum: f64 =
+            done.iter().map(|j| j.done_t.expect("filtered") - j.spec.arrival).sum();
+        let makespan =
+            done.iter().map(|j| j.done_t.expect("filtered")).fold(0.0f64, f64::max);
+        ChurnReport {
+            policy: self.policy.name().to_string(),
+            n_jobs: self.jobs.len(),
+            completed,
+            mean_jct: if completed > 0 { jct_sum / completed as f64 } else { 0.0 },
+            makespan: if completed == self.jobs.len() { makespan } else { now },
+            spent_usd: self.jobs.iter().map(|j| j.spent).sum(),
+            parked_s: self.jobs.iter().map(|j| j.parked_s).sum(),
+            slo_violations: slo,
+            replans: self.replans,
+            fallback_replans: self.fallbacks,
+            parks: self.parks,
+            events_applied: self.events_applied,
+            ticks,
+        }
+    }
+}
+
+/// Replay `trace` over `base` with `jobs` under `policy`. Deterministic
+/// in its inputs: the report's [`ChurnReport::fingerprint`] is identical
+/// across runs. A fresh planner and plan service are built per call so
+/// elastic and static replays start from the same cold state.
+pub fn run_churn(
+    jobs: &[JobSpec],
+    base: &Cluster,
+    trace: &ChurnTrace,
+    policy: ChurnPolicy,
+    cfg: &ChurnCfg,
+) -> ChurnReport {
+    let mut sp = obs::span("churn.run");
+    if sp.active() {
+        sp.attr_str("policy", policy.name());
+        sp.attr_u64("seed", cfg.seed);
+        sp.attr_u64("jobs", jobs.len() as u64);
+        sp.attr_u64("events", trace.events.len() as u64);
+    }
+    let mut r = Runner::new(jobs, base, policy, cfg);
+    let mut next_event = 0usize;
+    let mut tick = 0u64;
+    let mut now = 0.0f64;
+    loop {
+        now = tick as f64 * cfg.tick_s;
+        while next_event < trace.events.len() && trace.events[next_event].t <= now {
+            let ev = trace.events[next_event];
+            r.apply_event(&ev, tick);
+            next_event += 1;
+        }
+        r.admit_arrivals(now, tick);
+        r.refresh_pass(tick);
+        r.fix_static_plans();
+        r.allocate_tick();
+        r.advance(now);
+        tick += 1;
+        let all_done = r.jobs.iter().all(|j| j.done_t.is_some());
+        if all_done || tick > cfg.max_ticks {
+            break;
+        }
+    }
+    r.report(tick, now + cfg.tick_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{DeviceSpec, LinkKind, Machine};
+
+    fn two_machines() -> Cluster {
+        Cluster::from_machines(
+            "churn-2x2",
+            vec![
+                Machine { device: DeviceSpec::v100(), gpus: 2, intra: LinkKind::NvLink },
+                Machine { device: DeviceSpec::v100(), gpus: 2, intra: LinkKind::NvLink },
+            ],
+            LinkKind::IbRdma,
+        )
+    }
+
+    fn job(id: usize, arrival: f64, iterations: u64) -> JobSpec {
+        JobSpec {
+            id,
+            name: format!("job{id}"),
+            model: "tiny".into(),
+            batch: 64,
+            iterations,
+            priority: 1.0,
+            arrival,
+            budget_usd: None,
+            deadline_s: None,
+        }
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_keeps_one_machine_alive() {
+        let cfg = ChurnCfg { n_events: 12, ..ChurnCfg::default() };
+        let a = ChurnTrace::generate(&cfg, 3);
+        let b = ChurnTrace::generate(&cfg, 3);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same seed, same trace");
+        assert!(!a.events.is_empty());
+        let mut alive = [true; 3];
+        for e in &a.events {
+            match e.kind {
+                ChurnEventKind::Preempt { machine } | ChurnEventKind::Fail { machine } => {
+                    alive[machine] = false;
+                    assert!(alive.iter().any(|&x| x), "trace killed the whole cluster");
+                }
+                ChurnEventKind::Recover { machine } => alive[machine] = true,
+                ChurnEventKind::Reprice { factor, .. } => {
+                    assert!(factor > 0.0, "price factors stay positive")
+                }
+            }
+        }
+        let c = ChurnTrace::generate(&ChurnCfg { seed: 99, ..cfg }, 3);
+        assert_ne!(a.fingerprint(), c.fingerprint(), "seed changes the trace");
+    }
+
+    #[test]
+    fn churn_run_is_bit_deterministic() {
+        let cfg = ChurnCfg {
+            n_events: 4,
+            horizon_s: 20.0,
+            tick_s: 0.5,
+            ..ChurnCfg::default()
+        };
+        let base = two_machines();
+        let trace = ChurnTrace::generate(&cfg, base.n_machines());
+        let jobs = vec![job(0, 0.0, 400), job(1, 0.5, 300)];
+        let a = run_churn(&jobs, &base, &trace, ChurnPolicy::Elastic, &cfg);
+        let b = run_churn(&jobs, &base, &trace, ChurnPolicy::Elastic, &cfg);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "run twice, same report");
+        assert_eq!(a.completed, jobs.len(), "all jobs finish: {a:?}");
+    }
+
+    #[test]
+    fn shed_replans_fall_back_and_recover() {
+        let cfg = ChurnCfg {
+            queue_depth: 1,
+            n_events: 3,
+            horizon_s: 12.0,
+            tick_s: 0.5,
+            ..ChurnCfg::default()
+        };
+        let base = two_machines();
+        let trace = ChurnTrace::generate(&cfg, base.n_machines());
+        let jobs = vec![job(0, 0.0, 300), job(1, 0.0, 300)];
+        let r = run_churn(&jobs, &base, &trace, ChurnPolicy::Elastic, &cfg);
+        assert!(r.fallback_replans > 0, "queue depth 1 must shed sweep slices: {r:?}");
+        assert!(r.replans > r.fallback_replans, "retries eventually land fresh: {r:?}");
+        assert_eq!(r.completed, jobs.len(), "degraded re-plans still finish jobs: {r:?}");
+    }
+
+    #[test]
+    fn static_parks_under_capacity_loss_elastic_adapts() {
+        let base = two_machines();
+        let cfg = ChurnCfg { tick_s: 0.5, horizon_s: 40.0, ..ChurnCfg::default() };
+        let trace = ChurnTrace {
+            events: vec![
+                ChurnEvent { t: 0.5, seq: 0, kind: ChurnEventKind::Fail { machine: 1 } },
+                ChurnEvent { t: 10.0, seq: 1, kind: ChurnEventKind::Recover { machine: 1 } },
+            ],
+        };
+        let jobs = vec![job(0, 0.0, 20_000), job(1, 0.0, 20_000)];
+        let rs = run_churn(&jobs, &base, &trace, ChurnPolicy::Static, &cfg);
+        let re = run_churn(&jobs, &base, &trace, ChurnPolicy::Elastic, &cfg);
+        assert_eq!(re.completed, jobs.len(), "elastic finishes through churn: {re:?}");
+        assert_eq!(rs.events_applied, 2);
+        assert!(rs.parked_s > 0.0, "static serializes and parks on loss: {rs:?}");
+        assert!(re.parked_s <= rs.parked_s, "elastic parks no more: {re:?} vs {rs:?}");
+        assert!(re.slo_violations <= rs.slo_violations, "{re:?} vs {rs:?}");
+        if rs.completed == jobs.len() {
+            assert!(
+                re.mean_jct <= rs.mean_jct * 1.05,
+                "elastic JCT {} vs static {}",
+                re.mean_jct,
+                rs.mean_jct
+            );
+        }
+    }
+
+    #[test]
+    fn degrade_curve_respects_capacity_and_memory() {
+        let curve = ProfileCurve {
+            points: vec![
+                CurvePoint {
+                    parallelism: 1,
+                    est_time: Some(1.0),
+                    sim_time: None,
+                    min_memory: 20e9,
+                    usd_hour: 3.0,
+                },
+                CurvePoint {
+                    parallelism: 2,
+                    est_time: Some(0.6),
+                    sim_time: None,
+                    min_memory: 5e9,
+                    usd_hour: 6.0,
+                },
+                CurvePoint {
+                    parallelism: 4,
+                    est_time: Some(0.4),
+                    sim_time: None,
+                    min_memory: 3e9,
+                    usd_hour: 12.0,
+                },
+            ],
+        };
+        let live = Cluster::with_gpus(2); // 2x V100: 16 GB budget /1.1
+        let d = degrade_curve(&curve, &live);
+        assert_eq!(d.points.len(), 1, "20GB point and 4-wide point drop: {d:?}");
+        assert_eq!(d.points[0].parallelism, 2);
+    }
+}

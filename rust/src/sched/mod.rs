@@ -18,9 +18,16 @@
 //! (budget, deadline) pair ([`allocator::JobConstraint`]), upgrades are
 //! ranked by marginal throughput per marginal dollar, and the timeline
 //! meters each job's spend (rescale downtime included).
+//!
+//! Since PR 8 the layer is also churn-aware: [`churn`] injects seeded
+//! spot-preemption / failure / recovery / repricing traces into the
+//! timeline, forcing live re-plans through the warm plan-serving layer
+//! with graceful degradation (stale-curve fallback, capped tick backoff,
+//! park-and-resume) instead of errors.
 
 pub mod allocator;
 pub mod cache;
+pub mod churn;
 pub mod elastic;
 pub mod job;
 pub mod placement;
@@ -28,6 +35,10 @@ pub mod simulate;
 
 pub use allocator::{allocate, check_invariants, AllocRequest, JobConstraint};
 pub use cache::{CacheStats, CurvePoint, FrontierCache, ProfileCurve};
+pub use churn::{
+    degrade_curve, run_churn, ChurnCfg, ChurnEvent, ChurnEventKind, ChurnPolicy, ChurnReport,
+    ChurnTrace,
+};
 pub use elastic::{manifest_param_bytes, price_moves, Decision, ElasticScheduler, RescaleModel};
 pub use job::{JobSpec, Workload};
 pub use placement::{mixed_grants, place, Placement};

@@ -23,6 +23,12 @@ pub enum RejectReason {
         depth: usize,
         /// The shard's configured depth limit.
         limit: usize,
+        /// How long the caller should back off before retrying: the
+        /// queue ahead × the shard's EMA service time. Zero when the
+        /// shard has not served anything yet (no estimate to offer).
+        /// Callers (the churn replan path, `sched/cache.rs`) use this to
+        /// defer deterministically instead of hot-looping.
+        retry_after: Duration,
     },
     /// The caller's deadline cannot be met: the estimated wait behind the
     /// queue already exceeds it.
@@ -42,13 +48,28 @@ impl RejectReason {
             RejectReason::Deadline { .. } => "deadline",
         }
     }
+
+    /// The backoff hint carried by this rejection: `QueueFull` sheds
+    /// carry their explicit `retry_after`; `Deadline` sheds reuse the
+    /// estimated wait (the queue must drain by about that much before a
+    /// retry could meet any similar deadline).
+    pub fn retry_after(&self) -> Duration {
+        match self {
+            RejectReason::QueueFull { retry_after, .. } => *retry_after,
+            RejectReason::Deadline { est_wait, .. } => *est_wait,
+        }
+    }
 }
 
 impl std::fmt::Display for RejectReason {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            RejectReason::QueueFull { depth, limit } => {
-                write!(f, "queue full ({depth}/{limit} admitted)")
+            RejectReason::QueueFull { depth, limit, retry_after } => {
+                write!(
+                    f,
+                    "queue full ({depth}/{limit} admitted, retry after {:.1} ms)",
+                    retry_after.as_secs_f64() * 1e3
+                )
             }
             RejectReason::Deadline { est_wait, deadline } => write!(
                 f,
@@ -93,34 +114,46 @@ impl Admission {
         self.depth.load(Ordering::Relaxed)
     }
 
+    /// The EMA value, tolerating a poisoned mutex: a panicking holder can
+    /// at worst leave a stale-but-valid f64 behind, so recovering the
+    /// estimate is always safe (an admission gauge must keep admitting
+    /// after one tenant's panic).
+    fn ema(&self) -> f64 {
+        *self.ema_secs.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// The moving-average service time the deadline policy works from.
     pub fn est_service_time(&self) -> Duration {
-        Duration::from_secs_f64(*self.ema_secs.lock().unwrap())
+        Duration::from_secs_f64(self.ema())
     }
 
     /// Fold one observed service time into the moving average. Called by
     /// [`Permit`] drops; public so traffic drivers and tests can seed the
     /// estimate deterministically.
     pub fn note_service_time(&self, took: Duration) {
-        let mut ema = self.ema_secs.lock().unwrap();
+        let mut ema =
+            self.ema_secs.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let secs = took.as_secs_f64();
         *ema = if *ema == 0.0 { secs } else { *ema + EMA_ALPHA * (secs - *ema) };
     }
 
     /// Try to admit a request. On success the returned [`Permit`] holds a
     /// queue slot until dropped (recording its service time); on
-    /// overload, a typed [`RejectReason`] says exactly why.
+    /// overload, a typed [`RejectReason`] says exactly why and how long
+    /// to back off.
     pub fn try_admit(&self, deadline: Option<Duration>) -> Result<Permit<'_>, RejectReason> {
         let depth = self.depth.fetch_add(1, Ordering::AcqRel);
         if depth >= self.limit {
             self.depth.fetch_sub(1, Ordering::AcqRel);
-            return Err(RejectReason::QueueFull { depth, limit: self.limit });
+            // the queue ahead costs ~depth average service times to
+            // drain; that is the soonest a retry could find a free slot.
+            let retry_after = Duration::from_secs_f64(self.ema() * depth as f64);
+            return Err(RejectReason::QueueFull { depth, limit: self.limit, retry_after });
         }
         if let Some(deadline) = deadline {
             // `depth` requests are ahead of us; each costs ~one average
             // service time before our turn.
-            let est_wait =
-                Duration::from_secs_f64(*self.ema_secs.lock().unwrap() * depth as f64);
+            let est_wait = Duration::from_secs_f64(self.ema() * depth as f64);
             if est_wait > deadline {
                 self.depth.fetch_sub(1, Ordering::AcqRel);
                 return Err(RejectReason::Deadline { est_wait, deadline });
@@ -154,10 +187,49 @@ mod tests {
         let p1 = adm.try_admit(None).unwrap();
         let p2 = adm.try_admit(None).unwrap();
         let shed = adm.try_admit(None).unwrap_err();
-        assert_eq!(shed, RejectReason::QueueFull { depth: 2, limit: 2 });
+        // no service time observed yet: the backoff hint is zero.
+        let expect = RejectReason::QueueFull {
+            depth: 2,
+            limit: 2,
+            retry_after: Duration::ZERO,
+        };
+        assert_eq!(shed, expect);
         drop(p1);
         assert!(adm.try_admit(None).is_ok(), "released slot re-admits");
         drop(p2);
+    }
+
+    #[test]
+    fn queue_full_carries_an_ema_scaled_backoff_hint() {
+        let adm = Admission::new(2);
+        adm.note_service_time(Duration::from_millis(100));
+        let _p1 = adm.try_admit(None).unwrap();
+        let _p2 = adm.try_admit(None).unwrap();
+        let shed = adm.try_admit(None).unwrap_err();
+        // 2 admitted ahead x 100ms EMA = 200ms, via both accessors.
+        let expect = Duration::from_millis(200);
+        assert_eq!(shed.retry_after(), expect);
+        match shed {
+            RejectReason::QueueFull { retry_after, .. } => assert_eq!(retry_after, expect),
+            other => panic!("expected queue_full, got {other:?}"),
+        }
+        assert!(shed.to_string().contains("retry after"), "{shed}");
+    }
+
+    #[test]
+    fn admission_survives_a_poisoned_ema_lock() {
+        use std::sync::Arc;
+        let adm = Arc::new(Admission::new(2));
+        let poisoner = Arc::clone(&adm);
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.ema_secs.lock().unwrap();
+            panic!("poison the EMA lock");
+        })
+        .join();
+        // the gauge keeps admitting and estimating after the poison.
+        adm.note_service_time(Duration::from_millis(10));
+        assert_eq!(adm.est_service_time(), Duration::from_millis(10));
+        drop(adm.try_admit(Some(Duration::from_secs(1))).unwrap());
     }
 
     #[test]

@@ -74,6 +74,15 @@ struct Group {
     cv: Condvar,
 }
 
+/// Poison-tolerant lock: every mutation under these mutexes is completed
+/// before any user code (the sweep closure) can run, so a panicking
+/// holder leaves consistent state behind and recovering the guard is
+/// always safe. Without this, one panicking leader poisons the group map
+/// and every later request on the service panics in turn.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// The coalescing front: one open group per [`CoalesceKey`] at a time.
 pub struct Coalescer {
     window: Duration,
@@ -102,9 +111,9 @@ impl Coalescer {
     ) -> anyhow::Result<(Arc<FtResult>, GroupOutcome)> {
         // Ride an open group when one exists; otherwise found a new one.
         let group = {
-            let mut groups = self.groups.lock().unwrap();
+            let mut groups = lock(&self.groups);
             if let Some(g) = groups.get(key).cloned() {
-                let mut st = g.state.lock().unwrap();
+                let mut st = lock(&g.state);
                 if st.open {
                     st.wanted.insert(parallelism);
                     st.members += 1;
@@ -138,27 +147,40 @@ impl Coalescer {
             std::thread::sleep(self.window);
         }
         {
-            let mut groups = self.groups.lock().unwrap();
+            let mut groups = lock(&self.groups);
             if groups.get(key).is_some_and(|g| Arc::ptr_eq(g, &group)) {
                 groups.remove(key);
             }
         }
         let (union, members) = {
-            let mut st = group.state.lock().unwrap();
+            let mut st = lock(&group.state);
             st.open = false;
             (st.wanted.iter().copied().collect::<Vec<u32>>(), st.members)
         };
 
-        let result = sweep(&union);
+        // The sweep is tenant-adjacent code (planner search over a
+        // caller-supplied graph): isolate its panics so a dying leader
+        // still publishes an outcome. Without this the riders wait on the
+        // condvar forever — a wedged service, which is worse than the
+        // panic itself.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| sweep(&union)));
         let published = match &result {
-            Ok(map) => Ok(map.clone()),
-            Err(e) => Err(format!("{e:#}")),
+            Ok(Ok(map)) => Ok(map.clone()),
+            Ok(Err(e)) => Err(format!("{e:#}")),
+            Err(_) => Err("leader panicked mid-sweep".to_string()),
         };
         {
-            let mut st = group.state.lock().unwrap();
+            let mut st = lock(&group.state);
             st.done = Some(published);
         }
         group.cv.notify_all();
+        let result = match result {
+            Ok(r) => r,
+            // re-raise on the leader's own thread now that the riders are
+            // released and the group is unlinked: the panic stays
+            // observable, it just cannot wedge anyone else.
+            Err(panic) => std::panic::resume_unwind(panic),
+        };
 
         let outcome = GroupOutcome { led: true, members, union: union.len() };
         let map = result?;
@@ -173,9 +195,9 @@ impl Coalescer {
         group: &Arc<Group>,
         parallelism: u32,
     ) -> anyhow::Result<(Arc<FtResult>, GroupOutcome)> {
-        let mut st = group.state.lock().unwrap();
+        let mut st = lock(&group.state);
         while st.done.is_none() {
-            st = group.cv.wait(st).unwrap();
+            st = group.cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
         }
         let outcome =
             GroupOutcome { led: false, members: st.members, union: st.wanted.len() };
@@ -257,6 +279,42 @@ mod tests {
             .unwrap();
         assert!(o.led);
         assert_eq!(o.members, 1);
+    }
+
+    #[test]
+    fn panicking_leader_releases_riders_and_the_group() {
+        let co = Arc::new(Coalescer::new(Duration::from_millis(250), 8));
+        let leader = {
+            let co = Arc::clone(&co);
+            std::thread::spawn(move || {
+                co.join(&key("tiny"), 2, |_| -> anyhow::Result<HashMap<u32, Arc<FtResult>>> {
+                    panic!("leader dies mid-sweep")
+                })
+            })
+        };
+        // join inside the leader's window so we ride its group.
+        std::thread::sleep(Duration::from_millis(50));
+        let rider = {
+            let co = Arc::clone(&co);
+            std::thread::spawn(move || {
+                co.join(&key("tiny"), 4, |u| {
+                    Ok(u.iter().map(|&d| (d, fake_result())).collect())
+                })
+            })
+        };
+        // the leader's own thread re-raises the panic (observable)...
+        assert!(leader.join().is_err(), "leader panic must not be swallowed");
+        // ...while the rider is released with an error — not wedged on the
+        // condvar, not poisoned into a panic of its own.
+        let err = rider.join().expect("rider thread must not panic").unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        // and the key stays serviceable: a fresh join leads a new sweep.
+        let (_, o) = co
+            .join(&key("tiny"), 4, |u| {
+                Ok(u.iter().map(|&d| (d, fake_result())).collect())
+            })
+            .unwrap();
+        assert!(o.led, "re-issued request becomes a new leader");
     }
 
     #[test]

@@ -42,6 +42,15 @@ struct Shard {
     clock: u64,
 }
 
+/// Poison-tolerant lock: no user code ever runs under a shard lock (pure
+/// map/counter bookkeeping, every invariant restored before release), so
+/// a panic elsewhere on the thread can only leave valid state behind and
+/// recovering the guard is safe. One panicking tenant must not turn
+/// every later store access into a poison panic.
+fn lock(m: &Mutex<Shard>) -> std::sync::MutexGuard<'_, Shard> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 impl Shard {
     fn touch(&mut self, key: &PlanRequest) -> Option<Arc<FtResult>> {
         self.clock += 1;
@@ -131,14 +140,14 @@ impl ShardedStore {
 
     /// Look up a key, refreshing its recency on hit.
     pub fn get(&self, key: &PlanRequest) -> Option<Arc<FtResult>> {
-        self.shards[self.shard_of(key)].lock().unwrap().touch(key)
+        lock(&self.shards[self.shard_of(key)]).touch(key)
     }
 
     /// Pin `key` against eviction while a coalesced group computes or
     /// distributes it. Re-entrant (pins count); the guard unpins on drop.
     pub fn pin(&self, key: &PlanRequest) -> PinGuard<'_> {
         let shard = self.shard_of(key);
-        *self.shards[shard].lock().unwrap().pinned.entry(key.clone()).or_insert(0) += 1;
+        *lock(&self.shards[shard]).pinned.entry(key.clone()).or_insert(0) += 1;
         PinGuard { store: self, key: key.clone(), shard }
     }
 
@@ -149,7 +158,7 @@ impl ShardedStore {
     /// than the budget is allowed to overshoot — correctness over quota.
     pub fn insert(&self, key: &PlanRequest, result: Arc<FtResult>) -> Vec<PlanRequest> {
         let bytes = approx_result_bytes(&result);
-        let mut shard = self.shards[self.shard_of(key)].lock().unwrap();
+        let mut shard = lock(&self.shards[self.shard_of(key)]);
         shard.clock += 1;
         let clock = shard.clock;
         if let Some(old) = shard
@@ -169,7 +178,7 @@ impl ShardedStore {
     pub fn trim(&self) -> Vec<PlanRequest> {
         let mut evicted = Vec::new();
         for shard in &self.shards {
-            evicted.extend(shard.lock().unwrap().evict_over(self.budget_bytes));
+            evicted.extend(lock(shard).evict_over(self.budget_bytes));
         }
         evicted
     }
@@ -178,7 +187,7 @@ impl ShardedStore {
     pub fn stats(&self) -> StoreStats {
         let mut s = StoreStats::default();
         for shard in &self.shards {
-            let g = shard.lock().unwrap();
+            let g = lock(shard);
             s.entries += g.entries.len();
             s.bytes += g.bytes;
             s.pinned += g.pinned.len();
@@ -196,7 +205,7 @@ pub struct PinGuard<'a> {
 
 impl Drop for PinGuard<'_> {
     fn drop(&mut self) {
-        let mut shard = self.store.shards[self.shard].lock().unwrap();
+        let mut shard = lock(&self.store.shards[self.shard]);
         if let Some(n) = shard.pinned.get_mut(&self.key) {
             *n -= 1;
             if *n == 0 {

@@ -17,7 +17,8 @@ a span id somewhere in the file (children are recorded when they *close*,
 so a child's line precedes its parent's). Blank lines are ignored.
 
 Usage:
-  trace_check.py trace.jsonl [--expect-served cold,memo,...] [--min-records N]
+  trace_check.py trace.jsonl [--expect-served cold,memo,...]
+                 [--expect-replan fresh,fallback] [--min-records N]
   trace_check.py --self-test
 """
 import argparse
@@ -132,7 +133,20 @@ def served_values(records):
     }
 
 
-def run(path, expect_served, min_records):
+def replan_outcomes(records):
+    """`outcome` attrs of churn.replan spans: fresh (full sweep landed)
+    or fallback (shed; the timeline kept running on a degraded stale
+    plan). The CI churn smoke asserts at least one of each appears."""
+    return {
+        r["attrs"]["outcome"]
+        for r in records
+        if r["type"] == "span"
+        and r["name"] == "churn.replan"
+        and isinstance(r["attrs"].get("outcome"), str)
+    }
+
+
+def run(path, expect_served, min_records, expect_replan=None):
     with open(path) as f:
         text = f.read()
     records, problems = validate(text)
@@ -150,6 +164,17 @@ def run(path, expect_served, min_records):
         if missing:
             print(
                 f"{path}: plan.request spans cover served={sorted(got)}, "
+                f"missing {sorted(missing)}",
+                file=sys.stderr,
+            )
+            sys.exit(1)
+    if expect_replan:
+        want = {s.strip() for s in expect_replan.split(",") if s.strip()}
+        got = replan_outcomes(records)
+        missing = want - got
+        if missing:
+            print(
+                f"{path}: churn.replan spans cover outcome={sorted(got)}, "
                 f"missing {sorted(missing)}",
                 file=sys.stderr,
             )
@@ -180,11 +205,28 @@ def self_test():
         '{"type":"span","id":4,"parent":null,"name":"sched.curve",'
         '"t_us":11,"dur_us":1,"thread":2,"attrs":{"served":"nope"}}'
     )
-    good = "\n".join([child, event, span, serve_span, other_span]) + "\n"
+    replan_fresh = (
+        '{"type":"span","id":5,"parent":null,"name":"churn.replan",'
+        '"t_us":12,"dur_us":3,"thread":3,"attrs":{"outcome":"fresh","tick":4}}'
+    )
+    replan_fallback = (
+        '{"type":"span","id":6,"parent":null,"name":"churn.replan",'
+        '"t_us":16,"dur_us":2,"thread":3,"attrs":{"outcome":"fallback","tick":5}}'
+    )
+    churn_event = (
+        '{"type":"event","parent":6,"name":"churn.fallback","t_us":17,'
+        '"thread":3,"attrs":{"key":"tiny@64","retry_tick":7}}'
+    )
+    good = "\n".join(
+        [child, event, span, serve_span, other_span, replan_fresh, replan_fallback,
+         churn_event]
+    ) + "\n"
     records, problems = validate(good)
     assert problems == [], problems
     # both request-shaped spans contribute; other spans' attrs never do.
     assert served_values(records) == {"cold", "hit"}
+    # churn.replan outcomes aggregate the same way for --expect-replan.
+    assert replan_outcomes(records) == {"fresh", "fallback"}
 
     bad_cases = [
         ("", "empty"),
@@ -209,6 +251,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("trace", nargs="?")
     ap.add_argument("--expect-served", help="comma-separated served values that must appear")
+    ap.add_argument(
+        "--expect-replan", help="comma-separated churn.replan outcomes that must appear"
+    )
     ap.add_argument("--min-records", type=int, default=1)
     ap.add_argument("--self-test", action="store_true")
     args = ap.parse_args()
@@ -217,7 +262,7 @@ def main():
         return
     if not args.trace:
         ap.error("trace file required (or --self-test)")
-    run(args.trace, args.expect_served, args.min_records)
+    run(args.trace, args.expect_served, args.min_records, args.expect_replan)
 
 
 if __name__ == "__main__":
