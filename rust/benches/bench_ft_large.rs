@@ -1,0 +1,51 @@
+//! `bench_ft_large` (ISSUE 9): cold FT search throughput on a 96-layer
+//! transformer at batches 32/128/512 — the struct-of-arrays rewrite's
+//! tentpole target — plus side-by-side SoA vs `frontier::reference`
+//! kernel timings, so every BENCH artifact carries the engine speedup
+//! next to the end-to-end numbers (see README.md "Pinning the speedup"
+//! for comparing against the pre-rewrite anchor commit).
+
+use tensoropt::cluster::Cluster;
+use tensoropt::cost::comm::GroundTruthComm;
+use tensoropt::frontier::{reduce, reference, Mode, Trace, Tuple};
+use tensoropt::ft::{frontier_search, FtOptions};
+use tensoropt::graph::models::transformer96;
+use tensoropt::util::benchkit::Bench;
+use tensoropt::util::rng::XorShift;
+
+fn main() {
+    let mut b = Bench::new("ft_large").slow();
+    let cluster = Cluster::paper_testbed();
+    let comm = GroundTruthComm::new(cluster.clone());
+
+    // ---- end-to-end cold searches (space build + elimination + LDP).
+    for batch in [32i64, 128, 512] {
+        let g = transformer96(batch);
+        b.run(&format!("cold_search_transformer96_b{batch}"), || {
+            let mut opts = FtOptions::new(4);
+            opts.threads = 8;
+            frontier_search(&g, &cluster, &comm, opts).frontier.len()
+        });
+    }
+
+    // ---- SoA kernel vs the frozen pre-SoA oracle on one shared cloud:
+    // the in-artifact speedup anchor for the rewrite itself.
+    let mut rng = XorShift::new(7);
+    let cloud: Vec<Tuple> = (0..50_000)
+        .map(|_| Tuple::with_cost(rng.f64() * 1e9, rng.f64(), rng.f64(), Trace::empty()))
+        .collect();
+    let soa = b.run("reduce_50k_soa", || reduce(cloud.clone(), Mode::Pareto)).mean_s;
+    let old = b
+        .run("reduce_50k_reference", || reference::reduce(cloud.clone(), Mode::Pareto))
+        .mean_s;
+
+    let a = reduce(cloud[..1500].to_vec(), Mode::Pareto);
+    let c = reduce(cloud[1500..3000].to_vec(), Mode::Pareto);
+    b.run("product_soa", || a.product(&c, Mode::Pareto));
+    b.run("product_reference", || reference::product(&a, &c, Mode::Pareto));
+
+    // smaller-is-better ratio, so the armed gate flags the SoA kernel
+    // losing ground against the frozen oracle.
+    b.record("reduce_50k_soa_over_reference_ratio", soa / old);
+    b.finish();
+}

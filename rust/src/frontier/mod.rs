@@ -10,6 +10,19 @@
 //! `Arc` sharing keeps memory linear in the number of algebra operations
 //! rather than in strategies x operators.
 //!
+//! ## Engine layout
+//!
+//! The operations here are thin views over a struct-of-arrays kernel (the
+//! private `soa` module): the three objectives live in three contiguous
+//! `f64` lanes, dominance and ε-thinning are linear sweeps over those
+//! lanes, sorting happens on a `u32` permutation so tuple payloads (and
+//! their `Arc` traces) move only when they survive, and
+//! [`Frontier::union_many`] merges the parts' already-sorted runs
+//! divide-and-conquer style instead of re-sorting the concatenation. The
+//! boxed pre-SoA engine is frozen verbatim in [`reference`] as the oracle
+//! the differential suite (`rust/tests/frontier_diff.rs`) compares
+//! against bit-for-bit.
+//!
 //! ## The third objective: monetary cost
 //!
 //! The paper motivates auto-parallelism with cloud users who want to
@@ -32,6 +45,11 @@ use std::sync::Arc;
 
 pub use crate::obs::provenance as trace;
 pub use crate::obs::provenance::Trace;
+
+pub mod reference;
+mod soa;
+
+use soa::Lanes;
 
 /// Reduction mode: the full Pareto frontier (FT), or single-objective
 /// truncations that turn the same machinery into the OptCNN (time-only)
@@ -190,10 +208,10 @@ impl Frontier {
 
     /// **Product** ⊗ (Cartesian; costs add, traces pair), reduced.
     ///
-    /// Perf (§Perf opt-1): costs are combined and reduced *first*; trace
-    /// nodes are allocated only for the surviving tuples. The naive
-    /// combine-then-reduce allocates two `Arc`s per discarded combo, which
-    /// dominated the LDP profile.
+    /// Perf (§Perf opt-1): costs are combined into the objective lanes and
+    /// reduced *first*; trace nodes are allocated only for the surviving
+    /// tuples. The naive combine-then-reduce allocates two `Arc`s per
+    /// discarded combo, which dominated the LDP profile.
     pub fn product(&self, other: &Frontier, mode: Mode) -> Frontier {
         // Perf (§Perf opt-2): a product with a singleton frontier is a
         // uniform cost shift — it preserves dominance relations and the
@@ -203,38 +221,31 @@ impl Frontier {
         // path is hot.
         if mode == Mode::Pareto && other.len() == 1 {
             let b = &other.tuples[0];
-            return Frontier {
-                tuples: self.tuples.iter().map(|a| a.combine(b)).collect(),
-            };
+            return Frontier { tuples: self.tuples.iter().map(|a| a.combine(b)).collect() };
         }
         if mode == Mode::Pareto && self.len() == 1 {
             return other.product(self, mode);
         }
-        let mut combos: Vec<(f64, f64, f64, (u32, u32))> =
-            Vec::with_capacity(self.len() * other.len());
-        for (i, a) in self.tuples.iter().enumerate() {
-            for (j, b) in other.tuples.iter().enumerate() {
-                combos.push((
-                    a.mem + b.mem,
-                    a.time + b.time,
-                    a.cost + b.cost,
-                    (i as u32, j as u32),
-                ));
+        // row-major combos: position p encodes the pair (p / m, p % m), so
+        // no per-combo payload is materialized at all.
+        let m = other.len();
+        let mut lanes = Lanes::with_capacity(self.len() * m);
+        for a in &self.tuples {
+            for b in &other.tuples {
+                lanes.push(a.mem + b.mem, a.time + b.time, a.cost + b.cost);
             }
         }
-        let kept = reduce_by(combos, mode);
+        let kept = soa::reduce_indices(&lanes, mode, None);
         Frontier {
             tuples: kept
                 .into_iter()
-                .map(|(mem, time, cost, (i, j))| {
+                .map(|p| {
+                    let p = p as usize;
                     Tuple::with_cost(
-                        mem,
-                        time,
-                        cost,
-                        Trace::pair(
-                            &self.tuples[i as usize].trace,
-                            &other.tuples[j as usize].trace,
-                        ),
+                        lanes.mem[p],
+                        lanes.time[p],
+                        lanes.cost[p],
+                        Trace::pair(&self.tuples[p / m].trace, &other.tuples[p % m].trace),
                     )
                 })
                 .collect(),
@@ -243,10 +254,30 @@ impl Frontier {
 
     /// **Union** ∪ (concatenate), reduced.
     pub fn union(&self, other: &Frontier, mode: Mode) -> Frontier {
-        let mut out = Vec::with_capacity(self.len() + other.len());
-        out.extend(self.tuples.iter().cloned());
-        out.extend(other.tuples.iter().cloned());
-        reduce(out, mode)
+        Frontier::union_many(vec![self.clone(), other.clone()], mode)
+    }
+
+    /// **Union** over any number of frontiers at once — bit-identical to
+    /// [`reduce`] over the concatenation of all parts, but executed as a
+    /// divide-and-conquer merge of the parts' already-sorted runs (with a
+    /// fallback to a full stable sort when a part is unsorted), so
+    /// unioning k reduced frontiers costs a merge rather than a fresh
+    /// sort. The LDP solver and the elimination engine accumulate their
+    /// per-configuration products with this.
+    pub fn union_many(parts: Vec<Frontier>, mode: Mode) -> Frontier {
+        let total: usize = parts.iter().map(Frontier::len).sum();
+        let mut lanes = Lanes::with_capacity(total);
+        let mut runs: Vec<u32> = Vec::with_capacity(parts.len());
+        let mut tuples: Vec<Tuple> = Vec::with_capacity(total);
+        for part in parts {
+            for t in part.tuples {
+                lanes.push(t.mem, t.time, t.cost);
+                tuples.push(t);
+            }
+            runs.push(lanes.len() as u32);
+        }
+        let kept = soa::reduce_indices(&lanes, mode, Some(&runs));
+        Frontier { tuples: gather(tuples, &kept) }
     }
 }
 
@@ -275,10 +306,16 @@ pub const THIN_EPS: f64 = 5e-3;
 /// exactly the paper's staircase scan. Ties on memory keep the faster
 /// tuple. `Mode::TimeOnly` / `Mode::MemOnly` truncate the result to the
 /// single optimal tuple for that objective (OptCNN / ToFu).
+///
+/// Sorting and scanning run over the struct-of-arrays lanes; the boxed
+/// tuples move once, at the final survivor gather.
 pub fn reduce(tuples: Vec<Tuple>, mode: Mode) -> Frontier {
-    let combos: Vec<(f64, f64, f64, Tuple)> =
-        tuples.into_iter().map(|t| (t.mem, t.time, t.cost, t)).collect();
-    Frontier { tuples: reduce_by(combos, mode).into_iter().map(|(_, _, _, t)| t).collect() }
+    let mut lanes = Lanes::with_capacity(tuples.len());
+    for t in &tuples {
+        lanes.push(t.mem, t.time, t.cost);
+    }
+    let kept = soa::reduce_indices(&lanes, mode, None);
+    Frontier { tuples: gather(tuples, &kept) }
 }
 
 /// Exact 3-D Pareto filter over raw `(mem, time, cost)` points: indices of
@@ -286,107 +323,20 @@ pub fn reduce(tuples: Vec<Tuple>, mode: Mode) -> Frontier {
 /// index). No ε-thinning — used by `exp provision` and tests to *verify*
 /// Pareto-optimality of reported points rather than to thin search
 /// frontiers.
+///
+/// Runs as a sort-based sweep (O(n log n + n·f) for frontier size f); the
+/// original quadratic pairwise scan survives as
+/// [`reference::pareto_indices`], and the differential tests pin the two
+/// to identical index sets on adversarial inputs.
 pub fn pareto_indices(points: &[(f64, f64, f64)]) -> Vec<usize> {
-    let dominates = |a: &(f64, f64, f64), b: &(f64, f64, f64)| {
-        a.0 <= b.0 && a.1 <= b.1 && a.2 <= b.2
-    };
-    let mut kept = Vec::new();
-    'outer: for (i, p) in points.iter().enumerate() {
-        for (j, q) in points.iter().enumerate() {
-            if i == j || !dominates(q, p) {
-                continue;
-            }
-            // strict domination kills p; an exact tie keeps the lowest index.
-            if q != p || j < i {
-                continue 'outer;
-            }
-        }
-        kept.push(i);
-    }
-    kept
+    soa::pareto_sweep(points)
 }
 
-/// Algorithm 1 over (mem, time, cost, payload) entries — shared by
-/// [`reduce`] (payload = full tuple) and [`Frontier::product`] (payload =
-/// index pair, so traces are only allocated for survivors).
-fn reduce_by<T: Clone>(
-    mut items: Vec<(f64, f64, f64, T)>,
-    mode: Mode,
-) -> Vec<(f64, f64, f64, T)> {
-    if items.is_empty() {
-        return items;
-    }
-    match mode {
-        Mode::TimeOnly => {
-            let best = items
-                .into_iter()
-                .min_by(|a, b| (a.1, a.0, a.2).partial_cmp(&(b.1, b.0, b.2)).unwrap())
-                .unwrap();
-            return vec![best];
-        }
-        Mode::MemOnly => {
-            let best = items
-                .into_iter()
-                .min_by(|a, b| (a.0, a.1, a.2).partial_cmp(&(b.0, b.1, b.2)).unwrap())
-                .unwrap();
-            return vec![best];
-        }
-        Mode::Pareto => {}
-    }
-    // Algorithm 1: ascending memory (time, then cost, as tiebreaks).
-    items.sort_by(|a, b| (a.0, a.1, a.2).partial_cmp(&(b.0, b.1, b.2)).unwrap());
-    // remember the global min-time / min-cost items so thinning can never
-    // lose the objective extremes.
-    let best_time = items
-        .iter()
-        .min_by(|a, b| (a.1, a.0, a.2).partial_cmp(&(b.1, b.0, b.2)).unwrap())
-        .cloned()
-        .unwrap();
-    let best_cost = items
-        .iter()
-        .min_by(|a, b| (a.2, a.0, a.1).partial_cmp(&(b.2, b.0, b.1)).unwrap())
-        .cloned()
-        .unwrap();
-    let mut out: Vec<(f64, f64, f64, T)> = Vec::new();
-    for t in items {
-        // every kept q has q.mem <= t.mem by the sort, so ε-dominance only
-        // needs the time and cost conditions. With all costs equal the
-        // cost condition is vacuous and this is the 2-D staircase scan.
-        let eps_dominated = out
-            .iter()
-            .any(|q| q.1 * (1.0 - THIN_EPS) <= t.1 && q.2 * (1.0 - THIN_EPS) <= t.2);
-        if !eps_dominated {
-            out.push(t);
-        }
-    }
-    // re-attach the exact objective extremes if thinning dropped them.
-    if out.iter().all(|q| q.1 > best_time.1) {
-        out.push(best_time);
-    }
-    if out.iter().all(|q| q.2 > best_cost.2) {
-        out.push(best_cost);
-    }
-    out.sort_by(|a, b| (a.0, a.1, a.2).partial_cmp(&(b.0, b.1, b.2)).unwrap());
-    // drop anything the re-attached extremes exactly dominate, so the
-    // result is a minimal (mutually non-dominated) set.
-    let n = out.len();
-    let keep: Vec<bool> = (0..n)
-        .map(|i| {
-            !(0..n).any(|j| {
-                if i == j {
-                    return false;
-                }
-                let (qi, qj) = (&out[i], &out[j]);
-                let dom = qj.0 <= qi.0 && qj.1 <= qi.1 && qj.2 <= qi.2;
-                let tie = qj.0 == qi.0 && qj.1 == qi.1 && qj.2 == qi.2;
-                dom && (!tie || j < i)
-            })
-        })
-        .collect();
-    out.into_iter()
-        .zip(keep)
-        .filter_map(|(t, k)| if k { Some(t) } else { None })
-        .collect()
+/// Move the tuples at the `kept` positions (each position appears at most
+/// once) out of `tuples`, in `kept` order, without cloning traces.
+fn gather(tuples: Vec<Tuple>, kept: &[u32]) -> Vec<Tuple> {
+    let mut slots: Vec<Option<Tuple>> = tuples.into_iter().map(Some).collect();
+    kept.iter().map(|&p| slots[p as usize].take().expect("survivor index repeated")).collect()
 }
 
 #[cfg(test)]
@@ -538,6 +488,68 @@ mod tests {
         ];
         assert_eq!(pareto_indices(&pts), vec![0, 2, 4]);
         assert!(pareto_indices(&[]).is_empty());
+    }
+
+    /// Satellite: the sort-based sweep must pin the exact index sets of
+    /// the retired pairwise scan on adversarial inputs — duplicates,
+    /// colinear points, ±0.0 — and on random clouds dense with ties.
+    #[test]
+    fn pareto_indices_adversarial_matches_reference() {
+        let cases: Vec<Vec<(f64, f64, f64)>> = vec![
+            vec![(1.0, 1.0, 1.0); 5],
+            vec![(1.0, 2.0, 3.0), (2.0, 3.0, 4.0), (3.0, 4.0, 5.0), (1.0, 2.0, 3.0)],
+            vec![(0.0, -0.0, 0.0), (-0.0, 0.0, 0.0), (0.0, 0.0, -0.0)],
+            vec![(1.0, 5.0, 0.0), (2.0, 4.0, 0.0), (3.0, 3.0, 0.0), (2.0, 4.0, 0.0)],
+            vec![(5.0, 1.0, 1.0), (4.0, 2.0, 1.0), (3.0, 3.0, 1.0), (2.0, 4.0, 1.0)],
+            Vec::new(),
+        ];
+        for pts in &cases {
+            assert_eq!(pareto_indices(pts), reference::pareto_indices(pts), "case {pts:?}");
+        }
+        ptest::quick("pareto-sweep-diff", |rng: &mut XorShift| {
+            let n = rng.range(0, 40);
+            let pts: Vec<(f64, f64, f64)> = (0..n)
+                .map(|_| (rng.below(6) as f64, rng.below(6) as f64, rng.below(6) as f64))
+                .collect();
+            crate::prop_assert!(
+                pareto_indices(&pts) == reference::pareto_indices(&pts),
+                "sweep != pairwise on {:?}",
+                pts
+            );
+            Ok(())
+        });
+    }
+
+    /// [`Frontier::union_many`]'s contract: bit-identical to one reduce
+    /// over the concatenation of all parts, whichever merge path it takes.
+    #[test]
+    fn union_many_matches_reduce_of_concatenation() {
+        ptest::quick("union-many-concat", |rng: &mut XorShift| {
+            let mk = |rng: &mut XorShift| -> Frontier {
+                let n = rng.range(0, 10);
+                let ts: Vec<Tuple> = (0..n)
+                    .map(|_| {
+                        let c = rng.below(3) as f64;
+                        tup3((rng.below(20) + 1) as f64, (rng.below(20) + 1) as f64, c)
+                    })
+                    .collect();
+                reduce(ts, Mode::Pareto)
+            };
+            let parts: Vec<Frontier> = (0..rng.range(1, 6)).map(|_| mk(rng)).collect();
+            let all: Vec<Tuple> = parts.iter().flat_map(|f| f.tuples.iter().cloned()).collect();
+            let direct = reduce(all, Mode::Pareto);
+            let merged = Frontier::union_many(parts, Mode::Pareto);
+            crate::prop_assert!(merged.len() == direct.len(), "length mismatch");
+            for (x, y) in merged.tuples.iter().zip(&direct.tuples) {
+                crate::prop_assert!(
+                    x.mem.to_bits() == y.mem.to_bits()
+                        && x.time.to_bits() == y.time.to_bits()
+                        && x.cost.to_bits() == y.cost.to_bits(),
+                    "tuple bits differ"
+                );
+            }
+            Ok(())
+        });
     }
 
     #[test]

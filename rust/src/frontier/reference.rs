@@ -1,0 +1,208 @@
+//! The pre-SoA frontier engine, frozen verbatim as a test oracle.
+//!
+//! This module is the boxed-tuple implementation the struct-of-arrays
+//! engine (the private `soa` module) replaced. It is retained **exclusively for
+//! tests and bench anchors**: the differential suite
+//! (`rust/tests/frontier_diff.rs`) asserts the production operations in
+//! [`crate::frontier`] stay *bit-identical* to these functions on seeded
+//! random inputs (ties, ε-boundary points, ±0.0, subnormals), and
+//! `bench_ft_large` times the two reduce kernels side by side so every
+//! BENCH artifact carries the SoA speedup.
+//!
+//! Nothing outside tests/benches may call into here — the production call
+//! graph goes through [`crate::frontier`] only. Keep this file in sync
+//! with nothing: it is intentionally dead history, the executable spec the
+//! rewrite was checked against.
+
+use super::{Frontier, Mode, Trace, Tuple, THIN_EPS};
+
+/// Oracle for [`crate::frontier::reduce`]: Algorithm 1 + ε-thinning via
+/// the original sort-then-rescan over boxed tuples.
+pub fn reduce(tuples: Vec<Tuple>, mode: Mode) -> Frontier {
+    let combos: Vec<(f64, f64, f64, Tuple)> =
+        tuples.into_iter().map(|t| (t.mem, t.time, t.cost, t)).collect();
+    Frontier { tuples: reduce_by(combos, mode).into_iter().map(|(_, _, _, t)| t).collect() }
+}
+
+/// Oracle for [`Frontier::product`]: Cartesian combine over boxed tuples,
+/// with the original singleton fast path and survivor-only trace
+/// allocation.
+pub fn product(a: &Frontier, b: &Frontier, mode: Mode) -> Frontier {
+    if mode == Mode::Pareto && b.len() == 1 {
+        let bt = &b.tuples[0];
+        return Frontier { tuples: a.tuples.iter().map(|at| at.combine(bt)).collect() };
+    }
+    if mode == Mode::Pareto && a.len() == 1 {
+        return product(b, a, mode);
+    }
+    let mut combos: Vec<(f64, f64, f64, (u32, u32))> = Vec::with_capacity(a.len() * b.len());
+    for (i, at) in a.tuples.iter().enumerate() {
+        for (j, bt) in b.tuples.iter().enumerate() {
+            combos.push((
+                at.mem + bt.mem,
+                at.time + bt.time,
+                at.cost + bt.cost,
+                (i as u32, j as u32),
+            ));
+        }
+    }
+    let kept = reduce_by(combos, mode);
+    Frontier {
+        tuples: kept
+            .into_iter()
+            .map(|(mem, time, cost, (i, j))| {
+                Tuple::with_cost(
+                    mem,
+                    time,
+                    cost,
+                    Trace::pair(&a.tuples[i as usize].trace, &b.tuples[j as usize].trace),
+                )
+            })
+            .collect(),
+    }
+}
+
+/// Oracle for [`Frontier::union`] (and, folded over parts in
+/// concatenation order, for [`Frontier::union_many`]): concatenate, then
+/// [`reduce`].
+pub fn union(a: &Frontier, b: &Frontier, mode: Mode) -> Frontier {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    out.extend(a.tuples.iter().cloned());
+    out.extend(b.tuples.iter().cloned());
+    reduce(out, mode)
+}
+
+/// Oracle for [`crate::frontier::pareto_indices`]: the original exact
+/// O(n²) pairwise scan (duplicates keep the lowest index).
+pub fn pareto_indices(points: &[(f64, f64, f64)]) -> Vec<usize> {
+    let dominates =
+        |a: &(f64, f64, f64), b: &(f64, f64, f64)| a.0 <= b.0 && a.1 <= b.1 && a.2 <= b.2;
+    let mut kept = Vec::new();
+    'outer: for (i, p) in points.iter().enumerate() {
+        for (j, q) in points.iter().enumerate() {
+            if i == j || !dominates(q, p) {
+                continue;
+            }
+            // strict domination kills p; an exact tie keeps the lowest index.
+            if q != p || j < i {
+                continue 'outer;
+            }
+        }
+        kept.push(i);
+    }
+    kept
+}
+
+/// Oracle for [`Frontier::min_time`].
+pub fn min_time(f: &Frontier) -> Option<&Tuple> {
+    f.tuples
+        .iter()
+        .min_by(|a, b| (a.time, a.mem, a.cost).partial_cmp(&(b.time, b.mem, b.cost)).unwrap())
+}
+
+/// Oracle for [`Frontier::min_cost`].
+pub fn min_cost(f: &Frontier) -> Option<&Tuple> {
+    f.tuples
+        .iter()
+        .min_by(|a, b| (a.cost, a.mem, a.time).partial_cmp(&(b.cost, b.mem, b.time)).unwrap())
+}
+
+/// Oracle for [`Frontier::min_time_within`].
+pub fn min_time_within(f: &Frontier, mem_budget: f64) -> Option<&Tuple> {
+    f.tuples
+        .iter()
+        .filter(|t| t.mem <= mem_budget)
+        .min_by(|a, b| (a.time, a.mem, a.cost).partial_cmp(&(b.time, b.mem, b.cost)).unwrap())
+}
+
+/// Oracle for [`Frontier::min_cost_within`].
+pub fn min_cost_within(f: &Frontier, mem_budget: f64, deadline: f64) -> Option<&Tuple> {
+    f.tuples
+        .iter()
+        .filter(|t| t.mem <= mem_budget && t.time <= deadline)
+        .min_by(|a, b| (a.cost, a.time, a.mem).partial_cmp(&(b.cost, b.time, b.mem)).unwrap())
+}
+
+/// Oracle for [`Frontier::min_time_within_cost`].
+pub fn min_time_within_cost(f: &Frontier, mem_budget: f64, budget_usd: f64) -> Option<&Tuple> {
+    f.tuples
+        .iter()
+        .filter(|t| t.mem <= mem_budget && t.cost <= budget_usd)
+        .min_by(|a, b| (a.time, a.cost, a.mem).partial_cmp(&(b.time, b.cost, b.mem)).unwrap())
+}
+
+/// Algorithm 1 over (mem, time, cost, payload) entries — the original
+/// shared core of [`reduce`] and [`product`].
+fn reduce_by<T: Clone>(mut items: Vec<(f64, f64, f64, T)>, mode: Mode) -> Vec<(f64, f64, f64, T)> {
+    if items.is_empty() {
+        return items;
+    }
+    match mode {
+        Mode::TimeOnly => {
+            let best = items
+                .into_iter()
+                .min_by(|a, b| (a.1, a.0, a.2).partial_cmp(&(b.1, b.0, b.2)).unwrap())
+                .unwrap();
+            return vec![best];
+        }
+        Mode::MemOnly => {
+            let best = items
+                .into_iter()
+                .min_by(|a, b| (a.0, a.1, a.2).partial_cmp(&(b.0, b.1, b.2)).unwrap())
+                .unwrap();
+            return vec![best];
+        }
+        Mode::Pareto => {}
+    }
+    // Algorithm 1: ascending memory (time, then cost, as tiebreaks).
+    items.sort_by(|a, b| (a.0, a.1, a.2).partial_cmp(&(b.0, b.1, b.2)).unwrap());
+    // remember the global min-time / min-cost items so thinning can never
+    // lose the objective extremes.
+    let best_time = items
+        .iter()
+        .min_by(|a, b| (a.1, a.0, a.2).partial_cmp(&(b.1, b.0, b.2)).unwrap())
+        .cloned()
+        .unwrap();
+    let best_cost = items
+        .iter()
+        .min_by(|a, b| (a.2, a.0, a.1).partial_cmp(&(b.2, b.0, b.1)).unwrap())
+        .cloned()
+        .unwrap();
+    let mut out: Vec<(f64, f64, f64, T)> = Vec::new();
+    for t in items {
+        // every kept q has q.mem <= t.mem by the sort, so ε-dominance only
+        // needs the time and cost conditions. With all costs equal the
+        // cost condition is vacuous and this is the 2-D staircase scan.
+        let eps_dominated = out
+            .iter()
+            .any(|q| q.1 * (1.0 - THIN_EPS) <= t.1 && q.2 * (1.0 - THIN_EPS) <= t.2);
+        if !eps_dominated {
+            out.push(t);
+        }
+    }
+    // re-attach the exact objective extremes if thinning dropped them.
+    if out.iter().all(|q| q.1 > best_time.1) {
+        out.push(best_time);
+    }
+    if out.iter().all(|q| q.2 > best_cost.2) {
+        out.push(best_cost);
+    }
+    out.sort_by(|a, b| (a.0, a.1, a.2).partial_cmp(&(b.0, b.1, b.2)).unwrap());
+    // drop anything the re-attached extremes exactly dominate, so the
+    // result is a minimal (mutually non-dominated) set.
+    let n = out.len();
+    let keep: Vec<bool> = (0..n)
+        .map(|i| {
+            !(0..n).any(|j| {
+                if i == j {
+                    return false;
+                }
+                let (qi, qj) = (&out[i], &out[j]);
+                let dom = qj.0 <= qi.0 && qj.1 <= qi.1 && qj.2 <= qi.2;
+                let tie = qj.0 == qi.0 && qj.1 == qi.1 && qj.2 == qi.2;
+                dom && (!tie || j < i)
+            })
+        })
+        .collect();
+    out.into_iter().zip(keep).filter_map(|(t, k)| if k { Some(t) } else { None }).collect()
+}

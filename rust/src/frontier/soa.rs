@@ -1,0 +1,298 @@
+//! Struct-of-arrays frontier kernel.
+//!
+//! Every frontier operation in [`crate::frontier`] bottoms out here: the
+//! three objectives live in three contiguous `f64` lanes ([`Lanes`]) and
+//! the algorithms manipulate `u32` *positions* into those lanes instead of
+//! moving boxed `Tuple`s (24 bytes of floats plus an `Arc` each) around.
+//! That buys three things on the FT hot path:
+//!
+//! 1. **Linear-sweep dominance and ε-thinning.** The Algorithm-1 scan
+//!    compares a candidate's (time, cost) against the *kept* set's
+//!    pre-scaled `time·(1-ε)` / `cost·(1-ε)` lanes — two contiguous `f64`
+//!    slices walked in lockstep, which the compiler auto-vectorizes —
+//!    instead of a pointer-chasing rescan of boxed tuples.
+//! 2. **Sort without payload traffic.** Ordering is established on a
+//!    `u32` permutation; survivor tuples (and their `Arc` traces) are
+//!    gathered once at the end, only for the positions that made the cut.
+//! 3. **Divide-and-conquer merges.** A union of already-reduced frontiers
+//!    is a merge of sorted runs, not a full re-sort: bottom-up pairwise
+//!    stable merges reproduce the stable-sort permutation bit-for-bit
+//!    (bottom-up mergesort *is* a stable sort) at merge cost.
+//!
+//! Bit-compatibility contract: every function here performs the same
+//! floating-point comparisons and arithmetic, in the same order, as the
+//! retired boxed engine preserved in `super::reference` — the differential
+//! suite (`rust/tests/frontier_diff.rs`) holds the two bit-identical on
+//! adversarial inputs (exact ties, ε-boundary points, ±0.0, subnormals,
+//! the all-zero-cost 2-D degenerate case).
+
+use super::{Mode, THIN_EPS};
+use std::cmp::Ordering;
+
+/// The three objective lanes of a tuple set, stored contiguously.
+pub(crate) struct Lanes {
+    /// Peak per-device memory, one entry per tuple.
+    pub mem: Vec<f64>,
+    /// Per-iteration time, one entry per tuple.
+    pub time: Vec<f64>,
+    /// Dollar cost, one entry per tuple.
+    pub cost: Vec<f64>,
+}
+
+impl Lanes {
+    /// Empty lanes with capacity for `n` tuples.
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            mem: Vec::with_capacity(n),
+            time: Vec::with_capacity(n),
+            cost: Vec::with_capacity(n),
+        }
+    }
+
+    /// Append one tuple's objectives.
+    #[inline]
+    pub fn push(&mut self, mem: f64, time: f64, cost: f64) {
+        self.mem.push(mem);
+        self.time.push(time);
+        self.cost.push(cost);
+    }
+
+    /// Number of tuples.
+    pub fn len(&self) -> usize {
+        self.mem.len()
+    }
+
+    /// Are there no tuples?
+    pub fn is_empty(&self) -> bool {
+        self.mem.is_empty()
+    }
+
+    /// Lexicographic (mem, time, cost) comparison of positions `a` and
+    /// `b` — the frontier sort order. Panics on NaN, like the boxed
+    /// engine did.
+    #[inline]
+    fn cmp(&self, a: u32, b: u32) -> Ordering {
+        let (a, b) = (a as usize, b as usize);
+        (self.mem[a], self.time[a], self.cost[a])
+            .partial_cmp(&(self.mem[b], self.time[b], self.cost[b]))
+            .unwrap()
+    }
+
+    /// First position (in `order`) minimizing `key` — ties keep the
+    /// earliest, matching `Iterator::min_by`.
+    fn argmin_by<K: PartialOrd>(&self, order: &[u32], key: impl Fn(usize) -> K) -> u32 {
+        let mut best = order[0];
+        for &p in &order[1..] {
+            if key(p as usize).partial_cmp(&key(best as usize)).unwrap() == Ordering::Less {
+                best = p;
+            }
+        }
+        best
+    }
+
+    /// First position in `order` minimizing `(time, mem, cost)`.
+    fn argmin_time(&self, order: &[u32]) -> u32 {
+        self.argmin_by(order, |p| (self.time[p], self.mem[p], self.cost[p]))
+    }
+
+    /// First position in `order` minimizing `(cost, mem, time)`.
+    fn argmin_cost(&self, order: &[u32]) -> u32 {
+        self.argmin_by(order, |p| (self.cost[p], self.mem[p], self.time[p]))
+    }
+
+    /// First position in `order` minimizing `(mem, time, cost)`.
+    fn argmin_mem(&self, order: &[u32]) -> u32 {
+        self.argmin_by(order, |p| (self.mem[p], self.time[p], self.cost[p]))
+    }
+
+    /// Stable sort of all positions by (mem, time, cost).
+    pub fn sorted_perm(&self) -> Vec<u32> {
+        let mut perm: Vec<u32> = (0..self.len() as u32).collect();
+        perm.sort_by(|&a, &b| self.cmp(a, b));
+        perm
+    }
+
+    /// Is the run `lo..hi` already sorted by (mem, time, cost)?
+    fn run_sorted(&self, lo: u32, hi: u32) -> bool {
+        (lo..hi.saturating_sub(1)).all(|i| self.cmp(i, i + 1) != Ordering::Greater)
+    }
+
+    /// Permutation sorting the concatenation of `runs` (given as end
+    /// offsets: run `r` spans `runs[r-1]..runs[r]`, with an implicit 0
+    /// start). When every run is itself sorted this is a bottom-up
+    /// divide-and-conquer stable merge — bit-identical to a stable sort
+    /// of the concatenation, at merge cost. Falls back to a full stable
+    /// sort when any run is unsorted (e.g. a singleton-product output
+    /// whose uniform shift collapsed memory ties).
+    pub fn merged_perm(&self, runs: &[u32]) -> Vec<u32> {
+        let mut lo = 0u32;
+        let mut sorted_runs: Vec<Vec<u32>> = Vec::with_capacity(runs.len());
+        for &hi in runs {
+            if !self.run_sorted(lo, hi) {
+                return self.sorted_perm();
+            }
+            sorted_runs.push((lo..hi).collect());
+            lo = hi;
+        }
+        // Bottom-up mergesort over the pre-sorted runs; merging adjacent
+        // pairs left to right keeps concatenation order for ties, so the
+        // result is the stable-sort permutation.
+        while sorted_runs.len() > 1 {
+            let mut next = Vec::with_capacity(sorted_runs.len().div_ceil(2));
+            let mut it = sorted_runs.into_iter();
+            while let Some(a) = it.next() {
+                match it.next() {
+                    Some(b) => next.push(self.merge_two(a, b)),
+                    None => next.push(a),
+                }
+            }
+            sorted_runs = next;
+        }
+        sorted_runs.pop().unwrap_or_default()
+    }
+
+    /// Stable two-way merge: positions from `a` win ties (they precede
+    /// `b` in concatenation order).
+    fn merge_two(&self, a: Vec<u32>, b: Vec<u32>) -> Vec<u32> {
+        let mut out = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            if self.cmp(a[i], b[j]) != Ordering::Greater {
+                out.push(a[i]);
+                i += 1;
+            } else {
+                out.push(b[j]);
+                j += 1;
+            }
+        }
+        out.extend_from_slice(&a[i..]);
+        out.extend_from_slice(&b[j..]);
+        out
+    }
+
+    /// Algorithm 1 + ε-thinning over a (mem, time, cost)-sorted
+    /// permutation: the surviving positions in final frontier order.
+    /// `perm` must sort the lanes (from [`Lanes::sorted_perm`] or
+    /// [`Lanes::merged_perm`]); the single-objective mode truncations are
+    /// handled by [`reduce_indices`], not here.
+    fn thin_sorted(&self, perm: &[u32]) -> Vec<u32> {
+        if perm.is_empty() {
+            return Vec::new();
+        }
+        // remember the global min-time / min-cost positions (first minimal
+        // in sorted order) so thinning can never lose the extremes.
+        let best_time = self.argmin_time(perm);
+        let best_cost = self.argmin_cost(perm);
+        let mut out: Vec<u32> = Vec::new();
+        // the kept set's ε-scaled lanes, contiguous so the dominance check
+        // below is a linear sweep over two f64 slices.
+        let mut kept_time_eps: Vec<f64> = Vec::new();
+        let mut kept_cost_eps: Vec<f64> = Vec::new();
+        for &p in perm {
+            let (t, c) = (self.time[p as usize], self.cost[p as usize]);
+            // every kept q has q.mem <= t.mem by the sort, so ε-dominance
+            // only needs the time and cost conditions. With all costs
+            // equal the cost condition is vacuous and this is the 2-D
+            // staircase scan.
+            let eps_dominated = kept_time_eps
+                .iter()
+                .zip(kept_cost_eps.iter())
+                .any(|(&qt, &qc)| qt <= t && qc <= c);
+            if !eps_dominated {
+                out.push(p);
+                kept_time_eps.push(t * (1.0 - THIN_EPS));
+                kept_cost_eps.push(c * (1.0 - THIN_EPS));
+            }
+        }
+        // re-attach the exact objective extremes if thinning dropped them
+        // (the second check sees a just-re-attached best_time, in exactly
+        // the boxed engine's order).
+        let bt = best_time as usize;
+        if out.iter().all(|&q| self.time[q as usize] > self.time[bt]) {
+            out.push(best_time);
+        }
+        let bc = best_cost as usize;
+        if out.iter().all(|&q| self.cost[q as usize] > self.cost[bc]) {
+            out.push(best_cost);
+        }
+        out.sort_by(|&a, &b| self.cmp(a, b));
+        // drop anything the re-attached extremes exactly dominate, so the
+        // result is a minimal (mutually non-dominated) set.
+        let n = out.len();
+        let keep: Vec<bool> = (0..n)
+            .map(|i| {
+                !(0..n).any(|j| {
+                    if i == j {
+                        return false;
+                    }
+                    let (qi, qj) = (out[i] as usize, out[j] as usize);
+                    let dom = self.mem[qj] <= self.mem[qi]
+                        && self.time[qj] <= self.time[qi]
+                        && self.cost[qj] <= self.cost[qi];
+                    let tie = self.mem[qj] == self.mem[qi]
+                        && self.time[qj] == self.time[qi]
+                        && self.cost[qj] == self.cost[qi];
+                    dom && (!tie || j < i)
+                })
+            })
+            .collect();
+        out.into_iter().zip(keep).filter_map(|(p, k)| if k { Some(p) } else { None }).collect()
+    }
+}
+
+/// Full reduce over the lanes: surviving positions in final frontier
+/// order. `runs`, when given, holds end offsets of already-sorted runs (a
+/// union of reduced frontiers) so the sort becomes a divide-and-conquer
+/// merge; `None` sorts from scratch. The single-objective modes pick the
+/// first minimal position in *input* order, matching the boxed engine's
+/// pre-sort `min_by`.
+pub(crate) fn reduce_indices(lanes: &Lanes, mode: Mode, runs: Option<&[u32]>) -> Vec<u32> {
+    if lanes.is_empty() {
+        return Vec::new();
+    }
+    match mode {
+        Mode::TimeOnly => {
+            let order: Vec<u32> = (0..lanes.len() as u32).collect();
+            return vec![lanes.argmin_time(&order)];
+        }
+        Mode::MemOnly => {
+            let order: Vec<u32> = (0..lanes.len() as u32).collect();
+            return vec![lanes.argmin_mem(&order)];
+        }
+        Mode::Pareto => {}
+    }
+    let perm = match runs {
+        Some(r) => lanes.merged_perm(r),
+        None => lanes.sorted_perm(),
+    };
+    lanes.thin_sorted(&perm)
+}
+
+/// Exact 3-D Pareto filter via a sort-based sweep: indices of the points
+/// no other point dominates (duplicates keep the lowest index), ascending.
+///
+/// Replaces the quadratic all-pairs scan: after a stable lexicographic
+/// sort a point can only be dominated by a *kept* point that sorts before
+/// it (a dominator is lexicographically ≤ the dominated point, and a
+/// killed dominator's own killer dominates transitively), so one forward
+/// sweep against the kept set suffices — O(n log n + n·f) for frontier
+/// size f instead of O(n²). Exact ties sort stably, so the lowest original
+/// index is swept first and kills its duplicates, exactly like the
+/// pairwise rule.
+pub(crate) fn pareto_sweep(points: &[(f64, f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<u32> = (0..points.len() as u32).collect();
+    idx.sort_by(|&a, &b| points[a as usize].partial_cmp(&points[b as usize]).unwrap());
+    let mut kept: Vec<u32> = Vec::new();
+    'outer: for &i in &idx {
+        let p = points[i as usize];
+        for &j in &kept {
+            let q = points[j as usize];
+            if q.0 <= p.0 && q.1 <= p.1 && q.2 <= p.2 {
+                continue 'outer;
+            }
+        }
+        kept.push(i);
+    }
+    kept.sort_unstable();
+    kept.into_iter().map(|i| i as usize).collect()
+}

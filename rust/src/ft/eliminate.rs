@@ -19,10 +19,25 @@
 //!
 //! Marked (linear-spine) nodes are never eliminated, so the loop leaves a
 //! linear graph for LDP.
+//!
+//! ## Parallel batched elimination
+//!
+//! Candidate discovery is structural, so each round collects *every*
+//! eligible candidate at once and keeps a greedy independent set: node
+//! candidates conflict iff they share an incident edge, branch candidates
+//! iff they share the consumer they fold into. Members of such a batch
+//! have no data dependence — each one's new table reads only its own
+//! incident edge tables and operator frontiers of the *pre-batch* state,
+//! and writes (edge removals, one bridge edge, one consumer update, one
+//! `alive` flag) are disjoint by construction — so the expensive table
+//! computation fans out over `util::par` and the cheap state mutation is
+//! applied sequentially in batch order. Values are pure functions of the
+//! pre-batch state, so the result is bit-identical at any thread count,
+//! and a replayed schedule re-applies the same batches to the same state.
 
 use std::collections::HashMap;
 
-use crate::frontier::{reduce, Frontier, Tuple};
+use crate::frontier::Frontier;
 use crate::util::par::par_map_indexed;
 
 use super::space::SearchSpace;
@@ -34,14 +49,22 @@ use super::space::SearchSpace;
 /// graph topology and the spine. Recording it once per model lets every
 /// later search of the same graph [`WorkGraph::replay`] the steps and
 /// skip re-discovery (the planner engine's incremental re-search).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// Batch boundaries are part of the schedule: two nodes recorded in one
+/// [`ElimStep::Nodes`] batch were proven conflict-free against the state
+/// that batch saw, which consecutive singleton steps would *not* imply
+/// (eliminating one chain node can make its neighbour a candidate whose
+/// edges only exist in the post-step state). Replays therefore re-apply
+/// exactly the recorded batches.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ElimStep {
     /// An [`WorkGraph::edge_eliminate_all`] pass that performed merges.
     Merge,
-    /// Node elimination (Eq. 4) of op `i`.
-    Node(usize),
-    /// Branch elimination (Eq. 6) of source op `i`.
-    Branch(usize),
+    /// Node elimination (Eq. 4) of a conflict-free batch of chain ops,
+    /// applied against the state before the batch.
+    Nodes(Vec<usize>),
+    /// Branch elimination (Eq. 6) of a conflict-free batch of source ops.
+    Branches(Vec<usize>),
     /// Heuristic elimination (Eq. 7) of op `i`. The pinned configuration
     /// k* is *not* part of the schedule — it depends on the leaf costs, so
     /// replays re-score it (or reuse a per-(parallelism, mode) pin when
@@ -63,6 +86,18 @@ pub struct WorkEdge {
     pub table: Vec<Vec<Frontier>>,
 }
 
+/// A node-elimination candidate resolved against the pre-batch state.
+struct ChainCtx {
+    /// The chain op being eliminated.
+    op: usize,
+    /// Its single in-edge / out-edge ids in the pre-batch edge list.
+    e_in: usize,
+    e_out: usize,
+    /// The bridge endpoints (predecessor, successor).
+    src: usize,
+    dst: usize,
+}
+
 /// The mutable elimination state.
 pub struct WorkGraph<'s, 'a> {
     /// The immutable search space being eliminated.
@@ -81,6 +116,16 @@ pub struct WorkGraph<'s, 'a> {
     /// Number of heuristic eliminations performed (reported; the paper
     /// argues accuracy loss is small because this stays tiny).
     pub n_heuristic: usize,
+}
+
+/// Per-op degree view of the live edge list, built in one O(E) pass and
+/// shared by the batch discovery passes. `in_edge`/`out_edge` hold *an*
+/// incident edge id — only meaningful where the matching degree is 1.
+struct Degrees {
+    indeg: Vec<usize>,
+    outdeg: Vec<usize>,
+    in_edge: Vec<usize>,
+    out_edge: Vec<usize>,
 }
 
 impl<'s, 'a> WorkGraph<'s, 'a> {
@@ -131,148 +176,227 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
         (0..self.edges.len()).filter(|&e| self.edges[e].dst == i).collect()
     }
 
+    fn degrees(&self) -> Degrees {
+        let n = self.alive.len();
+        let mut d = Degrees {
+            indeg: vec![0; n],
+            outdeg: vec![0; n],
+            in_edge: vec![usize::MAX; n],
+            out_edge: vec![usize::MAX; n],
+        };
+        for (e, edge) in self.edges.iter().enumerate() {
+            d.outdeg[edge.src] += 1;
+            d.out_edge[edge.src] = e;
+            d.indeg[edge.dst] += 1;
+            d.in_edge[edge.dst] = e;
+        }
+        d
+    }
+
+    /// Drop every edge whose id is flagged in `dead`, preserving the
+    /// relative order of the survivors (order-preserving `retain`, unlike
+    /// the `swap_remove` the pre-SoA engine used — deterministic edge
+    /// order is what makes batch apply and replay line up).
+    fn remove_edges(&mut self, dead: &[bool]) {
+        let mut keep = dead.iter().map(|d| !d);
+        self.edges.retain(|_| keep.next().unwrap());
+    }
+
     /// Eq. 5: merge all parallel edge pairs. Returns how many merges ran.
+    ///
+    /// One hash-grouping pass over the edge list replaces the old
+    /// quadratic rescan loop: edges with identical endpoints fold into
+    /// their lowest-id member, in id order (deterministic — groups are
+    /// disjoint, so hash iteration order cannot affect the result), and
+    /// merging never creates a *new* parallel pair, so a single pass
+    /// reaches the fixpoint.
     pub fn edge_eliminate_all(&mut self) -> usize {
         let mode = self.space.opts.mode;
+        let threads = self.space.opts.threads;
+        let mut groups: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
+        for (e, edge) in self.edges.iter().enumerate() {
+            groups.entry((edge.src, edge.dst)).or_default().push(e);
+        }
         let mut merges = 0;
-        loop {
-            // find a pair (a, b) with identical endpoints
-            let mut found: Option<(usize, usize)> = None;
-            'outer: for a in 0..self.edges.len() {
-                for b in a + 1..self.edges.len() {
-                    if self.edges[a].src == self.edges[b].src
-                        && self.edges[a].dst == self.edges[b].dst
-                    {
-                        found = Some((a, b));
-                        break 'outer;
-                    }
-                }
+        let mut dead = vec![false; self.edges.len()];
+        for group in groups.into_values() {
+            let (&first, rest) = group.split_first().unwrap();
+            for &b in rest {
+                let merged: Vec<Vec<Frontier>> = {
+                    let ea = &self.edges[first].table;
+                    let eb = &self.edges[b].table;
+                    par_map_indexed(ea.len(), threads, |k| {
+                        ea[k]
+                            .iter()
+                            .zip(&eb[k])
+                            .map(|(fa, fb)| fa.product(fb, mode))
+                            .collect()
+                    })
+                };
+                self.edges[first].table = merged;
+                dead[b] = true;
+                merges += 1;
             }
-            let Some((a, b)) = found else { break };
-            let eb = self.edges.swap_remove(b);
-            let ea = &mut self.edges[a];
-            let threads = self.space.opts.threads;
-            let merged: Vec<Vec<Frontier>> = {
-                let ea_table = &ea.table;
-                par_map_indexed(ea_table.len(), threads, |k| {
-                    ea_table[k]
-                        .iter()
-                        .zip(&eb.table[k])
-                        .map(|(fa, fb)| fa.product(fb, mode))
-                        .collect()
-                })
-            };
-            ea.table = merged;
-            merges += 1;
+        }
+        if merges > 0 {
+            self.remove_edges(&dead);
         }
         merges
     }
 
-    /// Structural candidate for node elimination: first live unmarked op
-    /// with exactly one in-edge and one out-edge.
-    fn find_chain_node(&self) -> Option<usize> {
-        (0..self.alive.len()).find(|&i| {
-            self.alive[i]
-                && !self.marked[i]
-                && self.in_edge_ids(i).len() == 1
-                && self.out_edge_ids(i).len() == 1
-        })
-    }
-
-    /// Eq. 4: eliminate one chain node (single pred, single succ,
-    /// unmarked). Returns true if a node was eliminated.
-    pub fn node_eliminate_one(&mut self) -> bool {
-        match self.find_chain_node() {
-            Some(i) => {
-                self.node_eliminate_at(i);
-                true
+    /// Structural candidates for one round of node elimination: every
+    /// live unmarked op with exactly one in-edge and one out-edge, greedily
+    /// thinned (in op order) to an independent set claiming disjoint
+    /// edges. Two chain candidates conflict only through a shared edge
+    /// (adjacent chain nodes), so disjoint claims make the whole batch
+    /// order-independent.
+    fn chain_batch(&self) -> Vec<usize> {
+        let d = self.degrees();
+        let mut claimed = vec![false; self.edges.len()];
+        let mut batch = Vec::new();
+        for i in 0..self.alive.len() {
+            if !(self.alive[i] && !self.marked[i] && d.indeg[i] == 1 && d.outdeg[i] == 1) {
+                continue;
             }
-            None => false,
+            let (ei, eo) = (d.in_edge[i], d.out_edge[i]);
+            if !claimed[ei] && !claimed[eo] {
+                claimed[ei] = true;
+                claimed[eo] = true;
+                batch.push(i);
+            }
         }
+        batch
     }
 
-    /// Apply node elimination (Eq. 4) at op `i` (must be a chain node).
-    pub fn node_eliminate_at(&mut self, i: usize) {
+    /// Eq. 4 over a conflict-free batch (from the chain-candidate
+    /// discovery pass or a replayed [`ElimStep::Nodes`]): compute every
+    /// member's bridge table from the pre-batch state — fanned out over
+    /// `util::par`, since the members share no incident edges — then apply
+    /// all removals and bridge insertions sequentially in batch order and
+    /// merge the parallel edges the bridges may have created.
+    pub fn node_eliminate_batch(&mut self, batch: &[usize]) {
         let mode = self.space.opts.mode;
-        let e_in = self.in_edge_ids(i)[0];
-        let e_out = self.out_edge_ids(i)[0];
-        let h = self.edges[e_in].src;
-        let j = self.edges[e_out].dst;
-        debug_assert_ne!(h, j, "DAG cannot have h==j around a chain node");
-        let kw = self.space.k(h);
-        let kp = self.space.k(j);
-        let ki = self.space.k(i);
         let threads = self.space.opts.threads;
-        let (hi, ij) = (&self.edges[e_in].table, &self.edges[e_out].table);
-        let fi = &self.node_frontiers[i];
-        // F(e_hj, w, p) = reduce( U_k  F(e_hi,w,k) ⊗ F(o_i,k) ⊗ F(e_ij,k,p) )
-        let table: Vec<Vec<Frontier>> = par_map_indexed(kw, threads, |w| {
-            (0..kp)
-                .map(|p| {
-                    let mut acc: Vec<Tuple> = Vec::new();
-                    for k in 0..ki {
-                        let part = hi[w][k].product(&fi[k], mode).product(&ij[k][p], mode);
-                        acc.extend(part.tuples);
-                    }
-                    reduce(acc, mode)
+        let ctxs: Vec<ChainCtx> = batch
+            .iter()
+            .map(|&i| {
+                let e_in = self.in_edge_ids(i)[0];
+                let e_out = self.out_edge_ids(i)[0];
+                let src = self.edges[e_in].src;
+                let dst = self.edges[e_out].dst;
+                debug_assert_ne!(src, dst, "DAG cannot have src==dst around a chain node");
+                ChainCtx { op: i, e_in, e_out, src, dst }
+            })
+            .collect();
+        // one batch member: parallelize inside its table (rows of w); many
+        // members: parallelize across members, keeping each table
+        // computation single-threaded so OS threads don't multiply.
+        let many = ctxs.len() > 1;
+        let (outer, inner) = if many { (threads, 1) } else { (1, threads) };
+        let tables: Vec<Vec<Vec<Frontier>>> = {
+            let ctxs = &ctxs;
+            let edges = &self.edges;
+            let node_frontiers = &self.node_frontiers;
+            par_map_indexed(ctxs.len(), outer, |b| {
+                let c = &ctxs[b];
+                let (hi, ij) = (&edges[c.e_in].table, &edges[c.e_out].table);
+                let fi = &node_frontiers[c.op];
+                let kw = hi.len();
+                let ki = fi.len();
+                let kp = ij[0].len();
+                // F(e_hj, w, p) = U_k  F(e_hi,w,k) ⊗ F(o_i,k) ⊗ F(e_ij,k,p)
+                par_map_indexed(kw, inner, |w| {
+                    (0..kp)
+                        .map(|p| {
+                            let parts: Vec<Frontier> = (0..ki)
+                                .map(|k| hi[w][k].product(&fi[k], mode).product(&ij[k][p], mode))
+                                .collect();
+                            Frontier::union_many(parts, mode)
+                        })
+                        .collect()
                 })
-                .collect()
-        });
-        // remove both edges (careful with swap_remove ordering)
-        let (a, b) = if e_in > e_out { (e_in, e_out) } else { (e_out, e_in) };
-        self.edges.swap_remove(a);
-        self.edges.swap_remove(b);
-        self.edges.push(WorkEdge { src: h, dst: j, table });
-        self.alive[i] = false;
+            })
+        };
+        let mut dead = vec![false; self.edges.len()];
+        for c in &ctxs {
+            dead[c.e_in] = true;
+            dead[c.e_out] = true;
+        }
+        self.remove_edges(&dead);
+        for (c, table) in ctxs.into_iter().zip(tables) {
+            self.edges.push(WorkEdge { src: c.src, dst: c.dst, table });
+            self.alive[c.op] = false;
+        }
         self.edge_eliminate_all();
     }
 
-    /// Structural candidate for branch elimination: first live unmarked
-    /// source op (no in-edges) with exactly one out-edge.
-    fn find_branch_source(&self) -> Option<usize> {
-        (0..self.alive.len()).find(|&i| {
-            self.alive[i]
-                && !self.marked[i]
-                && self.in_edge_ids(i).is_empty()
-                && self.out_edge_ids(i).len() == 1
-        })
-    }
-
-    /// Eq. 6 (restricted exact form): eliminate one source node with no
-    /// in-edges whose out-edges all go to a single consumer.
-    pub fn branch_eliminate_one(&mut self) -> bool {
-        match self.find_branch_source() {
-            Some(i) => {
-                self.branch_eliminate_at(i);
-                true
+    /// Structural candidates for one round of branch elimination: every
+    /// live unmarked source op (no in-edges) with exactly one out-edge,
+    /// greedily thinned (in op order) so no two members fold into the same
+    /// consumer — the only write two branch candidates can share.
+    fn branch_batch(&self) -> Vec<usize> {
+        let d = self.degrees();
+        let mut claimed = vec![false; self.alive.len()];
+        let mut batch = Vec::new();
+        for i in 0..self.alive.len() {
+            if !(self.alive[i] && !self.marked[i] && d.indeg[i] == 0 && d.outdeg[i] == 1) {
+                continue;
             }
-            None => false,
+            let j = self.edges[d.out_edge[i]].dst;
+            if !claimed[j] {
+                claimed[j] = true;
+                batch.push(i);
+            }
         }
+        batch
     }
 
-    /// Apply branch elimination (Eq. 6) at source op `i`.
-    pub fn branch_eliminate_at(&mut self, i: usize) {
+    /// Eq. 6 (restricted exact form) over a conflict-free batch (from the
+    /// branch-candidate discovery pass or a replayed
+    /// [`ElimStep::Branches`]): each member's consumer update is computed
+    /// from the pre-batch state in parallel, then the updates, edge
+    /// removals and kills apply sequentially in batch order.
+    pub fn branch_eliminate_batch(&mut self, batch: &[usize]) {
         let mode = self.space.opts.mode;
-        let e = self.out_edge_ids(i)[0];
-        let j = self.edges[e].dst;
-        let ki = self.space.k(i);
-        let kp = self.space.k(j);
         let threads = self.space.opts.threads;
-        let table = &self.edges[e].table;
-        let fi = &self.node_frontiers[i];
-        let fj = &self.node_frontiers[j];
-        // F'(o_j, p) = reduce( U_k  F(o_i,k) ⊗ F(e_ij,k,p) ⊗ F(o_j,p) )
-        let new_fj: Vec<Frontier> = par_map_indexed(kp, threads, |p| {
-            let mut acc: Vec<Tuple> = Vec::new();
-            for k in 0..ki {
-                let part = fi[k].product(&table[k][p], mode).product(&fj[p], mode);
-                acc.extend(part.tuples);
-            }
-            reduce(acc, mode)
-        });
-        self.node_frontiers[j] = new_fj;
-        self.edges.swap_remove(e);
-        self.alive[i] = false;
+        // (op, its out-edge, its consumer) per member, from the pre-state.
+        let infos: Vec<(usize, usize, usize)> = batch
+            .iter()
+            .map(|&i| {
+                let e = self.out_edge_ids(i)[0];
+                (i, e, self.edges[e].dst)
+            })
+            .collect();
+        let many = infos.len() > 1;
+        let (outer, inner) = if many { (threads, 1) } else { (1, threads) };
+        let updates: Vec<Vec<Frontier>> = {
+            let infos = &infos;
+            let edges = &self.edges;
+            let node_frontiers = &self.node_frontiers;
+            par_map_indexed(infos.len(), outer, |b| {
+                let (i, e, j) = infos[b];
+                let table = &edges[e].table;
+                let fi = &node_frontiers[i];
+                let fj = &node_frontiers[j];
+                let ki = fi.len();
+                // F'(o_j, p) = U_k  F(o_i,k) ⊗ F(e_ij,k,p) ⊗ F(o_j,p)
+                par_map_indexed(fj.len(), inner, |p| {
+                    let parts: Vec<Frontier> = (0..ki)
+                        .map(|k| fi[k].product(&table[k][p], mode).product(&fj[p], mode))
+                        .collect();
+                    Frontier::union_many(parts, mode)
+                })
+            })
+        };
+        let mut dead = vec![false; self.edges.len()];
+        for &(_, e, _) in &infos {
+            dead[e] = true;
+        }
+        self.remove_edges(&dead);
+        for ((i, _, j), new_fj) in infos.into_iter().zip(updates) {
+            self.node_frontiers[j] = new_fj;
+            self.alive[i] = false;
+        }
     }
 
     /// Structural candidate for heuristic elimination: the highest-degree
@@ -282,19 +406,6 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
         (0..self.alive.len())
             .filter(|&i| self.alive[i] && !self.marked[i])
             .max_by_key(|&i| self.in_edge_ids(i).len() + self.out_edge_ids(i).len())
-    }
-
-    /// Eq. 7: heuristically pin one remaining unmarked node to its best
-    /// single configuration and fold its edges into the neighbours.
-    /// Returns true if a node was eliminated.
-    pub fn heuristic_eliminate_one(&mut self) -> bool {
-        match self.find_heuristic_candidate() {
-            Some(i) => {
-                self.heuristic_eliminate_at(i, None);
-                true
-            }
-            None => false,
-        }
     }
 
     /// Apply heuristic elimination (Eq. 7) at op `i`. `pin` forces the
@@ -379,12 +490,12 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
                 *fh = fh.product(&col[w], mode);
             }
         }
-        // drop all incident edges (descending index for swap_remove).
-        let mut dead: Vec<usize> = outs.into_iter().chain(ins).collect();
-        dead.sort_unstable_by(|a, b| b.cmp(a));
-        for e in dead {
-            self.edges.swap_remove(e);
+        // drop all incident edges, preserving survivor order.
+        let mut dead = vec![false; self.edges.len()];
+        for e in outs.into_iter().chain(ins) {
+            dead[e] = true;
         }
+        self.remove_edges(&dead);
         self.forced.insert(i as u32, kstar as u32);
         self.alive[i] = false;
         self.n_heuristic += 1;
@@ -392,19 +503,19 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
 
     /// Emit a structured `ft.elim_step` trace event (no-op unless the
     /// global recorder is enabled, so replay stays bit-identical *and*
-    /// cost-free when tracing is off): the step kind plus the live graph
-    /// shape and total surviving frontier tuples — a trace shows how
-    /// frontier sizes evolve through the elimination.
-    fn emit_step(&self, step: ElimStep) {
+    /// cost-free when tracing is off): the step kind plus the batch size,
+    /// the live graph shape and total surviving frontier tuples — a trace
+    /// shows how frontier sizes evolve through the elimination.
+    fn emit_step(&self, step: &ElimStep) {
         if !crate::obs::enabled() {
             return;
         }
         use crate::obs::Attr;
-        let (kind, op) = match step {
-            ElimStep::Merge => ("merge", None),
-            ElimStep::Node(i) => ("node", Some(i)),
-            ElimStep::Branch(i) => ("branch", Some(i)),
-            ElimStep::Heuristic(i) => ("heuristic", Some(i)),
+        let (kind, ops) = match step {
+            ElimStep::Merge => ("merge", Vec::new()),
+            ElimStep::Nodes(batch) => ("node", batch.clone()),
+            ElimStep::Branches(batch) => ("branch", batch.clone()),
+            ElimStep::Heuristic(i) => ("heuristic", vec![*i]),
         };
         let live_ops = self.alive.iter().filter(|a| **a).count();
         let tuples: usize = self
@@ -420,8 +531,9 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
             ("live_edges", Attr::U64(self.edges.len() as u64)),
             ("frontier_tuples", Attr::U64(tuples as u64)),
         ];
-        if let Some(i) = op {
-            attrs.push(("op", Attr::U64(i as u64)));
+        if !ops.is_empty() {
+            attrs.push(("batch", Attr::U64(ops.len() as u64)));
+            attrs.push(("op", Attr::U64(ops[0] as u64)));
         }
         crate::obs::event("ft.elim_step", &attrs);
     }
@@ -445,24 +557,33 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
                 progress = false;
                 if self.edge_eliminate_all() > 0 {
                     schedule.push(ElimStep::Merge);
-                    self.emit_step(ElimStep::Merge);
+                    self.emit_step(&ElimStep::Merge);
                     progress = true;
                 }
-                while let Some(i) = self.find_chain_node() {
-                    self.node_eliminate_at(i);
-                    schedule.push(ElimStep::Node(i));
-                    self.emit_step(ElimStep::Node(i));
+                loop {
+                    let batch = self.chain_batch();
+                    if batch.is_empty() {
+                        break;
+                    }
+                    self.node_eliminate_batch(&batch);
+                    let step = ElimStep::Nodes(batch);
+                    self.emit_step(&step);
+                    schedule.push(step);
                     progress = true;
                 }
-                while let Some(i) = self.find_branch_source() {
-                    self.branch_eliminate_at(i);
-                    schedule.push(ElimStep::Branch(i));
-                    self.emit_step(ElimStep::Branch(i));
+                loop {
+                    let batch = self.branch_batch();
+                    if batch.is_empty() {
+                        break;
+                    }
+                    self.branch_eliminate_batch(&batch);
+                    let step = ElimStep::Branches(batch);
+                    self.emit_step(&step);
+                    schedule.push(step);
                     progress = true;
                 }
             }
-            let remaining =
-                (0..self.alive.len()).any(|i| self.alive[i] && !self.marked[i]);
+            let remaining = (0..self.alive.len()).any(|i| self.alive[i] && !self.marked[i]);
             if !remaining {
                 break;
             }
@@ -470,31 +591,32 @@ impl<'s, 'a> WorkGraph<'s, 'a> {
                 Some(i) => {
                     self.heuristic_eliminate_at(i, None);
                     schedule.push(ElimStep::Heuristic(i));
-                    self.emit_step(ElimStep::Heuristic(i));
+                    self.emit_step(&ElimStep::Heuristic(i));
                 }
                 None => break,
             }
         }
     }
 
-    /// Replay a recorded schedule, skipping candidate re-discovery. `pins`
-    /// optionally forces each heuristic node's k* (see
+    /// Replay a recorded schedule, skipping candidate re-discovery — the
+    /// batches re-apply exactly as recorded, including their parallel
+    /// fan-out. `pins` optionally forces each heuristic node's k* (see
     /// [`WorkGraph::heuristic_eliminate_at`] for when that is exact);
     /// without a pin the k* is re-scored against the current leaf costs.
     pub fn replay(&mut self, schedule: &ElimSchedule, pins: Option<&HashMap<u32, u32>>) {
         for step in schedule {
-            match *step {
+            match step {
                 ElimStep::Merge => {
                     self.edge_eliminate_all();
                 }
-                ElimStep::Node(i) => self.node_eliminate_at(i),
-                ElimStep::Branch(i) => self.branch_eliminate_at(i),
+                ElimStep::Nodes(batch) => self.node_eliminate_batch(batch),
+                ElimStep::Branches(batch) => self.branch_eliminate_batch(batch),
                 ElimStep::Heuristic(i) => {
-                    let pin = pins.and_then(|p| p.get(&(i as u32)).copied());
-                    self.heuristic_eliminate_at(i, pin);
+                    let pin = pins.and_then(|p| p.get(&(*i as u32)).copied());
+                    self.heuristic_eliminate_at(*i, pin);
                 }
             }
-            self.emit_step(*step);
+            self.emit_step(step);
         }
     }
 
@@ -615,6 +737,32 @@ mod tests {
                 assert_eq!(edges_a.len(), edges_b.len());
             }
         }
+    }
+
+    /// A recorded schedule actually contains node batches on a graph with
+    /// parallel chains (the attention blocks), and every batch is
+    /// conflict-free by construction — re-checked here against the graph.
+    #[test]
+    fn schedules_batch_independent_chain_nodes() {
+        let g = bert_like_test(8);
+        let cluster = Cluster::paper_testbed();
+        let comm = GroundTruthComm::new(cluster.clone());
+        let space = space_for(&g, &cluster, &comm, 4);
+        let spine = g.mark_linear_spine();
+        let mut wg = WorkGraph::init(&space, &spine);
+        let mut schedule = ElimSchedule::new();
+        wg.run_recording(&mut schedule);
+        let mut saw_multi = false;
+        for step in &schedule {
+            if let ElimStep::Nodes(batch) = step {
+                saw_multi |= batch.len() > 1;
+                let mut seen = std::collections::HashSet::new();
+                for &i in batch {
+                    assert!(seen.insert(i), "op {i} appears twice in one batch");
+                }
+            }
+        }
+        assert!(saw_multi, "expected at least one multi-node batch: {schedule:?}");
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! cumulative frontiers. Computing `CF(o_i, ·)` for different `p` is
 //! embarrassingly parallel (§3.2 "Multi-threading").
 
-use crate::frontier::{reduce, Frontier, Mode, Tuple};
+use crate::frontier::{Frontier, Mode};
 use crate::util::par::par_map_indexed;
 
 /// Run LDP over a chain.
@@ -40,30 +40,26 @@ pub fn ldp(
         let total_cf: usize = cf_prev.iter().map(|f| f.len()).sum();
         let eff_threads = if total_cf * kp < 8192 { 1 } else { threads };
         cf = par_map_indexed(kp, eff_threads, |p| {
-            let mut acc: Vec<Tuple> = Vec::new();
-            for (k, cfk) in cf_prev.iter().enumerate() {
-                if cfk.is_empty() {
-                    continue;
-                }
-                let part = edges[k][p].product(cfk, mode).product(&fi[p], mode);
-                acc.extend(part.tuples);
-            }
-            reduce(acc, mode)
+            let parts: Vec<Frontier> = cf_prev
+                .iter()
+                .enumerate()
+                .filter(|(_, cfk)| !cfk.is_empty())
+                .map(|(k, cfk)| edges[k][p].product(cfk, mode).product(&fi[p], mode))
+                .collect();
+            // SoA k-way union: reduces the concatenation with one merged
+            // sort permutation instead of materializing it tuple by tuple.
+            Frontier::union_many(parts, mode)
         });
     }
 
     // F_o = reduce( U_k CF(o_n, k) )
-    let mut acc: Vec<Tuple> = Vec::new();
-    for f in cf {
-        acc.extend(f.tuples);
-    }
-    reduce(acc, mode)
+    Frontier::union_many(cf, mode)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::frontier::Trace;
+    use crate::frontier::{reduce, Trace, Tuple};
 
     /// Hand-built 3-op chain with 2 configs each; verify LDP against
     /// brute-force enumeration of all 8 strategies.

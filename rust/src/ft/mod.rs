@@ -8,7 +8,7 @@ pub mod space;
 use std::collections::HashMap;
 
 use crate::cluster::Cluster;
-use crate::frontier::{reduce, trace, Frontier, Tuple};
+use crate::frontier::{trace, Frontier, Tuple};
 use crate::graph::Graph;
 use crate::parallel::resched::CollectiveCost;
 use crate::parallel::{ParallelConfig, Strategy};
@@ -119,14 +119,13 @@ pub fn frontier_search_elimination(
     assert_eq!(chain.len(), 2, "FT-Elimination must reduce to two nodes");
     // brute-force over the (k, p) pairs of the final two nodes.
     let mode = space.opts.mode;
-    let mut acc: Vec<Tuple> = Vec::new();
+    let mut parts: Vec<Frontier> = Vec::new();
     for (k, fk) in node_frontiers[0].iter().enumerate() {
         for (p, fp) in node_frontiers[1].iter().enumerate() {
-            let part = fk.product(&edge_tables[0][k][p], mode).product(fp, mode);
-            acc.extend(part.tuples);
+            parts.push(fk.product(&edge_tables[0][k][p], mode).product(fp, mode));
         }
     }
-    let frontier = reduce(acc, mode);
+    let frontier = Frontier::union_many(parts, mode);
     FtResult {
         frontier,
         configs: space.tables.configs.clone(),

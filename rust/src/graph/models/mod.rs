@@ -15,7 +15,7 @@ mod wide_resnet;
 
 pub use bert::{bert, bert_sized};
 pub use rnn::rnn_lm;
-pub use transformer::{transformer_lm, TransformerCfg};
+pub use transformer::{transformer96, transformer_lm, TransformerCfg};
 pub use vgg::vgg16;
 pub use wide_resnet::wide_resnet;
 
@@ -35,6 +35,7 @@ pub fn by_name(name: &str, batch: i64) -> Option<Graph> {
             layers: 18,
             ..Default::default()
         })),
+        "transformer96" => Some(transformer96(batch)),
         "bert" => Some(bert(batch)),
         "tiny" | "tiny_mlp" => Some(tiny_mlp(batch)),
         "tiny_resnet" => Some(tiny_resnet(batch)),
@@ -99,6 +100,7 @@ mod tests {
         assert!(by_name("transformer", 256).is_some());
         assert!(by_name("wideresnet", 256).is_some());
         assert!(by_name("bert", 32).is_some());
+        assert!(by_name("transformer96", 32).is_some());
         assert!(by_name("nope", 256).is_none());
     }
 

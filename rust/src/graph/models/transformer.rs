@@ -49,6 +49,22 @@ pub fn transformer_lm(cfg: TransformerCfg) -> Graph {
     b.build()
 }
 
+/// The deep-graph stress model: 96 transformer blocks at small per-op
+/// extents, so elimination runs hundreds of multi-node batches and LDP
+/// walks a ~770-op spine while every individual frontier op stays
+/// test-sized. Shared by `bench_ft_large` and the heavy determinism
+/// suite in `rust/tests/ft_determinism.rs`.
+pub fn transformer96(batch: i64) -> Graph {
+    transformer_lm(TransformerCfg {
+        batch,
+        seq: 32,
+        hidden: 256,
+        ffn_mult: 4,
+        layers: 96,
+        vocab: 512,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

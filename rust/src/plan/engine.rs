@@ -24,8 +24,11 @@
 //! billing — replays it, skipping candidate re-discovery. (Searches
 //! launched concurrently *before* the first finishes, e.g. a parallel
 //! `Session::profile` first wave, may each discover independently; the
-//! recorded schedules are identical — discovery is structural — so this
-//! costs repeated discovery work once, never correctness.) When only the
+//! recorded schedules are identical — discovery is structural and
+//! thread-count-independent, even though steps are now whole *batches*
+//! of independent candidates ([`crate::ft::ElimStep`]) whose frontier
+//! algebra fans out over `util::par` — so this costs repeated discovery
+//! work once, never correctness.) When only the
 //! *billing* changes at a fixed (parallelism, mode), the heuristic k*
 //! pins are reused too (pin scoring reads memory/time, never dollars),
 //! so only the frontier algebra over re-stamped leaves and LDP run. Both

@@ -1,8 +1,16 @@
 //! Minimal data-parallel map over indices (rayon is not vendored in this
-//! offline environment). Used by FT's multi-threaded LDP and eliminations
-//! (§3.2 "Multi-threading for efficiency").
+//! offline environment). Used by FT's multi-threaded LDP and the batched
+//! parallel eliminations (§3.2 "Multi-threading for efficiency").
+//!
+//! Order preservation is a load-bearing contract, not a convenience: the
+//! elimination engine computes every batch member from pre-batch state
+//! and applies the results sequentially *in input order*, so a cold
+//! `frontier_search` is bit-identical across thread counts (locked down
+//! by `rust/tests/ft_determinism.rs`). Any replacement map must keep
+//! result `i` at index `i` regardless of which thread ran it.
 
-/// Compute `f(0..n)` across `threads` OS threads, preserving order.
+/// Compute `f(0..n)` across `threads` OS threads, preserving order
+/// (result `i` lands at index `i` whatever thread computed it).
 /// `threads <= 1` runs inline (the paper's "no multi-thread" ablation).
 pub fn par_map_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where

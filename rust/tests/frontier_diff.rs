@@ -1,0 +1,238 @@
+//! Differential lockdown of the struct-of-arrays frontier engine (ISSUE 9).
+//!
+//! Every production frontier operation is asserted **bit-identical** —
+//! `f64::to_bits`, no tolerances — to the frozen pre-SoA implementation in
+//! `tensoropt::frontier::reference` on seeded adversarial inputs:
+//!
+//! - dense ties (small-integer coordinates),
+//! - ±0.0 (compare equal, different bit patterns — the stable sort must
+//!   preserve whichever came first),
+//! - subnormal f64s (ε-scaling by `1 - THIN_EPS` rounds to zero there),
+//! - coordinates sitting exactly on the ε-thinning boundary,
+//! - the all-costs-zero case, where 3-D reduce must degenerate to the
+//!   paper's 2-D staircase.
+//!
+//! The generators never produce NaN (frontier comparisons `unwrap` a
+//! `partial_cmp`, in both engines) or negative coordinates other than
+//! `-0.0` (costs are sums of nonnegative leaf costs in the search).
+
+use tensoropt::frontier::{
+    pareto_indices, reduce, reference, Frontier, Mode, Trace, Tuple, THIN_EPS,
+};
+use tensoropt::prop_assert;
+use tensoropt::util::ptest;
+use tensoropt::util::rng::XorShift;
+
+/// One adversarial coordinate. Small integers force exact ties; the
+/// ε-scaled and ε-boundary values land pairs of points exactly on the
+/// thinning threshold; subnormals shake out underflow in the ε scan.
+fn coord(rng: &mut XorShift) -> f64 {
+    match rng.below(8) {
+        0 => rng.below(6) as f64,
+        1 => 0.0,
+        2 => -0.0,
+        3 => f64::from_bits(rng.below(4) as u64 + 1), // subnormals: 5e-324 ..
+        4 => 1.0 - THIN_EPS,
+        5 => (rng.below(6) as f64) * (1.0 - THIN_EPS),
+        6 => (rng.below(6) as f64) * (1.0 + THIN_EPS),
+        _ => rng.f64() * 10.0,
+    }
+}
+
+/// Raw tuple cloud; `zero_cost` exercises the 2-D degenerate case.
+fn cloud(rng: &mut XorShift, n: usize, zero_cost: bool) -> Vec<Tuple> {
+    (0..n)
+        .map(|_| {
+            let c = if zero_cost { 0.0 } else { coord(rng) };
+            Tuple::with_cost(coord(rng), coord(rng), c, Trace::empty())
+        })
+        .collect()
+}
+
+fn bits(t: &Tuple) -> (u64, u64, u64) {
+    (t.mem.to_bits(), t.time.to_bits(), t.cost.to_bits())
+}
+
+fn assert_bits_eq(got: &Frontier, want: &Frontier, what: &str) -> Result<(), String> {
+    prop_assert!(got.len() == want.len(), "{what}: {} vs {} tuples", got.len(), want.len());
+    for (i, (x, y)) in got.tuples.iter().zip(&want.tuples).enumerate() {
+        prop_assert!(bits(x) == bits(y), "{what}: tuple {i}: {x:?} vs {y:?}");
+    }
+    Ok(())
+}
+
+const MODES: [Mode; 3] = [Mode::Pareto, Mode::TimeOnly, Mode::MemOnly];
+
+/// `reduce` (Algorithm 1 + ε-thinning) in all three modes.
+#[test]
+fn reduce_matches_reference() {
+    ptest::check(
+        "diff-reduce",
+        ptest::Config { cases: 300, ..ptest::Config::default() },
+        |rng| {
+            let ts = cloud(rng, rng.below(40), rng.below(2) == 0);
+            for mode in MODES {
+                let got = reduce(ts.clone(), mode);
+                let want = reference::reduce(ts.clone(), mode);
+                assert_bits_eq(&got, &want, &format!("reduce {mode:?}"))?;
+                prop_assert!(got.is_valid() || mode != Mode::Pareto, "invariant");
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `product` ⊗ — including the singleton fast path (`n == 1` either side)
+/// and unsorted inputs (a raw `Frontier` that never went through reduce).
+#[test]
+fn product_matches_reference() {
+    ptest::check(
+        "diff-product",
+        ptest::Config { cases: 300, ..ptest::Config::default() },
+        |rng| {
+            let zero = rng.below(2) == 0;
+            let mk = |rng: &mut XorShift| -> Frontier {
+                let n = 1 + rng.below(10);
+                let ts = cloud(rng, n, zero);
+                if rng.below(2) == 0 {
+                    reduce(ts, Mode::Pareto)
+                } else {
+                    Frontier { tuples: ts } // raw: exercises the sort path
+                }
+            };
+            let (a, b) = (mk(rng), mk(rng));
+            for mode in MODES {
+                let got = a.product(&b, mode);
+                let want = reference::product(&a, &b, mode);
+                assert_bits_eq(&got, &want, &format!("product {mode:?}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `union` ∪ and the k-way `union_many` against the reference fold
+/// (union_many of parts ≡ reduce of the concatenation).
+#[test]
+fn union_matches_reference() {
+    ptest::check(
+        "diff-union",
+        ptest::Config { cases: 300, ..ptest::Config::default() },
+        |rng| {
+            let zero = rng.below(2) == 0;
+            let a = reduce(cloud(rng, rng.below(12), zero), Mode::Pareto);
+            let b = reduce(cloud(rng, rng.below(12), zero), Mode::Pareto);
+            for mode in MODES {
+                assert_bits_eq(
+                    &a.union(&b, mode),
+                    &reference::union(&a, &b, mode),
+                    &format!("union {mode:?}"),
+                )?;
+            }
+            let parts: Vec<Frontier> = (0..rng.range(1, 7))
+                .map(|_| reduce(cloud(rng, rng.below(12), zero), Mode::Pareto))
+                .collect();
+            let concat: Vec<Tuple> =
+                parts.iter().flat_map(|f| f.tuples.iter().cloned()).collect();
+            for mode in MODES {
+                assert_bits_eq(
+                    &Frontier::union_many(parts.clone(), mode),
+                    &reference::reduce(concat.clone(), mode),
+                    &format!("union_many {mode:?}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Every selector, with budgets drawn from the same adversarial palette so
+/// they frequently land exactly on a tuple's coordinate.
+#[test]
+fn selectors_match_reference() {
+    ptest::check(
+        "diff-selectors",
+        ptest::Config { cases: 300, ..ptest::Config::default() },
+        |rng| {
+            let f = reduce(cloud(rng, rng.below(30), rng.below(2) == 0), Mode::Pareto);
+            let (mb, dl, usd) = (coord(rng), coord(rng), coord(rng));
+            let pairs: [(Option<&Tuple>, Option<&Tuple>, &str); 6] = [
+                (f.min_time(), reference::min_time(&f), "min_time"),
+                (f.min_cost(), reference::min_cost(&f), "min_cost"),
+                (f.min_time_within(mb), reference::min_time_within(&f, mb), "min_time_within"),
+                (
+                    f.min_cost_within(mb, dl),
+                    reference::min_cost_within(&f, mb, dl),
+                    "min_cost_within",
+                ),
+                (
+                    f.min_time_within_cost(mb, usd),
+                    reference::min_time_within_cost(&f, mb, usd),
+                    "min_time_within_cost",
+                ),
+                (f.min_mem(), f.tuples.first(), "min_mem"),
+            ];
+            for (got, want, what) in pairs {
+                match (got, want) {
+                    (None, None) => {}
+                    (Some(x), Some(y)) => {
+                        prop_assert!(bits(x) == bits(y), "{what}: {x:?} vs {y:?}")
+                    }
+                    _ => prop_assert!(false, "{what}: Some/None mismatch"),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The sort-based `pareto_indices` sweep against the retired O(n²)
+/// pairwise scan, on the full adversarial palette.
+#[test]
+fn pareto_indices_matches_reference() {
+    ptest::check(
+        "diff-pareto-indices",
+        ptest::Config { cases: 400, ..ptest::Config::default() },
+        |rng| {
+            let n = rng.below(50);
+            let pts: Vec<(f64, f64, f64)> =
+                (0..n).map(|_| (coord(rng), coord(rng), coord(rng))).collect();
+            let got = pareto_indices(&pts);
+            let want = reference::pareto_indices(&pts);
+            prop_assert!(got == want, "index sets differ on {pts:?}: {got:?} vs {want:?}");
+            Ok(())
+        },
+    );
+}
+
+/// Deterministic spot checks of the cases the fuzzers are seeded toward,
+/// kept explicit so a regression names the exact construction.
+#[test]
+fn fixed_adversarial_cases() {
+    let t = |m: f64, s: f64, c: f64| Tuple::with_cost(m, s, c, Trace::empty());
+    let sub = f64::from_bits(1); // smallest positive subnormal
+    let cases: Vec<Vec<Tuple>> = vec![
+        // ±0.0 everywhere: compare equal, sort must be stable across bits.
+        vec![t(0.0, -0.0, 0.0), t(-0.0, 0.0, -0.0), t(0.0, 0.0, 0.0)],
+        // subnormals: (1 - ε)·sub rounds down; thinning must not diverge.
+        vec![t(sub, 1.0, 0.0), t(sub + sub, 1.0, 0.0), t(0.0, 2.0, 0.0)],
+        // exact ε-boundary pair: q ε-dominates t iff q.time·(1-ε) <= t.time.
+        vec![
+            t(1.0, 1.0, 0.0),
+            t(2.0, 1.0 - THIN_EPS, 0.0),
+            t(3.0, (1.0 - THIN_EPS) * (1.0 - THIN_EPS), 0.0),
+        ],
+        // exhaustive duplicates.
+        vec![t(2.0, 2.0, 2.0); 6],
+    ];
+    for (i, ts) in cases.iter().enumerate() {
+        for mode in MODES {
+            let got = reduce(ts.clone(), mode);
+            let want = reference::reduce(ts.clone(), mode);
+            assert_eq!(got.len(), want.len(), "case {i} {mode:?}");
+            for (x, y) in got.tuples.iter().zip(&want.tuples) {
+                assert_eq!(bits(x), bits(y), "case {i} {mode:?}");
+            }
+        }
+    }
+}
