@@ -1,0 +1,73 @@
+//! `bench_pipe` (ISSUE 10): the interval-memoized pipeline cut sweep vs
+//! brute-force enumeration with per-cut cold stage searches, on a
+//! 12-layer transformer across 8 devices (10 cut candidates, up to 4
+//! stages). Both legs run single-threaded so the in-artifact
+//! `pipe_memo_over_cold_ratio` is purely algorithmic — interval table +
+//! schedule replay vs recomputation — not a parallelism artifact.
+//! `BENCH_QUICK` shrinks the tensor extents only; the spine and therefore
+//! the cut/stage structure is identical in both modes.
+
+use tensoropt::cluster::Cluster;
+use tensoropt::frontier::Mode;
+use tensoropt::ft::pipeline::{self, ColdSweepCtx, PipelineOpts};
+use tensoropt::graph::models::{transformer_lm, TransformerCfg};
+use tensoropt::plan::{PipelineRequest, PlanRequest, Planner};
+use tensoropt::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::new("pipe").slow();
+    let quick = std::env::var("BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    let graph = transformer_lm(TransformerCfg {
+        batch: 8,
+        seq: if quick { 4 } else { 16 },
+        hidden: if quick { 32 } else { 128 },
+        ffn_mult: 2,
+        layers: 12,
+        vocab: if quick { 64 } else { 512 },
+    });
+    let cluster = Cluster::with_gpus(8);
+    let opts =
+        PipelineOpts { max_stages: 4, micro_batches: 8, max_cuts: 10, mode: Mode::Pareto };
+
+    // Memoized leg: a fresh planner per iteration — every sweep pays its
+    // own interval extraction, leaf builds, and first-cold/rest-replayed
+    // stage searches, exactly once per (interval, width).
+    let memo = b
+        .run("memo_sweep_transformer12", || {
+            let planner = Planner::new().with_threads(1);
+            let fp = planner.register_cluster(&cluster);
+            let (id, batch) = planner.register_graph(graph.clone());
+            let preq = PipelineRequest::new(
+                PlanRequest::builder(&id, batch, &fp, 8)
+                    .threads(1)
+                    .build()
+                    .expect("bench request is valid"),
+            )
+            .with_max_stages(opts.max_stages)
+            .with_micro_batches(opts.micro_batches)
+            .with_max_cuts(opts.max_cuts);
+            planner.plan_pipeline(&preq).expect("bench sweep plans").frontier.len()
+        })
+        .mean_s;
+
+    // Cold leg: enumerate every cut vector and search each of its stages
+    // from scratch — the naive sweep the interval table replaces.
+    let spine = graph.mark_linear_spine();
+    let ctx = ColdSweepCtx {
+        graph: &graph,
+        spine: &spine,
+        cluster: &cluster,
+        devices: 8,
+        max_mesh_dims: 2,
+        threads: 1,
+        billing: None,
+    };
+    let cold =
+        b.run("cold_sweep_transformer12", || pipeline::brute_force_sweep(&ctx, &opts).len())
+            .mean_s;
+
+    // bigger-is-better ratio: the armed gate fails if the memoized sweep
+    // drops below 3x the brute-force cost (see scripts/bench_compare.py).
+    b.record("pipe_memo_over_cold_ratio", cold / memo);
+    b.finish();
+}

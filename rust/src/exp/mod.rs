@@ -8,6 +8,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod hetero;
 pub mod obs;
+pub mod pipeline;
 pub mod provision;
 pub mod sched;
 pub mod serve;

@@ -1,0 +1,191 @@
+//! **exp pipeline** — the pipeline cut sweep vs the best pure intra-op
+//! plan on the three mixed testbeds.
+//!
+//! For each hetero preset the experiment runs one interval-memoized
+//! pipeline sweep ([`Planner::plan_pipeline`]) at the full cluster width
+//! and compares its joint (cuts x strategies) frontier against the plain
+//! intra-op frontier at the same width, under three objectives: minimum
+//! step time, minimum peak memory, and cheapest step (priced search).
+//! Because the joint frontier contains the 1-stage row — which *is* the
+//! pure intra-op search, served from the same memo entry — the pipeline
+//! answer can never be worse under any objective; the interesting output
+//! is where multi-stage splits win and by how much, plus the sweep's
+//! warm-hit accounting (stage searches, interval builds, joint points).
+
+use crate::cost::pricing::Billing;
+use crate::frontier::{Frontier, Tuple};
+use crate::plan::{PipelineRequest, PlanRequest, Planner};
+use crate::util::table::Table;
+
+use super::{hetero, GB};
+
+/// Experiment knobs (CLI-exposed; the tests scale them down).
+#[derive(Debug, Clone)]
+pub struct PipelineExpCfg {
+    /// Model zoo name.
+    pub model: String,
+    /// Global batch size.
+    pub batch: i64,
+    /// Maximum pipeline stage count to consider.
+    pub max_stages: usize,
+    /// Micro-batches per mini-batch (the bubble denominator).
+    pub micro_batches: usize,
+    /// Cap on candidate cut seams.
+    pub max_cuts: usize,
+    /// Billing model for the priced objective.
+    pub billing: Billing,
+}
+
+impl Default for PipelineExpCfg {
+    fn default() -> Self {
+        Self {
+            model: "transformer-s".into(),
+            batch: 256,
+            max_stages: 4,
+            micro_batches: 8,
+            max_cuts: 8,
+            billing: Billing::OnDemand,
+        }
+    }
+}
+
+/// The three reported objectives, as lexicographic sort keys.
+const OBJECTIVES: [(&str, fn(&Tuple) -> (f64, f64, f64)); 3] = [
+    ("min_time", |t| (t.time, t.mem, t.cost)),
+    ("min_mem", |t| (t.mem, t.time, t.cost)),
+    ("min_cost", |t| (t.cost, t.time, t.mem)),
+];
+
+/// Index + tuple of the frontier point minimizing `key` (None on empty).
+fn best(f: &Frontier, key: fn(&Tuple) -> (f64, f64, f64)) -> Option<(usize, &Tuple)> {
+    f.tuples
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| key(a).partial_cmp(&key(b)).unwrap())
+}
+
+/// Run the sweep-vs-pure comparison on all three mixed testbeds; one row
+/// per (testbed, objective).
+pub fn run(cfg: &PipelineExpCfg) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "pipeline vs pure intra-op ({}@{}, stages<={}, micro={}, {})",
+            cfg.model,
+            cfg.batch,
+            cfg.max_stages,
+            cfg.micro_batches,
+            cfg.billing.name()
+        ),
+        &[
+            "testbed",
+            "objective",
+            "stages",
+            "mem_gb",
+            "step_s",
+            "usd_step",
+            "pure_mem_gb",
+            "pure_step_s",
+            "pure_usd_step",
+            "time_x",
+        ],
+    );
+    let planner = Planner::new();
+    for cluster in hetero::presets() {
+        let fp = planner.register_cluster(&cluster);
+        let d = cluster.n_devices() as u32;
+        let base = PlanRequest::builder(&cfg.model, cfg.batch, &fp, d)
+            .billing(cfg.billing)
+            .build()
+            .expect("full-cluster parallelism is positive");
+        let pure = planner
+            .plan(&base)
+            .unwrap_or_else(|e| panic!("unknown model `{}`: {e}", cfg.model));
+        let preq = PipelineRequest::new(base)
+            .with_max_stages(cfg.max_stages)
+            .with_micro_batches(cfg.micro_batches)
+            .with_max_cuts(cfg.max_cuts);
+        let pipe = planner.plan_pipeline(&preq).expect("sweep shares the base's inputs");
+        if !crate::obs::quiet() {
+            println!(
+                "[{}] {} cuts, {} stage searches ({} warm), {} intervals, {} joint points",
+                cluster.name,
+                pipe.n_cuts,
+                pipe.stage_searches,
+                pipe.stage_warm,
+                pipe.n_intervals,
+                pipe.frontier.len()
+            );
+        }
+        for (label, key) in OBJECTIVES {
+            let Some((i, p)) = best(&pipe.frontier, key) else { continue };
+            let Some((_, q)) = best(pure.frontier(), key) else { continue };
+            t.row(&[
+                cluster.name.clone(),
+                label.to_string(),
+                pipe.plans[i].n_stages().to_string(),
+                format!("{:.2}", p.mem / GB),
+                format!("{:.4}", p.time),
+                format!("{:.4}", p.cost),
+                format!("{:.2}", q.mem / GB),
+                format!("{:.4}", q.time),
+                format!("{:.4}", q.cost),
+                format!("{:.2}", q.time / p.time),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> PipelineExpCfg {
+        PipelineExpCfg {
+            model: "tiny".into(),
+            batch: 256,
+            max_stages: 2,
+            micro_batches: 4,
+            max_cuts: 2,
+            billing: Billing::OnDemand,
+        }
+    }
+
+    /// One row per (testbed, objective), and because the joint frontier
+    /// contains the pure 1-stage row, the pipeline answer is never worse
+    /// than pure intra-op under any objective.
+    #[test]
+    fn pipeline_never_loses_to_pure_intra_op() {
+        let t = run(&tiny_cfg());
+        assert_eq!(t.rows.len(), 3 * OBJECTIVES.len(), "3 testbeds x 3 objectives");
+        for row in &t.rows {
+            let stages: usize = row[2].parse().unwrap();
+            assert!(stages >= 1);
+            let col = |i: usize| -> f64 { row[i].parse().unwrap() };
+            match row[1].as_str() {
+                "min_time" => assert!(col(4) <= col(7) * (1.0 + 1e-9), "{row:?}"),
+                "min_mem" => assert!(col(3) <= col(6) * (1.0 + 1e-9), "{row:?}"),
+                "min_cost" => assert!(col(5) <= col(8) * (1.0 + 1e-9), "{row:?}"),
+                other => panic!("unknown objective {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn best_picks_the_lexicographic_minimum() {
+        use crate::frontier::{reduce, Mode, Trace};
+        let f = reduce(
+            vec![
+                Tuple::with_cost(4.0, 1.0, 9.0, Trace::empty()),
+                Tuple::with_cost(1.0, 3.0, 2.0, Trace::empty()),
+            ],
+            Mode::Pareto,
+        );
+        let (_, by_time) = best(&f, OBJECTIVES[0].1).unwrap();
+        assert_eq!(by_time.time, 1.0);
+        let (_, by_mem) = best(&f, OBJECTIVES[1].1).unwrap();
+        assert_eq!(by_mem.mem, 1.0);
+        let (_, by_cost) = best(&f, OBJECTIVES[2].1).unwrap();
+        assert_eq!(by_cost.cost, 2.0);
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod eliminate;
 pub mod ldp;
+pub mod pipeline;
 pub mod space;
 
 use std::collections::HashMap;

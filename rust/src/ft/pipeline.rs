@@ -1,0 +1,738 @@
+//! Pipeline parallelism as a fourth strategy dimension (ISSUE 10).
+//!
+//! The sweep enumerates contiguous stage cuts of the linear spine at the
+//! graph's *clean seams* ([`crate::graph::Graph::spine_cut_points`]),
+//! searches each stage interval once per (interval, sub-cluster width)
+//! — [`StageKey`] — and composes the per-stage 3-D (memory, time,
+//! dollars) frontiers with a bottom-up DP over cut positions under a
+//! GPipe-style micro-batched bubble time model:
+//!
+//! - per-device **memory** = max over stages (each stage holds only its
+//!   own parameters/activations, sharded across its `width` devices);
+//! - **time** = `bubble_factor(S, M) x max` stage time (the pipeline is
+//!   throughput-bound by its slowest stage; `S = 1` gives factor exactly
+//!   1.0, so pure intra-op plans are the `S = 1` row of the same sweep);
+//! - **dollars** = `bubble_factor x Σ` stage dollars (each stage's busy
+//!   dollars, with bubble idle time prorated).
+//!
+//! With `K` candidate seams the naive sweep runs a cold search per stage
+//! of every cut vector — `Σ_S S·C(K, S-1)`, the `O(2^K)`-flavored blowup
+//! — while the interval memo needs only the *usable* bound pairs, a
+//! subset of the `O(K²)` interval table. Composition is monotone
+//! `(max, max, +)` in every argument, so exact Pareto pruning of DP
+//! states is lossless and the joint frontier is bit-identical to brute
+//! force ([`brute_force_sweep`]), which the differential tests pin with
+//! `f64::to_bits`.
+//!
+//! Deliberate approximations (documented, shared by both sweep paths):
+//! stages get the same `width = devices / S` sub-cluster prefix,
+//! stage-boundary activation transfer rides in the bubble model rather
+//! than the stage searches, and micro-batching's activation-memory
+//! relief is not credited.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::ops::RangeInclusive;
+use std::sync::Arc;
+
+use crate::cluster::Cluster;
+use crate::cost::comm::CommModel;
+use crate::cost::pricing::{self, Billing};
+use crate::frontier::{pareto_indices, Mode};
+use crate::ft::{frontier_search, FtOptions};
+use crate::graph::{Graph, OpId};
+
+/// Options of a pipeline cut sweep.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipelineOpts {
+    /// Maximum stage count `S` to consider (1 = pure intra-op).
+    pub max_stages: usize,
+    /// Micro-batches `M` per mini-batch (the bubble denominator).
+    pub micro_batches: usize,
+    /// Cap on candidate cut seams; the spine's clean seams are
+    /// deterministically thinned to this many when it offers more.
+    pub max_cuts: usize,
+    /// Final frontier truncation (stage searches always run Pareto).
+    pub mode: Mode,
+}
+
+impl Default for PipelineOpts {
+    fn default() -> Self {
+        Self { max_stages: 4, micro_batches: 8, max_cuts: 8, mode: Mode::Pareto }
+    }
+}
+
+/// GPipe-style bubble inflation `(M + S - 1) / M` for `S` stages and `M`
+/// micro-batches. Exactly 1.0 for a single stage, so the intra-op plan
+/// is priced identically whether it comes from `plan` or the `S = 1` row
+/// of a pipeline sweep.
+pub fn bubble_factor(stages: usize, micro_batches: usize) -> f64 {
+    let s = stages.max(1);
+    let m = micro_batches.max(1);
+    ((m + s - 1) as f64) / (m as f64)
+}
+
+/// One memoized stage search: the half-open spine interval `[lo, hi)`
+/// searched on a `width`-device sub-cluster. Ordered so sweeps iterate
+/// the memo table deterministically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct StageKey {
+    /// First spine position of the interval.
+    pub lo: usize,
+    /// One past the last spine position of the interval.
+    pub hi: usize,
+    /// Sub-cluster width the stage runs on.
+    pub width: u32,
+}
+
+/// Deterministically thin clean seams to at most `max_cuts` candidates:
+/// an evenly spread subsequence (midpoint rule), the same choice on
+/// every run and thread count.
+pub fn cut_candidates(seams: &[usize], max_cuts: usize) -> Vec<usize> {
+    if max_cuts == 0 || seams.is_empty() {
+        return Vec::new();
+    }
+    if seams.len() <= max_cuts {
+        return seams.to_vec();
+    }
+    let mut out = Vec::with_capacity(max_cuts);
+    for i in 0..max_cuts {
+        let s = seams[(2 * i + 1) * seams.len() / (2 * max_cuts)];
+        if out.last() != Some(&s) {
+            out.push(s);
+        }
+    }
+    out
+}
+
+/// The (stage count, per-stage width) settings a sweep explores on
+/// `devices` devices: equal splits `width = devices / S` for
+/// `S = 1..=max_stages`, capped by the available interval count
+/// (`n_bounds - 1`) and by running out of devices.
+pub fn plan_widths(devices: u32, max_stages: usize, n_bounds: usize) -> Vec<(usize, u32)> {
+    let mut out = Vec::new();
+    for s in 1..=max_stages {
+        if s >= n_bounds {
+            break;
+        }
+        let w = devices / s as u32;
+        if w == 0 {
+            break;
+        }
+        out.push((s, w));
+    }
+    out
+}
+
+/// Bound-index range stage `s` (1-based) of an `S`-stage pipeline may
+/// *start* at: stage 1 starts at bound 0, stage `s` needs `s - 1`
+/// boundaries before it and `S - s + 1` (including its own end) after.
+fn start_range(s: usize, stages: usize, b: usize) -> RangeInclusive<usize> {
+    if s == 1 {
+        0..=0
+    } else {
+        (s - 1)..=(b + s - 2 - stages)
+    }
+}
+
+/// Bound-index range stage `s` may *end* at (the last stage ends at the
+/// final bound).
+fn end_range(s: usize, stages: usize, b: usize) -> RangeInclusive<usize> {
+    if s == stages {
+        (b - 1)..=(b - 1)
+    } else {
+        s..=(b - 1 - (stages - s))
+    }
+}
+
+/// Every (interval, width) a full sweep needs: the union over stage
+/// counts and stage positions of the *usable* bound pairs — stage `s` of
+/// an `S`-stage pipeline can only start after `s - 1` earlier boundaries
+/// and must leave room for `S - s` later ones. This restriction (rather
+/// than "every pair at every width") is what keeps the memo table small
+/// and the memo-over-cold ratio large.
+pub fn stage_keys(bounds: &[usize], devices: u32, max_stages: usize) -> Vec<StageKey> {
+    let b = bounds.len();
+    let mut set = BTreeSet::new();
+    for (stages, width) in plan_widths(devices, max_stages, b) {
+        for s in 1..=stages {
+            for i in start_range(s, stages, b) {
+                for j in end_range(s, stages, b) {
+                    if j > i {
+                        set.insert(StageKey { lo: bounds[i], hi: bounds[j], width });
+                    }
+                }
+            }
+        }
+    }
+    set.into_iter().collect()
+}
+
+/// Per-stage frontiers keyed by (interval, width): each entry is the
+/// stage search's frontier as raw `(mem, time, cost)` triples in
+/// frontier order. Missing keys (inseparable intervals) simply exclude
+/// the cut vectors that would need them.
+pub type StageFrontiers = BTreeMap<StageKey, Vec<(f64, f64, f64)>>;
+
+/// One stage of a composed pipeline plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageSlot {
+    /// First spine position of the stage's interval.
+    pub lo: usize,
+    /// One past the last spine position of the stage's interval.
+    pub hi: usize,
+    /// Sub-cluster width the stage runs on.
+    pub width: u32,
+    /// Index of the chosen tuple on the stage's frontier.
+    pub point: usize,
+    /// The chosen stage tuple's per-device memory (bytes).
+    pub mem: f64,
+    /// The chosen stage tuple's per-iteration time (s).
+    pub time: f64,
+    /// The chosen stage tuple's dollars per iteration (0 unpriced).
+    pub cost: f64,
+}
+
+/// A complete pipeline assignment: the cut positions plus the per-stage
+/// strategy choices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelinePlan {
+    /// Stages in spine order.
+    pub stages: Vec<StageSlot>,
+    /// Micro-batches the bubble model assumed.
+    pub micro_batches: usize,
+}
+
+impl PipelinePlan {
+    /// Number of stages.
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Bubble inflation factor of this plan.
+    pub fn bubble(&self) -> f64 {
+        bubble_factor(self.stages.len(), self.micro_batches)
+    }
+}
+
+/// One point of the joint (cuts x strategies) frontier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JointPoint {
+    /// Peak per-device memory over all stages (bytes).
+    pub mem: f64,
+    /// Bubble-inflated per-iteration time (s).
+    pub time: f64,
+    /// Bubble-inflated dollars per iteration (0 unpriced).
+    pub cost: f64,
+    /// The plan realizing this point.
+    pub plan: PipelinePlan,
+}
+
+/// Cons-list provenance of a partial pipeline: which stage tuples built
+/// it, shared structurally so DP states clone in O(1).
+struct ChainNode {
+    key: StageKey,
+    point: usize,
+    mem: f64,
+    time: f64,
+    cost: f64,
+    prev: Option<Arc<ChainNode>>,
+}
+
+/// Partial pipeline covering a bound prefix: running (max mem, max time,
+/// summed cost) plus the stage chain that produced it.
+#[derive(Clone)]
+struct Partial {
+    mem: f64,
+    time: f64,
+    cost: f64,
+    chain: Arc<ChainNode>,
+}
+
+impl Partial {
+    fn first(key: StageKey, point: usize, m: f64, t: f64, c: f64) -> Self {
+        let chain =
+            Arc::new(ChainNode { key, point, mem: m, time: t, cost: c, prev: None });
+        Self { mem: m, time: t, cost: c, chain }
+    }
+
+    /// Extend by one stage: memory and time take the max, dollars add —
+    /// a left fold in stage order, so the DP and the brute force
+    /// accumulate in the identical f64 operation order.
+    fn extend(&self, key: StageKey, point: usize, m: f64, t: f64, c: f64) -> Self {
+        let chain = Arc::new(ChainNode {
+            key,
+            point,
+            mem: m,
+            time: t,
+            cost: c,
+            prev: Some(self.chain.clone()),
+        });
+        Self { mem: self.mem.max(m), time: self.time.max(t), cost: self.cost + c, chain }
+    }
+
+    fn into_joint(self, bf: f64, micro_batches: usize) -> JointPoint {
+        let mut stages = Vec::new();
+        let mut cur = Some(&self.chain);
+        while let Some(n) = cur {
+            stages.push(StageSlot {
+                lo: n.key.lo,
+                hi: n.key.hi,
+                width: n.key.width,
+                point: n.point,
+                mem: n.mem,
+                time: n.time,
+                cost: n.cost,
+            });
+            cur = n.prev.as_ref();
+        }
+        stages.reverse();
+        JointPoint {
+            mem: self.mem,
+            time: self.time * bf,
+            cost: self.cost * bf,
+            plan: PipelinePlan { stages, micro_batches },
+        }
+    }
+}
+
+/// Exact (no ε) Pareto prune of a DP state. Lossless: composition is
+/// monotone in every coordinate, so a dominated partial can never
+/// complete into a non-dominated pipeline the dominating partial's
+/// completion wouldn't also dominate.
+fn prune(cand: &mut Vec<Partial>) {
+    if cand.len() <= 1 {
+        return;
+    }
+    let pts: Vec<(f64, f64, f64)> = cand.iter().map(|p| (p.mem, p.time, p.cost)).collect();
+    let kept = pareto_indices(&pts);
+    if kept.len() == cand.len() {
+        return;
+    }
+    *cand = kept.into_iter().map(|i| cand[i].clone()).collect();
+}
+
+/// Canonical finish shared by the DP and the brute force: exact Pareto
+/// filter, ascending (mem, time, cost) sort, then the mode truncation —
+/// identical candidate *value sets* therefore produce bit-identical
+/// outputs regardless of candidate order.
+fn finish(cands: Vec<JointPoint>, mode: Mode) -> Vec<JointPoint> {
+    if cands.is_empty() {
+        return cands;
+    }
+    let pts: Vec<(f64, f64, f64)> = cands.iter().map(|p| (p.mem, p.time, p.cost)).collect();
+    let kept = pareto_indices(&pts);
+    let mut out: Vec<JointPoint> = kept.into_iter().map(|i| cands[i].clone()).collect();
+    out.sort_by(|a, b| {
+        (a.mem, a.time, a.cost).partial_cmp(&(b.mem, b.time, b.cost)).unwrap()
+    });
+    match mode {
+        Mode::Pareto => out,
+        Mode::TimeOnly => out
+            .iter()
+            .min_by(|a, b| {
+                (a.time, a.mem, a.cost).partial_cmp(&(b.time, b.mem, b.cost)).unwrap()
+            })
+            .cloned()
+            .into_iter()
+            .collect(),
+        Mode::MemOnly => out.into_iter().take(1).collect(),
+    }
+}
+
+/// Bottom-up DP over cut positions: compose the memoized per-stage
+/// frontiers into the joint frontier over (cuts x per-stage strategies).
+/// `bounds` is `[0, seam..., spine_len]`; `tables` holds a frontier per
+/// usable [`StageKey`] (see [`stage_keys`]). Bit-identical to
+/// [`brute_force_sweep`] on the same tables by construction — exact
+/// intermediate pruning plus the shared canonical [`finish`].
+pub fn joint_sweep(
+    bounds: &[usize],
+    devices: u32,
+    opts: &PipelineOpts,
+    tables: &StageFrontiers,
+) -> Vec<JointPoint> {
+    let b = bounds.len();
+    let mut complete: Vec<JointPoint> = Vec::new();
+    for (stages, width) in plan_widths(devices, opts.max_stages, b) {
+        let bf = bubble_factor(stages, opts.micro_batches);
+        // dp[j]: pruned partials covering bounds[0..=j] with s stages.
+        let mut dp: Vec<Vec<Partial>> = vec![Vec::new(); b];
+        for s in 1..=stages {
+            let mut next: Vec<Vec<Partial>> = vec![Vec::new(); b];
+            for j in end_range(s, stages, b) {
+                let mut cand: Vec<Partial> = Vec::new();
+                for i in start_range(s, stages, b) {
+                    if i >= j {
+                        continue;
+                    }
+                    let key = StageKey { lo: bounds[i], hi: bounds[j], width };
+                    let Some(tbl) = tables.get(&key) else { continue };
+                    if s == 1 {
+                        for (idx, &(m, t, c)) in tbl.iter().enumerate() {
+                            cand.push(Partial::first(key, idx, m, t, c));
+                        }
+                    } else {
+                        for p in &dp[i] {
+                            for (idx, &(m, t, c)) in tbl.iter().enumerate() {
+                                cand.push(p.extend(key, idx, m, t, c));
+                            }
+                        }
+                    }
+                }
+                prune(&mut cand);
+                next[j] = cand;
+            }
+            dp = next;
+        }
+        for p in &dp[b - 1] {
+            complete.push(p.clone().into_joint(bf, opts.micro_batches));
+        }
+    }
+    finish(complete, opts.mode)
+}
+
+/// Everything a cold reference sweep needs to run stage searches exactly
+/// as the planner's memoized path does (same sub-cluster prefix, same
+/// profiled comm model, same pricing), bundled so call sites stay small.
+pub struct ColdSweepCtx<'a> {
+    /// The full model.
+    pub graph: &'a Graph,
+    /// Its linear spine (`Graph::mark_linear_spine`).
+    pub spine: &'a [OpId],
+    /// The base cluster; a `width`-device stage searches
+    /// `cluster.sub_cluster(width)`.
+    pub cluster: &'a Cluster,
+    /// Total devices split across stages.
+    pub devices: u32,
+    /// Mesh rank of the stage searches.
+    pub max_mesh_dims: usize,
+    /// Search thread budget per stage search.
+    pub threads: usize,
+    /// Billing model pricing the stage searches (`None` = unpriced).
+    pub billing: Option<Billing>,
+}
+
+/// One fully cold stage search: extract the interval, profile the
+/// sub-cluster, search in Pareto mode — the exact sequence the planner's
+/// memoized stage path performs, so the differential tests can pin the
+/// two bit-identical. Returns `None` when the interval is not separable.
+pub fn cold_stage_search(ctx: &ColdSweepCtx<'_>, key: StageKey) -> Option<Vec<(f64, f64, f64)>> {
+    let extracted;
+    let g = if key.lo == 0 && key.hi == ctx.spine.len() {
+        ctx.graph
+    } else {
+        extracted = ctx.graph.extract_spine_interval(ctx.spine, key.lo, key.hi)?;
+        &extracted
+    };
+    let sub = ctx.cluster.sub_cluster(key.width as usize);
+    let comm = CommModel::profile(&sub);
+    let mut opts = FtOptions::new(sub.n_devices() as u32).with_mode(Mode::Pareto);
+    opts.max_mesh_dims = ctx.max_mesh_dims;
+    opts.threads = ctx.threads.max(1);
+    if let Some(b) = ctx.billing {
+        opts = opts.with_pricing(pricing::usd_hour(&sub, b));
+    }
+    let r = frontier_search(g, &sub, &comm, opts);
+    Some(r.frontier.tuples.iter().map(|t| (t.mem, t.time, t.cost)).collect())
+}
+
+/// Strictly increasing `k`-subsets of `0..n` in lexicographic order.
+fn combinations(n: usize, k: usize) -> Vec<Vec<usize>> {
+    if k > n {
+        return Vec::new();
+    }
+    if k == 0 {
+        return vec![Vec::new()];
+    }
+    let mut idx: Vec<usize> = (0..k).collect();
+    let mut out = vec![idx.clone()];
+    'outer: loop {
+        for i in (0..k).rev() {
+            if idx[i] < n - k + i {
+                idx[i] += 1;
+                for j in i + 1..k {
+                    idx[j] = idx[j - 1] + 1;
+                }
+                out.push(idx.clone());
+                continue 'outer;
+            }
+        }
+        return out;
+    }
+}
+
+/// Reference sweep: enumerate every cut vector and run every stage
+/// search cold — no interval memo, no schedule replay, no sharing of any
+/// kind. This is the baseline `bench_pipe` times and the oracle the
+/// differential tests compare [`joint_sweep`] against. Stage choices
+/// within one cut vector fold left with exact Pareto pruning after each
+/// stage — lossless under the monotone `(max, max, +)` composition
+/// (pinned by a unit test against the full cross product).
+pub fn brute_force_sweep(ctx: &ColdSweepCtx<'_>, opts: &PipelineOpts) -> Vec<JointPoint> {
+    let seams = ctx.graph.spine_cut_points(ctx.spine);
+    let cuts = cut_candidates(&seams, opts.max_cuts);
+    let mut bounds = Vec::with_capacity(cuts.len() + 2);
+    bounds.push(0);
+    bounds.extend_from_slice(&cuts);
+    bounds.push(ctx.spine.len());
+    let b = bounds.len();
+    let mut complete: Vec<JointPoint> = Vec::new();
+    for (stages, width) in plan_widths(ctx.devices, opts.max_stages, b) {
+        let bf = bubble_factor(stages, opts.micro_batches);
+        for combo in combinations(b - 2, stages - 1) {
+            // interior bound indices are 1..=b-2; a combo picks stages-1.
+            let mut at: Vec<usize> = Vec::with_capacity(stages + 1);
+            at.push(0);
+            at.extend(combo.iter().map(|&k| k + 1));
+            at.push(b - 1);
+            let mut acc: Vec<Partial> = Vec::new();
+            let mut feasible = true;
+            for s in 0..stages {
+                let key =
+                    StageKey { lo: bounds[at[s]], hi: bounds[at[s + 1]], width };
+                let Some(tbl) = cold_stage_search(ctx, key) else {
+                    feasible = false;
+                    break;
+                };
+                let mut next: Vec<Partial> = Vec::new();
+                if s == 0 {
+                    for (idx, &(m, t, c)) in tbl.iter().enumerate() {
+                        next.push(Partial::first(key, idx, m, t, c));
+                    }
+                } else {
+                    for p in &acc {
+                        for (idx, &(m, t, c)) in tbl.iter().enumerate() {
+                            next.push(p.extend(key, idx, m, t, c));
+                        }
+                    }
+                }
+                prune(&mut next);
+                acc = next;
+            }
+            if !feasible {
+                continue;
+            }
+            for p in acc {
+                complete.push(p.into_joint(bf, opts.micro_batches));
+            }
+        }
+    }
+    finish(complete, opts.mode)
+}
+
+/// Build the [`StageFrontiers`] table for a sweep by running every
+/// usable stage search cold (test/reference helper; the planner's
+/// [`crate::plan::Planner::plan_pipeline`] is the memoized production
+/// path).
+pub fn cold_stage_tables(ctx: &ColdSweepCtx<'_>, opts: &PipelineOpts) -> (Vec<usize>, StageFrontiers) {
+    let seams = ctx.graph.spine_cut_points(ctx.spine);
+    let cuts = cut_candidates(&seams, opts.max_cuts);
+    let mut bounds = Vec::with_capacity(cuts.len() + 2);
+    bounds.push(0);
+    bounds.extend_from_slice(&cuts);
+    bounds.push(ctx.spine.len());
+    let mut tables = StageFrontiers::new();
+    for key in stage_keys(&bounds, ctx.devices, opts.max_stages) {
+        if let Some(tbl) = cold_stage_search(ctx, key) {
+            tables.insert(key, tbl);
+        }
+    }
+    (bounds, tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models::{transformer_lm, TransformerCfg};
+    use crate::util::rng::XorShift;
+
+    #[test]
+    fn bubble_factor_values() {
+        assert_eq!(bubble_factor(1, 8).to_bits(), 1.0f64.to_bits());
+        assert_eq!(bubble_factor(4, 8), 11.0 / 8.0);
+        assert_eq!(bubble_factor(2, 1), 2.0);
+    }
+
+    #[test]
+    fn cut_candidates_thin_deterministically() {
+        let seams: Vec<usize> = (1..=12).collect();
+        let all = cut_candidates(&seams, 20);
+        assert_eq!(all, seams);
+        let thin = cut_candidates(&seams, 8);
+        assert!(thin.len() <= 8);
+        assert!(thin.windows(2).all(|w| w[0] < w[1]), "ascending");
+        assert!(thin.iter().all(|c| seams.contains(c)), "subset");
+        assert_eq!(thin, cut_candidates(&seams, 8), "deterministic");
+        assert!(cut_candidates(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn stage_key_count_is_usable_pairs_only() {
+        // 8 seams -> 10 bounds; d=8, S<=4. All-pairs-at-every-width would
+        // be 1 + 2*36 + 36 = 109 keys; usable pairs are 59 (S=3 and S=4
+        // share width 2, and S=4's usable pairs are a subset of S=3's).
+        let bounds: Vec<usize> = (0..10).collect();
+        let keys = stage_keys(&bounds, 8, 4);
+        assert_eq!(keys.len(), 59);
+        // deterministic ascending order.
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+        // the full interval at full width is always first-class.
+        assert!(keys.contains(&StageKey { lo: 0, hi: 9, width: 8 }));
+    }
+
+    #[test]
+    fn combinations_lexicographic() {
+        assert_eq!(
+            combinations(4, 2),
+            vec![vec![0, 1], vec![0, 2], vec![0, 3], vec![1, 2], vec![1, 3], vec![2, 3]]
+        );
+        assert_eq!(combinations(3, 0), vec![Vec::<usize>::new()]);
+        assert!(combinations(2, 3).is_empty());
+    }
+
+    #[test]
+    fn joint_sweep_composes_bubble_model() {
+        // bounds [0,1,2], 2 devices: S=1 (w=2) vs S=2 (w=1), M=4.
+        let mut tables = StageFrontiers::new();
+        tables.insert(StageKey { lo: 0, hi: 2, width: 2 }, vec![(10.0, 10.0, 0.0)]);
+        tables.insert(StageKey { lo: 0, hi: 1, width: 1 }, vec![(4.0, 6.0, 0.0)]);
+        tables.insert(StageKey { lo: 1, hi: 2, width: 1 }, vec![(8.0, 3.0, 0.0)]);
+        let opts = PipelineOpts { max_stages: 2, micro_batches: 4, ..Default::default() };
+        let out = joint_sweep(&[0, 1, 2], 2, &opts, &tables);
+        // 2-stage: mem max(4,8)=8, time max(6,3)*bf(2,4)=6*1.25=7.5 —
+        // dominates the 1-stage (10, 10).
+        assert_eq!(out.len(), 1);
+        assert_eq!((out[0].mem, out[0].time, out[0].cost), (8.0, 7.5, 0.0));
+        assert_eq!(out[0].plan.n_stages(), 2);
+        assert_eq!(out[0].plan.stages[0].lo, 0);
+        assert_eq!(out[0].plan.stages[1].lo, 1);
+        assert_eq!(out[0].plan.bubble(), 1.25);
+    }
+
+    /// The fold-with-exact-prune lemma: pruning after each stage of a cut
+    /// vector loses nothing versus the full cross product.
+    #[test]
+    fn pruned_fold_matches_full_cross_product() {
+        let mut rng = XorShift::new(0x51AC);
+        for _ in 0..10 {
+            // three stage tables of random triples.
+            let mut tables: Vec<Vec<(f64, f64, f64)>> = Vec::new();
+            for _ in 0..3 {
+                let n = rng.range(2, 6);
+                tables.push(
+                    (0..n)
+                        .map(|_| {
+                            (
+                                rng.below(50) as f64,
+                                rng.below(50) as f64,
+                                rng.below(50) as f64,
+                            )
+                        })
+                        .collect(),
+                );
+            }
+            let key = |s: usize| StageKey { lo: s, hi: s + 1, width: 1 };
+            // pruned left fold.
+            let mut acc: Vec<Partial> = Vec::new();
+            for (s, tbl) in tables.iter().enumerate() {
+                let mut next = Vec::new();
+                if s == 0 {
+                    for (i, &(m, t, c)) in tbl.iter().enumerate() {
+                        next.push(Partial::first(key(s), i, m, t, c));
+                    }
+                } else {
+                    for p in &acc {
+                        for (i, &(m, t, c)) in tbl.iter().enumerate() {
+                            next.push(p.extend(key(s), i, m, t, c));
+                        }
+                    }
+                }
+                prune(&mut next);
+                acc = next;
+            }
+            let pruned = finish(
+                acc.into_iter().map(|p| p.into_joint(1.0, 1)).collect(),
+                Mode::Pareto,
+            );
+            // full cross product, no intermediate pruning.
+            let mut full: Vec<Partial> = Vec::new();
+            for (s, tbl) in tables.iter().enumerate() {
+                let mut next = Vec::new();
+                if s == 0 {
+                    for (i, &(m, t, c)) in tbl.iter().enumerate() {
+                        next.push(Partial::first(key(s), i, m, t, c));
+                    }
+                } else {
+                    for p in &full {
+                        for (i, &(m, t, c)) in tbl.iter().enumerate() {
+                            next.push(p.extend(key(s), i, m, t, c));
+                        }
+                    }
+                }
+                full = next;
+            }
+            let exhaustive = finish(
+                full.into_iter().map(|p| p.into_joint(1.0, 1)).collect(),
+                Mode::Pareto,
+            );
+            assert_eq!(pruned.len(), exhaustive.len());
+            for (a, b) in pruned.iter().zip(&exhaustive) {
+                assert_eq!(
+                    (a.mem.to_bits(), a.time.to_bits(), a.cost.to_bits()),
+                    (b.mem.to_bits(), b.time.to_bits(), b.cost.to_bits())
+                );
+            }
+        }
+    }
+
+    /// End-to-end on a real (tiny) transformer: the DP over cold stage
+    /// tables is bit-identical to brute-force cut enumeration, priced and
+    /// unpriced.
+    #[test]
+    fn dp_matches_brute_force_on_tiny_transformer() {
+        let g = transformer_lm(TransformerCfg {
+            batch: 8,
+            seq: 4,
+            hidden: 16,
+            ffn_mult: 2,
+            layers: 2,
+            vocab: 16,
+        });
+        let spine = g.mark_linear_spine();
+        let cluster = Cluster::with_gpus(4);
+        let opts = PipelineOpts {
+            max_stages: 3,
+            micro_batches: 4,
+            max_cuts: 4,
+            mode: Mode::Pareto,
+        };
+        for billing in [None, Some(Billing::OnDemand)] {
+            let ctx = ColdSweepCtx {
+                graph: &g,
+                spine: &spine,
+                cluster: &cluster,
+                devices: 4,
+                max_mesh_dims: 2,
+                threads: 1,
+                billing,
+            };
+            let (bounds, tables) = cold_stage_tables(&ctx, &opts);
+            let dp = joint_sweep(&bounds, 4, &opts, &tables);
+            let brute = brute_force_sweep(&ctx, &opts);
+            assert!(!dp.is_empty());
+            assert_eq!(dp.len(), brute.len(), "billing={billing:?}");
+            for (a, b) in dp.iter().zip(&brute) {
+                assert_eq!(
+                    (a.mem.to_bits(), a.time.to_bits(), a.cost.to_bits()),
+                    (b.mem.to_bits(), b.time.to_bits(), b.cost.to_bits()),
+                    "billing={billing:?}"
+                );
+            }
+            if billing.is_some() {
+                assert!(dp.iter().any(|p| p.cost > 0.0), "priced sweep has dollars");
+            }
+        }
+    }
+}

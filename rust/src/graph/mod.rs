@@ -188,6 +188,86 @@ impl Graph {
         spine
     }
 
+    /// Clean pipeline cut positions along a spine (ISSUE 10): position
+    /// `c` (1 ≤ c < spine.len()) is a *clean* cut iff no off-spine op
+    /// sits between `spine[c-1]` and `spine[c]` in topological order, so
+    /// splitting there partitions the op set exactly into a prefix and a
+    /// suffix. On a transformer this yields the two residual-block seams
+    /// per layer; graphs whose off-spine work straddles every seam (e.g.
+    /// a globally shared mask input) report none.
+    pub fn spine_cut_points(&self, spine: &[OpId]) -> Vec<usize> {
+        let order = self.topo_order();
+        let mut pos = vec![0usize; self.n_ops()];
+        for (i, id) in order.iter().enumerate() {
+            pos[id.0] = i;
+        }
+        (1..spine.len())
+            .filter(|&c| pos[spine[c].0] == pos[spine[c - 1].0] + 1)
+            .collect()
+    }
+
+    /// Extract the contiguous sub-graph spanned by spine positions
+    /// `[lo, hi)` (ISSUE 10): every op whose topological position lies in
+    /// `[pos(spine[lo]), pos(spine[hi-1])]`, with op/edge ids remapped in
+    /// topological order so identical intervals yield identical graphs.
+    /// Returns `None` when the interval is not separable — i.e. some edge
+    /// crosses the boundary other than the spine edge into `spine[lo]` or
+    /// out of `spine[hi-1]` (BERT's shared attention mask is the canonical
+    /// offender). Boundary spine edges are dropped: stage-boundary
+    /// activation transfer is carried by the pipeline time model, not the
+    /// stage's intra-op search.
+    pub fn extract_spine_interval(
+        &self,
+        spine: &[OpId],
+        lo: usize,
+        hi: usize,
+    ) -> Option<Graph> {
+        if lo >= hi || hi > spine.len() {
+            return None;
+        }
+        let order = self.topo_order();
+        let mut pos = vec![0usize; self.n_ops()];
+        for (i, id) in order.iter().enumerate() {
+            pos[id.0] = i;
+        }
+        let plo = pos[spine[lo].0];
+        let phi = pos[spine[hi - 1].0];
+        // Membership is a contiguous topological-position range, so a new
+        // id is the offset inside it; usize::MAX marks non-members.
+        let mut remap = vec![usize::MAX; self.n_ops()];
+        for (new_id, &old) in order[plo..=phi].iter().enumerate() {
+            remap[old.0] = new_id;
+        }
+        let first = spine[lo];
+        let last = spine[hi - 1];
+        let mut edges = Vec::new();
+        for e in &self.edges {
+            match (remap[e.src.0] != usize::MAX, remap[e.dst.0] != usize::MAX) {
+                (true, true) => edges.push(Edge {
+                    id: EdgeId(edges.len()),
+                    src: OpId(remap[e.src.0]),
+                    dst: OpId(remap[e.dst.0]),
+                }),
+                // Only the spine edge may enter or leave the interval.
+                (false, true) if e.dst == first => {}
+                (true, false) if e.src == last => {}
+                (false, true) | (true, false) => return None,
+                (false, false) => {}
+            }
+        }
+        let mut ops = Vec::with_capacity(phi - plo + 1);
+        for &old in &order[plo..=phi] {
+            let mut op = self.op(old).clone();
+            op.id = OpId(remap[old.0]);
+            ops.push(op);
+        }
+        Some(Graph {
+            name: format!("{}__s{lo}_{hi}", self.name),
+            ops,
+            edges,
+        })
+    }
+
     /// Graphviz dot output for debugging / documentation.
     pub fn to_dot(&self) -> String {
         let mut s = format!("digraph \"{}\" {{\n", self.name);
@@ -269,5 +349,59 @@ mod tests {
         let dot = g.to_dot();
         assert!(dot.contains("digraph"));
         assert!(dot.contains("loss"));
+    }
+
+    #[test]
+    fn cut_points_skip_offspine_segments() {
+        let g = diamond();
+        let spine = g.mark_linear_spine();
+        // spine = x, a, add, loss; the l/r branch sits between a and add,
+        // so only the x|a and add|loss seams are clean.
+        assert_eq!(g.spine_cut_points(&spine), vec![1, 3]);
+    }
+
+    #[test]
+    fn extract_interval_remaps_and_keeps_offspine() {
+        let g = diamond();
+        let spine = g.mark_linear_spine();
+        // [1, 3) spans a..add including both off-spine branches.
+        let sub = g.extract_spine_interval(&spine, 1, 3).unwrap();
+        assert_eq!(sub.n_ops(), 4);
+        assert_eq!(sub.edges.len(), 4);
+        assert_eq!(sub.name, "diamond__s1_3");
+        // Ids are positional and the graph is self-consistent.
+        sub.topo_order();
+        for (i, op) in sub.ops.iter().enumerate() {
+            assert_eq!(op.id.0, i);
+        }
+        // Extraction is deterministic.
+        let again = g.extract_spine_interval(&spine, 1, 3).unwrap();
+        let names: Vec<&str> = sub.ops.iter().map(|o| o.name.as_str()).collect();
+        let names2: Vec<&str> = again.ops.iter().map(|o| o.name.as_str()).collect();
+        assert_eq!(names, names2);
+        // Full range reproduces the whole op set.
+        let full = g.extract_spine_interval(&spine, 0, spine.len()).unwrap();
+        assert_eq!(full.n_ops(), g.n_ops());
+    }
+
+    #[test]
+    fn extract_rejects_shared_side_inputs() {
+        // A second input feeding a mid-spine op (BERT's shared mask
+        // pattern) makes intervals that cross the side edge inseparable.
+        let mut b = GraphBuilder::new("sidein", 8);
+        let x = b.input("x", &[("batch", 8), ("f", 16)]);
+        let a = b.dense("a", &x, 16);
+        let bb = b.dense("b", &a, 16);
+        let m = b.input("m", &[("batch", 8), ("f", 16)]);
+        let c = b.add("c", &bb, &m);
+        b.loss("loss", &c, 16);
+        let g = b.build();
+        let spine = g.mark_linear_spine();
+        // spine = x, a, b, c, loss; m -> c crosses the [2, 5) boundary at
+        // a non-first member, so that interval is not separable …
+        assert!(g.extract_spine_interval(&spine, 2, 5).is_none());
+        // … while the interval starting at c absorbs the edge as its
+        // (allowed) inbound spine seam.
+        assert!(g.extract_spine_interval(&spine, 3, 5).is_some());
     }
 }

@@ -1,10 +1,11 @@
 //! `tensoropt` — CLI for the TensorOpt reproduction.
 //!
 //! Subcommands:
-//!   exp <table1|table2|table3|table4|fig6|fig7|fig8|hetero|provision|obs|churn>
+//!   exp <table1|table2|table3|table4|fig6|fig7|fig8|hetero|provision|pipeline|obs|churn>
 //!            regenerate a paper table/figure
 //!            (hetero: homogeneous-assumption vs topology-aware on mixed testbeds;
 //!             provision: dollar-priced cheapest-under-deadline / fastest-under-budget;
+//!             pipeline: pipeline cut sweep vs best pure intra-op plan;
 //!             obs: estimate-vs-simulated drift report;
 //!             churn: elastic vs static re-planning under injected faults)
 //!
@@ -15,6 +16,8 @@
 //!   frontier --model M [--gpus N]                    print the raw cost frontier
 //!   plan     --model M --gpus N --parallelisms 1,2,4 planner-engine sweep (cold/warm
 //!            [--store FILE] [--inspect]              stats, persistent plan store)
+//!   pipeline --model M --gpus N [--stages S]         interval-memoized pipeline cut sweep
+//!            [--repeat N] [--expect-warm]            (joint cuts x strategies frontier)
 //!   serve    --requests N --gpus N [--models ...]    multi-tenant plan service under
 //!                                                    synthetic heavy-tailed traffic
 //!   sched    --jobs N --gpus N [--models A,B,C]      multi-job elastic scheduling
@@ -30,7 +33,7 @@ use tensoropt::coordinator::{
 };
 use tensoropt::exp;
 use tensoropt::graph::models;
-use tensoropt::plan::{PlanRequest, PlanStore, Planner};
+use tensoropt::plan::{PipelineRequest, PlanRequest, PlanStore, Planner};
 use tensoropt::serve::{PlanService, ServeConfig, TrafficCfg};
 use tensoropt::util::cli::Args;
 use tensoropt::util::table::Table;
@@ -172,6 +175,22 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             println!("{}", fast.render());
             save(&cheap, "provision_deadline");
             save(&fast, "provision_budget");
+        }
+        "pipeline" => {
+            let billing_s = args.get_or("billing", "ondemand");
+            let billing = tensoropt::cost::pricing::Billing::parse(billing_s)
+                .ok_or_else(|| anyhow::anyhow!("unknown billing model `{billing_s}`"))?;
+            let cfg = exp::pipeline::PipelineExpCfg {
+                model: args.get_or("model", "transformer-s").to_string(),
+                batch: args.get_parse_or("batch", 256i64),
+                max_stages: args.get_parse_or("stages", 4usize),
+                micro_batches: args.get_parse_or("micro", 8usize),
+                max_cuts: args.get_parse_or("cuts", 8usize),
+                billing,
+            };
+            let t = exp::pipeline::run(&cfg);
+            println!("{}", t.render());
+            save(&t, "pipeline_vs_pure");
         }
         "obs" => {
             let cfg = exp::obs::ObsCfg {
@@ -472,6 +491,125 @@ fn cmd_plan(args: &Args) -> anyhow::Result<()> {
              served from the store/memo"
         );
         println!("[expect-warm ok: every plan served warm]");
+    }
+    Ok(())
+}
+
+/// `tensoropt pipeline` — run the interval-memoized pipeline cut sweep:
+/// enumerate clean spine seams, search every (interval, width) stage once
+/// through the shared planner, and print the joint (cuts x strategies)
+/// frontier plus the sweep's warm-hit accounting. `--repeat N` reruns the
+/// sweep so later passes exercise the interval memo; `--expect-warm`
+/// (with `--repeat >= 2`) fails the run unless every repeat-sweep stage
+/// was served from the memo.
+fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "transformer-s");
+    let batch = args.get_parse_or("batch", 256i64);
+    let gpus = args.get_parse_or("gpus", 8u32);
+    anyhow::ensure!(gpus >= 1, "--gpus must be >= 1");
+    let stages = args.get_parse_or("stages", 4usize);
+    let micro = args.get_parse_or("micro", 8usize);
+    let cuts = args.get_parse_or("cuts", 8usize);
+    anyhow::ensure!(stages >= 1, "--stages must be >= 1");
+    anyhow::ensure!(micro >= 1, "--micro must be >= 1");
+    let billing = match args.get("billing") {
+        None => None,
+        Some(b) => Some(
+            tensoropt::cost::pricing::Billing::parse(b)
+                .ok_or_else(|| anyhow::anyhow!("unknown billing model `{b}`"))?,
+        ),
+    };
+    let repeat = args.get_parse_or("repeat", 1usize);
+    anyhow::ensure!(repeat >= 1, "--repeat must be >= 1");
+    if args.flag("expect-warm") {
+        anyhow::ensure!(repeat >= 2, "--expect-warm needs --repeat >= 2");
+    }
+
+    let planner = Planner::new();
+    let fp = planner.register_cluster(&Cluster::with_gpus(gpus as usize));
+    let preq = PipelineRequest::new(
+        PlanRequest::builder(model, batch, &fp, gpus).billing_opt(billing).build()?,
+    )
+    .with_max_stages(stages)
+    .with_micro_batches(micro)
+    .with_max_cuts(cuts);
+
+    let mut all_warm = true;
+    let mut last = None;
+    for rep in 0..repeat {
+        let t0 = std::time::Instant::now();
+        let resp = planner.plan_pipeline(&preq)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        if rep > 0 {
+            all_warm &= resp.stage_warm == resp.stage_searches;
+        }
+        println!(
+            "[sweep {}] {} cuts, {} stage searches ({} warm), {} intervals, {} joint \
+             points, {ms:.1} ms",
+            rep + 1,
+            resp.n_cuts,
+            resp.stage_searches,
+            resp.stage_warm,
+            resp.n_intervals,
+            resp.frontier.len()
+        );
+        last = Some(resp);
+    }
+    let resp = last.expect("repeat >= 1 produced a sweep");
+
+    let mut t = Table::new(
+        &format!(
+            "pipeline frontier: {model}@{batch} on {gpus} GPUs (stages<={stages}, micro={micro})"
+        ),
+        &["stages", "bubble", "mem_gb", "step_s", "usd_step"],
+    );
+    for (tu, plan) in resp.frontier.tuples.iter().zip(&resp.plans) {
+        t.row(&[
+            plan.n_stages().to_string(),
+            format!("{:.3}", plan.bubble()),
+            format!("{:.3}", tu.mem / exp::GB),
+            format!("{:.4}", tu.time),
+            if billing.is_some() { format!("{:.5}", tu.cost) } else { "-".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    save(&t, &format!("pipeline_{model}_{gpus}"));
+
+    let s = planner.stats();
+    let mut st = Table::new(
+        "planner stats",
+        &[
+            "stage_searches",
+            "stage_warm",
+            "warm_rate",
+            "interval_builds",
+            "interval_hits",
+            "interval_hit_rate",
+            "leaf_builds",
+            "searches",
+        ],
+    );
+    st.row(&[
+        s.pipe_stage_searches.to_string(),
+        s.pipe_stage_warm.to_string(),
+        format!("{:.2}", s.pipe_warm_rate()),
+        s.pipe_interval_builds.to_string(),
+        s.pipe_interval_hits.to_string(),
+        format!("{:.2}", s.pipe_interval_hit_rate()),
+        s.leaf_builds.to_string(),
+        s.searches().to_string(),
+    ]);
+    println!("{}", st.render());
+    if args.flag("metrics") {
+        println!("{}", planner.metrics().snapshot().render());
+    }
+    if args.flag("expect-warm") {
+        anyhow::ensure!(
+            all_warm,
+            "--expect-warm: a repeat sweep ran a stage search instead of being \
+             served from the interval memo"
+        );
+        println!("[expect-warm ok: every repeat-sweep stage served warm]");
     }
     Ok(())
 }
@@ -798,6 +936,17 @@ COMMANDS:
                                                  (--expect-warm asserts it); --repeat loops the
                                                  sweep so later passes exercise the memo
   plan      --inspect --store FILE               list the plans in a store file
+  pipeline  --model M --batch B --gpus N [--stages S] [--micro M] [--cuts K]
+            [--billing <ondemand|spot>] [--repeat N] [--expect-warm]
+                                                 interval-memoized pipeline cut sweep: joint
+                                                 (cuts x strategies) frontier with per-stage
+                                                 warm-hit accounting; --repeat reruns the sweep
+                                                 so later passes hit the interval memo
+                                                 (--expect-warm asserts they all do)
+  exp pipeline [--model M --batch B --stages S --micro M --cuts K --billing <ondemand|spot>]
+                                                 pipeline sweep vs best pure intra-op plan
+                                                 (min-time / min-mem / cheapest) on the three
+                                                 mixed testbeds
   serve     --requests N --gpus N [--models tiny,vgg16@128,...] [--parallelisms 1,2,4]
             [--seed S] [--workers N] [--shards N] [--budget-mb MB] [--queue-depth N]
             [--window-ms MS] [--max-group N] [--zipf S] [--gap-ms MS] [--burst-every N]
@@ -839,6 +988,8 @@ EXAMPLES:
   tensoropt exp fig8 --model transformer --parallelism 8,16,32
   tensoropt search --model transformer --mode profiling --gpus 32
   tensoropt plan --model vgg16 --gpus 16 --parallelisms 2,4,8,16 --store plans.json
+  tensoropt pipeline --model transformer-s --gpus 8 --stages 4 --repeat 2 --expect-warm
+  tensoropt exp pipeline --model transformer-s --stages 4
   tensoropt train --strategy tp --steps 100
   tensoropt sched --jobs 4 --gpus 16 --models vgg16,wideresnet,transformer
   tensoropt serve --requests 200 --gpus 8 --models tiny,tiny@128,vgg16 --trace trace.jsonl
@@ -856,6 +1007,7 @@ fn main() -> anyhow::Result<()> {
         Some("train") => cmd_train(&args),
         Some("frontier") => cmd_frontier(&args),
         Some("plan") => cmd_plan(&args),
+        Some("pipeline") => cmd_pipeline(&args),
         Some("serve") => cmd_serve(&args),
         Some("sched") => cmd_sched(&args),
         Some("churn") => cmd_churn(&args),

@@ -43,19 +43,21 @@ use std::time::Instant;
 use crate::cluster::Cluster;
 use crate::cost::comm::CommModel;
 use crate::cost::pricing;
-use crate::frontier::Mode;
+use crate::frontier::{Frontier, Mode, Trace, Tuple};
 use crate::obs;
 use crate::obs::{Attr, Metrics};
 use crate::ft::eliminate::WorkGraph;
 use crate::ft::ldp::ldp;
+use crate::ft::pipeline;
 use crate::ft::{build_configs, ElimSchedule, FtOptions, FtResult, SearchSpace, SpaceTables};
 use crate::graph::models;
 use crate::graph::{Graph, Op, OpId};
 use crate::parallel::ParallelConfig;
+use crate::util::par::par_map_indexed;
 
 use super::flight::{Obtained, SingleFlight};
 use super::store::{PlanStore, StoredPlan};
-use super::{ConfigFilter, PlanRequest, PlanResponse, Served};
+use super::{ConfigFilter, PipelineRequest, PipelineResponse, PlanRequest, PlanResponse, Served};
 
 // Per-planner metric names. The counters back the `PlannerStats`
 // compatibility view; the histograms feed the `--metrics` dump.
@@ -68,6 +70,11 @@ const C_FLIGHT_WAITS: &str = "plan.flight_waits";
 const C_STORE_SERVES: &str = "plan.store_serves";
 const C_MEMO_ENTRIES: &str = "plan.memo_entries";
 const C_EVICTIONS: &str = "plan.evictions";
+const C_PIPE_CUT_SWEEPS: &str = "plan.pipe.cut_sweeps";
+const C_PIPE_STAGE_SEARCHES: &str = "plan.pipe.stage_searches";
+const C_PIPE_STAGE_WARM: &str = "plan.pipe.stage_warm";
+const C_PIPE_INTERVAL_BUILDS: &str = "plan.pipe.interval_builds";
+const C_PIPE_INTERVAL_HITS: &str = "plan.pipe.interval_hits";
 
 /// Planner counters: what was built vs served warm. Snapshot via
 /// [`Planner::stats`], which is a compatibility view over the planner's
@@ -92,12 +99,46 @@ pub struct PlannerStats {
     pub flight_waits: usize,
     /// Requests reconstructed from the persistent store.
     pub store_serves: usize,
+    /// Pipeline cut sweeps run ([`Planner::plan_pipeline`]).
+    pub pipe_cut_sweeps: usize,
+    /// Pipeline stage searches issued (one per separable
+    /// (interval, width) key).
+    pub pipe_stage_searches: usize,
+    /// Stage searches served warm (plan memo / store) — all of them on a
+    /// repeat sweep.
+    pub pipe_stage_warm: usize,
+    /// Spine-interval resolutions that extracted and registered a
+    /// sub-graph (one per distinct interval, ever).
+    pub pipe_interval_builds: usize,
+    /// Spine-interval resolutions served from the interval memo (the same
+    /// interval reused at another width, stage position or sweep).
+    pub pipe_interval_hits: usize,
 }
 
 impl PlannerStats {
     /// Total searches that actually ran (cold + incremental).
     pub fn searches(&self) -> usize {
         self.cold_searches + self.incremental_searches
+    }
+
+    /// Fraction of pipeline stage searches served warm (0.0 when none).
+    pub fn pipe_warm_rate(&self) -> f64 {
+        if self.pipe_stage_searches == 0 {
+            0.0
+        } else {
+            self.pipe_stage_warm as f64 / self.pipe_stage_searches as f64
+        }
+    }
+
+    /// Interval-memo hit rate over all interval resolutions (0.0 when no
+    /// pipeline sweep ran).
+    pub fn pipe_interval_hit_rate(&self) -> f64 {
+        let total = self.pipe_interval_builds + self.pipe_interval_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.pipe_interval_hits as f64 / total as f64
+        }
     }
 }
 
@@ -196,6 +237,13 @@ pub struct Planner {
     /// one architecture (discovery is purely structural).
     schedules: Mutex<HashMap<TopoKey, Arc<ElimSchedule>>>,
     plans: SingleFlight<PlanRequest, Arc<PlanEntry>>,
+    /// Spine-interval memo for pipeline sweeps: (canonical parent id,
+    /// batch, lo, hi) -> the registered interval's `(graph_id, batch)`
+    /// request key, or `None` for inseparable intervals (a side input
+    /// enters mid-interval). Entries are tiny — the heavy per-interval
+    /// state (spaces, leaves, plans) lives in the ordinary memo levels
+    /// under the interval's own canonical id.
+    intervals: Mutex<HashMap<(String, i64, usize, usize), Option<(String, i64)>>>,
     store: Mutex<Option<PlanStore>>,
     metrics: Arc<Metrics>,
 }
@@ -217,6 +265,7 @@ impl Planner {
             spaces: Mutex::new(HashMap::new()),
             schedules: Mutex::new(HashMap::new()),
             plans: SingleFlight::new(),
+            intervals: Mutex::new(HashMap::new()),
             store: Mutex::new(None),
             metrics: Arc::new(Metrics::new()),
         }
@@ -240,6 +289,11 @@ impl Planner {
             memo_hits: c(C_MEMO_HITS),
             flight_waits: c(C_FLIGHT_WAITS),
             store_serves: c(C_STORE_SERVES),
+            pipe_cut_sweeps: c(C_PIPE_CUT_SWEEPS),
+            pipe_stage_searches: c(C_PIPE_STAGE_SEARCHES),
+            pipe_stage_warm: c(C_PIPE_STAGE_WARM),
+            pipe_interval_builds: c(C_PIPE_INTERVAL_BUILDS),
+            pipe_interval_hits: c(C_PIPE_INTERVAL_HITS),
         }
     }
 
@@ -640,6 +694,155 @@ impl Planner {
         self.metrics.inc(C_SPACE_BUILDS);
         space
     }
+
+    // ----------------------------------------------------------- pipeline
+
+    /// Pipeline cut sweep: enumerate clean spine seams, search every
+    /// usable (interval, width) stage **once** through the ordinary plan
+    /// memo, and compose per-stage frontiers into the joint
+    /// (cuts x strategies) frontier with the bottom-up DP of
+    /// [`crate::ft::pipeline`].
+    ///
+    /// Interval sub-graphs are extracted once per (parent, batch, lo, hi)
+    /// and registered under their canonical identity, so every memo level
+    /// below (spaces, schedules, leaf tables, finished plans) applies to
+    /// them exactly as to top-level models — a repeat sweep serves every
+    /// stage from the plan memo, and same-shape intervals of a uniform
+    /// model share one recorded elimination schedule. Stage searches
+    /// always run [`Mode::Pareto`]; the request's mode is applied as the
+    /// final truncation of the joint frontier. Independent stage searches
+    /// fan out over `util::par` in deterministic key order, each running
+    /// its inner search sequentially — results are bit-identical across
+    /// thread counts.
+    pub fn plan_pipeline(&self, preq: &PipelineRequest) -> anyhow::Result<PipelineResponse> {
+        let mut sweep = obs::span("pipe.cut_sweep");
+        let (key, graph, _base) = self.canonicalize(&preq.base)?;
+        let threads = preq.base.threads.unwrap_or(self.threads);
+        let space = self.model_space(&key, &graph);
+        let seams = graph.spine_cut_points(&space.spine);
+        let cuts = pipeline::cut_candidates(&seams, preq.max_cuts);
+        let mut bounds = Vec::with_capacity(cuts.len() + 2);
+        bounds.push(0);
+        bounds.extend_from_slice(&cuts);
+        bounds.push(space.spine.len());
+        let keys = pipeline::stage_keys(&bounds, key.parallelism, preq.max_stages.max(1));
+        self.metrics.inc(C_PIPE_CUT_SWEEPS);
+
+        // Fan the independent stage searches out in deterministic key
+        // order; when fanned, each worker searches sequentially so the
+        // thread budget is spent across stages, not within one.
+        let fan = if keys.len() > 1 { threads } else { 1 };
+        let inner_threads = if fan > 1 { 1 } else { threads };
+        type StageRow = Option<(pipeline::StageKey, Vec<(f64, f64, f64)>, Served)>;
+        let rows: Vec<anyhow::Result<StageRow>> = par_map_indexed(keys.len(), fan, |i| {
+            let k = keys[i];
+            let mut sp = obs::span("pipe.stage_search");
+            if sp.active() {
+                sp.attr_u64("lo", k.lo as u64);
+                sp.attr_u64("hi", k.hi as u64);
+                sp.attr_u64("width", u64::from(k.width));
+            }
+            let Some((gid, batch)) =
+                self.interval_graph(&key, &graph, &space.spine, k.lo, k.hi)
+            else {
+                sp.attr_str("served", "inseparable");
+                return Ok(None);
+            };
+            let sreq = PlanRequest::builder(&gid, batch, &key.cluster_fp, k.width)
+                .mode(Mode::Pareto)
+                .billing_opt(key.billing)
+                .mesh_dims(key.max_mesh_dims)
+                .filter(key.filter)
+                .build()?;
+            let resp = self.plan_inner(&sreq, inner_threads)?;
+            sp.attr_str("served", resp.served.name());
+            self.metrics.inc(C_PIPE_STAGE_SEARCHES);
+            if resp.served.is_warm() {
+                self.metrics.inc(C_PIPE_STAGE_WARM);
+            }
+            let table =
+                resp.frontier().tuples.iter().map(|t| (t.mem, t.time, t.cost)).collect();
+            Ok(Some((k, table, resp.served)))
+        });
+        let mut tables = pipeline::StageFrontiers::new();
+        let mut stage_searches = 0usize;
+        let mut stage_warm = 0usize;
+        for row in rows {
+            if let Some((k, table, served)) = row? {
+                stage_searches += 1;
+                if served.is_warm() {
+                    stage_warm += 1;
+                }
+                tables.insert(k, table);
+            }
+        }
+
+        let opts = pipeline::PipelineOpts {
+            max_stages: preq.max_stages.max(1),
+            micro_batches: preq.micro_batches.max(1),
+            max_cuts: preq.max_cuts,
+            mode: key.mode,
+        };
+        let mut compose = obs::span("pipe.compose");
+        let points = pipeline::joint_sweep(&bounds, key.parallelism, &opts, &tables);
+        compose.attr_u64("points", points.len() as u64);
+        drop(compose);
+
+        let mut tuples = Vec::with_capacity(points.len());
+        let mut plans = Vec::with_capacity(points.len());
+        for p in points {
+            tuples.push(Tuple::with_cost(p.mem, p.time, p.cost, Trace::empty()));
+            plans.push(p.plan);
+        }
+        if sweep.active() {
+            sweep.attr_str("graph", &key.graph_id);
+            sweep.attr_u64("cuts", cuts.len() as u64);
+            sweep.attr_u64("intervals", tables.len() as u64);
+            sweep.attr_u64("stage_searches", stage_searches as u64);
+            sweep.attr_u64("stage_warm", stage_warm as u64);
+            sweep.attr_u64("points", tuples.len() as u64);
+        }
+        Ok(PipelineResponse {
+            frontier: Frontier { tuples },
+            plans,
+            n_cuts: cuts.len(),
+            n_intervals: tables.len(),
+            stage_searches,
+            stage_warm,
+        })
+    }
+
+    /// Resolve (and memoize) the registered request key of spine interval
+    /// `[lo, hi)`: the parent itself for the full range (so the 1-stage
+    /// row shares its memo entry with plain plan requests), otherwise an
+    /// extracted sub-graph registered under its canonical identity.
+    /// `None` — also memoized — marks inseparable intervals (a side input
+    /// enters mid-interval, e.g. an attention mask). The lock is held
+    /// across extraction so the build/hit counters stay deterministic.
+    fn interval_graph(
+        &self,
+        key: &PlanRequest,
+        graph: &Arc<Graph>,
+        spine: &[OpId],
+        lo: usize,
+        hi: usize,
+    ) -> Option<(String, i64)> {
+        if lo == 0 && hi == spine.len() {
+            return Some((key.graph_id.clone(), key.batch));
+        }
+        let ikey = (key.graph_id.clone(), key.batch, lo, hi);
+        let mut memo = self.intervals.lock().unwrap();
+        if let Some(hit) = memo.get(&ikey) {
+            self.metrics.inc(C_PIPE_INTERVAL_HITS);
+            return hit.clone();
+        }
+        let entry = graph
+            .extract_spine_interval(spine, lo, hi)
+            .map(|sub| self.register_graph(sub));
+        self.metrics.inc(C_PIPE_INTERVAL_BUILDS);
+        memo.insert(ikey, entry.clone());
+        entry
+    }
 }
 
 /// Structural content identity of a graph: builder name + FNV-1a hash of
@@ -810,6 +1013,46 @@ mod tests {
         let a = p.plan(&req("tiny", 256, &fp, 4)).unwrap();
         let b = p.plan(&req("tiny", 256, &fp, 64)).unwrap();
         assert!(Arc::ptr_eq(&a.result, &b.result), "over-asking clamps to one key");
+    }
+
+    #[test]
+    fn pipeline_sweep_serves_warm_on_repeat() {
+        let cluster = Cluster::with_gpus(4);
+        let (p, fp) = planner_with(&cluster);
+        let (id, batch) = p.register_graph(transformer_lm(TransformerCfg {
+            batch: 8,
+            seq: 4,
+            hidden: 16,
+            ffn_mult: 2,
+            layers: 2,
+            vocab: 16,
+        }));
+        let preq = PipelineRequest::new(req(&id, batch, &fp, 4))
+            .with_max_stages(2)
+            .with_max_cuts(3);
+        let r1 = p.plan_pipeline(&preq).unwrap();
+        assert!(!r1.frontier.tuples.is_empty());
+        assert!(r1.stage_searches > 1);
+        assert_eq!(r1.stage_warm, 0, "first sweep: every stage key is distinct");
+        let s1 = p.stats();
+        assert!(s1.pipe_interval_builds > 0);
+
+        let r2 = p.plan_pipeline(&preq).unwrap();
+        assert_eq!(r2.stage_warm, r2.stage_searches, "repeat sweep is all memo");
+        assert!((r2.stage_warm_rate() - 1.0).abs() < 1e-12);
+        let s2 = p.stats();
+        assert_eq!(s2.searches(), s1.searches(), "repeat sweep runs no new search");
+        assert_eq!(s2.pipe_interval_builds, s1.pipe_interval_builds);
+        assert!(s2.pipe_interval_hits > s1.pipe_interval_hits);
+        assert_eq!(s2.pipe_cut_sweeps, 2);
+        // identical joint frontiers, bit for bit.
+        assert_eq!(r1.frontier.len(), r2.frontier.len());
+        for (a, b) in r1.frontier.tuples.iter().zip(&r2.frontier.tuples) {
+            assert_eq!(
+                (a.mem.to_bits(), a.time.to_bits(), a.cost.to_bits()),
+                (b.mem.to_bits(), b.time.to_bits(), b.cost.to_bits())
+            );
+        }
     }
 
     #[test]

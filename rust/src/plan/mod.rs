@@ -432,6 +432,88 @@ impl PlanResponse {
     }
 }
 
+/// A pipeline cut-sweep request (ISSUE 10): the `base` request names the
+/// model, cluster and *total* device count plus the billing / mesh /
+/// filter settings every stage search inherits; `base.mode` is applied
+/// as the final joint-frontier truncation (stage searches always run
+/// Pareto). The sweep splits devices equally — each of `S` stages
+/// searches `base.parallelism / S` devices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineRequest {
+    /// The base plan request (graph, cluster, total devices, billing,
+    /// mode as final truncation).
+    pub base: PlanRequest,
+    /// Maximum stage count to consider (1 = pure intra-op).
+    pub max_stages: usize,
+    /// Micro-batches per mini-batch (the bubble denominator).
+    pub micro_batches: usize,
+    /// Cap on candidate cut seams (deterministically thinned).
+    pub max_cuts: usize,
+}
+
+impl PipelineRequest {
+    /// A pipeline request with the default sweep shape
+    /// ([`crate::ft::pipeline::PipelineOpts::default`]).
+    pub fn new(base: PlanRequest) -> Self {
+        let d = crate::ft::pipeline::PipelineOpts::default();
+        Self {
+            base,
+            max_stages: d.max_stages,
+            micro_batches: d.micro_batches,
+            max_cuts: d.max_cuts,
+        }
+    }
+
+    /// Set the maximum stage count.
+    pub fn with_max_stages(mut self, max_stages: usize) -> Self {
+        self.max_stages = max_stages.max(1);
+        self
+    }
+
+    /// Set the micro-batch count.
+    pub fn with_micro_batches(mut self, micro_batches: usize) -> Self {
+        self.micro_batches = micro_batches.max(1);
+        self
+    }
+
+    /// Set the candidate-cut cap.
+    pub fn with_max_cuts(mut self, max_cuts: usize) -> Self {
+        self.max_cuts = max_cuts;
+        self
+    }
+}
+
+/// Result of a pipeline cut sweep: the joint (cuts x strategies)
+/// frontier plus the composed plans and the sweep's warm-hit accounting.
+#[derive(Debug, Clone)]
+pub struct PipelineResponse {
+    /// The joint frontier, ascending by (mem, time, cost); tuples carry
+    /// empty traces — per-stage provenance lives in `plans`.
+    pub frontier: Frontier,
+    /// One composed plan per frontier tuple, aligned by index.
+    pub plans: Vec<crate::ft::pipeline::PipelinePlan>,
+    /// Candidate cut seams the sweep considered.
+    pub n_cuts: usize,
+    /// Distinct (interval, width) stage searches the memo table needed.
+    pub n_intervals: usize,
+    /// Stage plan requests issued (== `n_intervals` per sweep).
+    pub stage_searches: usize,
+    /// Stage requests served warm (plan memo / store) — on a repeat
+    /// sweep over a warm planner this equals `stage_searches`.
+    pub stage_warm: usize,
+}
+
+impl PipelineResponse {
+    /// Fraction of stage searches served warm (0.0 when none ran).
+    pub fn stage_warm_rate(&self) -> f64 {
+        if self.stage_searches == 0 {
+            0.0
+        } else {
+            self.stage_warm as f64 / self.stage_searches as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -198,6 +198,15 @@ pub struct ServeStats {
     pub riders: usize,
     /// Store entries evicted (mirrored into the planner memo).
     pub evictions: usize,
+    /// Pipeline stage searches the shared planner issued
+    /// ([`crate::plan::PlannerStats::pipe_stage_searches`]).
+    pub pipe_stage_searches: usize,
+    /// Pipeline stage searches served warm from the plan memo/store.
+    pub pipe_stage_warm: usize,
+    /// Spine-interval sub-graphs the shared planner extracted.
+    pub pipe_interval_builds: usize,
+    /// Spine-interval resolutions served from the interval memo.
+    pub pipe_interval_hits: usize,
 }
 
 impl ServeStats {
@@ -217,6 +226,26 @@ impl ServeStats {
             0.0
         } else {
             self.shed as f64 / self.requests as f64
+        }
+    }
+
+    /// Fraction of the planner's pipeline stage searches served warm.
+    pub fn pipe_warm_rate(&self) -> f64 {
+        if self.pipe_stage_searches == 0 {
+            0.0
+        } else {
+            self.pipe_stage_warm as f64 / self.pipe_stage_searches as f64
+        }
+    }
+
+    /// Interval-memo hit rate across every pipeline sweep the shared
+    /// planner has run (0.0 before the first sweep).
+    pub fn pipe_interval_hit_rate(&self) -> f64 {
+        let total = self.pipe_interval_builds + self.pipe_interval_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.pipe_interval_hits as f64 / total as f64
         }
     }
 }
@@ -259,9 +288,12 @@ impl PlanService {
         &self.metrics
     }
 
-    /// Counter snapshot.
+    /// Counter snapshot. The `pipe_*` fields mirror the shared planner's
+    /// pipeline accounting, so a service front end exposes the interval
+    /// memo's hit rate without reaching into [`Planner::stats`].
     pub fn stats(&self) -> ServeStats {
         let c = |name: &str| self.metrics.counter(name) as usize;
+        let p = self.planner.stats();
         ServeStats {
             requests: c(C_REQUESTS),
             hits: c(C_HITS),
@@ -270,6 +302,10 @@ impl PlanService {
             groups: c(C_GROUPS),
             riders: c(C_RIDERS),
             evictions: c(C_EVICTIONS),
+            pipe_stage_searches: p.pipe_stage_searches,
+            pipe_stage_warm: p.pipe_stage_warm,
+            pipe_interval_builds: p.pipe_interval_builds,
+            pipe_interval_hits: p.pipe_interval_hits,
         }
     }
 

@@ -2,8 +2,16 @@
 """CI bench regression gate: fail when any benchmark's mean time regresses
 more than --threshold (default 25%) versus the checked-in baseline.
 
-A baseline with "placeholder": true disables the gate — promote a real
-CI-produced BENCH_<sha>.json artifact to BENCH_baseline.json to arm it.
+A baseline with "placeholder": true disables the *absolute-time* gate —
+promote a real CI-produced BENCH_<sha>.json artifact to BENCH_baseline.json
+to arm it.
+
+In-artifact RATIO metrics are different: both legs of a ratio run in the
+same process on the same runner, so the number is hardware-independent and
+gates unconditionally against the bounds in RATIO_GATES — even while the
+absolute baseline is a disarmed placeholder. Ratio keys are excluded from
+the baseline time compare (a bigger-is-better ratio improving would
+otherwise read as a "regression").
 
 Usage:
   bench_compare.py <baseline.json> <new.json> [--threshold 0.25]
@@ -12,6 +20,18 @@ Usage:
 import argparse
 import json
 import sys
+
+# (group, benchmark name) -> ("min"|"max", bound). "min": the recorded
+# value must be >= bound (bigger is better); "max": <= bound.
+RATIO_GATES = {
+    # SoA reduce kernel vs the frozen reference oracle (smaller is better):
+    # the rewrite must never lose ground against the scalar baseline.
+    ("ft_large", "reduce_50k_soa_over_reference_ratio"): ("max", 1.0),
+    # Brute-force cut sweep time over interval-memoized sweep time (bigger
+    # is better): the pipeline interval table must stay >= 3x a naive
+    # per-cut cold search, the headline claim of the memoized sweep.
+    ("pipe", "pipe_memo_over_cold_ratio"): ("min", 3.0),
+}
 
 
 def index(doc):
@@ -24,14 +44,47 @@ def index(doc):
 
 
 def compare(base, new, threshold):
-    """Regressions beyond threshold: [((group, name), old_s, new_s)]."""
+    """Regressions beyond threshold: [((group, name), old_s, new_s)].
+
+    Ratio-gated keys are skipped — they gate via check_ratio_gates().
+    """
     b, n = index(base), index(new)
     regs = []
     for key, old in sorted(b.items()):
+        if key in RATIO_GATES:
+            continue
         cur = n.get(key)
         if cur is not None and cur > old * (1.0 + threshold):
             regs.append((key, old, cur))
     return regs
+
+
+def check_ratio_gates(new):
+    """Gate the new artifact's ratio metrics against RATIO_GATES.
+
+    Returns (failures, notes). A gate whose group is absent from the run
+    is skipped with a note (partial bench runs stay usable); a present
+    group missing the metric is a failure (the bench silently stopped
+    recording its own headline number).
+    """
+    n = index(new)
+    groups = {g.get("group") for g in new.get("groups", [])}
+    failures, notes = [], []
+    for (group, name), (kind, bound) in sorted(RATIO_GATES.items()):
+        if group not in groups:
+            notes.append(f"ratio gate skipped: group {group!r} not in this run")
+            continue
+        val = n.get((group, name))
+        if val is None:
+            failures.append(f"RATIO GATE {group}/{name}: metric missing from artifact")
+            continue
+        ok = val <= bound if kind == "max" else val >= bound
+        if ok:
+            notes.append(f"ratio gate ok: {group}/{name} = {val:.4g} ({kind} {bound:g})")
+        else:
+            failures.append(
+                f"RATIO GATE {group}/{name}: {val:.6g} violates {kind} {bound:g}")
+    return failures, notes
 
 
 def self_test():
@@ -44,6 +97,40 @@ def self_test():
     assert compare(base, ok, 0.25) == []
     assert [k for k, _, _ in compare(base, bad, 0.25)] == [("g", "a")]
     assert compare(base, {"groups": []}, 0.25) == []  # missing names skip
+
+    # Ratio gates judge the new artifact alone, placeholder or not.
+    good_ratios = {"groups": [
+        {"group": "ft_large", "results": [
+            {"name": "reduce_50k_soa_over_reference_ratio", "mean_s": 0.4}]},
+        {"group": "pipe", "results": [
+            {"name": "pipe_memo_over_cold_ratio", "mean_s": 5.1}]},
+    ]}
+    fails, notes = check_ratio_gates(good_ratios)
+    assert fails == [] and len(notes) == 2, (fails, notes)
+    slow_pipe = {"groups": [{"group": "pipe", "results": [
+        {"name": "pipe_memo_over_cold_ratio", "mean_s": 2.0}]}]}
+    fails, _ = check_ratio_gates(slow_pipe)
+    assert len(fails) == 1 and "min 3" in fails[0], fails
+    slow_soa = {"groups": [{"group": "ft_large", "results": [
+        {"name": "reduce_50k_soa_over_reference_ratio", "mean_s": 1.4}]}]}
+    fails, _ = check_ratio_gates(slow_soa)
+    assert len(fails) == 1 and "max 1" in fails[0], fails
+    # Group present but the metric gone: the bench stopped recording it.
+    dropped = {"groups": [{"group": "pipe", "results": [
+        {"name": "memo_sweep_transformer12", "mean_s": 0.2}]}]}
+    fails, _ = check_ratio_gates(dropped)
+    assert len(fails) == 1 and "missing" in fails[0], fails
+    # Group absent entirely: skipped with a note, not failed.
+    fails, notes = check_ratio_gates({"groups": []})
+    assert fails == [] and all("skipped" in n for n in notes), (fails, notes)
+    # Ratio keys never participate in the baseline time compare, so a
+    # ratio *improving* (or the baseline holding a stale ratio) cannot
+    # read as a timing regression.
+    ratio_base = {"groups": [{"group": "pipe", "results": [
+        {"name": "pipe_memo_over_cold_ratio", "mean_s": 3.0}]}]}
+    ratio_new = {"groups": [{"group": "pipe", "results": [
+        {"name": "pipe_memo_over_cold_ratio", "mean_s": 9.0}]}]}
+    assert compare(ratio_base, ratio_new, 0.25) == []
     print("bench_compare self-test ok")
 
 
@@ -63,6 +150,14 @@ def main():
         base = json.load(f)
     with open(args.new) as f:
         new = json.load(f)
+    # Hardware-independent ratio gates run first and unconditionally.
+    fails, notes = check_ratio_gates(new)
+    for note in notes:
+        print(note)
+    for fail in fails:
+        print(fail, file=sys.stderr)
+    if fails:
+        sys.exit(1)
     if base.get("placeholder"):
         print("baseline is a placeholder — recording only, regression gate disabled.")
         print("promote this run's BENCH_<sha>.json artifact to BENCH_baseline.json to arm it.")

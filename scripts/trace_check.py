@@ -18,7 +18,8 @@ so a child's line precedes its parent's). Blank lines are ignored.
 
 Usage:
   trace_check.py trace.jsonl [--expect-served cold,memo,...]
-                 [--expect-replan fresh,fallback] [--min-records N]
+                 [--expect-replan fresh,fallback] [--expect-pipe-warm]
+                 [--min-records N]
   trace_check.py --self-test
 """
 import argparse
@@ -146,7 +147,56 @@ def replan_outcomes(records):
     }
 
 
-def run(path, expect_served, min_records, expect_replan=None):
+# Pipeline-sweep span taxonomy (rust/src/plan/engine.rs::plan_pipeline):
+# required non-negative integer attrs per span name. pipe.stage_search
+# additionally needs lo < hi and a string `served` attr; pipe.cut_sweep
+# needs stage_warm <= stage_searches.
+PIPE_REQUIRED = {
+    "pipe.cut_sweep": ("cuts", "intervals", "stage_searches", "stage_warm", "points"),
+    "pipe.stage_search": ("lo", "hi", "width"),
+    "pipe.compose": ("points",),
+}
+
+
+def check_pipe(records):
+    """Structural problems in pipe.* spans (always enforced when present)."""
+    problems = []
+    for idx, r in enumerate(records, start=1):
+        if r["type"] != "span" or r["name"] not in PIPE_REQUIRED:
+            continue
+        name, attrs = r["name"], r["attrs"]
+        where = f"record {idx} ({name})"
+        bad = [k for k in PIPE_REQUIRED[name] if not is_count(attrs.get(k))]
+        if bad:
+            problems.append(f"{where}: attrs {bad} missing or not non-negative ints")
+            continue
+        if name == "pipe.stage_search":
+            if attrs["lo"] >= attrs["hi"]:
+                problems.append(f"{where}: lo {attrs['lo']} not < hi {attrs['hi']}")
+            served = attrs.get("served")
+            if not isinstance(served, str) or not served:
+                problems.append(f"{where}: served attr missing or not a string")
+        elif name == "pipe.cut_sweep" and attrs["stage_warm"] > attrs["stage_searches"]:
+            problems.append(
+                f"{where}: stage_warm {attrs['stage_warm']} exceeds "
+                f"stage_searches {attrs['stage_searches']}")
+    return problems
+
+
+def pipe_warm_sweeps(records):
+    """(warm, total) pipe.cut_sweep counts; a sweep is warm when every one
+    of its (non-zero) stage searches was served from the memo or store."""
+    warm = total = 0
+    for r in records:
+        if r["type"] == "span" and r["name"] == "pipe.cut_sweep":
+            total += 1
+            s = r["attrs"].get("stage_searches")
+            if is_count(s) and s > 0 and s == r["attrs"].get("stage_warm"):
+                warm += 1
+    return warm, total
+
+
+def run(path, expect_served, min_records, expect_replan=None, expect_pipe_warm=False):
     with open(path) as f:
         text = f.read()
     records, problems = validate(text)
@@ -157,6 +207,20 @@ def run(path, expect_served, min_records, expect_replan=None):
     if len(records) < min_records:
         print(f"{path}: only {len(records)} records (need >= {min_records})", file=sys.stderr)
         sys.exit(1)
+    pipe_problems = check_pipe(records)
+    if pipe_problems:
+        for p in pipe_problems:
+            print(f"{path}: {p}", file=sys.stderr)
+        sys.exit(1)
+    if expect_pipe_warm:
+        warm, total = pipe_warm_sweeps(records)
+        if warm == 0:
+            print(
+                f"{path}: no all-warm pipe.cut_sweep span "
+                f"({total} sweeps in the trace)",
+                file=sys.stderr,
+            )
+            sys.exit(1)
     if expect_served:
         want = {s.strip() for s in expect_served.split(",") if s.strip()}
         got = served_values(records)
@@ -217,9 +281,28 @@ def self_test():
         '{"type":"event","parent":6,"name":"churn.fallback","t_us":17,'
         '"thread":3,"attrs":{"key":"tiny@64","retry_tick":7}}'
     )
+    stage_cold = (
+        '{"type":"span","id":7,"parent":9,"name":"pipe.stage_search",'
+        '"t_us":20,"dur_us":2,"thread":1,'
+        '"attrs":{"lo":0,"hi":3,"width":4,"served":"cold"}}'
+    )
+    compose = (
+        '{"type":"span","id":8,"parent":9,"name":"pipe.compose",'
+        '"t_us":23,"dur_us":1,"thread":1,"attrs":{"points":6}}'
+    )
+    sweep_cold = (
+        '{"type":"span","id":9,"parent":null,"name":"pipe.cut_sweep",'
+        '"t_us":20,"dur_us":5,"thread":1,"attrs":{"graph":"tiny","cuts":3,'
+        '"intervals":7,"stage_searches":7,"stage_warm":0,"points":6}}'
+    )
+    sweep_warm = (
+        '{"type":"span","id":10,"parent":null,"name":"pipe.cut_sweep",'
+        '"t_us":26,"dur_us":1,"thread":1,"attrs":{"graph":"tiny","cuts":3,'
+        '"intervals":7,"stage_searches":7,"stage_warm":7,"points":6}}'
+    )
     good = "\n".join(
         [child, event, span, serve_span, other_span, replan_fresh, replan_fallback,
-         churn_event]
+         churn_event, stage_cold, compose, sweep_cold, sweep_warm]
     ) + "\n"
     records, problems = validate(good)
     assert problems == [], problems
@@ -227,6 +310,22 @@ def self_test():
     assert served_values(records) == {"cold", "hit"}
     # churn.replan outcomes aggregate the same way for --expect-replan.
     assert replan_outcomes(records) == {"fresh", "fallback"}
+    # pipe.* spans are structurally sound and exactly one sweep is all-warm.
+    assert check_pipe(records) == []
+    assert pipe_warm_sweeps(records) == (1, 2)
+    pipe_bad_cases = [
+        (stage_cold.replace('"hi":3', '"hi":0'), "not < hi"),
+        (stage_cold.replace(',"served":"cold"', ""), "served"),
+        (stage_cold.replace('"width":4', '"width":-4'), "non-negative"),
+        (compose.replace('"points":6', '"points":"six"'), "non-negative"),
+        (sweep_cold.replace('"stage_warm":0', '"stage_warm":9'), "exceeds"),
+        (sweep_cold.replace('"cuts":3,', ""), "missing"),
+    ]
+    for text, want in pipe_bad_cases:
+        recs, problems = validate(text.replace('"parent":9', '"parent":null') + "\n")
+        assert problems == [], (text, problems)
+        problems = check_pipe(recs)
+        assert any(want in p for p in problems), (text, want, problems)
 
     bad_cases = [
         ("", "empty"),
@@ -254,6 +353,12 @@ def main():
     ap.add_argument(
         "--expect-replan", help="comma-separated churn.replan outcomes that must appear"
     )
+    ap.add_argument(
+        "--expect-pipe-warm",
+        action="store_true",
+        help="require at least one pipe.cut_sweep span whose stage searches "
+        "were all served warm (memo/store)",
+    )
     ap.add_argument("--min-records", type=int, default=1)
     ap.add_argument("--self-test", action="store_true")
     args = ap.parse_args()
@@ -262,7 +367,13 @@ def main():
         return
     if not args.trace:
         ap.error("trace file required (or --self-test)")
-    run(args.trace, args.expect_served, args.min_records, args.expect_replan)
+    run(
+        args.trace,
+        args.expect_served,
+        args.min_records,
+        args.expect_replan,
+        args.expect_pipe_warm,
+    )
 
 
 if __name__ == "__main__":
